@@ -1,0 +1,82 @@
+//! End-to-end validation driver (DESIGN.md experiment E2E): the ternary
+//! network trained at build time by `python/compile/training.py` (STE on
+//! the synthetic 10-class image task — CIFAR-10 is unavailable offline,
+//! see the substitution table) is evaluated on the cycle-level simulator
+//! over the exported eval set, and the training loss curve, JAX-reported
+//! accuracy and simulator-measured accuracy are printed side by side.
+//!
+//!     cargo run --release --example cifar_e2e
+
+use anyhow::{Context, Result};
+
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
+use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::network::loader;
+use tcn_cutie::tensor::{ttn, TritTensor};
+use tcn_cutie::util::json::Json;
+
+fn main() -> Result<()> {
+    let dir = loader::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("cifar9_mini.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // Training log from the build-time STE run.
+    let log_text = std::fs::read_to_string(dir.join("train_log.json"))?;
+    let log = Json::parse(&log_text)?;
+    println!("== build-time training (python/compile/training.py) ==");
+    println!("net: {}", log.get("net").and_then(|v| v.as_str()).unwrap_or("?"));
+    if let Some(losses) = log.get("loss_log").and_then(|v| v.as_array()) {
+        print!("loss curve: ");
+        for entry in losses {
+            let e = entry.as_array().context("loss entry")?;
+            print!("{}:{:.2} ", e[0].as_i64().unwrap(), e[1].as_f64().unwrap());
+        }
+        println!();
+    }
+    let jax_acc = log.get("int_test_acc").and_then(|v| v.as_f64()).unwrap_or(-1.0);
+    println!("JAX integer-model eval accuracy: {jax_acc:.3}");
+
+    // Evaluate the same integer network on the cycle-level simulator.
+    let net = loader::load_network(dir.join("cifar9_mini.json"))?;
+    let eval = ttn::read_file(dir.join("evalset_cifar9_mini.ttn"))?;
+    let images = eval["images"].as_trit()?;
+    let labels = eval["labels"].as_int()?;
+    let n = images.dims[0];
+    let (h, w, c) = (images.dims[1], images.dims[2], images.dims[3]);
+
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+    sched.preload_weights(&net);
+    let mut correct = 0usize;
+    let mut total_energy = 0.0;
+    let mut total_cycles = 0u64;
+    let p = EnergyParams::default();
+    for i in 0..n {
+        let img = TritTensor::from_vec(
+            &[h, w, c],
+            images.data[i * h * w * c..(i + 1) * h * w * c].to_vec(),
+        );
+        let (logits, stats) = sched.run_full(&net, &img)?;
+        if logits.argmax() as i32 == labels.data[i] {
+            correct += 1;
+        }
+        let r = evaluate(&stats, 0.5, None, &p);
+        total_energy += r.energy_j;
+        total_cycles += stats.total_cycles();
+    }
+    let acc = correct as f64 / n as f64;
+    println!("\n== simulator evaluation ({n} images, 48-channel cifar9_mini) ==");
+    println!("simulator accuracy: {acc:.3}  (JAX: {jax_acc:.3})");
+    println!(
+        "avg energy {:.3} µJ/inference, avg {} cycles @0.5 V",
+        total_energy / n as f64 * 1e6,
+        total_cycles / n as u64
+    );
+    anyhow::ensure!(
+        (acc - jax_acc).abs() < 1e-9,
+        "simulator and JAX accuracies must match bit-exactly"
+    );
+    println!("bit-exact match between JAX evaluation and cycle-level simulator ✓");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: load the AOT-compiled CIFAR network, run one inference on
+//! the cycle-level CUTIE simulator, cross-check it against the PJRT
+//! golden model (the XLA execution of the same JAX-authored network), and
+//! print the energy report at the paper's 0.5 V corner.
+//!
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
+use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::network::loader;
+use tcn_cutie::report::print_energy_report;
+use tcn_cutie::runtime::{golden, Runtime};
+use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let dir = loader::artifacts_dir();
+    anyhow::ensure!(
+        dir.join("cifar9_96.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // 1. Load the network (weights exported by python/compile/aot.py).
+    let net = loader::load_network(dir.join("cifar9_96.json"))?;
+    println!("loaded {} ({} layers, {} MMAC/inference)", net.name, net.layers.len(),
+             net.macs_per_inference() / 1_000_000);
+
+    // 2. One inference on the cycle-level digital twin.
+    let mut rng = Rng::new(42);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+    sched.preload_weights(&net);
+    let (logits, stats) = sched.run_full(&net, &input)?;
+    println!("predicted class: {}  logits {:?}", logits.argmax(), logits.data);
+    println!("cycles: {}  (stall-free: {} stalls)", stats.total_cycles(), stats.stall_cycles());
+
+    // 3. Energy at the paper's energy-optimal corner.
+    let r = evaluate(&stats, 0.5, None, &EnergyParams::default());
+    print_energy_report("0.5 V corner", &r);
+
+    // 4. Golden-model cross-check via PJRT (L1 Pallas kernel included in
+    //    the artifact path).
+    let rt = Runtime::cpu()?;
+    let model = rt.load(dir.join("cifar9_96.hlo.txt"))?;
+    let check = golden::check_feedforward(&rt, &model, &net, &input)?;
+    println!(
+        "PJRT golden model: {}",
+        if check.matched { "MATCH (bit-exact)" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(check.matched);
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Voltage sweep — regenerates Figures 5 and 6 (energy/inference and
+//! inferences/s vs supply; peak efficiency and throughput vs supply) and
+//! prints them as aligned tables plus a CSV block for plotting.
+//!
+//!     cargo run --release --example voltage_sweep
+
+use anyhow::Result;
+
+use tcn_cutie::report;
+
+fn main() -> Result<()> {
+    println!("== Figure 5: energy + rate vs voltage (max stable frequency per corner) ==");
+    let f5 = report::fig5()?;
+    report::fig5_table(&f5).print();
+
+    println!("\n== Figure 6: peak efficiency + peak throughput vs voltage (CIFAR L1) ==");
+    let f6 = report::fig6()?;
+    report::fig6_table(&f6).print();
+
+    println!("\n# CSV (voltage, fmax_mhz, cifar_uj, cifar_inf_s, dvs_uj, dvs_inf_s, peak_tops, peak_tops_w)");
+    for (a, b) in f5.iter().zip(&f6) {
+        println!(
+            "{:.2},{:.1},{:.3},{:.0},{:.3},{:.0},{:.2},{:.0}",
+            a.voltage, a.freq_mhz, a.cifar_uj, a.cifar_inf_s, a.dvs_uj, a.dvs_inf_s,
+            b.peak_tops, b.peak_tops_w
+        );
+    }
+
+    // paper-shape sanity: 0.5 V is the µJ-optimal corner, 0.9 V the
+    // throughput-optimal one
+    let best_e = f5.iter().cloned().reduce(|a, b| if a.cifar_uj <= b.cifar_uj { a } else { b }).unwrap();
+    let best_t = f6.iter().cloned().reduce(|a, b| if a.peak_tops >= b.peak_tops { a } else { b }).unwrap();
+    println!(
+        "\nenergy-optimal corner: {:.2} V ({:.2} µJ/inf) — paper: 0.5 V (2.72 µJ)",
+        best_e.voltage, best_e.cifar_uj
+    );
+    println!(
+        "throughput-optimal corner: {:.2} V ({:.1} TOp/s) — paper: 0.9 V (51.7 TOp/s)",
+        best_t.voltage, best_t.peak_tops
+    );
+    Ok(())
+}

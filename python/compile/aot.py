@@ -1,0 +1,193 @@
+"""AOT entry point: ``python -m compile.aot --out-dir ../artifacts``.
+
+Emits everything the Rust side consumes:
+
+  HLO text (the interchange format — jax>=0.5 serialized protos use 64-bit
+  instruction ids that xla_extension 0.5.1 rejects; the text parser
+  reassigns ids, see /opt/xla-example/README.md):
+
+    cifar9_96.hlo.txt         full-network inference, ref backend
+    cifar9_96_l1_pallas.hlo.txt  first CIFAR layer through the L1 Pallas
+                              kernel (interpret=True), conv+threshold
+    dvs_cnn_96.hlo.txt        DVS front-end: frame -> 96-feature vector
+    dvs_tcn_96.hlo.txt        DVS back-end: (24, 96) window -> 12 logits
+    cifar9_mini.hlo.txt       the build-time-trained E2E network
+
+  Weights + manifests (.ttn + .json) for the Rust simulator, and
+  test-vector bundles (inputs + expected outputs) so cargo test can verify
+  bit-exactness without invoking Python.
+
+All functions are lowered with the weights baked in as constants: the Rust
+request path passes only activations.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import training
+from .kernels.ternary_conv import ternary_conv2d_pallas
+from .ternary import ternarize_acc
+from .ttn import export_network, write_ttn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked-in network weights are large dense
+    # literals; the default printer elides them as "{...}", which the HLO
+    # text parser silently accepts and mis-compiles.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_to_file(fn, example_args, path: str) -> None:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def f32_spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_cifar(net, params, out_dir: str, tag: str) -> None:
+    """Full net: (H, W, 3) f32 trits -> (10,) f32 logits."""
+
+    def fwd(x):
+        logits = M.forward_int(net, params, x.astype(jnp.int8))
+        return (logits.astype(jnp.float32),)
+
+    lower_to_file(fwd, [f32_spec(net.input_hw, net.input_hw, 3)], f"{out_dir}/{tag}.hlo.txt")
+
+
+def export_cifar_l1_pallas(net, params, out_dir: str, tag: str) -> None:
+    """First CIFAR layer via the L1 Pallas kernel: (32,32,3) -> (32,32,96)
+    ternarized trits as f32. This is the fig6 peak-efficiency workload and
+    the proof that the Pallas kernel lowers into a Rust-loadable artifact."""
+    spec = net.layers[0]
+    p = params[spec.name]
+    w = p["w"].astype(jnp.float32)
+
+    def fwd(x):
+        acc = ternary_conv2d_pallas(x, w)
+        t = ternarize_acc(acc, p["lo"], p["hi"])
+        return (t.astype(jnp.float32),)
+
+    lower_to_file(fwd, [f32_spec(net.input_hw, net.input_hw, 3)], f"{out_dir}/{tag}_l1_pallas.hlo.txt")
+
+
+def export_dvs(net, params, out_dir: str, tag: str) -> None:
+    """Front-end and back-end as separate executables; the Rust coordinator
+    owns the TCN memory between them (mirrors the hardware)."""
+
+    def cnn(frame):
+        feat = M.forward_cnn_int(net, params, frame.astype(jnp.int8))
+        return (feat.astype(jnp.float32),)
+
+    def tcn(seq):
+        logits = M.forward_tcn_int(net, params, seq.astype(jnp.int8))
+        return (logits.astype(jnp.float32),)
+
+    lower_to_file(cnn, [f32_spec(net.input_hw, net.input_hw, 2)], f"{out_dir}/{tag}_cnn.hlo.txt")
+    lower_to_file(tcn, [f32_spec(net.tcn_steps, 96)], f"{out_dir}/{tag}_tcn.hlo.txt")
+
+
+def export_testvecs(net, params, out_dir: str, tag: str, n: int = 4, seed: int = 7) -> None:
+    """Seeded inputs + golden outputs so cargo test runs without Python."""
+    key = jax.random.PRNGKey(seed)
+    tensors = []
+    is_tcn = any(l.kind == "tcn" for l in net.layers)
+    for i in range(n):
+        key, k = jax.random.split(key)
+        if is_tcn:
+            x = jax.random.randint(k, (net.tcn_steps, net.input_hw, net.input_hw, 2), -1, 2, dtype=jnp.int32).astype(jnp.int8)
+        else:
+            x = jax.random.randint(k, (net.input_hw, net.input_hw, 3), -1, 2, dtype=jnp.int32).astype(jnp.int8)
+        logits = M.forward_int(net, params, x)
+        tensors.append((f"in{i}", np.asarray(x, dtype=np.int8)))
+        tensors.append((f"out{i}", np.asarray(logits, dtype=np.int32)))
+    write_ttn(f"{out_dir}/testvec_{tag}.ttn", tensors)
+    print(f"  wrote {out_dir}/testvec_{tag}.ttn")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=160)
+    ap.add_argument("--skip-train", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    # --- cifar9_96 (paper benchmark, seeded random ternary weights) ---
+    print("[aot] cifar9_96")
+    net = M.cifar9(96)
+    params = M.init_params(net, seed=0, zero_frac=0.33)
+    export_network(net, params, f"{args.out_dir}/cifar9_96.ttn", f"{args.out_dir}/cifar9_96.json")
+    export_cifar(net, params, args.out_dir, "cifar9_96")
+    export_cifar_l1_pallas(net, params, args.out_dir, "cifar9_96")
+    export_testvecs(net, params, args.out_dir, "cifar9_96")
+
+    # --- dvs_hybrid_96 ---
+    print("[aot] dvs_hybrid_96")
+    dnet = M.dvs_hybrid(96)
+    dparams = M.init_params(dnet, seed=1, zero_frac=0.5)
+    export_network(dnet, dparams, f"{args.out_dir}/dvs_hybrid_96.ttn", f"{args.out_dir}/dvs_hybrid_96.json")
+    export_dvs(dnet, dparams, args.out_dir, "dvs_hybrid_96")
+    export_testvecs(dnet, dparams, args.out_dir, "dvs_hybrid_96", n=2)
+
+    # --- cifar9_mini: build-time STE training (E2E validation) ---
+    print("[aot] cifar9_mini (STE training)")
+    mnet = M.cifar9_mini()
+    if args.skip_train:
+        mparams = M.init_params(mnet, seed=2)
+        loss_log, test_acc = [], -1.0
+    else:
+        mparams, loss_log, test_acc = training.train(mnet, steps=args.train_steps)
+        print(f"  float-STE test accuracy: {test_acc:.3f}")
+    export_network(mnet, mparams, f"{args.out_dir}/cifar9_mini.ttn", f"{args.out_dir}/cifar9_mini.json")
+    export_cifar(mnet, mparams, args.out_dir, "cifar9_mini")
+    export_testvecs(mnet, mparams, args.out_dir, "cifar9_mini")
+
+    # Labeled eval set for the cifar_e2e example (integer-exact accuracy).
+    kdata = jax.random.PRNGKey(99)
+    imgs, labels = training.synth_image_dataset(kdata, 256, hw=mnet.input_hw)
+    xs = np.asarray(training.encode_dataset(imgs), dtype=np.int8)
+    int_acc = training.eval_int(mnet, mparams, jnp.asarray(xs), labels, limit=256) if not args.skip_train else -1.0
+    write_ttn(
+        f"{args.out_dir}/evalset_cifar9_mini.ttn",
+        [("images", xs), ("labels", np.asarray(labels, dtype=np.int32))],
+    )
+    with open(f"{args.out_dir}/train_log.json", "w") as f:
+        json.dump(
+            {
+                "net": mnet.name,
+                "steps": args.train_steps,
+                "loss_log": loss_log,
+                "float_test_acc": test_acc,
+                "int_test_acc": int_acc,
+            },
+            f,
+            indent=1,
+        )
+    print(f"  integer-model eval accuracy: {int_acc:.3f}")
+    print(f"[aot] done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every kernel. This file is the single source of
+truth for the numerical contract; the Pallas kernels (ternary_conv.py), the
+lowered HLO artifacts and the Rust simulator are all checked against it.
+
+Tensor layout: activations are HWC ``(H, W, C)``; 2D conv weights are
+``(KH, KW, Cin, Cout)``; 1D TCN inputs are ``(T, C)`` and TCN weights are
+``(N, Cin, Cout)`` with taps in natural (causal) order, i.e. tap ``N-1``
+multiplies the current time step — exactly Eq. (1) of the paper.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ternary_conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """3x3 (or KxK) ternary convolution, zero "same" padding, stride 1.
+
+    x: (H, W, Cin) trits; w: (KH, KW, Cin, Cout) trits.
+    Returns (H, W, Cout) int32 accumulators.
+
+    This is CUTIE's OCU contract: each output pixel/channel is the full
+    window dot product computed in one cycle.
+    """
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = kh // 2, kw // 2
+    xi = x.astype(jnp.int32)
+    xp = jnp.pad(xi, ((ph, ph), (pw, pw), (0, 0)))
+    h, wid = x.shape[0], x.shape[1]
+    acc = jnp.zeros((h, wid, w.shape[3]), dtype=jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = xp[dy : dy + h, dx : dx + wid, :]
+            acc = acc + jnp.einsum(
+                "hwc,co->hwo", window, w[dy, dx].astype(jnp.int32)
+            )
+    return acc
+
+
+def maxpool2x2(t: jnp.ndarray) -> jnp.ndarray:
+    """2x2/2 max-pool over trits. t: (H, W, C) int8, H and W even."""
+    h, w, c = t.shape
+    r = t.reshape(h // 2, 2, w // 2, 2, c)
+    return r.max(axis=(1, 3))
+
+
+def global_maxpool(t: jnp.ndarray) -> jnp.ndarray:
+    """Global max-pool to (C,) trits."""
+    return t.max(axis=(0, 1))
+
+
+def ternary_dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Classifier layer: x (F,) trits, w (F, classes) trits -> int32 logits."""
+    return x.astype(jnp.int32) @ w.astype(jnp.int32)
+
+
+def dilated_conv1d(x: jnp.ndarray, w: jnp.ndarray, dilation: int) -> jnp.ndarray:
+    """Causal dilated 1D convolution, Eq. (1) of the paper.
+
+    x: (T, Cin) trits; w: (N, Cin, Cout) trits; returns (T, Cout) int32.
+
+      (w * x)[n] = sum_{k=1..N} x~[n - (k-1) D] . w[N-k]
+
+    i.e. tap w[N-1] reads the current step, w[N-2] reads D steps back, ...
+    x~ is the causally zero-padded input.
+    """
+    t_len, _ = x.shape
+    n_taps, _, cout = w.shape
+    xi = x.astype(jnp.int32)
+    acc = jnp.zeros((t_len, cout), dtype=jnp.int32)
+    for k in range(1, n_taps + 1):
+        shift = (k - 1) * dilation
+        tap = w[n_taps - k].astype(jnp.int32)  # (Cin, Cout)
+        if shift == 0:
+            shifted = xi
+        else:
+            shifted = jnp.pad(xi, ((shift, 0), (0, 0)))[:-shift]
+        acc = acc + shifted @ tap
+    return acc

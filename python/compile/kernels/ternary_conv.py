@@ -1,0 +1,112 @@
+"""L1 Pallas kernels: the ternary-convolution hot spot.
+
+CUTIE's datapath ("one OCU per output channel, one full 3x3xCin window per
+cycle") is re-thought for the TPU per DESIGN.md §Hardware-Adaptation: the
+completely unrolled adder trees become an MXU-shaped matmul over im2col
+patches. Trits are carried as f32 (exact integers, |acc| <= 9*Cin << 2^24,
+bf16-exact for |acc| <= 256 — the 96-channel configuration peaks at 864, so
+f32 accumulate / bf16 operands is the TPU story; in interpret mode we stay
+f32 end to end).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and the
+BlockSpec structure documents the real-TPU schedule (VMEM tiling analysis in
+DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the im2col patch matrix processed per grid step. On a real TPU
+# this is the MXU M-tile; 128 matches the systolic array edge.
+TILE_M = 128
+
+
+def _im2col(x: jnp.ndarray, kh: int, kw: int) -> jnp.ndarray:
+    """(H, W, Cin) -> (H*W, KH*KW*Cin) patch matrix, zero "same" padding.
+
+    The patch matrix is the software analogue of CUTIE's linebuffer output:
+    each row is the full window an OCU consumes in one cycle.
+    """
+    h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[dy : dy + h, dx : dx + w, :])
+    patches = jnp.stack(cols, axis=2)  # (H, W, KH*KW, Cin)
+    return patches.reshape(h * w, kh * kw * c)
+
+
+def _matmul_kernel(p_ref, w_ref, o_ref):
+    """One M-tile of patches x the full (K, Cout) weight matrix.
+
+    Weights stay resident across the whole grid (index_map pins block 0) —
+    the analogue of CUTIE's weight-stationary per-OCU buffers.
+    """
+    o_ref[...] = jnp.dot(
+        p_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ternary_conv2d_pallas(
+    x: jnp.ndarray, w: jnp.ndarray, interpret: bool = True
+) -> jnp.ndarray:
+    """Pallas ternary conv. x: (H, W, Cin) f32 trits; w: (KH, KW, Cin, Cout)
+    f32 trits. Returns (H, W, Cout) int32 accumulators.
+
+    Grid: one step per TILE_M output pixels. BlockSpec expresses the
+    HBM->VMEM schedule: patch tiles stream, the weight matrix is pinned.
+    """
+    h, wid, cin = x.shape
+    kh, kw, _, cout = w.shape
+    patches = _im2col(x, kh, kw)  # (M, K)
+    m, k = patches.shape
+    wmat = w.reshape(kh * kw * cin, cout)
+
+    m_pad = -m % TILE_M
+    if m_pad:
+        patches = jnp.pad(patches, ((0, m_pad), (0, 0)))
+    grid = (patches.shape[0] // TILE_M,)
+
+    acc = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, cout), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((patches.shape[0], cout), jnp.float32),
+        interpret=interpret,
+    )(patches, wmat)
+
+    return acc[:m].reshape(h, wid, cout).astype(jnp.int32)
+
+
+def _dense_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ternary_dense_pallas(
+    x: jnp.ndarray, w: jnp.ndarray, interpret: bool = True
+) -> jnp.ndarray:
+    """Classifier layer as a single-tile Pallas matmul.
+
+    x: (F,) f32 trits; w: (F, classes) f32 trits -> (classes,) int32 logits.
+    """
+    f, classes = w.shape
+    out = pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, classes), jnp.float32),
+        interpret=interpret,
+    )(x.reshape(1, f), w)
+    return out.reshape(classes).astype(jnp.int32)

@@ -1,0 +1,234 @@
+"""L2: network definitions — the paper's two benchmark networks plus a
+reduced variant for the build-time-trained end-to-end example.
+
+A network is a list of ``LayerSpec`` + a parameter dict
+``{layer_name: {"w": trits, "lo": i32, "hi": i32}}`` (classifier layers have
+no thresholds). ``forward_int`` is the bit-exact inference path (backend
+"ref" = pure jnp oracle, backend "pallas" = L1 kernels); it is what
+``aot.py`` lowers to HLO for the Rust runtime, and what the Rust simulator
+must match trit-for-trit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import tcn_mapping
+from .kernels import ref
+from .kernels.ternary_conv import ternary_conv2d_pallas, ternary_dense_pallas
+from .ternary import ternarize_acc
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One CUTIE-schedulable layer.
+
+    kind: "conv2d" (3x3, same padding, optional 2x2 max-pool, optional
+    global max-pool), "tcn" (dilated causal 1D conv, run via the 2D
+    mapping), or "dense" (classifier, raw logits).
+    """
+
+    name: str
+    kind: str
+    in_ch: int
+    out_ch: int
+    kernel: int = 3
+    dilation: int = 1
+    pool: bool = False
+    global_pool: bool = False
+
+
+@dataclass
+class Network:
+    name: str
+    layers: List[LayerSpec]
+    # Spatial/temporal geometry of the canonical input.
+    input_hw: int = 32
+    tcn_steps: int = 24
+    classes: int = 10
+    meta: Dict[str, str] = field(default_factory=dict)
+
+
+def cifar9(channels: int = 96, name: Optional[str] = None) -> Network:
+    """The paper's CIFAR-10 benchmark: 8 conv + 1 FC, 96 channels,
+    max-pool after every second conv (32->16->8->4->2)."""
+    c = channels
+    layers = [LayerSpec("c1", "conv2d", 3, c)]
+    for i in range(2, 9):
+        layers.append(LayerSpec(f"c{i}", "conv2d", c, c, pool=(i % 2 == 0)))
+    layers.append(LayerSpec("fc", "dense", 2 * 2 * c, 10))
+    return Network(name or f"cifar9_{c}", layers, input_hw=32, classes=10)
+
+
+def cifar9_mini() -> Network:
+    """48-channel cifar9 for the build-time STE training run (cifar_e2e)."""
+    return cifar9(channels=48, name="cifar9_mini")
+
+
+def dvs_hybrid(channels: int = 96, classes: int = 12) -> Network:
+    """The hybrid 2D-CNN + 1D-TCN DVS-gesture network ([6], §7): 5 conv
+    layers collapsing 64x64x2 event frames into a 96-vector per time step,
+    then 4 TCN layers (N=3, D = 1,2,4,8) + classifier over 24 stored steps."""
+    cs = [32, 64, channels, channels, channels]
+    layers = []
+    in_c = 2
+    for i, c in enumerate(cs, 1):
+        layers.append(
+            LayerSpec(f"c{i}", "conv2d", in_c, c, pool=True, global_pool=(i == 5))
+        )
+        in_c = c
+    for i, d in enumerate([1, 2, 4, 8], 1):
+        layers.append(LayerSpec(f"t{i}", "tcn", channels, channels, dilation=d))
+    layers.append(LayerSpec("fc", "dense", channels, classes))
+    return Network(f"dvs_hybrid_{channels}", layers, input_hw=64, classes=classes)
+
+
+def cnn_part(net: Network) -> List[LayerSpec]:
+    return [l for l in net.layers if l.kind == "conv2d"]
+
+
+def tcn_part(net: Network) -> List[LayerSpec]:
+    return [l for l in net.layers if l.kind in ("tcn", "dense")]
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _rand_trits(key, shape, zero_frac: float) -> jnp.ndarray:
+    kz, ks = jax.random.split(key)
+    nz = jax.random.bernoulli(kz, 1.0 - zero_frac, shape)
+    sign = jax.random.bernoulli(ks, 0.5, shape).astype(jnp.int8) * 2 - 1
+    return (nz.astype(jnp.int8) * sign).astype(jnp.int8)
+
+
+def _fanin(spec: LayerSpec) -> int:
+    if spec.kind == "conv2d":
+        return spec.kernel * spec.kernel * spec.in_ch
+    if spec.kind == "tcn":
+        return 3 * spec.in_ch
+    return spec.in_ch
+
+
+def init_params(net: Network, seed: int = 0, zero_frac: float = 0.33) -> Dict:
+    """Seeded random ternary parameters with controllable weight sparsity.
+
+    Thresholds are set to +/- floor(0.5*sqrt(fanin * density)) so random
+    inputs produce roughly balanced trits layer after layer — this keeps
+    activity statistics realistic for the energy benchmarks even without
+    training.
+    """
+    key = jax.random.PRNGKey(seed)
+    params: Dict = {}
+    for spec in net.layers:
+        key, kw = jax.random.split(key)
+        if spec.kind == "conv2d":
+            shape = (spec.kernel, spec.kernel, spec.in_ch, spec.out_ch)
+        elif spec.kind == "tcn":
+            shape = (3, spec.in_ch, spec.out_ch)
+        else:
+            shape = (spec.in_ch, spec.out_ch)
+        w = _rand_trits(kw, shape, zero_frac)
+        entry = {"w": w}
+        if spec.kind != "dense":
+            th = max(1, int(0.5 * (_fanin(spec) * (1.0 - zero_frac)) ** 0.5))
+            entry["lo"] = jnp.full((spec.out_ch,), -th, dtype=jnp.int32)
+            entry["hi"] = jnp.full((spec.out_ch,), th, dtype=jnp.int32)
+        params[spec.name] = entry
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact integer forward (the inference contract)
+# ---------------------------------------------------------------------------
+
+
+def _conv_layer_int(x, spec: LayerSpec, p, backend: str):
+    if backend == "pallas":
+        acc = ternary_conv2d_pallas(x.astype(jnp.float32), p["w"].astype(jnp.float32))
+    else:
+        acc = ref.ternary_conv2d(x, p["w"])
+    t = ternarize_acc(acc, p["lo"], p["hi"])
+    if spec.pool:
+        t = ref.maxpool2x2(t)
+    if spec.global_pool:
+        t = ref.global_maxpool(t)
+    return t
+
+
+def _tcn_layer_int(x, spec: LayerSpec, p, backend: str):
+    """Dilated TCN layer via the offline 2D mapping (never via strided
+    access — this is the artifact that runs on the 3x3 datapath)."""
+    t_len = x.shape[0]
+    z = tcn_mapping.map_input(x, spec.dilation)  # (R+1, D, Cin)
+    w2d = tcn_mapping.map_weights(p["w"])  # (3, 3, Cin, Cout)
+    if backend == "pallas":
+        acc2d = ternary_conv2d_pallas(
+            z.astype(jnp.float32), w2d.astype(jnp.float32)
+        )
+    else:
+        acc2d = ref.ternary_conv2d(z, w2d)
+    acc = tcn_mapping.unmap_output(acc2d, t_len, spec.dilation)
+    return ternarize_acc(acc, p["lo"], p["hi"])
+
+
+def forward_cnn_int(net: Network, params: Dict, frame, backend: str = "ref"):
+    """2D front-end: (H, W, Cin) trits -> feature trits.
+
+    For dvs_hybrid this ends in a (C,) per-time-step feature vector; for
+    cifar9 it ends in the pre-classifier (2, 2, C) map.
+    """
+    x = frame
+    for spec in cnn_part(net):
+        x = _conv_layer_int(x, spec, params[spec.name], backend)
+    return x
+
+
+def forward_tcn_int(net: Network, params: Dict, seq, backend: str = "ref"):
+    """Temporal back-end: (T, C) trits -> (classes,) int32 logits.
+    Classification uses the last time step's features."""
+    x = seq
+    for spec in tcn_part(net):
+        if spec.kind == "tcn":
+            x = _tcn_layer_int(x, spec, params[spec.name], backend)
+        else:
+            feat = x[-1]
+            if backend == "pallas":
+                return ternary_dense_pallas(
+                    feat.astype(jnp.float32),
+                    params[spec.name]["w"].astype(jnp.float32),
+                )
+            return ref.ternary_dense(feat, params[spec.name]["w"])
+    raise AssertionError("network has no classifier layer")
+
+
+def forward_int(net: Network, params: Dict, x, backend: str = "ref"):
+    """Full-network bit-exact inference.
+
+    cifar9: x is one (32, 32, 3) trit image -> (10,) logits.
+    dvs_hybrid: x is a (T, 64, 64, 2) trit frame stack -> (classes,) logits
+    (the CNN is vmapped over time; in hardware the frames arrive
+    sequentially and the TCN memory accumulates the feature vectors).
+    """
+    if any(l.kind == "tcn" for l in net.layers):
+        feats = jax.vmap(lambda f: forward_cnn_int(net, params, f, backend))(x)
+        return forward_tcn_int(net, params, feats, backend)
+    feat = forward_cnn_int(net, params, x, backend)
+    flat = feat.reshape(-1)
+    p = params[net.layers[-1].name]
+    if backend == "pallas":
+        return ternary_dense_pallas(
+            flat.astype(jnp.float32), p["w"].astype(jnp.float32)
+        )
+    return ref.ternary_dense(flat, p["w"])
+
+
+def predict(net: Network, params: Dict, x, backend: str = "ref") -> int:
+    """argmax with lowest-index tie-breaking (matches the Rust simulator)."""
+    logits = forward_int(net, params, x, backend)
+    return int(jnp.argmax(logits))

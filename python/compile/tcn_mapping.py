@@ -1,0 +1,92 @@
+"""Offline mapping of dilated 1D convolutions to undilated 2D convolutions
+(§4 of the paper, Fig. 3). Mirrored bit-for-bit by ``rust/src/mapping/``.
+
+Derivation. Write the output index as ``n = q*D + m`` (``q = n // D``,
+``m = n % D``) and wrap the causally padded input into the dense 2D map
+
+    z[q, m] = x~[q*D + m]            (the paper's  z[n, m] = x~[n*D + m])
+
+Then Eq. (1) becomes a single-column 2D correlation:
+
+    y[q*D + m] = sum_j z[q - (N-1) + j, m] * w[j]      j = 0..N-1
+
+With the 1D taps bottom-aligned into the middle column of a 3x3 kernel
+(``W[3-N+j, 1] = w[j]``) and one zero row prepended to ``z`` (the causal
+edge padding shown white in Fig. 3), a *standard* zero-padded 3x3
+convolution over ``z_pad`` computes exactly ``y``:
+
+    y[n] = conv2d_same(z_pad, W)[n // D, n % D]
+
+because the conv output at row ``r`` of ``z_pad`` reads rows
+``r-1, r, r+1`` = ``z[r-2], z[r-1], z[r]`` and zero-padding supplies the
+out-of-range causal zeros. All index arithmetic is offline; the hardware
+sees a plain 3x3 layer, which is the paper's entire point.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wrapped_rows(t_len: int, dilation: int) -> int:
+    """Number of rows of the wrapped map z (excluding the causal pad row)."""
+    return -(-t_len // dilation)  # ceil
+
+
+def map_input(x: jnp.ndarray, dilation: int) -> jnp.ndarray:
+    """Wrap a (T, C) time series into the (R+1, D, C) dense 2D feature map
+    (one leading zero row = causal padding)."""
+    t_len, c = x.shape
+    rows = wrapped_rows(t_len, dilation)
+    pad = rows * dilation - t_len
+    flat = jnp.pad(x, ((0, pad), (0, 0)))
+    z = flat.reshape(rows, dilation, c)
+    return jnp.pad(z, ((1, 0), (0, 0), (0, 0)))
+
+
+def map_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """Project (N, Cin, Cout) 1D taps into the middle column of a
+    (3, 3, Cin, Cout) kernel, bottom-aligned: W[3-N+j, 1] = w[j]."""
+    n_taps, cin, cout = w.shape
+    if n_taps > 3:
+        raise ValueError(f"CUTIE supports kernels up to 3 taps, got {n_taps}")
+    out = jnp.zeros((3, 3, cin, cout), dtype=w.dtype)
+    return out.at[3 - n_taps :, 1].set(w)
+
+
+def unmap_output(acc2d: jnp.ndarray, t_len: int, dilation: int) -> jnp.ndarray:
+    """Extract the (T, Cout) 1D outputs from the (R+1, D, Cout) conv output:
+    y[n] = acc2d[n // D, n % D]."""
+    rows_pad, d, cout = acc2d.shape
+    flat = acc2d.reshape(rows_pad * d, cout)
+    return flat[:t_len]
+
+
+def receptive_field(n_taps: int, dilations) -> int:
+    """Receptive field of a stack of causal dilated conv layers."""
+    f = 1
+    for d in dilations:
+        f += (n_taps - 1) * d
+    return f
+
+
+def layers_needed_undilated(n_taps: int, window: int) -> int:
+    """Layers needed to cover ``window`` steps without dilation (paper: 12
+    for 24 steps with N=3)."""
+    layers = 0
+    f = 1
+    while f < window:
+        layers += 1
+        f += n_taps - 1
+    return layers
+
+
+def layers_needed_dilated(n_taps: int, window: int) -> int:
+    """Layers needed with exponentially increasing dilation D_i = 2^i
+    (paper: 5 for 24 steps with N=3)."""
+    layers = 0
+    f = 1
+    while f < window:
+        f += (n_taps - 1) * (1 << layers)
+        layers += 1
+    return layers

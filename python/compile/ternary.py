@@ -1,0 +1,116 @@
+"""Ternary quantization primitives shared by the L2 model and the trainer.
+
+The bit-exact inference contract (mirrored by the Rust simulator, see
+DESIGN.md §"Ternary semantics"):
+
+  * trits are {-1, 0, +1}, carried as int8 (storage) / float32 (compute);
+  * a convolution produces integer accumulators ``acc``;
+  * ternarization uses two per-channel integer thresholds ``lo <= hi + 1``::
+
+        out = +1  if acc > hi
+              -1  if acc < lo
+               0  otherwise
+
+  * 2x2/2 max-pooling operates on ternarized outputs (max over trits);
+  * the classifier layer keeps raw accumulators; argmax ties resolve to the
+    lowest class index.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Threshold used on batchnorm-normalized pre-activations during training;
+# folded into the integer (lo, hi) thresholds at export time.
+ACT_DELTA = 0.5
+# TWN-style weight ternarization threshold factor (Li & Liu, 2016).
+WEIGHT_DELTA_FACTOR = 0.7
+
+
+def ternarize_acc(acc: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Two-threshold ternarization of integer accumulators.
+
+    ``acc``: (..., C) int32; ``lo``/``hi``: (C,) int32 with lo <= hi.
+    Returns int8 trits.
+    """
+    pos = (acc > hi).astype(jnp.int8)
+    neg = (acc < lo).astype(jnp.int8)
+    return pos - neg
+
+
+@jax.custom_vjp
+def ste_ternarize_weights(w: jnp.ndarray) -> jnp.ndarray:
+    """TWN forward: w -> {-1,0,+1} with per-tensor threshold 0.7*mean|w|."""
+    delta = WEIGHT_DELTA_FACTOR * jnp.mean(jnp.abs(w))
+    return jnp.sign(w) * (jnp.abs(w) > delta).astype(w.dtype)
+
+
+def _ste_w_fwd(w):
+    return ste_ternarize_weights(w), None
+
+
+def _ste_w_bwd(_, g):
+    # Straight-through: gradient passes unchanged.
+    return (g,)
+
+
+ste_ternarize_weights.defvjp(_ste_w_fwd, _ste_w_bwd)
+
+
+@jax.custom_vjp
+def ste_ternarize_act(x: jnp.ndarray) -> jnp.ndarray:
+    """Activation ternarization at +/-ACT_DELTA with hardtanh-style STE."""
+    return (x > ACT_DELTA).astype(x.dtype) - (x < -ACT_DELTA).astype(x.dtype)
+
+
+def _ste_a_fwd(x):
+    return ste_ternarize_act(x), x
+
+
+def _ste_a_bwd(x, g):
+    # Clipped straight-through: pass gradient where |x| <= 1.
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_ternarize_act.defvjp(_ste_a_fwd, _ste_a_bwd)
+
+
+def fold_bn_thresholds(mean: jnp.ndarray, var: jnp.ndarray, eps: float = 1e-5):
+    """Fold a parameter-free batchnorm + +/-ACT_DELTA ternarization into the
+    integer (lo, hi) thresholds of the inference contract.
+
+    Training forward:  t = ternarize((acc - mean)/sqrt(var+eps) at +/-delta)
+      +1  iff acc > mean + delta*sigma    -> hi = floor(mean + delta*sigma)
+      -1  iff acc < mean - delta*sigma    -> lo = ceil (mean - delta*sigma)
+
+    Returns (lo, hi) int32 arrays. Accumulators are integers, so
+    ``acc > hi`` (int) == ``acc > mean + delta*sigma`` (float) whenever the
+    float threshold is not itself an integer; exact-integer thresholds are a
+    measure-zero training artifact and resolve consistently in both backends
+    because both use the folded integer thresholds.
+    """
+    sigma = jnp.sqrt(var + eps)
+    hi = jnp.floor(mean + ACT_DELTA * sigma).astype(jnp.int32)
+    lo = jnp.ceil(mean - ACT_DELTA * sigma).astype(jnp.int32)
+    # lo <= hi + 1 always holds (lo_f <= hi_f); lo == hi + 1 encodes an empty
+    # zero-region, which is exact and unambiguous for integer accumulators.
+    return lo, hi
+
+
+def encode_input_image(img: jnp.ndarray, levels: int = 1) -> jnp.ndarray:
+    """Encode a float image in [0, 1] into ternary input channels.
+
+    Each source channel maps to ``levels`` ternary channels via a thermometer
+    code with symmetric thresholds: channel k fires +1 above
+    (k+1)/(levels+1) + margin, -1 below (k+1)/(levels+1) - margin.
+    With levels=1 this is a simple sign encoding around 0.5.
+    """
+    chans = []
+    for k in range(levels):
+        center = (k + 1.0) / (levels + 1.0)
+        margin = 0.5 / (levels + 1.0)
+        pos = (img > center + margin).astype(jnp.int8)
+        neg = (img < center - margin).astype(jnp.int8)
+        chans.append(pos - neg)
+    return jnp.concatenate(chans, axis=-1)

@@ -1,0 +1,278 @@
+"""Build-time STE training of ternary networks on synthetic data.
+
+CIFAR-10 / DVS128 are not available in this offline environment (see
+DESIGN.md §2 substitution table), so the end-to-end validation trains on a
+synthetic 10-class image task with the same geometry. The training forward
+uses latent float weights with TWN straight-through ternarization, a
+parameter-free batchnorm and +/-0.5 activation ternarization; at export the
+batchnorm folds into the integer (lo, hi) thresholds of the inference
+contract, so the trained network runs bit-exactly on the Rust simulator.
+
+optax is not installed; a minimal Adam lives here.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .model import Network, LayerSpec, cnn_part
+from .ternary import (
+    ACT_DELTA,
+    encode_input_image,
+    fold_bn_thresholds,
+    ste_ternarize_act,
+    ste_ternarize_weights,
+)
+
+BN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Synthetic datasets
+# ---------------------------------------------------------------------------
+
+
+def synth_image_dataset(
+    key, n: int, hw: int = 32, classes: int = 10
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """10-class synthetic 'tiny CIFAR': fixed low-frequency class templates
+    plus per-sample noise, normalized to [0, 1], 3 channels.
+
+    Returns (images (n, hw, hw, 3) float32 in [0,1], labels (n,) int32).
+
+    Class templates are a fixed function of (classes, hw) — independent of
+    ``key`` — so separately generated train/test sets share the same task.
+    """
+    _, klabel, knoise, kamp = jax.random.split(key, 4)
+    ktempl = jax.random.PRNGKey(961748927 + classes * 1000003 + hw * 7919)
+    # Low-frequency templates: sum of a few random 2D cosines per class/chan.
+    yy, xx = jnp.meshgrid(jnp.arange(hw), jnp.arange(hw), indexing="ij")
+    freqs = jax.random.uniform(ktempl, (classes, 3, 4, 3), minval=0.3, maxval=3.0)
+    phase = freqs[..., 2] * 6.28318
+    grid = (
+        freqs[..., 0:1, None] * yy[None, None, None] / hw
+        + freqs[..., 1:2, None] * xx[None, None, None] / hw
+    )
+    # (classes, 3, 4, hw, hw) -> (classes, hw, hw, 3)
+    waves = jnp.cos(6.28318 * grid + phase[..., None, None])
+    templates = waves.sum(axis=2).transpose(0, 2, 3, 1)
+    templates = templates / (jnp.abs(templates).max() + 1e-6)
+
+    labels = jax.random.randint(klabel, (n,), 0, classes)
+    noise = 0.35 * jax.random.normal(knoise, (n, hw, hw, 3))
+    amp = jax.random.uniform(kamp, (n, 1, 1, 1), minval=0.7, maxval=1.3)
+    imgs = 0.5 + 0.5 * (amp * templates[labels] + noise)
+    return jnp.clip(imgs, 0.0, 1.0), labels
+
+
+def encode_dataset(imgs: jnp.ndarray) -> jnp.ndarray:
+    """Float images -> ternary input trits (vmapped encode)."""
+    return jax.vmap(encode_input_image)(imgs)
+
+
+# ---------------------------------------------------------------------------
+# Float STE forward (training path)
+# ---------------------------------------------------------------------------
+
+
+def init_latent(net: Network, seed: int = 0) -> Dict:
+    """Latent float weights, He-style scaled."""
+    key = jax.random.PRNGKey(seed)
+    latent: Dict = {}
+    for spec in net.layers:
+        key, kw = jax.random.split(key)
+        if spec.kind == "conv2d":
+            shape = (spec.kernel, spec.kernel, spec.in_ch, spec.out_ch)
+        elif spec.kind == "tcn":
+            shape = (3, spec.in_ch, spec.out_ch)
+        else:
+            shape = (spec.in_ch, spec.out_ch)
+        fan = 1
+        for s in shape[:-1]:
+            fan *= s
+        latent[spec.name] = jax.random.normal(kw, shape) / jnp.sqrt(fan)
+    return latent
+
+
+def _conv2d_float(x, w):
+    """Batched float conv, same padding. x: (B,H,W,Cin), w: (KH,KW,Cin,Cout)."""
+    return jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _maxpool2x2_f(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def forward_train(net: Network, latent: Dict, x: jnp.ndarray):
+    """STE float forward over a batch of encoded inputs (B,H,W,Cin trits as
+    f32). Returns (logits (B, classes), batch_stats {layer: (mean, var)}).
+    Only CNN+dense networks (the trained E2E variant) are supported."""
+    stats = {}
+    h = x
+    for spec in cnn_part(net):
+        wt = ste_ternarize_weights(latent[spec.name])
+        acc = _conv2d_float(h, wt)
+        mean = acc.mean(axis=(0, 1, 2))
+        var = acc.var(axis=(0, 1, 2))
+        stats[spec.name] = (mean, var)
+        normed = (acc - mean) / jnp.sqrt(var + BN_EPS)
+        h = ste_ternarize_act(normed)
+        if spec.pool:
+            h = _maxpool2x2_f(h)
+        if spec.global_pool:
+            h = h.max(axis=(1, 2))
+    fc = net.layers[-1]
+    wt = ste_ternarize_weights(latent[fc.name])
+    flat = h.reshape(h.shape[0], -1)
+    logits = flat @ wt / jnp.sqrt(float(fc.in_ch))
+    return logits, stats
+
+
+def loss_fn(net: Network, latent: Dict, x, y):
+    logits, stats = forward_train(net, latent, x)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    acc = (logits.argmax(axis=1) == y).mean()
+    return loss, (acc, stats)
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Dict):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Trainer + export
+# ---------------------------------------------------------------------------
+
+
+def train(
+    net: Network,
+    steps: int = 200,
+    batch: int = 64,
+    n_train: int = 2048,
+    n_test: int = 512,
+    seed: int = 0,
+    lr: float = 2e-3,
+    log_every: int = 10,
+) -> Tuple[Dict, List[Tuple[int, float, float]], float]:
+    """Train; returns (exported integer params, loss log, test accuracy of
+    the float-STE model). The exported params follow the bit-exact contract
+    (int8 trit weights + folded int32 thresholds)."""
+    kdata, ktest, kperm = jax.random.split(jax.random.PRNGKey(seed), 3)
+    imgs, labels = synth_image_dataset(kdata, n_train, hw=net.input_hw, classes=net.classes)
+    timgs, tlabels = synth_image_dataset(ktest, n_test, hw=net.input_hw, classes=net.classes)
+    x_all = encode_dataset(imgs).astype(jnp.float32)
+    xt_all = encode_dataset(timgs).astype(jnp.float32)
+
+    latent = init_latent(net, seed)
+    opt = adam_init(latent)
+
+    @jax.jit
+    def step_fn(latent, opt, x, y):
+        (loss, (acc, stats)), grads = jax.value_and_grad(
+            lambda l: loss_fn(net, l, x, y), has_aux=True
+        )(latent)
+        latent, opt = adam_step(latent, grads, opt, lr=lr)
+        return latent, opt, loss, acc, stats
+
+    log: List[Tuple[int, float, float]] = []
+    running = None
+    for i in range(steps):
+        kperm, kb = jax.random.split(kperm)
+        idx = jax.random.randint(kb, (batch,), 0, n_train)
+        latent, opt, loss, acc, stats = step_fn(latent, opt, x_all[idx], labels[idx])
+        # EMA of batchnorm stats for threshold folding.
+        if running is None:
+            running = stats
+        else:
+            running = {
+                k: (
+                    0.9 * running[k][0] + 0.1 * stats[k][0],
+                    0.9 * running[k][1] + 0.1 * stats[k][1],
+                )
+                for k in stats
+            }
+        if i % log_every == 0 or i == steps - 1:
+            log.append((i, float(loss), float(acc)))
+
+    # Float-model test accuracy (uses running stats, mirrors export).
+    @jax.jit
+    def eval_logits(x):
+        h = x
+        for spec in cnn_part(net):
+            wt = ste_ternarize_weights(latent[spec.name])
+            accv = _conv2d_float(h, wt)
+            mean, var = running[spec.name]
+            normed = (accv - mean) / jnp.sqrt(var + BN_EPS)
+            h = ste_ternarize_act(normed)
+            if spec.pool:
+                h = _maxpool2x2_f(h)
+            if spec.global_pool:
+                h = h.max(axis=(1, 2))
+        wt = ste_ternarize_weights(latent[net.layers[-1].name])
+        return h.reshape(h.shape[0], -1) @ wt
+
+    preds = eval_logits(xt_all).argmax(axis=1)
+    test_acc = float((preds == tlabels).mean())
+
+    params = export_params(net, latent, running)
+    return params, log, test_acc
+
+
+def export_params(net: Network, latent: Dict, running: Dict) -> Dict:
+    """Fold latent weights + running BN stats into the integer contract."""
+    params: Dict = {}
+    for spec in net.layers:
+        wt = ste_ternarize_weights(latent[spec.name]).astype(jnp.int8)
+        entry = {"w": wt}
+        if spec.kind != "dense":
+            mean, var = running[spec.name]
+            lo, hi = fold_bn_thresholds(mean, var, eps=BN_EPS)
+            entry["lo"] = lo
+            entry["hi"] = hi
+        params[spec.name] = entry
+    return params
+
+
+def eval_int(net: Network, params: Dict, xs, ys, limit: int = 256) -> float:
+    """Bit-exact integer-model accuracy (the number the simulator must
+    reproduce exactly)."""
+    from .model import forward_int
+
+    n = min(limit, xs.shape[0])
+    fwd = jax.jit(lambda x: forward_int(net, params, x))
+    correct = 0
+    for i in range(n):
+        logits = fwd(xs[i].astype(jnp.int8))
+        correct += int(jnp.argmax(logits)) == int(ys[i])
+    return correct / n

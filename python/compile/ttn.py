@@ -1,0 +1,104 @@
+"""`.ttn` — the ternary-tensor binary interchange format between the
+Python compile path and the Rust runtime/simulator (reader in
+``rust/src/tensor/ttn.rs``).
+
+Layout (all little-endian):
+
+    u32  magic = 0x314E5454  ("TTN1")
+    u32  n_tensors
+    per tensor:
+        u16  name_len, name (utf-8)
+        u8   dtype   (0 = i8 trits, 1 = i32)
+        u8   ndim
+        u32  dims[ndim]
+        data (row-major, i8 or i32 LE)
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+MAGIC = 0x314E5454
+
+
+def write_ttn(path: str, tensors: List[Tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", MAGIC, len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if arr.dtype == np.int8:
+                dtype = 0
+            elif arr.dtype == np.int32:
+                dtype = 1
+            else:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dtype, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.astype("<i1" if dtype == 0 else "<i4").tobytes())
+
+
+def read_ttn(path: str) -> Dict[str, np.ndarray]:
+    """Reader (used by round-trip tests)."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic, n = struct.unpack("<II", f.read(8))
+        if magic != MAGIC:
+            raise ValueError("bad magic")
+        for _ in range(n):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode()
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            count = int(np.prod(dims)) if ndim else 1
+            if dtype == 0:
+                data = np.frombuffer(f.read(count), dtype="<i1")
+            else:
+                data = np.frombuffer(f.read(4 * count), dtype="<i4")
+            out[name] = data.reshape(dims)
+    return out
+
+
+def export_network(net, params: Dict, ttn_path: str, manifest_path: str) -> None:
+    """Write weights/thresholds to .ttn + a JSON manifest the Rust network
+    loader consumes."""
+    tensors: List[Tuple[str, np.ndarray]] = []
+    layers_js = []
+    for spec in net.layers:
+        p = params[spec.name]
+        tensors.append((f"{spec.name}.w", np.asarray(p["w"], dtype=np.int8)))
+        entry = {
+            "name": spec.name,
+            "kind": spec.kind,
+            "in_ch": spec.in_ch,
+            "out_ch": spec.out_ch,
+            "kernel": spec.kernel,
+            "dilation": spec.dilation,
+            "pool": spec.pool,
+            "global_pool": spec.global_pool,
+            "weights": f"{spec.name}.w",
+        }
+        if "lo" in p:
+            tensors.append((f"{spec.name}.lo", np.asarray(p["lo"], dtype=np.int32)))
+            tensors.append((f"{spec.name}.hi", np.asarray(p["hi"], dtype=np.int32)))
+            entry["lo"] = f"{spec.name}.lo"
+            entry["hi"] = f"{spec.name}.hi"
+        layers_js.append(entry)
+    write_ttn(ttn_path, tensors)
+    manifest = {
+        "name": net.name,
+        "input_hw": net.input_hw,
+        "tcn_steps": net.tcn_steps,
+        "classes": net.classes,
+        "weights_file": ttn_path.split("/")[-1],
+        "layers": layers_js,
+    }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests` work from the repository root: the compile
+package lives in python/, which must be importable."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))

@@ -1,0 +1,41 @@
+"""AOT path: lowering produces parseable HLO text with the right interface."""
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.aot import to_hlo_text
+from compile.kernels.ternary_conv import ternary_conv2d_pallas
+from compile.ternary import ternarize_acc
+
+
+def test_hlo_text_plain():
+    net = M.cifar9(4)
+    params = M.init_params(net, seed=0)
+
+    def fwd(x):
+        return (M.forward_int(net, params, x.astype(jnp.int8)).astype(jnp.float32),)
+
+    lowered = jax.jit(fwd).lower(jax.ShapeDtypeStruct((32, 32, 3), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "{...}" not in text, "constants must not be elided"
+    assert "f32[32,32,3]" in text
+    assert "f32[10]" in text
+
+
+def test_hlo_text_pallas_kernel():
+    """The L1 Pallas kernel must lower into plain HLO (interpret mode)."""
+    w = jnp.ones((3, 3, 2, 4), dtype=jnp.float32)
+    lo = jnp.full((4,), -1, jnp.int32)
+    hi = jnp.full((4,), 1, jnp.int32)
+
+    def fwd(x):
+        acc = ternary_conv2d_pallas(x, w)
+        return (ternarize_acc(acc, lo, hi).astype(jnp.float32),)
+
+    lowered = jax.jit(fwd).lower(jax.ShapeDtypeStruct((8, 8, 2), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # interpret-mode pallas must not emit TPU custom-calls
+    assert "mosaic" not in text.lower()

@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py), plus an
+independent naive-numpy double-check of the oracle itself.
+
+Hypothesis sweeps shapes/channels/sparsity per the repro recipe; sizes are
+kept small because interpret-mode Pallas is slow on CPU.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ternary_conv import (
+    ternary_conv2d_pallas,
+    ternary_dense_pallas,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_trits(rng, shape):
+    return rng.integers(-1, 2, size=shape).astype(np.int8)
+
+
+def naive_conv2d(x, w):
+    """Straight-from-the-definition numpy conv (independent of jnp)."""
+    h, wid, cin = x.shape
+    kh, kw, _, cout = w.shape
+    ph, pw = kh // 2, kw // 2
+    out = np.zeros((h, wid, cout), dtype=np.int64)
+    for y in range(h):
+        for xx in range(wid):
+            for dy in range(kh):
+                for dx in range(kw):
+                    sy, sx = y + dy - ph, xx + dx - pw
+                    if 0 <= sy < h and 0 <= sx < wid:
+                        out[y, xx] += x[sy, sx].astype(np.int64) @ w[dy, dx]
+    return out.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Oracle vs naive numpy
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(3, 10),
+    w=st.integers(3, 10),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_conv_matches_naive(h, w, cin, cout, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_trits(rng, (h, w, cin))
+    wt = rand_trits(rng, (k, k, cin, cout))
+    got = np.asarray(ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(wt)))
+    np.testing.assert_array_equal(got, naive_conv2d(x, wt))
+
+
+def test_ref_conv_identity_kernel():
+    rng = np.random.default_rng(0)
+    x = rand_trits(rng, (6, 6, 4))
+    w = np.zeros((3, 3, 4, 4), dtype=np.int8)
+    for c in range(4):
+        w[1, 1, c, c] = 1
+    got = np.asarray(ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_array_equal(got, x.astype(np.int32))
+
+
+def test_ref_conv_allones_counts_window():
+    x = np.ones((5, 5, 2), dtype=np.int8)
+    w = np.ones((3, 3, 2, 1), dtype=np.int8)
+    got = np.asarray(ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(w)))
+    # interior pixel: full 3x3 window * 2 channels
+    assert got[2, 2, 0] == 18
+    # corner: 2x2 window * 2 channels
+    assert got[0, 0, 0] == 8
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.integers(2, 9),
+    w=st.integers(2, 9),
+    cin=st.integers(1, 12),
+    cout=st.integers(1, 12),
+    zero_frac=st.sampled_from([0.0, 0.5, 0.9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_conv_matches_ref(h, w, cin, cout, zero_frac, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_trits(rng, (h, w, cin))
+    x[rng.random(x.shape) < zero_frac] = 0
+    wt = rand_trits(rng, (3, 3, cin, cout))
+    want = ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(wt))
+    got = ternary_conv2d_pallas(
+        jnp.asarray(x, dtype=jnp.float32), jnp.asarray(wt, dtype=jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pallas_conv_tile_boundary():
+    """H*W above one TILE_M so the grid has >1 step and padding is exercised."""
+    rng = np.random.default_rng(3)
+    x = rand_trits(rng, (12, 12, 8))  # 144 pixels > TILE_M=128
+    wt = rand_trits(rng, (3, 3, 8, 16))
+    want = ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(wt))
+    got = ternary_conv2d_pallas(
+        jnp.asarray(x, dtype=jnp.float32), jnp.asarray(wt, dtype=jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    f=st.integers(1, 64),
+    classes=st.integers(2, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_dense_matches_ref(f, classes, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_trits(rng, (f,))
+    wt = rand_trits(rng, (f, classes))
+    want = ref.ternary_dense(jnp.asarray(x), jnp.asarray(wt))
+    got = ternary_dense_pallas(
+        jnp.asarray(x, dtype=jnp.float32), jnp.asarray(wt, dtype=jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Accumulator range (bf16-exactness argument in DESIGN.md)
+# ---------------------------------------------------------------------------
+
+
+def test_acc_bounded_by_fanin():
+    rng = np.random.default_rng(1)
+    x = rand_trits(rng, (8, 8, 96))
+    w = rand_trits(rng, (3, 3, 96, 4))
+    acc = np.asarray(ref.ternary_conv2d(jnp.asarray(x), jnp.asarray(w)))
+    assert np.abs(acc).max() <= 9 * 96

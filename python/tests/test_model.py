@@ -1,0 +1,125 @@
+"""L2 model-level tests: ternarization semantics, network geometry, and
+ref-vs-pallas backend equality on reduced networks."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+from compile.ternary import ternarize_acc, encode_input_image
+
+
+def test_ternarize_semantics():
+    acc = jnp.asarray([[-5, -2, -1, 0, 1, 2, 5]], dtype=jnp.int32).T
+    lo = jnp.asarray([-2], dtype=jnp.int32)
+    hi = jnp.asarray([2], dtype=jnp.int32)
+    out = np.asarray(ternarize_acc(acc, lo, hi)).ravel()
+    #                 -5  -2  -1   0   1   2   5
+    np.testing.assert_array_equal(out, [-1, 0, 0, 0, 0, 0, 1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ternarize_monotone(seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-50, 51, size=(16, 4)).astype(np.int32)
+    lo = rng.integers(-10, 1, size=(4,)).astype(np.int32)
+    hi = rng.integers(0, 11, size=(4,)).astype(np.int32)
+    out = np.asarray(ternarize_acc(jnp.asarray(acc), jnp.asarray(lo), jnp.asarray(hi)))
+    assert set(np.unique(out)).issubset({-1, 0, 1})
+    # monotonicity in acc per channel
+    order = np.argsort(acc, axis=0)
+    sorted_out = np.take_along_axis(out, order, axis=0)
+    assert np.all(np.diff(sorted_out, axis=0) >= 0)
+
+
+def test_maxpool_trits():
+    t = jnp.asarray(
+        [[-1, -1, 0, 1], [0, -1, -1, -1], [1, 1, 0, 0], [1, 0, 0, 0]],
+        dtype=jnp.int8,
+    )[..., None]
+    out = np.asarray(ref.maxpool2x2(t))[..., 0]
+    np.testing.assert_array_equal(out, [[0, 1], [1, 0]])
+
+
+def test_encode_input_image_range():
+    img = jnp.linspace(0, 1, 16).reshape(4, 4, 1)
+    t = np.asarray(encode_input_image(img))
+    assert t.shape == (4, 4, 1)
+    assert set(np.unique(t)).issubset({-1, 0, 1})
+    assert t.ravel()[0] == -1 and t.ravel()[-1] == 1
+
+
+def test_cifar9_geometry():
+    net = M.cifar9(96)
+    assert len(net.layers) == 9
+    convs = M.cnn_part(net)
+    assert len(convs) == 8
+    assert sum(1 for l in convs if l.pool) == 4
+    assert net.layers[-1].in_ch == 2 * 2 * 96
+
+
+def test_dvs_geometry():
+    net = M.dvs_hybrid(96)
+    kinds = [l.kind for l in net.layers]
+    assert kinds == ["conv2d"] * 5 + ["tcn"] * 4 + ["dense"]
+    assert [l.dilation for l in net.layers if l.kind == "tcn"] == [1, 2, 4, 8]
+
+
+def test_init_params_sparsity_controllable():
+    net = M.cifar9(16)
+    for zf in (0.0, 0.5, 0.9):
+        params = M.init_params(net, seed=3, zero_frac=zf)
+        w = np.asarray(params["c2"]["w"])
+        got = (w == 0).mean()
+        assert abs(got - zf) < 0.08
+
+
+def test_forward_int_shapes_small():
+    net = M.cifar9(8)
+    params = M.init_params(net, seed=0)
+    x = jnp.zeros((32, 32, 3), dtype=jnp.int8)
+    logits = M.forward_int(net, params, x)
+    assert logits.shape == (10,)
+
+
+def test_forward_dvs_small():
+    net = M.dvs_hybrid(8, classes=4)
+    # shrink spatial size for speed
+    net = M.Network(net.name, net.layers, input_hw=32, tcn_steps=8, classes=4)
+    params = M.init_params(net, seed=0)
+    x = (jnp.arange(8 * 32 * 32 * 2).reshape(8, 32, 32, 2) % 3 - 1).astype(jnp.int8)
+    logits = M.forward_int(net, params, x)
+    assert logits.shape == (4,)
+
+
+def test_backend_equality_cifar_small():
+    """ref and pallas backends must agree trit-for-trit."""
+    net = M.cifar9(8)
+    params = M.init_params(net, seed=5)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.randint(key, (32, 32, 3), -1, 2, dtype=jnp.int32).astype(jnp.int8)
+    a = np.asarray(M.forward_int(net, params, x, backend="ref"))
+    b = np.asarray(M.forward_int(net, params, x, backend="pallas"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_backend_equality_tcn_layer():
+    net = M.dvs_hybrid(8, classes=4)
+    net = M.Network(net.name, net.layers, input_hw=32, tcn_steps=8, classes=4)
+    params = M.init_params(net, seed=6)
+    key = jax.random.PRNGKey(1)
+    seq = jax.random.randint(key, (8, 8), -1, 2, dtype=jnp.int32).astype(jnp.int8)
+    a = np.asarray(M.forward_tcn_int(net, params, seq, backend="ref"))
+    b = np.asarray(M.forward_tcn_int(net, params, seq, backend="pallas"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_predict_tie_breaks_low_index():
+    net = M.cifar9(8)
+    params = M.init_params(net, seed=0)
+    # all-zero input with zero-ish weights can tie; emulate via direct argmax
+    logits = jnp.asarray([3, 5, 5, 1], dtype=jnp.int32)
+    assert int(jnp.argmax(logits)) == 1

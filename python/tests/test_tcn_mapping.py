@@ -1,0 +1,114 @@
+"""§4 mapping correctness: the dilated-1D -> undilated-2D mapping must be
+*exactly* equivalent to Eq. (1). This is the paper's central algorithmic
+claim ("fully equivalent to a 2D convolutional layer").
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import tcn_mapping
+from compile.kernels import ref
+
+
+def rand_trits(rng, shape):
+    return rng.integers(-1, 2, size=shape).astype(np.int8)
+
+
+def naive_dilated_conv1d(x, w, d):
+    """Eq. (1) transcribed literally in numpy."""
+    t_len, cin = x.shape
+    n, _, cout = w.shape
+    out = np.zeros((t_len, cout), dtype=np.int64)
+    for t in range(t_len):
+        for k in range(1, n + 1):
+            src = t - (k - 1) * d
+            if src >= 0:
+                out[t] += x[src].astype(np.int64) @ w[n - k]
+    return out.astype(np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    t_len=st.integers(1, 30),
+    d=st.integers(1, 9),
+    n=st.integers(1, 3),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ref_dilated_matches_naive(t_len, d, n, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_trits(rng, (t_len, cin))
+    w = rand_trits(rng, (n, cin, cout))
+    got = np.asarray(ref.dilated_conv1d(jnp.asarray(x), jnp.asarray(w), d))
+    np.testing.assert_array_equal(got, naive_dilated_conv1d(x, w, d))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    t_len=st.integers(1, 30),
+    d=st.integers(1, 9),
+    n=st.integers(1, 3),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_2d_mapping_equals_dilated_1d(t_len, d, n, cin, cout, seed):
+    """map_input + standard same-pad 3x3 conv + unmap == Eq. (1)."""
+    rng = np.random.default_rng(seed)
+    x = rand_trits(rng, (t_len, cin))
+    w = rand_trits(rng, (n, cin, cout))
+
+    z = tcn_mapping.map_input(jnp.asarray(x), d)
+    w2d = tcn_mapping.map_weights(jnp.asarray(w))
+    acc2d = ref.ternary_conv2d(z, w2d)
+    got = np.asarray(tcn_mapping.unmap_output(acc2d, t_len, d))
+
+    want = naive_dilated_conv1d(x, w, d)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_paper_example_d3_n2():
+    """The Fig. 3 configuration: D=3, N=2."""
+    rng = np.random.default_rng(42)
+    x = rand_trits(rng, (11, 2))
+    w = rand_trits(rng, (2, 2, 3))
+    z = tcn_mapping.map_input(jnp.asarray(x), 3)
+    assert z.shape == (tcn_mapping.wrapped_rows(11, 3) + 1, 3, 2)
+    w2d = tcn_mapping.map_weights(jnp.asarray(w))
+    # taps bottom-aligned in the middle column, everything else zero
+    w2d_np = np.asarray(w2d)
+    assert np.all(w2d_np[:, 0] == 0) and np.all(w2d_np[:, 2] == 0)
+    assert np.all(w2d_np[0, 1] == 0)
+    np.testing.assert_array_equal(w2d_np[1:, 1], np.asarray(w))
+    acc2d = ref.ternary_conv2d(z, w2d)
+    got = np.asarray(tcn_mapping.unmap_output(acc2d, 11, 3))
+    np.testing.assert_array_equal(got, naive_dilated_conv1d(x, w, 3))
+
+
+def test_map_weights_rejects_long_kernels():
+    import pytest
+
+    with pytest.raises(ValueError):
+        tcn_mapping.map_weights(jnp.zeros((4, 2, 2), dtype=jnp.int8))
+
+
+def test_receptive_field_paper_numbers():
+    # N=3, D_i = 2^i: paper §4 — 24 input steps
+    assert tcn_mapping.receptive_field(3, [1, 2, 4, 8]) == 31
+    # undilated: 12 layers for 24 steps (paper)
+    assert tcn_mapping.layers_needed_undilated(3, 24) == 12
+    # dilated with D_i = 2^i: 4 layers reach f=31 >= 24. The paper quotes 5;
+    # its own formula f_k = 1 + sum_{i<=k}(N-1)2^i gives f_3 = 31 (4 layers),
+    # so we assert the mathematically consistent value and record the delta
+    # in EXPERIMENTS.md.
+    assert tcn_mapping.layers_needed_dilated(3, 24) == 4
+
+
+def test_wrapped_map_fits_cutie_constraints():
+    """All DVS-network TCN layers must map to maps within 64x64 and 3x3
+    kernels (the hardware constraint the mapping is designed for)."""
+    for d in (1, 2, 4, 8):
+        rows = tcn_mapping.wrapped_rows(24, d) + 1
+        assert rows <= 64 and d <= 64

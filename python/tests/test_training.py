@@ -1,0 +1,91 @@
+"""Trainer tests: loss decreases, exported params obey the integer
+contract, folded thresholds reproduce the float ternarization decisions."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import training
+from compile.ternary import fold_bn_thresholds, ACT_DELTA
+
+
+def tiny_net():
+    layers = [
+        M.LayerSpec("c1", "conv2d", 3, 8, pool=True),
+        M.LayerSpec("c2", "conv2d", 8, 8, pool=True),
+        M.LayerSpec("fc", "dense", 4 * 4 * 8, 4),
+    ]
+    return M.Network("tiny", layers, input_hw=16, classes=4)
+
+
+def test_synth_dataset_separable():
+    key = jax.random.PRNGKey(0)
+    imgs, labels = training.synth_image_dataset(key, 64, hw=16, classes=4)
+    assert imgs.shape == (64, 16, 16, 3)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    assert set(np.unique(np.asarray(labels))).issubset(set(range(4)))
+
+
+def test_training_reduces_loss_and_beats_chance():
+    net = tiny_net()
+    params, log, test_acc = training.train(
+        net, steps=60, batch=32, n_train=512, n_test=128, seed=0, lr=3e-3
+    )
+    losses = [l for _, l, _ in log]
+    assert losses[-1] < losses[0] * 0.9, f"loss did not decrease: {losses}"
+    assert test_acc > 0.4, f"test acc {test_acc} not above chance (0.25)"
+    # exported params obey the contract
+    for spec in net.layers:
+        w = np.asarray(params[spec.name]["w"])
+        assert w.dtype == np.int8
+        assert set(np.unique(w)).issubset({-1, 0, 1})
+        if spec.kind != "dense":
+            lo = np.asarray(params[spec.name]["lo"])
+            hi = np.asarray(params[spec.name]["hi"])
+            assert lo.dtype == np.int32 and hi.dtype == np.int32
+            assert np.all(lo <= hi + 1)
+
+
+def test_int_model_matches_float_decisions_reasonably():
+    """The folded integer model should classify the eval set well above
+    chance (it is a quantization of the float model, not identical)."""
+    net = tiny_net()
+    params, _, float_acc = training.train(
+        net, steps=80, batch=32, n_train=512, n_test=128, seed=1, lr=3e-3
+    )
+    key = jax.random.PRNGKey(123)
+    imgs, labels = training.synth_image_dataset(key, 64, hw=16, classes=4)
+    xs = training.encode_dataset(imgs)
+    int_acc = training.eval_int(net, params, xs, labels, limit=64)
+    assert int_acc > 0.4, f"int acc {int_acc} vs float {float_acc}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fold_bn_thresholds_equivalence(seed):
+    """For integer accumulators, ternarize((acc-mean)/sigma at +/-delta)
+    must equal the two-threshold integer ternarization with folded (lo,hi)
+    — except exactly at integer-valued float thresholds (boundary ties),
+    which we exclude."""
+    rng = np.random.default_rng(seed)
+    mean = jnp.asarray(rng.normal(0, 5, size=(6,)).astype(np.float32))
+    var = jnp.asarray(rng.uniform(0.5, 40, size=(6,)).astype(np.float32))
+    acc = jnp.asarray(rng.integers(-60, 61, size=(40, 6)).astype(np.int32))
+    lo, hi = fold_bn_thresholds(mean, var)
+
+    sigma = np.sqrt(np.asarray(var) + 1e-5)
+    normed = (np.asarray(acc) - np.asarray(mean)) / sigma
+    want = (normed > ACT_DELTA).astype(int) - (normed < -ACT_DELTA).astype(int)
+    got = (np.asarray(acc) > np.asarray(hi)).astype(int) - (
+        np.asarray(acc) < np.asarray(lo)
+    ).astype(int)
+
+    hi_f = np.asarray(mean) + ACT_DELTA * sigma
+    lo_f = np.asarray(mean) - ACT_DELTA * sigma
+    boundary = (np.abs(hi_f - np.round(hi_f)) < 1e-6) | (
+        np.abs(lo_f - np.round(lo_f)) < 1e-6
+    )
+    mask = ~np.broadcast_to(boundary, got.shape)
+    np.testing.assert_array_equal(got[mask], want[mask])

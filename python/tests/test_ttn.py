@@ -1,0 +1,59 @@
+"""Interchange-format tests: .ttn round-trip and manifest export."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.ttn import read_ttn, write_ttn, export_network
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5))
+def test_ttn_roundtrip(tmp_path_factory, seed, n):
+    rng = np.random.default_rng(seed)
+    path = str(tmp_path_factory.mktemp("ttn") / "t.ttn")
+    tensors = []
+    for i in range(n):
+        ndim = rng.integers(1, 4)
+        shape = tuple(int(s) for s in rng.integers(1, 6, size=ndim))
+        if rng.random() < 0.5:
+            arr = rng.integers(-1, 2, size=shape).astype(np.int8)
+        else:
+            arr = rng.integers(-(2**20), 2**20, size=shape).astype(np.int32)
+        tensors.append((f"t{i}", arr))
+    write_ttn(path, tensors)
+    back = read_ttn(path)
+    assert len(back) == n
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+        assert back[name].dtype == arr.dtype
+
+
+def test_ttn_rejects_bad_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        write_ttn(str(tmp_path / "x.ttn"), [("a", np.zeros(3, dtype=np.float32))])
+
+
+def test_export_network_manifest(tmp_path):
+    net = M.cifar9(8)
+    params = M.init_params(net, seed=0)
+    ttn = str(tmp_path / "net.ttn")
+    man = str(tmp_path / "net.json")
+    export_network(net, params, ttn, man)
+    m = json.load(open(man))
+    assert m["name"] == "cifar9_8"
+    assert len(m["layers"]) == 9
+    assert m["layers"][0]["kind"] == "conv2d"
+    assert m["layers"][-1]["kind"] == "dense"
+    assert "lo" not in m["layers"][-1]
+    tensors = read_ttn(ttn)
+    for layer in m["layers"]:
+        assert layer["weights"] in tensors
+        if "lo" in layer:
+            lo, hi = tensors[layer["lo"]], tensors[layer["hi"]]
+            assert np.all(lo <= hi + 1)

@@ -1,0 +1,24 @@
+//! F6 — regenerates Figure 6 (peak energy efficiency and peak throughput
+//! vs voltage, first CIFAR layer) and times the generation.
+//!
+//!     cargo bench --bench fig6_peak_efficiency
+
+use tcn_cutie::report;
+use tcn_cutie::util::bench::bench;
+
+fn main() {
+    let pts = report::fig6().unwrap();
+    println!("== Figure 6: peak energy efficiency + peak throughput vs voltage ==\n");
+    report::fig6_table(&pts).print();
+
+    println!("\npaper anchors: 1036 TOp/s/W + 14.9 TOp/s @0.5 V; 318 TOp/s/W + 51.7 TOp/s @0.9 V");
+    println!(
+        "measured:      {:.0} TOp/s/W + {:.1} TOp/s @0.5 V; {:.0} TOp/s/W + {:.1} TOp/s @0.9 V\n",
+        pts[0].peak_tops_w,
+        pts[0].peak_tops,
+        pts[8].peak_tops_w,
+        pts[8].peak_tops
+    );
+
+    bench("fig6 sweep (9 corners)", 1, 5, || report::fig6().unwrap());
+}

@@ -1,0 +1,82 @@
+//! Perf — simulator hot-path microbenchmarks (EXPERIMENTS.md §Perf):
+//! packed-bitplane OCU dot products vs a scalar i8 baseline, the
+//! per-layer datapath loop, and end-to-end serving throughput in both
+//! sim modes. The §Perf target: the full DVS pipeline simulates faster
+//! than the 0.5 V silicon serves it (≥1x realtime).
+//!
+//!     cargo bench --bench hotpath
+
+use tcn_cutie::coordinator::{Pipeline, PipelineConfig};
+use tcn_cutie::cutie::datapath::run_conv_layer;
+use tcn_cutie::cutie::{CutieConfig, SimMode};
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
+use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::trit::{dot_scalar, PackedVec};
+use tcn_cutie::util::bench::{bench, black_box};
+use tcn_cutie::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(99);
+
+    // --- microbench: ternary dot product, packed vs scalar ---
+    let a: Vec<i8> = (0..96).map(|_| rng.trit(0.33)).collect();
+    let b: Vec<i8> = (0..96).map(|_| rng.trit(0.33)).collect();
+    let pa = PackedVec::pack(&a);
+    let pb = PackedVec::pack(&b);
+    let r_scalar = bench("dot 96ch: scalar i8 loop (baseline)", 3, 30, || {
+        let mut acc = 0i64;
+        for _ in 0..10_000 {
+            acc += dot_scalar(black_box(&a), black_box(&b)).0 as i64;
+        }
+        acc
+    });
+    let r_packed = bench("dot 96ch: bitplane popcount (with activity)", 3, 30, || {
+        let mut acc = 0i64;
+        for _ in 0..10_000 {
+            acc += black_box(&pa).dot(black_box(&pb)).0 as i64;
+        }
+        acc
+    });
+    let r_fast = bench("dot 96ch: bitplane popcount (fast)", 3, 30, || {
+        let mut acc = 0i64;
+        for _ in 0..10_000 {
+            acc += black_box(&pa).dot_fast(black_box(&pb)) as i64;
+        }
+        acc
+    });
+    println!(
+        "  speedup packed vs scalar: {:.1}x (fast: {:.1}x)\n",
+        r_scalar.median_s / r_packed.median_s,
+        r_scalar.median_s / r_fast.median_s
+    );
+
+    // --- one 96x96 conv layer on the datapath ---
+    let net = cifar9_random(96, 7, 0.33);
+    let cfg = CutieConfig::kraken();
+    let input = TritTensor::random(&[32, 32, 96], &mut rng, 0.4);
+    bench("datapath layer 32x32x96→96 (accurate)", 2, 10, || {
+        run_conv_layer(&net.layers[2], &input, &cfg, SimMode::Accurate).unwrap()
+    });
+    bench("datapath layer 32x32x96→96 (fast)", 2, 10, || {
+        run_conv_layer(&net.layers[2], &input, &cfg, SimMode::Fast).unwrap()
+    });
+
+    // --- end-to-end serving throughput vs realtime ---
+    let dnet = dvs_hybrid_random(96, 3, 0.5);
+    for (label, mode) in [("accurate", SimMode::Accurate), ("fast", SimMode::Fast)] {
+        let pipe = Pipeline::new(
+            dnet.clone(),
+            PipelineConfig { frames: 8, mode, ..Default::default() },
+        );
+        let r = bench(&format!("DVS serve 8 frames ({label})"), 1, 5, || pipe.run_inline().unwrap());
+        let rep = pipe.run_inline().unwrap();
+        let sim_time = rep.metrics.sim_time_s;
+        let wall_per_run = r.median_s;
+        println!(
+            "  realtime ratio ({label}): sim {:.1} µs of 0.5 V silicon in {:.1} ms wall → {:.2}x realtime\n",
+            sim_time * 1e6,
+            wall_per_run * 1e3,
+            sim_time / wall_per_run
+        );
+    }
+}

@@ -1,0 +1,26 @@
+//! T1 — regenerates Table 1 (SoA comparison on the 9-layer CIFAR-10
+//! network) and times the end-to-end simulator inference that produces
+//! our rows.
+//!
+//!     cargo bench --bench table1
+
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::report;
+use tcn_cutie::util::bench::bench;
+
+fn main() {
+    println!("== Table 1: comparison with SoA highly quantized digital accelerators ==\n");
+    report::table1().unwrap().print();
+
+    println!("\npaper expectations: this work 2.72 µJ / 1036 TOp/s/W @0.5 V,");
+    println!("56 TOp/s (text: 51.7) @0.9 V; [8] 617 TOp/s/W; [9] 230 TOp/s/W.");
+    println!("headline: CUTIE beats the best prior (617) by ~1.67x.\n");
+
+    // time the workload that generates our rows (end-to-end inference)
+    bench("cifar9_96 inference (accurate, activity counted)", 2, 10, || {
+        report::cifar_stats(SimMode::Accurate).unwrap()
+    });
+    bench("cifar9_96 inference (fast mode)", 2, 10, || {
+        report::cifar_stats(SimMode::Fast).unwrap()
+    });
+}

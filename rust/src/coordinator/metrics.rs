@@ -1,0 +1,73 @@
+//! Serving metrics: latency percentiles (both simulated-hardware time and
+//! host wallclock), throughput, and the energy ledger summary.
+
+use crate::util::stats::Percentiles;
+
+#[derive(Debug, Default)]
+pub struct ServingMetrics {
+    /// Simulated on-chip latency per served frame (µs).
+    pub sim_latency_us: Percentiles,
+    /// Host wallclock per served frame (µs) — the simulator's own speed.
+    pub wall_latency_us: Percentiles,
+    pub frames: u64,
+    pub labels_emitted: u64,
+    /// Simulated accelerator-core energy (J).
+    pub core_energy_j: f64,
+    /// Simulated total SoC energy (J).
+    pub soc_energy_j: f64,
+    /// Total simulated time (s).
+    pub sim_time_s: f64,
+}
+
+impl ServingMetrics {
+    pub fn record_frame(&mut self, sim_us: f64, wall_us: f64, core_j: f64) {
+        self.sim_latency_us.record(sim_us);
+        self.wall_latency_us.record(wall_us);
+        self.frames += 1;
+        self.labels_emitted += 1;
+        self.core_energy_j += core_j;
+        self.sim_time_s += sim_us * 1e-6;
+    }
+
+    /// Simulated inferences per second (sustained).
+    pub fn sim_inf_per_s(&self) -> f64 {
+        if self.sim_time_s == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.sim_time_s
+    }
+
+    pub fn summary(&mut self) -> String {
+        if self.frames == 0 {
+            return "no frames served".to_string();
+        }
+        format!(
+            "frames {}  sim-latency p50/p95/p99 {:.1}/{:.1}/{:.1} µs  \
+             sim rate {:.0} inf/s  core {:.2} µJ/inf  wall p50 {:.1} µs",
+            self.frames,
+            self.sim_latency_us.quantile(0.5),
+            self.sim_latency_us.quantile(0.95),
+            self.sim_latency_us.quantile(0.99),
+            self.sim_inf_per_s(),
+            self.core_energy_j / self.frames as f64 * 1e6,
+            self.wall_latency_us.quantile(0.5),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates_and_energy() {
+        let mut m = ServingMetrics::default();
+        for _ in 0..10 {
+            m.record_frame(100.0, 5.0, 1e-6);
+        }
+        assert_eq!(m.frames, 10);
+        assert!((m.sim_inf_per_s() - 10_000.0).abs() < 1.0);
+        assert!((m.core_energy_j - 1e-5).abs() < 1e-12);
+        assert!(m.summary().contains("frames 10"));
+    }
+}

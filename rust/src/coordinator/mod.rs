@@ -1,0 +1,18 @@
+//! Autonomous serving coordinator — the §5 data-to-label flow as a
+//! runnable system: a (synthetic) DVS camera streams event frames over
+//! µDMA; each frame triggers a CNN inference whose feature vector shifts
+//! into the TCN memory; the TCN back-end classifies the 24-step window;
+//! CUTIE's done-interrupt wakes the fabric controller for label readout.
+//!
+//! The coordinator owns the event loop, the process topology (producer /
+//! inference threads over bounded channels — tokio is unavailable in this
+//! offline environment, std threads are used), metrics, and the SoC
+//! energy ledger.
+
+pub mod metrics;
+pub mod pipeline;
+pub mod source;
+
+pub use metrics::ServingMetrics;
+pub use pipeline::{Pipeline, PipelineConfig, ServingReport};
+pub use source::{DvsSource, GestureClass};

@@ -1,0 +1,203 @@
+//! The serving pipeline: producer thread (DVS source → bounded channel,
+//! i.e. backpressure) + inference loop (scheduler + SoC model + metrics).
+//!
+//! Two modes:
+//! * [`Pipeline::run_inline`] — single-threaded, fully deterministic;
+//! * [`Pipeline::run_threaded`] — producer/consumer over
+//!   `std::sync::mpsc::sync_channel`, the process topology a real
+//!   deployment would use (tokio is unavailable offline).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::ServingMetrics;
+use super::source::{DvsSource, GestureClass};
+use crate::cutie::{CutieConfig, Scheduler, SimMode};
+use crate::energy::{evaluate, EnergyParams};
+use crate::network::Network;
+use crate::soc::{Irq, KrakenSoc};
+use crate::tensor::TritTensor;
+
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    pub voltage: f64,
+    /// Clock override (None → fmax(V)).
+    pub freq_hz: Option<f64>,
+    /// Frames to serve.
+    pub frames: usize,
+    /// Bounded channel depth for the threaded mode (backpressure).
+    pub queue_depth: usize,
+    pub seed: u64,
+    pub gesture: usize,
+    pub mode: SimMode,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            voltage: 0.5,
+            freq_hz: None,
+            frames: 32,
+            queue_depth: 4,
+            seed: 7,
+            gesture: 3,
+            mode: SimMode::Accurate,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ServingReport {
+    pub metrics: ServingMetrics,
+    pub soc_energy_j: f64,
+    pub soc_avg_power_w: f64,
+    pub fc_wakeups: u64,
+    pub labels: Vec<usize>,
+}
+
+pub struct Pipeline {
+    pub net: Network,
+    pub cfg: PipelineConfig,
+}
+
+impl Pipeline {
+    pub fn new(net: Network, cfg: PipelineConfig) -> Self {
+        Pipeline { net, cfg }
+    }
+
+    fn serve_one(
+        &self,
+        sched: &mut Scheduler,
+        soc: &mut KrakenSoc,
+        params: &EnergyParams,
+        metrics: &mut ServingMetrics,
+        labels: &mut Vec<usize>,
+        frame: &TritTensor,
+    ) -> Result<()> {
+        let wall0 = Instant::now();
+        // µDMA ingress (SoC timeline) + frame-ready IRQ starts CUTIE
+        let bytes = (frame.numel() * 2).div_ceil(8) as u64;
+        soc.dma_ingest(bytes);
+        soc.raise_irq(Irq::FrameReady);
+
+        // accelerator: CNN → TCN memory → TCN window → logits
+        let (logits, stats) = sched.serve_frame(&self.net, frame)?;
+        let report = evaluate(&stats, self.cfg.voltage, self.cfg.freq_hz, params);
+
+        // advance the SoC timeline by the accelerator's busy time and add
+        // the core energy on top of the domain baseline
+        soc.advance_ns((report.time_s * 1e9) as u64);
+        soc.add_core_energy(report.energy_j);
+        soc.raise_irq(Irq::CutieDone);
+        soc.fc_service_done();
+
+        labels.push(logits.argmax());
+        let wall_us = wall0.elapsed().as_secs_f64() * 1e6;
+        metrics.record_frame(report.time_s * 1e6, wall_us, report.energy_j);
+        Ok(())
+    }
+
+    /// Deterministic single-threaded serving run.
+    pub fn run_inline(&self) -> Result<ServingReport> {
+        let params = EnergyParams::default();
+        let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);
+        sched.preload_weights(&self.net);
+        let mut soc = KrakenSoc::new(self.cfg.voltage);
+        let mut src = DvsSource::new(self.net.input_hw, self.cfg.seed, GestureClass(self.cfg.gesture));
+        let mut metrics = ServingMetrics::default();
+        let mut labels = Vec::new();
+        for _ in 0..self.cfg.frames {
+            let frame = src.next_frame();
+            self.serve_one(&mut sched, &mut soc, &params, &mut metrics, &mut labels, &frame)?;
+        }
+        metrics.soc_energy_j = soc.ledger.energy_j;
+        Ok(ServingReport {
+            soc_energy_j: soc.ledger.energy_j,
+            soc_avg_power_w: soc.avg_power_w(),
+            fc_wakeups: soc.ledger.fc_wakeups,
+            metrics,
+            labels,
+        })
+    }
+
+    /// Producer/consumer topology with a bounded frame queue.
+    pub fn run_threaded(&self) -> Result<ServingReport> {
+        let (tx, rx) = mpsc::sync_channel::<TritTensor>(self.cfg.queue_depth);
+        let hw = self.net.input_hw;
+        let seed = self.cfg.seed;
+        let gesture = self.cfg.gesture;
+        let frames = self.cfg.frames;
+        let producer = std::thread::spawn(move || {
+            let mut src = DvsSource::new(hw, seed, GestureClass(gesture));
+            for _ in 0..frames {
+                // send blocks when the queue is full → backpressure on
+                // the (synthetic) camera, like µDMA flow control
+                if tx.send(src.next_frame()).is_err() {
+                    break;
+                }
+            }
+        });
+
+        let params = EnergyParams::default();
+        let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);
+        sched.preload_weights(&self.net);
+        let mut soc = KrakenSoc::new(self.cfg.voltage);
+        let mut metrics = ServingMetrics::default();
+        let mut labels = Vec::new();
+        while let Ok(frame) = rx.recv() {
+            self.serve_one(&mut sched, &mut soc, &params, &mut metrics, &mut labels, &frame)?;
+        }
+        producer.join().expect("producer thread");
+        metrics.soc_energy_j = soc.ledger.energy_j;
+        Ok(ServingReport {
+            soc_energy_j: soc.ledger.energy_j,
+            soc_avg_power_w: soc.avg_power_w(),
+            fc_wakeups: soc.ledger.fc_wakeups,
+            metrics,
+            labels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::dvs_hybrid_random;
+
+    fn small_pipeline(frames: usize) -> Pipeline {
+        let net = dvs_hybrid_random(16, 5, 0.5);
+        Pipeline::new(
+            net,
+            PipelineConfig { frames, mode: SimMode::Fast, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn inline_and_threaded_agree() {
+        let p = small_pipeline(6);
+        let a = p.run_inline().unwrap();
+        let b = p.run_threaded().unwrap();
+        assert_eq!(a.labels, b.labels, "topology must not change results");
+        assert_eq!(a.fc_wakeups, b.fc_wakeups);
+        assert_eq!(a.metrics.frames, 6);
+    }
+
+    #[test]
+    fn fc_wakes_once_per_frame() {
+        let p = small_pipeline(5);
+        let r = p.run_inline().unwrap();
+        assert_eq!(r.fc_wakeups, 5);
+        assert_eq!(r.labels.len(), 5);
+    }
+
+    #[test]
+    fn energy_accumulates() {
+        let p = small_pipeline(4);
+        let r = p.run_inline().unwrap();
+        assert!(r.soc_energy_j > 0.0);
+        assert!(r.metrics.core_energy_j > 0.0);
+        assert!(r.soc_energy_j > r.metrics.core_energy_j, "SoC adds baseline power");
+    }
+}

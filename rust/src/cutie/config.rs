@@ -1,0 +1,77 @@
+//! Accelerator geometry. Defaults match the Kraken instantiation (§5):
+//! 96 channels, 64×64 max feature maps, 24-step TCN memory, 3×3 kernels.
+
+#[derive(Debug, Clone)]
+pub struct CutieConfig {
+    /// Number of OCUs == max output channels == max input channels.
+    pub channels: usize,
+    /// Max feature-map side length the activation memory supports.
+    pub max_hw: usize,
+    /// TCN memory depth (time steps).
+    pub tcn_depth: usize,
+    /// Kernel size (the datapath is hardwired 3×3 in Kraken).
+    pub kernel: usize,
+    /// Kernels each OCU's weight buffer can hold resident. Kraken stores
+    /// the full network (weights loaded once, then only bank switches).
+    pub weight_banks: usize,
+    /// µDMA bus width in bits (frame ingress).
+    pub dma_bits: usize,
+}
+
+impl Default for CutieConfig {
+    fn default() -> Self {
+        CutieConfig {
+            channels: 96,
+            max_hw: 64,
+            tcn_depth: 24,
+            kernel: 3,
+            weight_banks: 9,
+            dma_bits: 32,
+        }
+    }
+}
+
+impl CutieConfig {
+    pub fn kraken() -> Self {
+        Self::default()
+    }
+
+    /// Bits of one activation-memory word (one pixel, 2 bits/trit).
+    pub fn act_word_bits(&self) -> usize {
+        2 * self.channels
+    }
+
+    /// Full-datapath ("hardware") ops per compute cycle with `active`
+    /// OCUs: each active OCU performs K²·C MACs = 2·K²·C Ops per cycle
+    /// (zero-padded input channels included — the paper's peak-throughput
+    /// convention; idle OCUs are clock-gated and excluded).
+    pub fn hw_ops_per_cycle(&self, active_ocus: usize) -> u64 {
+        (active_ocus * self.kernel * self.kernel * self.channels * 2) as u64
+    }
+
+    /// TCN memory size in bytes (2-bit trits, depth × channels).
+    pub fn tcn_mem_bytes(&self) -> usize {
+        self.tcn_depth * self.channels * 2 / 8
+    }
+
+    /// Activation memory size in bytes per buffer (double-buffered).
+    pub fn act_mem_bytes(&self) -> usize {
+        self.max_hw * self.max_hw * self.act_word_bits() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kraken_dimensions_match_paper() {
+        let c = CutieConfig::kraken();
+        // §4: 24 feature vectors == 576 bytes of SCM.
+        assert_eq!(c.tcn_mem_bytes(), 576);
+        // peak: 96 OCUs × 96 ch × 9 × 2 = 165,888 Op/cycle.
+        assert_eq!(c.hw_ops_per_cycle(96), 165_888);
+        // 64×64×96 trits @2b = 98,304 B per activation buffer.
+        assert_eq!(c.act_mem_bytes(), 98_304);
+    }
+}

@@ -1,0 +1,373 @@
+//! Per-layer cycle loop: the completely unrolled datapath. One output
+//! pixel position per cycle; all active OCUs consume the same full
+//! 3×3×C_in window from the linebuffer (input-stationary), accumulate in
+//! one pipeline stage, threshold, optionally pool, and write back.
+//!
+//! This is the simulator's hot path (see EXPERIMENTS.md §Perf).
+
+use anyhow::{ensure, Result};
+
+use super::config::CutieConfig;
+use super::linebuffer::LineBuffer;
+use super::ocu::{build_ocus, Ocu};
+use super::stats::LayerStats;
+use super::SimMode;
+use crate::network::{Layer, LayerKind};
+use crate::tensor::{IntTensor, TritTensor};
+use crate::trit::PackedVec;
+
+pub struct LayerResult {
+    pub output: TritTensor,
+    pub stats: LayerStats,
+}
+
+/// A layer pre-flattened for the datapath: contiguous position-major
+/// packed kernels + threshold arrays (perf pass iteration 5 — built once
+/// per layer and cached by the scheduler across frames instead of being
+/// re-packed on every inference).
+pub struct PreparedLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k: usize,
+    pub pool: bool,
+    pub global_pool: bool,
+    weights_flat: Vec<PackedVec>,
+    lo_flat: Vec<i32>,
+    hi_flat: Vec<i32>,
+}
+
+impl PreparedLayer {
+    pub fn new(layer: &Layer) -> Self {
+        let ocus: Vec<Ocu> = build_ocus(&layer.weights, &layer.lo, &layer.hi);
+        let active = ocus.len();
+        let k = layer.weights.dims[0];
+        let k2 = k * k;
+        let mut weights_flat: Vec<PackedVec> = vec![PackedVec::ZERO; k2 * active];
+        for (co, ocu) in ocus.iter().enumerate() {
+            for kk in 0..k2 {
+                weights_flat[kk * active + co] = ocu.weights[kk];
+            }
+        }
+        PreparedLayer {
+            name: layer.name.clone(),
+            kind: layer.kind,
+            in_ch: layer.in_ch,
+            out_ch: layer.out_ch,
+            k,
+            pool: layer.pool,
+            global_pool: layer.global_pool,
+            lo_flat: ocus.iter().map(|o| o.lo).collect(),
+            hi_flat: ocus.iter().map(|o| o.hi).collect(),
+            weights_flat,
+        }
+    }
+}
+
+/// Run one conv2d-style layer (also used for mapped TCN layers, which are
+/// plain 3×3 layers by construction). Stateless wrapper: prepares the
+/// layer and runs it. The scheduler caches [`PreparedLayer`]s and calls
+/// [`run_prepared`] directly (perf pass iteration 5).
+pub fn run_conv_layer(
+    layer: &Layer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<LayerResult> {
+    ensure!(layer.kind == LayerKind::Conv2d || layer.kind == LayerKind::Tcn);
+    run_prepared(&PreparedLayer::new(layer), input, cfg, mode)
+}
+
+/// Run a prepared layer. Weight-load cycles are charged by the scheduler
+/// (it owns the weight memory); this accounts for everything downstream
+/// of the weight buffers.
+pub fn run_prepared(
+    prep: &PreparedLayer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<LayerResult> {
+    ensure!(input.dims.len() == 3, "conv input must be (H, W, C)");
+    let (h, w, cin) = (input.dims[0], input.dims[1], input.dims[2]);
+    ensure!(cin == prep.in_ch, "{}: input channels {cin} != {}", prep.name, prep.in_ch);
+    ensure!(cin <= cfg.channels, "{}: {cin} input channels exceed the {} datapath", prep.name, cfg.channels);
+    ensure!(prep.out_ch <= cfg.channels, "{}: {} output channels exceed {} OCUs", prep.name, prep.out_ch, cfg.channels);
+    ensure!(h <= cfg.max_hw && w <= cfg.max_hw, "{}: {h}×{w} exceeds {}²", prep.name, cfg.max_hw);
+
+    // Mapped TCN weights arrive pre-projected from the scheduler as 3×3
+    // kernels; plain conv layers carry their own.
+    let k = prep.k;
+    ensure!(k == cfg.kernel, "{}: kernel {k} != datapath {}", prep.name, cfg.kernel);
+    let k2 = k * k;
+    let active = prep.out_ch;
+    let weights_flat = &prep.weights_flat;
+    let lo_flat = &prep.lo_flat;
+    let hi_flat = &prep.hi_flat;
+
+    let mut stats = LayerStats {
+        name: prep.name.clone(),
+        active_ocus: active,
+        fanin: k * k * cin,
+        ..Default::default()
+    };
+
+    stats.lb_fill_cycles = LineBuffer::new(k, w).fill_cycles(w);
+
+    // Row-parallel compute (perf pass iteration 3): output rows are
+    // independent, so they are sharded over threads; each shard drives its
+    // own linebuffer. Counters stay exact: toggles are summed across
+    // shards, and in the stall-free design every input pixel is fetched
+    // exactly once (h·w reads) regardless of sharding.
+    let mut out = TritTensor::zeros(&[h, w, active]);
+    let threads = if h * w * active * cin >= 64 * 64 * 16 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(h)
+    } else {
+        1
+    };
+    let narrow = cin <= 64;
+    let _ = mode; // both modes share the loop: toggle counting is free now
+    let rows_per = h.div_ceil(threads);
+    let mut row_chunks: Vec<&mut [i8]> = out.data.chunks_mut(rows_per * w * active).collect();
+    let toggle_counts: Vec<u64> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, chunk) in row_chunks.drain(..).enumerate() {
+            let handle = scope.spawn(move || {
+                let y0 = t * rows_per;
+                let y1 = (y0 + rows_per).min(h);
+                let mut lb = LineBuffer::new(k, w);
+                let mut window = vec![PackedVec::ZERO; k2];
+                let mut acc = vec![0i32; active];
+                let mut toggles = 0u64;
+                for y in y0..y1 {
+                    lb.advance_to(y, input);
+                    for x in 0..w {
+                        lb.window(y, x, h, &mut window);
+                        acc.fill(0);
+                        // position-major accumulation: the OCU dimension is
+                        // the contiguous inner loop; zero window positions
+                        // (common on sparse DVS maps) are skipped outright
+                        // — bit-exact, they contribute no acc and no
+                        // toggles.
+                        for (kk, xw) in window.iter().enumerate() {
+                            if xw.is_zero() {
+                                continue;
+                            }
+                            let wrow = &weights_flat[kk * active..(kk + 1) * active];
+                            // narrow layers (C_in <= 64) use the
+                            // single-word dot; toggle counting is free in
+                            // this encoding, so both modes share it
+                            if narrow {
+                                for (a, wv) in acc.iter_mut().zip(wrow) {
+                                    let (d, tog) = wv.dot_narrow(xw);
+                                    *a += d;
+                                    toggles += tog as u64;
+                                }
+                            } else {
+                                for (a, wv) in acc.iter_mut().zip(wrow) {
+                                    let (d, tog) = wv.dot(xw);
+                                    *a += d;
+                                    toggles += tog as u64;
+                                }
+                            }
+                        }
+                        let obase = ((y - y0) * w + x) * active;
+                        for co in 0..active {
+                            chunk[obase + co] =
+                                crate::trit::ternarize(acc[co], lo_flat[co], hi_flat[co]);
+                        }
+                    }
+                }
+                toggles
+            });
+            handles.push(handle);
+        }
+        handles.into_iter().map(|h| h.join().expect("datapath shard")).collect()
+    });
+    stats.mac_toggles = toggle_counts.iter().sum();
+    stats.compute_cycles = (h * w) as u64;
+    stats.drain_cycles = 1; // single OCU pipeline stage (§3, Fig. 2)
+    stats.lb_pushes = (h * w) as u64; // every input pixel enters the FFs once
+    stats.act_reads = (h * w) as u64; // one word per input pixel
+    stats.hw_ops = cfg.hw_ops_per_cycle(active) * stats.compute_cycles;
+    stats.alg_macs = (h * w * stats.fanin * active) as u64;
+    // Clocked multiplier positions in active OCUs span the full C-channel
+    // datapath even when C_in < C (inputs are zero-padded wires).
+    let clocked = (active * cfg.channels * k * k) as u64 * stats.compute_cycles;
+    stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
+
+    // On-the-fly pooling in the OCUs (§3): decimates write-back traffic,
+    // costs no extra cycles.
+    let mut result = out;
+    if prep.pool {
+        result = crate::network::reference::maxpool2x2(&result);
+    }
+    if prep.global_pool {
+        result = crate::network::reference::global_maxpool(&result);
+    }
+    stats.act_writes = if result.dims.len() == 3 {
+        (result.dims[0] * result.dims[1]) as u64
+    } else {
+        1
+    };
+
+    Ok(LayerResult { output: result, stats })
+}
+
+/// Classifier layer: the feature vector streams through the adder trees
+/// C-channels per cycle; `classes` OCUs stay active, the rest are gated.
+/// Raw accumulators go out over the config port (no ternarization).
+pub fn run_dense_layer(
+    layer: &Layer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<(IntTensor, LayerStats)> {
+    ensure!(layer.kind == LayerKind::Dense);
+    let f = layer.in_ch;
+    ensure!(input.numel() == f, "{}: classifier input {} != {}", layer.name, input.numel(), f);
+    let classes = layer.out_ch;
+
+    let mut stats = LayerStats {
+        name: layer.name.clone(),
+        active_ocus: classes,
+        fanin: f,
+        ..Default::default()
+    };
+
+    let chunks = f.div_ceil(cfg.channels);
+    let mut logits = IntTensor::zeros(&[classes]);
+    for chunk in 0..chunks {
+        let lo_i = chunk * cfg.channels;
+        let hi_i = ((chunk + 1) * cfg.channels).min(f);
+        let x = PackedVec::pack(&input.data[lo_i..hi_i]);
+        for co in 0..classes {
+            // weight slice for this chunk/output
+            let trits: Vec<i8> =
+                (lo_i..hi_i).map(|i| layer.weights.data[i * classes + co]).collect();
+            let wv = PackedVec::pack(&trits);
+            match mode {
+                SimMode::Accurate => {
+                    let (acc, toggles) = wv.dot(&x);
+                    logits.data[co] += acc;
+                    stats.mac_toggles += toggles as u64;
+                }
+                SimMode::Fast => {
+                    logits.data[co] += wv.dot_fast(&x);
+                }
+            }
+        }
+    }
+    stats.compute_cycles = chunks as u64;
+    stats.drain_cycles = 1;
+    stats.act_reads = chunks as u64;
+    stats.act_writes = 0; // logits leave via the config port / interrupt
+    stats.hw_ops = cfg.hw_ops_per_cycle(classes) * stats.compute_cycles;
+    stats.alg_macs = (f * classes) as u64;
+    let clocked = (classes * cfg.channels * cfg.kernel * cfg.kernel) as u64 * stats.compute_cycles;
+    stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
+    Ok((logits, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::reference;
+    use crate::network::{cifar9_random, LayerKind};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn datapath_matches_reference_executor() {
+        // Property: cycle-level output == functional reference, across
+        // sizes, channel counts and sparsities.
+        let mut rng = Rng::new(71);
+        let cfg = CutieConfig::kraken();
+        for case in 0..12 {
+            let net = cifar9_random(8 + 8 * (case % 3), 100 + case as u64, [0.0, 0.33, 0.66][case % 3]);
+            let layer = &net.layers[case % 8];
+            if layer.kind != LayerKind::Conv2d {
+                continue;
+            }
+            let hw = 4 + 2 * rng.below(6);
+            let input = TritTensor::random(&[hw, hw, layer.in_ch], &mut rng, 0.4);
+            let got = run_conv_layer(layer, &input, &cfg, SimMode::Accurate).unwrap();
+            let want = reference::run_conv_layer(layer, &input);
+            assert_eq!(got.output, want, "case {case}");
+            // Fast mode must agree too.
+            let fast = run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
+            assert_eq!(fast.output, want);
+            assert_eq!(fast.stats.compute_cycles, got.stats.compute_cycles);
+            // since the (pos, mask) encoding, toggle counting is free and
+            // Fast mode reports it too
+            assert_eq!(fast.stats.mac_toggles, got.stats.mac_toggles);
+        }
+    }
+
+    #[test]
+    fn cycle_model_shape() {
+        let net = cifar9_random(96, 7, 0.33);
+        let cfg = CutieConfig::kraken();
+        let mut rng = Rng::new(72);
+        let input = TritTensor::random(&[32, 32, 96], &mut rng, 0.4);
+        let layer = &net.layers[2]; // 96→96, no pool
+        let r = run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
+        assert_eq!(r.stats.compute_cycles, 32 * 32);
+        assert_eq!(r.stats.lb_fill_cycles, 2 * 32 + 2);
+        assert_eq!(r.stats.act_reads, 32 * 32); // every pixel read once
+        assert_eq!(r.stats.act_writes, 32 * 32);
+        assert_eq!(r.stats.hw_ops, 165_888 * 1024);
+        assert_eq!(r.stats.alg_macs, 1024 * 9 * 96 * 96);
+    }
+
+    #[test]
+    fn pooling_decimates_writes_not_cycles() {
+        let net = cifar9_random(16, 9, 0.33);
+        let cfg = CutieConfig::kraken();
+        let mut rng = Rng::new(73);
+        let layer = &net.layers[1]; // pool = true
+        let input = TritTensor::random(&[16, 16, 16], &mut rng, 0.3);
+        let r = run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
+        assert_eq!(r.stats.compute_cycles, 256);
+        assert_eq!(r.stats.act_writes, 64); // 8×8 after pooling
+        assert_eq!(r.output.dims, vec![8, 8, 16]);
+    }
+
+    #[test]
+    fn toggles_track_sparsity() {
+        let cfg = CutieConfig::kraken();
+        let mut rng = Rng::new(74);
+        let dense_net = cifar9_random(32, 10, 0.0);
+        let sparse_net = cifar9_random(32, 10, 0.8);
+        let input_dense = TritTensor::random(&[8, 8, 32], &mut rng, 0.0);
+        let input_sparse = TritTensor::random(&[8, 8, 32], &mut rng, 0.8);
+        let d = run_conv_layer(&dense_net.layers[2], &input_dense, &cfg, SimMode::Accurate).unwrap();
+        let s = run_conv_layer(&sparse_net.layers[2], &input_sparse, &cfg, SimMode::Accurate).unwrap();
+        assert!(
+            s.stats.mac_toggles * 10 < d.stats.mac_toggles,
+            "sparse toggles {} vs dense {}",
+            s.stats.mac_toggles,
+            d.stats.mac_toggles
+        );
+    }
+
+    #[test]
+    fn dense_layer_matches_reference() {
+        let net = cifar9_random(24, 11, 0.33);
+        let cfg = CutieConfig::kraken();
+        let mut rng = Rng::new(75);
+        let fc = net.layers.last().unwrap();
+        let x = TritTensor::random(&[fc.in_ch], &mut rng, 0.4);
+        let (logits, stats) = run_dense_layer(fc, &x, &cfg, SimMode::Accurate).unwrap();
+        let want = reference::run_dense_layer(fc, &x);
+        assert_eq!(logits, want);
+        assert_eq!(stats.compute_cycles, (fc.in_ch as u64).div_ceil(96));
+    }
+
+    #[test]
+    fn rejects_oversized_maps() {
+        let net = cifar9_random(96, 12, 0.33);
+        let cfg = CutieConfig::kraken();
+        let input = TritTensor::zeros(&[65, 65, 96]);
+        assert!(run_conv_layer(&net.layers[2], &input, &cfg, SimMode::Fast).is_err());
+    }
+}

@@ -1,0 +1,159 @@
+//! Stall-free linebuffer (§3): holds K rows of packed pixels and serves a
+//! full K×K×C window every cycle. Streaming rows in from the activation
+//! memory overlaps with compute, so the only non-hidden cost is the
+//! initial fill (K-1 rows + K-1 pixels). Zero padding at the edges is
+//! produced combinationally (no memory access).
+//!
+//! The ablation A2 ("direct strided access", what a dilated conv would do
+//! *without* the §4 mapping) is modelled in
+//! [`crate::cutie::scheduler`], which charges explicit stall cycles per
+//! non-contiguous fetch; this module is always the stall-free variant.
+
+use crate::tensor::TritTensor;
+use crate::trit::PackedVec;
+
+pub struct LineBuffer {
+    k: usize,
+    width: usize,
+    /// `rows[r]` is input row `base_row + r`, packed per pixel.
+    rows: Vec<Vec<PackedVec>>,
+    base_row: isize,
+    /// Pixel pushes (shift-register activity for the energy model).
+    pub pushes: u64,
+}
+
+impl LineBuffer {
+    pub fn new(k: usize, width: usize) -> Self {
+        LineBuffer { k, width, rows: Vec::new(), base_row: 0, pushes: 0 }
+    }
+
+    /// Load the window rows needed to produce output row `y` of an
+    /// H-row image: input rows y-pad .. y+pad clipped to [0, H).
+    /// Returns the number of *new* rows fetched (1 in steady state).
+    pub fn advance_to(&mut self, y: usize, input: &TritTensor) -> usize {
+        let h = input.dims[0] as isize;
+        let pad = (self.k / 2) as isize;
+        let lo = (y as isize - pad).max(0);
+        let hi = (y as isize + pad).min(h - 1);
+        let mut fetched = 0;
+        if self.rows.is_empty() || lo > self.base_row + self.rows.len() as isize - 1 {
+            // (re)fill from scratch
+            self.rows.clear();
+            self.base_row = lo;
+            for r in lo..=hi {
+                let row = self.fetch_row(r as usize, input);
+                self.rows.push(row);
+                fetched += 1;
+            }
+        } else {
+            // drop rows that scrolled out
+            while self.base_row < lo {
+                self.rows.remove(0);
+                self.base_row += 1;
+            }
+            // fetch rows that scrolled in
+            while self.base_row + (self.rows.len() as isize) <= hi {
+                let r = self.base_row + self.rows.len() as isize;
+                let row = self.fetch_row(r as usize, input);
+                self.rows.push(row);
+                fetched += 1;
+            }
+        }
+        fetched
+    }
+
+    fn fetch_row(&mut self, r: usize, input: &TritTensor) -> Vec<PackedVec> {
+        self.pushes += self.width as u64;
+        (0..self.width).map(|x| input.pack_pixel(r, x)).collect()
+    }
+
+    /// Extract the K×K window centred at (y, x); zero padding outside.
+    /// `window` must have length K².
+    pub fn window(&self, y: usize, x: usize, h: usize, window: &mut [PackedVec]) {
+        let pad = (self.k / 2) as isize;
+        for ky in 0..self.k {
+            let sy = y as isize + ky as isize - pad;
+            for kx in 0..self.k {
+                let sx = x as isize + kx as isize - pad;
+                let idx = ky * self.k + kx;
+                if sy < 0 || sy >= h as isize || sx < 0 || sx >= self.width as isize {
+                    window[idx] = PackedVec::ZERO;
+                } else {
+                    window[idx] = self.rows[(sy - self.base_row) as usize][sx as usize];
+                }
+            }
+        }
+    }
+
+    /// Cycles to prime the buffer before the first window: (K-1) rows plus
+    /// (K-1) pixels of the next row, matching the RTL fill behaviour.
+    pub fn fill_cycles(&self, input_w: usize) -> u64 {
+        ((self.k - 1) * input_w + (self.k - 1)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn windows_match_direct_indexing() {
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let h = 3 + rng.below(10);
+            let w = 3 + rng.below(10);
+            let c = 1 + rng.below(32);
+            let img = TritTensor::random(&[h, w, c], &mut rng, 0.3);
+            let mut lb = LineBuffer::new(3, w);
+            let mut window = vec![PackedVec::ZERO; 9];
+            for y in 0..h {
+                lb.advance_to(y, &img);
+                for x in 0..w {
+                    lb.window(y, x, h, &mut window);
+                    for ky in 0..3usize {
+                        for kx in 0..3usize {
+                            let sy = y as isize + ky as isize - 1;
+                            let sx = x as isize + kx as isize - 1;
+                            let got = &window[ky * 3 + kx];
+                            if sy < 0 || sx < 0 || sy >= h as isize || sx >= w as isize {
+                                assert_eq!(*got, PackedVec::ZERO);
+                            } else {
+                                assert_eq!(*got, img.pack_pixel(sy as usize, sx as usize));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_fetches_one_row() {
+        let mut rng = Rng::new(22);
+        let img = TritTensor::random(&[8, 5, 4], &mut rng, 0.3);
+        let mut lb = LineBuffer::new(3, 5);
+        assert_eq!(lb.advance_to(0, &img), 2); // rows 0, 1
+        assert_eq!(lb.advance_to(1, &img), 1); // row 2
+        assert_eq!(lb.advance_to(2, &img), 1);
+        assert_eq!(lb.advance_to(7, &img), 2); // jump: refill rows 6, 7
+    }
+
+    #[test]
+    fn push_accounting() {
+        let mut rng = Rng::new(23);
+        let img = TritTensor::random(&[4, 6, 2], &mut rng, 0.0);
+        let mut lb = LineBuffer::new(3, 6);
+        for y in 0..4 {
+            lb.advance_to(y, &img);
+        }
+        // every input row fetched exactly once = 4 rows × 6 px
+        assert_eq!(lb.pushes, 24);
+    }
+
+    #[test]
+    fn fill_cycles_formula() {
+        let lb = LineBuffer::new(3, 32);
+        assert_eq!(lb.fill_cycles(32), 2 * 32 + 2);
+    }
+}

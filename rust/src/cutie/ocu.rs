@@ -1,0 +1,168 @@
+//! Output Channel Compute Unit: one per output channel (§3). Holds the
+//! layer's 3×3×C_in ternary kernel in a local buffer, computes the full
+//! window dot product through the wide adder tree in a single (pipelined)
+//! cycle, then applies the two-threshold ternarization. Sparsity in either
+//! operand suppresses partial-product toggling — the effect the energy
+//! model charges for.
+
+use crate::tensor::TritTensor;
+use crate::trit::{ternarize, PackedVec};
+
+#[derive(Debug, Clone)]
+pub struct Ocu {
+    /// Kernel taps packed over input channels: `weights[ky*K + kx]`.
+    pub weights: Vec<PackedVec>,
+    pub lo: i32,
+    pub hi: i32,
+    /// Non-zero weight trits (precomputed; weight-side activity bound).
+    pub weight_nonzero: u32,
+}
+
+impl Ocu {
+    /// Build one OCU from a (K, K, Cin, Cout) layer weight tensor.
+    pub fn from_layer_weights(w: &TritTensor, out_ch: usize, lo: i32, hi: i32) -> Ocu {
+        let (kh, kw, cin, cout) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+        let mut weights = Vec::with_capacity(kh * kw);
+        let mut nz = 0u32;
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let mut trits = Vec::with_capacity(cin);
+                for ci in 0..cin {
+                    let t = w.data[((ky * kw + kx) * cin + ci) * cout + out_ch];
+                    if t != 0 {
+                        nz += 1;
+                    }
+                    trits.push(t);
+                }
+                weights.push(PackedVec::pack(&trits));
+            }
+        }
+        Ocu { weights, lo, hi, weight_nonzero: nz }
+    }
+
+    /// Full-window accumulate with toggle counting.
+    #[inline]
+    pub fn compute(&self, window: &[PackedVec]) -> (i32, u32) {
+        debug_assert_eq!(window.len(), self.weights.len());
+        let mut acc = 0i32;
+        let mut toggles = 0u32;
+        for (w, x) in self.weights.iter().zip(window) {
+            let (a, t) = w.dot(x);
+            acc += a;
+            toggles += t;
+        }
+        (acc, toggles)
+    }
+
+    /// Accumulate only (fast path).
+    #[inline]
+    pub fn compute_fast(&self, window: &[PackedVec]) -> i32 {
+        let mut acc = 0i32;
+        for (w, x) in self.weights.iter().zip(window) {
+            acc += w.dot_fast(x);
+        }
+        acc
+    }
+
+    /// Accumulate over a pre-filtered list of non-zero window positions
+    /// (perf pass iteration 2: the zero-position list is computed once per
+    /// pixel and shared by all OCUs — zero positions contribute neither
+    /// accumulator value nor toggles, so skipping them is bit-exact).
+    #[inline]
+    pub fn compute_active(&self, window: &[PackedVec], active: &[u8]) -> (i32, u32) {
+        let mut acc = 0i32;
+        let mut toggles = 0u32;
+        for &k in active {
+            let (a, t) = self.weights[k as usize].dot(&window[k as usize]);
+            acc += a;
+            toggles += t;
+        }
+        (acc, toggles)
+    }
+
+    /// Fast variant of [`Self::compute_active`].
+    #[inline]
+    pub fn compute_active_fast(&self, window: &[PackedVec], active: &[u8]) -> i32 {
+        let mut acc = 0i32;
+        for &k in active {
+            acc += self.weights[k as usize].dot_fast(&window[k as usize]);
+        }
+        acc
+    }
+
+    /// Threshold the accumulator to a trit.
+    #[inline]
+    pub fn threshold(&self, acc: i32) -> i8 {
+        ternarize(acc, self.lo, self.hi)
+    }
+}
+
+/// Build the full OCU array for a layer (one OCU per output channel).
+pub fn build_ocus(w: &TritTensor, lo: &[i32], hi: &[i32]) -> Vec<Ocu> {
+    let cout = *w.dims.last().unwrap();
+    (0..cout)
+        .map(|co| {
+            let (l, h) = if lo.is_empty() { (i32::MIN + 1, i32::MAX - 1) } else { (lo[co], hi[co]) };
+            Ocu::from_layer_weights(w, co, l, h)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn window_from(x: &[Vec<i8>]) -> Vec<PackedVec> {
+        x.iter().map(|v| PackedVec::pack(v)).collect()
+    }
+
+    #[test]
+    fn ocu_matches_scalar_conv() {
+        let mut rng = Rng::new(11);
+        for _ in 0..50 {
+            let cin = 1 + rng.below(96);
+            let w = TritTensor::random(&[3, 3, cin, 4], &mut rng, 0.3);
+            let ocus = build_ocus(&w, &[-1, -1, -1, -1], &[1, 1, 1, 1]);
+            // random window
+            let win: Vec<Vec<i8>> =
+                (0..9).map(|_| (0..cin).map(|_| rng.trit(0.4)).collect()).collect();
+            let window = window_from(&win);
+            for (co, ocu) in ocus.iter().enumerate() {
+                let (acc, toggles) = ocu.compute(&window);
+                // scalar reference
+                let mut want = 0i32;
+                let mut want_t = 0u32;
+                for (k, pix) in win.iter().enumerate() {
+                    for (ci, &xv) in pix.iter().enumerate() {
+                        let wv = w.data[(k * cin + ci) * 4 + co] as i32;
+                        let p = wv * xv as i32;
+                        want += p;
+                        if p != 0 {
+                            want_t += 1;
+                        }
+                    }
+                }
+                assert_eq!(acc, want);
+                assert_eq!(toggles, want_t);
+                assert_eq!(ocu.compute_fast(&window), want);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_sentinel_thresholds_pass_raw() {
+        // classifier OCUs use sentinel thresholds; threshold() never fires.
+        let w = TritTensor::from_vec(&[1, 1, 2, 1], vec![1, -1]);
+        let ocus = build_ocus(&w, &[], &[]);
+        assert_eq!(ocus[0].threshold(500), 0);
+        assert_eq!(ocus[0].threshold(-500), 0);
+    }
+
+    #[test]
+    fn weight_nonzero_counted() {
+        let w = TritTensor::from_vec(&[1, 1, 4, 1], vec![1, 0, -1, 0]);
+        let ocu = Ocu::from_layer_weights(&w, 0, -1, 1);
+        assert_eq!(ocu.weight_nonzero, 2);
+    }
+}

@@ -1,0 +1,462 @@
+//! Multi-layer scheduler: owns the weight memory, activation memory and
+//! TCN memory, sequences layers, charges weight/DMA cycles, and implements
+//! the two TCN execution strategies:
+//!
+//! * `mapped` (the paper's §4 contribution): dilated 1D convs are
+//!   projected offline onto plain 3×3 layers — zero stalls;
+//! * `direct` (the ablation A2 baseline): dilated taps are fetched with
+//!   stride D straight from memory, which breaks the linebuffer and
+//!   serializes one word access per tap.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use super::actmem::ActivationMemory;
+use super::datapath::{run_dense_layer, run_prepared, PreparedLayer};
+use super::stats::{LayerStats, RunStats};
+use super::tcnmem::TcnMemory;
+use super::weightmem::{WeightAccess, WeightMemory};
+use super::{CutieConfig, SimMode};
+use crate::mapping;
+use crate::network::{Layer, LayerKind, Network};
+use crate::tensor::{IntTensor, TritTensor};
+use crate::trit::ternarize;
+
+/// How TCN layers are executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TcnStrategy {
+    /// §4 mapping — the paper's system.
+    Mapped,
+    /// Direct strided access — the baseline the mapping replaces.
+    Direct,
+}
+
+pub struct Scheduler {
+    pub cfg: CutieConfig,
+    pub mode: SimMode,
+    pub tcn_strategy: TcnStrategy,
+    weights: WeightMemory,
+    pub tcn_mem: TcnMemory,
+    actmem: ActivationMemory,
+    /// Prepared (flattened, bit-packed) layers, cached across inferences —
+    /// the software analogue of the weights staying resident in the OCU
+    /// buffers (perf pass iteration 5; see EXPERIMENTS.md §Perf).
+    prepared: HashMap<String, PreparedLayer>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: CutieConfig, mode: SimMode) -> Self {
+        let weights = WeightMemory::new(cfg.weight_banks, cfg.channels);
+        let tcn_mem = TcnMemory::new(cfg.tcn_depth, cfg.channels);
+        let actmem = ActivationMemory::new(cfg.max_hw, cfg.channels);
+        Scheduler {
+            cfg,
+            mode,
+            tcn_strategy: TcnStrategy::Mapped,
+            weights,
+            tcn_mem,
+            actmem,
+            prepared: HashMap::new(),
+        }
+    }
+
+    pub fn with_tcn_strategy(mut self, s: TcnStrategy) -> Self {
+        self.tcn_strategy = s;
+        self
+    }
+
+    /// Pre-load every layer's weights (boot). Returns boot cycles; after
+    /// this, inference only performs 1-cycle bank switches (Kraken keeps
+    /// the whole network resident).
+    pub fn preload_weights(&mut self, net: &Network) -> u64 {
+        let mut cycles = 0;
+        for l in &net.layers {
+            if l.kind == LayerKind::Dense {
+                continue;
+            }
+            if let WeightAccess::Load { cycles: c, .. } =
+                self.weights.prepare(&l.name, self.cfg.kernel * self.cfg.kernel, l.in_ch, l.out_ch)
+            {
+                cycles += c;
+            }
+        }
+        cycles
+    }
+
+    fn charge_weights(&mut self, layer: &Layer, stats: &mut LayerStats) {
+        let access = self.weights.prepare(
+            &layer.name,
+            self.cfg.kernel * self.cfg.kernel,
+            layer.in_ch,
+            layer.out_ch,
+        );
+        match access {
+            WeightAccess::Switch => {
+                stats.weight_load_cycles = 1;
+                stats.weight_words = layer.out_ch as u64; // bank-select per OCU
+            }
+            WeightAccess::Load { cycles, words } => {
+                stats.weight_load_cycles = cycles;
+                stats.weight_words = words;
+            }
+        }
+    }
+
+    /// µDMA ingress of an input frame (2-bit trits over a `dma_bits` bus).
+    fn dma_in(&self, dims: &[usize]) -> (u64, u64) {
+        let trits: usize = dims.iter().product();
+        let bytes = (trits * 2).div_ceil(8) as u64;
+        let cycles = bytes.div_ceil((self.cfg.dma_bits / 8) as u64);
+        (cycles, bytes)
+    }
+
+    /// Run the CNN front-end on one frame. Ends either in the
+    /// pre-classifier map (cifar9) or a per-step feature vector (hybrid).
+    pub fn run_cnn(&mut self, net: &Network, frame: &TritTensor) -> Result<(TritTensor, RunStats)> {
+        ensure!(frame.dims.len() == 3, "frame must be (H, W, C)");
+        let mut run = RunStats::default();
+        let (dc, db) = self.dma_in(&frame.dims);
+        run.dma_cycles = dc;
+        run.dma_bytes = db;
+        self.actmem.load_input(frame.clone())?;
+
+        let mut x = frame.clone();
+        for layer in net.layers.iter().filter(|l| l.kind == LayerKind::Conv2d) {
+            let prep = self
+                .prepared
+                .entry(layer.name.clone())
+                .or_insert_with(|| PreparedLayer::new(layer));
+            let mut result = run_prepared(prep, &x, &self.cfg, self.mode)?;
+            self.charge_weights(layer, &mut result.stats);
+            x = result.output;
+            if x.dims.len() == 3 {
+                self.actmem.store_output_and_swap(x.clone())?;
+            }
+            run.layers.push(result.stats);
+        }
+        Ok((x, run))
+    }
+
+    /// Push a CNN feature vector into the TCN memory (§4). Vectors
+    /// narrower than the hardware's channel width ride zero-padded, as in
+    /// the RTL (unused channels are tied off).
+    pub fn push_feature(&mut self, feat: &TritTensor) {
+        let mut padded = feat.data.clone();
+        padded.resize(self.cfg.channels, 0);
+        self.tcn_mem.push(&padded);
+    }
+
+    /// Run the TCN back-end + classifier over the TCN memory window.
+    pub fn run_tcn(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
+        let mut run = RunStats::default();
+        let reads_before = self.tcn_mem.reads;
+        let window = self.tcn_mem.window();
+        let window_reads = self.tcn_mem.reads - reads_before;
+        // Slice the hardware-width window down to the network's feature
+        // width (the RTL's unused channels are tied to zero).
+        let feat_ch = net
+            .tcn_layers()
+            .next()
+            .map(|l| l.in_ch)
+            .unwrap_or(self.cfg.channels);
+        let mut seq = TritTensor::zeros(&[self.cfg.tcn_depth, feat_ch]);
+        for t in 0..self.cfg.tcn_depth {
+            for c in 0..feat_ch {
+                seq.data[t * feat_ch + c] = window.data[t * self.cfg.channels + c];
+            }
+        }
+        let mut first = true;
+        for layer in &net.layers {
+            match layer.kind {
+                LayerKind::Conv2d => continue,
+                LayerKind::Tcn => {
+                    let (out, mut stats) = match self.tcn_strategy {
+                        TcnStrategy::Mapped => self.run_tcn_mapped(layer, &seq)?,
+                        TcnStrategy::Direct => self.run_tcn_direct(layer, &seq)?,
+                    };
+                    if first {
+                        // first TCN layer reads straight out of the TCN
+                        // memory's multiplexed port
+                        stats.tcn_reads = window_reads;
+                        first = false;
+                    }
+                    self.charge_weights(layer, &mut stats);
+                    run.layers.push(stats);
+                    seq = out;
+                }
+                LayerKind::Dense => {
+                    let t_len = seq.dims[0];
+                    let c = seq.dims[1];
+                    let last = TritTensor::from_vec(&[c], seq.data[(t_len - 1) * c..].to_vec());
+                    let (logits, stats) = run_dense_layer(layer, &last, &self.cfg, self.mode)?;
+                    run.layers.push(stats);
+                    return Ok((logits, run));
+                }
+            }
+        }
+        anyhow::bail!("network has no classifier layer")
+    }
+
+    /// §4 mapping: wrap → plain 3×3 layer on the datapath → unwrap.
+    fn run_tcn_mapped(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
+        let t_len = seq.dims[0];
+        let z = mapping::map_input(seq, layer.dilation);
+        let key = format!("{}::mapped", layer.name);
+        let prep = self.prepared.entry(key).or_insert_with(|| {
+            let mapped = Layer {
+                weights: mapping::map_weights(&layer.weights),
+                kernel: 3,
+                kind: LayerKind::Tcn,
+                pool: false,
+                global_pool: false,
+                ..layer.clone()
+            };
+            PreparedLayer::new(&mapped)
+        });
+        let result = run_prepared(prep, &z, &self.cfg, self.mode)?;
+        let mut stats = result.stats;
+        // unmap: address arithmetic only, no cycles, no data movement —
+        // the whole point of the §4 contribution.
+        let acc_trits = result.output;
+        let cout = layer.out_ch;
+        let mut out = TritTensor::zeros(&[t_len, cout]);
+        for n in 0..t_len {
+            let (q, m) = (n / layer.dilation, n % layer.dilation);
+            for co in 0..cout {
+                out.data[n * cout + co] = acc_trits.get3(q, m, co);
+            }
+        }
+        stats.name = layer.name.clone();
+        Ok((out, stats))
+    }
+
+    /// Ablation baseline: direct strided execution of Eq. (1). Functionally
+    /// identical, but every output step issues N single-word strided
+    /// activation reads that the linebuffer cannot coalesce — each is a
+    /// stall cycle on top of the compute cycle (§4: "non-contiguous or
+    /// strided accesses lead to stalling").
+    fn run_tcn_direct(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
+        let t_len = seq.dims[0];
+        let cin = seq.dims[1];
+        let n_taps = layer.weights.dims[0];
+        let cout = layer.out_ch;
+        ensure!(cin == layer.in_ch);
+
+        let mut stats = LayerStats {
+            name: layer.name.clone(),
+            active_ocus: cout,
+            fanin: n_taps * cin,
+            ..Default::default()
+        };
+
+        let ocus = super::ocu::build_ocus(
+            // treat the (N, Cin, Cout) tensor as an N-tap "window"
+            &TritTensor::from_vec(
+                &[1, n_taps, cin, cout],
+                layer.weights.data.clone(),
+            ),
+            &layer.lo,
+            &layer.hi,
+        );
+
+        let mut out = TritTensor::zeros(&[t_len, cout]);
+        let mut window = vec![crate::trit::PackedVec::ZERO; n_taps];
+        for t in 0..t_len {
+            // N strided reads (t, t-D, t-2D, ...): one word each, no reuse.
+            for (k, slot) in window.iter_mut().enumerate() {
+                let shift = (n_taps - 1 - k) * layer.dilation;
+                *slot = if t >= shift {
+                    let src = t - shift;
+                    crate::trit::PackedVec::pack(&seq.data[src * cin..(src + 1) * cin])
+                } else {
+                    crate::trit::PackedVec::ZERO
+                };
+            }
+            stats.act_reads += n_taps as u64;
+            stats.stall_cycles += (n_taps - 1) as u64; // non-overlapped fetches
+            for (co, ocu) in ocus.iter().enumerate() {
+                match self.mode {
+                    SimMode::Accurate => {
+                        let (acc, tog) = ocu.compute(&window);
+                        stats.mac_toggles += tog as u64;
+                        out.data[t * cout + co] = ternarize(acc, layer.lo[co], layer.hi[co]);
+                    }
+                    SimMode::Fast => {
+                        let acc = ocu.compute_fast(&window);
+                        out.data[t * cout + co] = ternarize(acc, layer.lo[co], layer.hi[co]);
+                    }
+                }
+            }
+        }
+        stats.compute_cycles = t_len as u64;
+        stats.drain_cycles = 1;
+        stats.act_writes = t_len as u64;
+        stats.hw_ops = self.cfg.hw_ops_per_cycle(cout) * stats.compute_cycles;
+        stats.alg_macs = (t_len * n_taps * cin * cout) as u64;
+        let clocked =
+            (cout * self.cfg.channels * self.cfg.kernel * self.cfg.kernel) as u64 * stats.compute_cycles;
+        stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
+        Ok((out, stats))
+    }
+
+    /// Full inference: cifar-style nets take (H, W, C); hybrid nets take a
+    /// (T, H, W, C) frame stack that streams through CNN → TCN memory →
+    /// TCN (the logits correspond to the last frame's window).
+    pub fn run_full(&mut self, net: &Network, input: &TritTensor) -> Result<(IntTensor, RunStats)> {
+        if net.has_tcn() {
+            ensure!(input.dims.len() == 4, "hybrid input must be (T, H, W, C)");
+            let (t_len, h, w, c) = (input.dims[0], input.dims[1], input.dims[2], input.dims[3]);
+            let mut run = RunStats::default();
+            for t in 0..t_len {
+                let frame = TritTensor::from_vec(
+                    &[h, w, c],
+                    input.data[t * h * w * c..(t + 1) * h * w * c].to_vec(),
+                );
+                let (feat, r) = self.run_cnn(net, &frame)?;
+                run.merge(r);
+                self.push_feature(&feat);
+            }
+            let (logits, r) = self.run_tcn(net)?;
+            run.merge(r);
+            Ok((logits, run))
+        } else {
+            ensure!(input.dims.len() == 3, "input must be (H, W, C)");
+            let mut run = RunStats::default();
+            let (feat, r) = self.run_cnn(net, input)?;
+            run.merge(r);
+            let flat = TritTensor::from_vec(&[feat.numel()], feat.data.clone());
+            let dense = net.layers.last().unwrap();
+            let (logits, stats) = run_dense_layer(dense, &flat, &self.cfg, self.mode)?;
+            run.layers.push(stats);
+            Ok((logits, run))
+        }
+    }
+
+    /// One serving step of the hybrid pipeline: frame in → CNN → TCN
+    /// memory push → TCN window inference → logits. This is the §5
+    /// autonomous data-to-label flow.
+    pub fn serve_frame(&mut self, net: &Network, frame: &TritTensor) -> Result<(IntTensor, RunStats)> {
+        let (feat, mut run) = self.run_cnn(net, frame)?;
+        self.push_feature(&feat);
+        let (logits, r) = self.run_tcn(net)?;
+        run.merge(r);
+        Ok((logits, run))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{cifar9_random, dvs_hybrid_random, reference};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cifar_matches_reference_executor() {
+        let net = cifar9_random(16, 81, 0.33);
+        let mut rng = Rng::new(82);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (logits, stats) = sched.run_full(&net, &input).unwrap();
+        let want = reference::forward(&net, &input).unwrap();
+        assert_eq!(logits, want);
+        assert_eq!(stats.layers.len(), 9);
+        assert!(stats.total_cycles() > 0);
+        assert_eq!(stats.stall_cycles(), 0, "mapped execution must be stall-free");
+    }
+
+    #[test]
+    fn hybrid_matches_reference_executor() {
+        let net = dvs_hybrid_random(16, 83, 0.5);
+        let mut rng = Rng::new(84);
+        let input = TritTensor::random(&[6, 64, 64, 2], &mut rng, 0.85);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (logits, _) = sched.run_full(&net, &input).unwrap();
+        // reference gets the same cold-start zero padding: feed the same
+        // 6 frames into a fresh 24-window
+        let mut ref_seq = TritTensor::zeros(&[24, 16]);
+        for t in 0..6 {
+            let frame = TritTensor::from_vec(
+                &[64, 64, 2],
+                input.data[t * 64 * 64 * 2..(t + 1) * 64 * 64 * 2].to_vec(),
+            );
+            let feat = reference::forward_cnn(&net, &frame).unwrap();
+            for c in 0..16 {
+                ref_seq.data[(18 + t) * 16 + c] = feat.data[c];
+            }
+        }
+        let want = reference::forward_tcn(&net, &ref_seq).unwrap();
+        assert_eq!(logits, want);
+    }
+
+    #[test]
+    fn direct_strategy_same_result_more_stalls() {
+        let net = dvs_hybrid_random(16, 85, 0.4);
+        let mut rng = Rng::new(86);
+        let seqs: Vec<TritTensor> =
+            (0..4).map(|_| TritTensor::random(&[64, 64, 2], &mut rng, 0.8)).collect();
+
+        let mut mapped = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let mut direct = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate)
+            .with_tcn_strategy(TcnStrategy::Direct);
+
+        let mut logits_m = None;
+        let mut logits_d = None;
+        let mut stalls_m = 0;
+        let mut stalls_d = 0;
+        for f in &seqs {
+            let (lm, rm) = mapped.serve_frame(&net, f).unwrap();
+            let (ld, rd) = direct.serve_frame(&net, f).unwrap();
+            stalls_m += rm.stall_cycles();
+            stalls_d += rd.stall_cycles();
+            logits_m = Some(lm);
+            logits_d = Some(ld);
+        }
+        assert_eq!(logits_m.unwrap(), logits_d.unwrap(), "strategies must agree bitwise");
+        assert_eq!(stalls_m, 0);
+        assert!(stalls_d > 0, "direct strided access must stall");
+    }
+
+    #[test]
+    fn weight_residency_after_first_inference() {
+        let net = cifar9_random(32, 87, 0.33);
+        let mut rng = Rng::new(88);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        let (_, first) = sched.run_full(&net, &input).unwrap();
+        let (_, second) = sched.run_full(&net, &input).unwrap();
+        let first_w: u64 = first.layers.iter().map(|l| l.weight_load_cycles).sum();
+        let second_w: u64 = second.layers.iter().map(|l| l.weight_load_cycles).sum();
+        assert!(first_w > second_w, "first {first_w} vs steady {second_w}");
+        assert_eq!(second_w, 8); // 8 conv layers × 1-cycle bank switch
+    }
+
+    #[test]
+    fn serve_frame_pushes_tcn_memory() {
+        let net = dvs_hybrid_random(16, 89, 0.5);
+        let mut rng = Rng::new(90);
+        let frame = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        assert!(sched.tcn_mem.is_empty());
+        sched.serve_frame(&net, &frame).unwrap();
+        assert_eq!(sched.tcn_mem.len(), 1);
+        for _ in 0..30 {
+            sched.serve_frame(&net, &frame).unwrap();
+        }
+        assert!(sched.tcn_mem.is_full());
+        assert_eq!(sched.tcn_mem.len(), 24);
+    }
+
+    #[test]
+    fn preload_makes_first_inference_switch_only() {
+        let net = cifar9_random(32, 91, 0.33);
+        let mut rng = Rng::new(92);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        let boot = sched.preload_weights(&net);
+        assert!(boot > 0);
+        let (_, run) = sched.run_full(&net, &input).unwrap();
+        let w: u64 = run.layers.iter().map(|l| l.weight_load_cycles).sum();
+        assert_eq!(w, 8);
+    }
+}

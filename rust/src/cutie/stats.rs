@@ -1,0 +1,168 @@
+//! Cycle / access / switching-activity counters. These are the *only*
+//! interface between the architectural simulator and the energy model:
+//! every Joule in a report traces back to a counter here.
+
+/// Execution phases of one layer on the datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Weight-bank switch (weights resident) or streaming load.
+    WeightLoad,
+    /// Linebuffer priming before the first window is available.
+    LinebufferFill,
+    /// Steady-state: one output pixel per cycle.
+    Compute,
+    /// Pipeline drain + output flush.
+    Drain,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    pub name: String,
+    /// Cycles per phase.
+    pub weight_load_cycles: u64,
+    pub lb_fill_cycles: u64,
+    pub compute_cycles: u64,
+    pub drain_cycles: u64,
+    /// Stall cycles (zero for the stall-free linebuffer + mapped TCN; the
+    /// A2 ablation's direct-strided mode makes this non-zero).
+    pub stall_cycles: u64,
+
+    /// OCUs enabled this layer (rest are clock-gated).
+    pub active_ocus: usize,
+    /// Datapath fan-in actually wired this layer (K²·C_in).
+    pub fanin: usize,
+
+    /// Full-datapath ops (2·K²·C_channels per active OCU per compute
+    /// cycle) — the paper's throughput convention.
+    pub hw_ops: u64,
+    /// Algorithmic MACs (fan-in × output pixels × out channels).
+    pub alg_macs: u64,
+    /// Non-zero partial products (toggling multipliers) — the activity
+    /// that costs dynamic energy in the compute units.
+    pub mac_toggles: u64,
+    /// Clocked-but-idle MAC positions in active OCUs.
+    pub mac_idle: u64,
+
+    /// Activation memory words (1 word = 1 pixel = 2·C bits).
+    pub act_reads: u64,
+    pub act_writes: u64,
+    /// Linebuffer pixel pushes (flip-flop shift activity).
+    pub lb_pushes: u64,
+    /// Weight-buffer words switched/loaded.
+    pub weight_words: u64,
+    /// TCN memory events.
+    pub tcn_pushes: u64,
+    pub tcn_reads: u64,
+}
+
+impl LayerStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.weight_load_cycles
+            + self.lb_fill_cycles
+            + self.compute_cycles
+            + self.drain_cycles
+            + self.stall_cycles
+    }
+}
+
+/// Aggregated statistics of one inference (or a batch of layers).
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub layers: Vec<LayerStats>,
+    /// µDMA input cycles/bytes (frame ingress into the activation memory).
+    pub dma_cycles: u64,
+    pub dma_bytes: u64,
+}
+
+impl RunStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.total_cycles()).sum::<u64>() + self.dma_cycles
+    }
+
+    pub fn compute_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.compute_cycles).sum()
+    }
+
+    pub fn hw_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.hw_ops).sum()
+    }
+
+    pub fn alg_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.alg_macs).sum()
+    }
+
+    pub fn mac_toggles(&self) -> u64 {
+        self.layers.iter().map(|l| l.mac_toggles).sum()
+    }
+
+    pub fn mac_idle(&self) -> u64 {
+        self.layers.iter().map(|l| l.mac_idle).sum()
+    }
+
+    pub fn act_accesses(&self) -> (u64, u64) {
+        (
+            self.layers.iter().map(|l| l.act_reads).sum(),
+            self.layers.iter().map(|l| l.act_writes).sum(),
+        )
+    }
+
+    pub fn lb_pushes(&self) -> u64 {
+        self.layers.iter().map(|l| l.lb_pushes).sum()
+    }
+
+    pub fn weight_words(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_words).sum()
+    }
+
+    pub fn tcn_events(&self) -> (u64, u64) {
+        (
+            self.layers.iter().map(|l| l.tcn_pushes).sum(),
+            self.layers.iter().map(|l| l.tcn_reads).sum(),
+        )
+    }
+
+    pub fn stall_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.stall_cycles).sum()
+    }
+
+    /// Merge another run (e.g. CNN front-end + TCN back-end).
+    pub fn merge(&mut self, other: RunStats) {
+        self.layers.extend(other.layers);
+        self.dma_cycles += other.dma_cycles;
+        self.dma_bytes += other.dma_bytes;
+    }
+
+    /// Toggle rate: fraction of clocked MAC positions that switched.
+    pub fn toggle_rate(&self) -> f64 {
+        let clocked = self.mac_toggles() + self.mac_idle();
+        if clocked == 0 {
+            return 0.0;
+        }
+        self.mac_toggles() as f64 / clocked as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let mut a = LayerStats { compute_cycles: 100, lb_fill_cycles: 10, ..Default::default() };
+        a.weight_load_cycles = 1;
+        a.drain_cycles = 2;
+        assert_eq!(a.total_cycles(), 113);
+        let mut run = RunStats { layers: vec![a.clone()], dma_cycles: 7, ..Default::default() };
+        assert_eq!(run.total_cycles(), 120);
+        run.merge(RunStats { layers: vec![a], dma_cycles: 1, dma_bytes: 4, ..Default::default() });
+        assert_eq!(run.total_cycles(), 234);
+        assert_eq!(run.layers.len(), 2);
+    }
+
+    #[test]
+    fn toggle_rate_bounds() {
+        let l = LayerStats { mac_toggles: 30, mac_idle: 70, ..Default::default() };
+        let run = RunStats { layers: vec![l], ..Default::default() };
+        assert!((run.toggle_rate() - 0.3).abs() < 1e-12);
+    }
+}

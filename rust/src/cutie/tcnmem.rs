@@ -1,0 +1,119 @@
+//! The paper's TCN memory (§4): a 576-byte flip-flop shift register
+//! holding 24 time-step feature vectors of 96 trits. Each CNN inference
+//! pushes one vector; the TCN front reads the whole window as the wrapped
+//! 2D map, with "the output of the TCN memory [having] the same size as
+//! the activation memory... achieved by multiplexing three time steps
+//! according to the address of the first required pixel" — i.e. reads are
+//! address-multiplexed, never marshalled.
+
+use crate::tensor::TritTensor;
+use crate::trit::PackedVec;
+
+pub struct TcnMemory {
+    pub depth: usize,
+    pub channels: usize,
+    /// Newest-last ring of feature vectors.
+    steps: Vec<PackedVec>,
+    pub pushes: u64,
+    pub reads: u64,
+    /// Trit positions that changed value on shift (flip-flop toggle proxy).
+    pub shift_toggles: u64,
+}
+
+impl TcnMemory {
+    pub fn new(depth: usize, channels: usize) -> Self {
+        TcnMemory { depth, channels, steps: Vec::new(), pushes: 0, reads: 0, shift_toggles: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.steps.len() == self.depth
+    }
+
+    /// Push one feature vector (oldest drops once full). Counts flip-flop
+    /// toggle activity: every occupied slot shifts by one position.
+    pub fn push(&mut self, feat: &[i8]) {
+        assert_eq!(feat.len(), self.channels, "feature width");
+        let v = PackedVec::pack(feat);
+        // toggle proxy: each resident vector moves one slot; charge the
+        // non-zero trits that physically flip wires.
+        for s in &self.steps {
+            self.shift_toggles += s.count_nonzero() as u64;
+        }
+        if self.steps.len() == self.depth {
+            self.steps.remove(0);
+        }
+        self.steps.push(v);
+        self.pushes += 1;
+    }
+
+    /// Read the window as a (T, C) sequence, zero-padded at the old end if
+    /// fewer than `depth` steps have been pushed (cold start).
+    pub fn window(&mut self) -> TritTensor {
+        self.reads += self.steps.len() as u64;
+        let mut out = TritTensor::zeros(&[self.depth, self.channels]);
+        let pad = self.depth - self.steps.len();
+        for (i, s) in self.steps.iter().enumerate() {
+            for c in 0..self.channels {
+                out.data[(pad + i) * self.channels + c] = s.get(c);
+            }
+        }
+        out
+    }
+
+    /// Memory size in bytes (2-bit trits) — §5 sizes this at 576 B.
+    pub fn size_bytes(&self) -> usize {
+        self.depth * self.channels * 2 / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kraken_is_576_bytes() {
+        let m = TcnMemory::new(24, 96);
+        assert_eq!(m.size_bytes(), 576);
+    }
+
+    #[test]
+    fn fifo_semantics() {
+        let mut m = TcnMemory::new(3, 4);
+        m.push(&[1, 0, 0, 0]);
+        m.push(&[0, 1, 0, 0]);
+        m.push(&[0, 0, 1, 0]);
+        assert!(m.is_full());
+        m.push(&[0, 0, 0, 1]); // evicts the first
+        let w = m.window();
+        assert_eq!(w.dims, vec![3, 4]);
+        assert_eq!(&w.data[0..4], &[0, 1, 0, 0]);
+        assert_eq!(&w.data[8..12], &[0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn cold_start_zero_pads_old_end() {
+        let mut m = TcnMemory::new(4, 2);
+        m.push(&[1, -1]);
+        let w = m.window();
+        assert_eq!(w.data, vec![0, 0, 0, 0, 0, 0, 1, -1]);
+    }
+
+    #[test]
+    fn shift_toggles_grow_with_occupancy() {
+        let mut m = TcnMemory::new(8, 4);
+        m.push(&[1, 1, 1, 1]);
+        assert_eq!(m.shift_toggles, 0); // nothing resident before first push
+        m.push(&[1, 0, 0, 0]);
+        assert_eq!(m.shift_toggles, 4); // one full vector shifted
+        m.push(&[0, 0, 0, 0]);
+        assert_eq!(m.shift_toggles, 4 + 4 + 1);
+    }
+}

@@ -1,0 +1,112 @@
+//! Per-OCU weight buffers (§3: "each OCU includes weight buffers,
+//! minimizing weight data movement"). In Kraken the whole network's
+//! kernels fit in the OCU-local banks, so steady-state inference only
+//! *switches* banks (1 cycle); streaming loads are charged only when a
+//! layer's kernels are not resident (capacity miss or first boot).
+
+#[derive(Debug, Clone)]
+pub struct WeightMemory {
+    pub banks: usize,
+    pub channels: usize,
+    /// Layer names resident per bank slot (LRU order, front = oldest).
+    resident: Vec<String>,
+    pub bank_switches: u64,
+    pub streamed_words: u64,
+}
+
+pub enum WeightAccess {
+    /// Bank switch only (weights resident): 1 cycle.
+    Switch,
+    /// Streaming load: `cycles` cycles, `words` weight words moved.
+    Load { cycles: u64, words: u64 },
+}
+
+impl WeightMemory {
+    pub fn new(banks: usize, channels: usize) -> Self {
+        WeightMemory {
+            banks,
+            channels,
+            resident: Vec::new(),
+            bank_switches: 0,
+            streamed_words: 0,
+        }
+    }
+
+    /// Prepare layer `name` (kernel K²·C_in per OCU, `active` OCUs).
+    /// Returns the access type; the scheduler charges cycles.
+    pub fn prepare(&mut self, name: &str, kernel_sq: usize, in_ch: usize, active: usize) -> WeightAccess {
+        if let Some(pos) = self.resident.iter().position(|r| r == name) {
+            // hit: refresh LRU, 1-cycle bank switch
+            let n = self.resident.remove(pos);
+            self.resident.push(n);
+            self.bank_switches += 1;
+            return WeightAccess::Switch;
+        }
+        // miss: stream the kernels in. All OCUs load in parallel, each
+        // receiving one C_in-wide word per cycle → K² · ceil(C_in / C)
+        // cycles (C_in <= C in Kraken, so K² cycles).
+        while self.resident.len() >= self.banks {
+            self.resident.remove(0);
+        }
+        self.resident.push(name.to_string());
+        let cycles = (kernel_sq * in_ch.div_ceil(self.channels)) as u64;
+        let words = cycles * active as u64;
+        self.streamed_words += words;
+        WeightAccess::Load { cycles, words }
+    }
+
+    pub fn is_resident(&self, name: &str) -> bool {
+        self.resident.iter().any(|r| r == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_touch_loads_then_switches() {
+        let mut wm = WeightMemory::new(9, 96);
+        match wm.prepare("c1", 9, 96, 96) {
+            WeightAccess::Load { cycles, words } => {
+                assert_eq!(cycles, 9);
+                assert_eq!(words, 9 * 96);
+            }
+            _ => panic!("expected load"),
+        }
+        match wm.prepare("c1", 9, 96, 96) {
+            WeightAccess::Switch => {}
+            _ => panic!("expected switch"),
+        }
+        assert_eq!(wm.bank_switches, 1);
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let mut wm = WeightMemory::new(2, 96);
+        wm.prepare("a", 9, 96, 96);
+        wm.prepare("b", 9, 96, 96);
+        wm.prepare("c", 9, 96, 96); // evicts a
+        assert!(!wm.is_resident("a"));
+        assert!(wm.is_resident("b"));
+        assert!(wm.is_resident("c"));
+        match wm.prepare("a", 9, 96, 96) {
+            WeightAccess::Load { .. } => {}
+            _ => panic!("evicted layer must reload"),
+        }
+    }
+
+    #[test]
+    fn whole_network_resident_after_first_inference() {
+        let mut wm = WeightMemory::new(9, 96);
+        for l in 0..9 {
+            wm.prepare(&format!("l{l}"), 9, 96, 96);
+        }
+        for l in 0..9 {
+            match wm.prepare(&format!("l{l}"), 9, 96, 96) {
+                WeightAccess::Switch => {}
+                _ => panic!("layer l{l} should be resident"),
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Energy/power model: converts the simulator's activity counters into
+//! µJ/inference, mW, TOp/s and TOp/s/W across the 0.5–0.9 V range.
+//!
+//! Methodology (DESIGN.md §2): the paper's efficiency argument is
+//! activity-based — minimized data movement plus sparsity-suppressed
+//! toggling. We charge a calibrated per-event energy to every counter in
+//! [`crate::cutie::RunStats`], scale dynamic energy with (V/V₀)² and
+//! leakage with an exponential V-dependence, and take fmax(V) from an
+//! alpha-power fit anchored on the paper's two reported corners.
+
+pub mod calibration;
+pub mod model;
+pub mod vf;
+
+pub use model::{evaluate, EnergyBreakdown, EnergyParams, EnergyReport};
+pub use vf::{fmax_hz, PAPER_ENERGY_FREQ_HZ, VOLTAGE_RANGE};

@@ -1,0 +1,232 @@
+//! Per-event energy accounting. All reference energies are at V₀ = 0.5 V;
+//! see `calibration.rs` for how the constants were fitted to the paper's
+//! measured corners and for the locked-in regression tests.
+
+use crate::cutie::{LayerStats, RunStats};
+
+use super::vf;
+
+/// Per-event energies (J) at the 0.5 V reference corner + leakage model.
+#[derive(Debug, Clone)]
+pub struct EnergyParams {
+    /// Reference supply for the constants below.
+    pub v_ref: f64,
+    /// One non-zero ternary partial product (multiplier + its share of the
+    /// adder tree switching).
+    pub e_mac_toggle: f64,
+    /// One clocked-but-silent MAC position (clock + latch load).
+    pub e_mac_idle: f64,
+    /// One activation-memory word access (192-bit SRAM read or write).
+    pub e_act_word: f64,
+    /// One pixel pushed through the linebuffer flip-flops.
+    pub e_lb_push: f64,
+    /// One weight word streamed from the weight memory.
+    pub e_weight_word: f64,
+    /// One TCN-memory trit flip on shift (SCM flip-flop).
+    pub e_tcn_trit: f64,
+    /// One µDMA byte moved into the activation memory.
+    pub e_dma_byte: f64,
+    /// Control/clock-tree overhead per active cycle.
+    pub e_cycle_ctrl: f64,
+    /// CUTIE-domain leakage power (W) at v_ref when powered.
+    pub p_leak_ref: f64,
+    /// Exponential leakage slope (per volt).
+    pub leak_slope: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        super::calibration::calibrated()
+    }
+}
+
+impl EnergyParams {
+    /// Dynamic scale factor at supply `v` (CV² switching energy).
+    pub fn dyn_scale(&self, v: f64) -> f64 {
+        (v / self.v_ref) * (v / self.v_ref)
+    }
+
+    /// Leakage power (W) at supply `v`.
+    pub fn p_leak(&self, v: f64) -> f64 {
+        self.p_leak_ref * (v / self.v_ref) * ((v - self.v_ref) / self.leak_slope).exp()
+    }
+}
+
+/// Energy split by component (J).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyBreakdown {
+    pub compute_toggle: f64,
+    pub compute_idle: f64,
+    pub act_mem: f64,
+    pub linebuffer: f64,
+    pub weights: f64,
+    pub tcn_mem: f64,
+    pub dma: f64,
+    pub control: f64,
+    pub leakage: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_toggle
+            + self.compute_idle
+            + self.act_mem
+            + self.linebuffer
+            + self.weights
+            + self.tcn_mem
+            + self.dma
+            + self.control
+            + self.leakage
+    }
+}
+
+/// Full evaluation of one run at an operating point.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub voltage: f64,
+    pub freq_hz: f64,
+    pub cycles: u64,
+    pub time_s: f64,
+    pub energy_j: f64,
+    pub breakdown: EnergyBreakdown,
+    pub power_w: f64,
+    /// Full-datapath ops (paper convention, 2 Op per MAC).
+    pub hw_ops: u64,
+    pub avg_tops: f64,
+    pub avg_tops_per_watt: f64,
+    /// Best single-layer (TOp/s, TOp/s/W) — the paper's "peak" numbers.
+    pub peak_tops: f64,
+    pub peak_tops_per_watt: f64,
+    pub peak_layer: String,
+}
+
+fn layer_dyn_energy(l: &LayerStats, p: &EnergyParams, scale: f64) -> EnergyBreakdown {
+    EnergyBreakdown {
+        compute_toggle: l.mac_toggles as f64 * p.e_mac_toggle * scale,
+        compute_idle: l.mac_idle as f64 * p.e_mac_idle * scale,
+        act_mem: (l.act_reads + l.act_writes) as f64 * p.e_act_word * scale,
+        linebuffer: l.lb_pushes as f64 * p.e_lb_push * scale,
+        weights: l.weight_words as f64 * p.e_weight_word * scale,
+        tcn_mem: (l.tcn_pushes + l.tcn_reads) as f64 * p.e_tcn_trit * 96.0 * scale,
+        dma: 0.0,
+        control: l.total_cycles() as f64 * p.e_cycle_ctrl * scale,
+        leakage: 0.0,
+    }
+}
+
+/// Evaluate a run at supply `v`, clock `freq_hz` (defaults to fmax(v)).
+pub fn evaluate(stats: &RunStats, v: f64, freq_hz: Option<f64>, p: &EnergyParams) -> EnergyReport {
+    let freq = freq_hz.unwrap_or_else(|| vf::fmax_hz(v));
+    let scale = p.dyn_scale(v);
+    let cycles = stats.total_cycles();
+    let time_s = cycles as f64 / freq;
+
+    let mut bd = EnergyBreakdown::default();
+    let mut peak_tops = 0.0;
+    let mut peak_eff = 0.0;
+    let mut peak_layer = String::new();
+    for l in &stats.layers {
+        let lb = layer_dyn_energy(l, p, scale);
+        let l_cycles = l.total_cycles();
+        let l_time = l_cycles as f64 / freq;
+        let l_leak = p.p_leak(v) * l_time;
+        let l_energy = lb.total() + l_leak;
+        // per-layer throughput/efficiency (compute phase)
+        if l.compute_cycles > 0 && l_energy > 0.0 {
+            let l_tops = l.hw_ops as f64 / (l.compute_cycles as f64 / freq) / 1e12;
+            let l_eff = l.hw_ops as f64 / l_energy / 1e12;
+            if l_eff > peak_eff {
+                peak_eff = l_eff;
+                peak_layer = l.name.clone();
+            }
+            if l_tops > peak_tops {
+                peak_tops = l_tops;
+            }
+        }
+        bd.compute_toggle += lb.compute_toggle;
+        bd.compute_idle += lb.compute_idle;
+        bd.act_mem += lb.act_mem;
+        bd.linebuffer += lb.linebuffer;
+        bd.weights += lb.weights;
+        bd.tcn_mem += lb.tcn_mem;
+        bd.control += lb.control;
+    }
+    bd.dma = stats.dma_bytes as f64 * p.e_dma_byte * scale
+        + stats.dma_cycles as f64 * p.e_cycle_ctrl * scale * 0.25;
+    bd.leakage = p.p_leak(v) * time_s;
+
+    let energy = bd.total();
+    let hw_ops = stats.hw_ops();
+    let avg_tops = if time_s > 0.0 { hw_ops as f64 / time_s / 1e12 } else { 0.0 };
+    let power = if time_s > 0.0 { energy / time_s } else { 0.0 };
+    EnergyReport {
+        voltage: v,
+        freq_hz: freq,
+        cycles,
+        time_s,
+        energy_j: energy,
+        breakdown: bd,
+        power_w: power,
+        hw_ops,
+        avg_tops,
+        avg_tops_per_watt: if energy > 0.0 { hw_ops as f64 / energy / 1e12 } else { 0.0 },
+        peak_tops,
+        peak_tops_per_watt: peak_eff,
+        peak_layer,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cutie::{CutieConfig, Scheduler, SimMode};
+    use crate::network::cifar9_random;
+    use crate::tensor::TritTensor;
+    use crate::util::rng::Rng;
+
+    fn cifar_run() -> RunStats {
+        let net = cifar9_random(96, 1, 0.33);
+        let mut rng = Rng::new(2);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut s = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        s.preload_weights(&net);
+        s.run_full(&net, &input).unwrap().1
+    }
+
+    #[test]
+    fn energy_scales_with_voltage() {
+        let stats = cifar_run();
+        let p = EnergyParams::default();
+        let e05 = evaluate(&stats, 0.5, None, &p);
+        let e09 = evaluate(&stats, 0.9, None, &p);
+        assert!(e09.energy_j > e05.energy_j * 2.0, "V² scaling");
+        assert!(e09.avg_tops > e05.avg_tops * 3.0, "higher clock");
+        assert!(e09.avg_tops_per_watt < e05.avg_tops_per_watt, "efficiency drops");
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let stats = cifar_run();
+        let p = EnergyParams::default();
+        let r = evaluate(&stats, 0.6, None, &p);
+        assert!((r.breakdown.total() - r.energy_j).abs() < 1e-15);
+        assert!(r.power_w > 0.0 && r.time_s > 0.0);
+    }
+
+    #[test]
+    fn peak_layer_is_sparse_first_layer() {
+        // C1 has 3/96 input channels toggling → lowest energy per hw-op.
+        let stats = cifar_run();
+        let p = EnergyParams::default();
+        let r = evaluate(&stats, 0.5, None, &p);
+        assert_eq!(r.peak_layer, "l0");
+        assert!(r.peak_tops_per_watt > r.avg_tops_per_watt);
+    }
+
+    #[test]
+    fn leakage_grows_superlinearly() {
+        let p = EnergyParams::default();
+        let ratio = p.p_leak(0.9) / p.p_leak(0.5);
+        assert!(ratio > 4.0 && ratio < 20.0, "leak ratio {ratio}");
+    }
+}

@@ -1,0 +1,75 @@
+//! Voltage/frequency model of the CUTIE (EHWPE) domain in GF 22FDX.
+//!
+//! Anchors from the paper: peak throughput 14.9 TOp/s at 0.5 V and
+//! 51.7 TOp/s at 0.9 V (§7) over the 165,888 Op/cycle datapath give
+//! fmax(0.5 V) ≈ 90 MHz and fmax(0.9 V) ≈ 311 MHz. We fit the standard
+//! alpha-power law fmax = k·(V − V_t)^α with V_t = 0.30 V:
+//!
+//!   α = ln(311/90) / ln(0.6/0.2) = 1.1287
+//!   k = 90 MHz / 0.2^1.1287     = 553.6 MHz
+//!
+//! The 2.72 µJ energy corner is quoted at 54 MHz / 0.5 V (§7); Fig. 5/6
+//! use the maximum stable frequency per corner, which is what we default
+//! to.
+
+/// Threshold-ish voltage of the fit (V).
+pub const V_T: f64 = 0.30;
+/// Alpha-power exponent.
+pub const ALPHA: f64 = 1.1287;
+/// Frequency constant (Hz).
+pub const K_HZ: f64 = 553.6e6;
+
+/// Supply range the silicon sustains (§7: SRAM bit-errors below 0.5 V).
+pub const VOLTAGE_RANGE: (f64, f64) = (0.5, 0.9);
+
+/// The paper's energy-optimal operating point at 0.5 V.
+pub const PAPER_ENERGY_FREQ_HZ: f64 = 54.0e6;
+
+/// Maximum stable clock at supply `v` (V), Hz.
+pub fn fmax_hz(v: f64) -> f64 {
+    assert!(v > V_T, "supply {v} V below threshold fit range");
+    K_HZ * (v - V_T).powf(ALPHA)
+}
+
+/// The standard Fig. 5/6 sweep points.
+pub fn sweep_points() -> Vec<f64> {
+    (0..=8).map(|i| 0.5 + 0.05 * i as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_match_paper() {
+        // 0.5 V: 14.9 TOp/s over 165,888 Op/cycle → ~90 MHz
+        let f05 = fmax_hz(0.5);
+        assert!((f05 - 90.0e6).abs() / 90.0e6 < 0.01, "f(0.5) = {f05}");
+        // 0.9 V: 51.7 TOp/s → ~311 MHz
+        let f09 = fmax_hz(0.9);
+        assert!((f09 - 311.0e6).abs() / 311.0e6 < 0.01, "f(0.9) = {f09}");
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        let pts = sweep_points();
+        for w in pts.windows(2) {
+            assert!(fmax_hz(w[1]) > fmax_hz(w[0]));
+        }
+    }
+
+    #[test]
+    fn peak_throughput_endpoints() {
+        // Peak TOp/s = 165,888 × fmax — the Fig. 6 upper curve endpoints.
+        let peak05 = 165_888.0 * fmax_hz(0.5) / 1e12;
+        let peak09 = 165_888.0 * fmax_hz(0.9) / 1e12;
+        assert!((peak05 - 14.9).abs() < 0.2, "peak(0.5) = {peak05}");
+        assert!((peak09 - 51.7).abs() < 0.7, "peak(0.9) = {peak09}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_subthreshold() {
+        fmax_hz(0.2);
+    }
+}

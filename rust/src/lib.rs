@@ -1,0 +1,28 @@
+//! # tcn-cutie
+//!
+//! Reproduction of *"TCN-CUTIE: A 1036 TOp/s/W, 2.72 µJ/Inference, 12.2 mW
+//! All-Digital Ternary Accelerator in 22 nm FDX Technology"* (Scherer et
+//! al., 2022) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L1/L2 (build time)**: Pallas ternary-conv kernels and JAX network
+//!   definitions under `python/compile/`, AOT-lowered to HLO text.
+//! - **L3 (runtime, this crate)**: cycle-level digital twin of the CUTIE
+//!   accelerator + Kraken SoC ([`cutie`], [`soc`], [`energy`]), the §4
+//!   dilated-1D→2D mapping ([`mapping`]), a PJRT golden-model runtime
+//!   ([`runtime`]) and the autonomous serving coordinator ([`coordinator`]).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod cutie;
+pub mod energy;
+pub mod mapping;
+pub mod network;
+pub mod report;
+pub mod runtime;
+pub mod soc;
+pub mod tensor;
+pub mod trit;
+pub mod util;

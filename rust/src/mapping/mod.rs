@@ -1,0 +1,196 @@
+//! §4 of the paper: offline mapping of dilated 1D convolutions onto the
+//! undilated 3x3 2D datapath. Bit-for-bit mirror of
+//! `python/compile/tcn_mapping.py` (derivation documented there):
+//!
+//!   z[q, m] = x~[q*D + m];  prepend one zero row;  standard same-padded
+//!   3x3 conv with the 1D taps bottom-aligned in the middle column;
+//!   y[n] = out[n / D, n % D].
+
+use crate::tensor::{IntTensor, TritTensor};
+
+/// Rows of the wrapped map z (excluding the causal pad row).
+pub fn wrapped_rows(t_len: usize, dilation: usize) -> usize {
+    t_len.div_ceil(dilation)
+}
+
+/// Wrap a (T, C) sequence into the (R+1, D, C) dense 2D map (leading zero
+/// row = causal padding, white cells of Fig. 3).
+pub fn map_input(x: &TritTensor, dilation: usize) -> TritTensor {
+    assert_eq!(x.dims.len(), 2, "expected (T, C)");
+    let (t_len, c) = (x.dims[0], x.dims[1]);
+    let rows = wrapped_rows(t_len, dilation);
+    let mut z = TritTensor::zeros(&[rows + 1, dilation, c]);
+    for n in 0..t_len {
+        let (q, m) = (n / dilation, n % dilation);
+        for ch in 0..c {
+            z.set3(q + 1, m, ch, x.data[n * c + ch]);
+        }
+    }
+    z
+}
+
+/// Project (N, Cin, Cout) 1D taps into the middle column of a 3x3 kernel,
+/// bottom-aligned: W[3-N+j][1] = w[j].
+pub fn map_weights(w: &TritTensor) -> TritTensor {
+    assert_eq!(w.dims.len(), 3, "expected (N, Cin, Cout)");
+    let (n, cin, cout) = (w.dims[0], w.dims[1], w.dims[2]);
+    assert!(n <= 3, "CUTIE supports kernels up to 3 taps, got {n}");
+    let mut out = TritTensor::zeros(&[3, 3, cin, cout]);
+    for j in 0..n {
+        for ci in 0..cin {
+            for co in 0..cout {
+                let src = (j * cin + ci) * cout + co;
+                let dst = (((3 - n + j) * 3 + 1) * cin + ci) * cout + co;
+                out.data[dst] = w.data[src];
+            }
+        }
+    }
+    out
+}
+
+/// Extract the (T, Cout) outputs: y[n] = acc2d[n / D, n % D, :].
+pub fn unmap_output(acc2d: &IntTensor, t_len: usize, dilation: usize) -> IntTensor {
+    assert_eq!(acc2d.dims.len(), 3);
+    let (d, cout) = (acc2d.dims[1], acc2d.dims[2]);
+    assert_eq!(d, dilation);
+    let mut out = IntTensor::zeros(&[t_len, cout]);
+    for n in 0..t_len {
+        let (q, m) = (n / dilation, n % dilation);
+        for co in 0..cout {
+            out.data[n * cout + co] = acc2d.data[(q * d + m) * cout + co];
+        }
+    }
+    out
+}
+
+/// Receptive field of a stack of causal dilated conv layers.
+pub fn receptive_field(n_taps: usize, dilations: &[usize]) -> usize {
+    1 + dilations.iter().map(|d| (n_taps - 1) * d).sum::<usize>()
+}
+
+/// Number of memory accesses a *direct* strided implementation would issue
+/// non-contiguously per output step (N-1 strided reads; the mapped version
+/// issues zero). Used by the A2 mapping ablation.
+pub fn direct_strided_accesses(n_taps: usize) -> usize {
+    n_taps.saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Eq. (1) transcribed literally.
+    fn naive_dilated_conv1d(x: &TritTensor, w: &TritTensor, d: usize) -> IntTensor {
+        let (t_len, cin) = (x.dims[0], x.dims[1]);
+        let (n, _, cout) = (w.dims[0], w.dims[1], w.dims[2]);
+        let mut out = IntTensor::zeros(&[t_len, cout]);
+        for t in 0..t_len {
+            for k in 1..=n {
+                let shift = (k - 1) * d;
+                if t >= shift {
+                    let src = t - shift;
+                    for ci in 0..cin {
+                        let xv = x.data[src * cin + ci] as i32;
+                        if xv == 0 {
+                            continue;
+                        }
+                        for co in 0..cout {
+                            out.data[t * cout + co] +=
+                                xv * w.data[((n - k) * cin + ci) * cout + co] as i32;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Plain same-padded 3x3 ternary conv (scalar, for the test only).
+    fn conv2d_naive(x: &TritTensor, w: &TritTensor) -> IntTensor {
+        let (h, wid, cin) = (x.dims[0], x.dims[1], x.dims[2]);
+        let (kh, kw, _, cout) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+        let (ph, pw) = (kh / 2, kw / 2);
+        let mut out = IntTensor::zeros(&[h, wid, cout]);
+        for y in 0..h {
+            for xx in 0..wid {
+                for dy in 0..kh {
+                    for dx in 0..kw {
+                        let sy = y as isize + dy as isize - ph as isize;
+                        let sx = xx as isize + dx as isize - pw as isize;
+                        if sy < 0 || sx < 0 || sy >= h as isize || sx >= wid as isize {
+                            continue;
+                        }
+                        for ci in 0..cin {
+                            let xv = x.get3(sy as usize, sx as usize, ci) as i32;
+                            if xv == 0 {
+                                continue;
+                            }
+                            let obase = out.idx3(y, xx, 0);
+                            for co in 0..cout {
+                                out.data[obase + co] +=
+                                    xv * w.data[((dy * kw + dx) * cin + ci) * cout + co] as i32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn mapping_equals_dilated_1d_property() {
+        // Seeded sweep over T, D, N, channels — the paper's exactness claim.
+        let mut rng = Rng::new(42);
+        for case in 0..120 {
+            let t_len = 1 + rng.below(30);
+            let d = 1 + rng.below(9);
+            let n = 1 + rng.below(3);
+            let cin = 1 + rng.below(6);
+            let cout = 1 + rng.below(6);
+            let zf = [0.0, 0.4, 0.8][case % 3];
+            let x = TritTensor::random(&[t_len, cin], &mut rng, zf);
+            let w = TritTensor::random(&[n, cin, cout], &mut rng, zf);
+
+            let z = map_input(&x, d);
+            assert_eq!(z.dims, vec![wrapped_rows(t_len, d) + 1, d, cin]);
+            let w2d = map_weights(&w);
+            let acc2d = conv2d_naive(&z, &w2d);
+            let got = unmap_output(&acc2d, t_len, d);
+
+            let want = naive_dilated_conv1d(&x, &w, d);
+            assert_eq!(got, want, "t={t_len} d={d} n={n} cin={cin} cout={cout}");
+        }
+    }
+
+    #[test]
+    fn map_weights_layout() {
+        // Fig. 3 configuration: N=2 taps bottom-aligned in middle column.
+        let w = TritTensor::from_vec(&[2, 1, 1], vec![1, -1]);
+        let w2d = map_weights(&w);
+        assert_eq!(w2d.dims, vec![3, 3, 1, 1]);
+        let at = |r: usize, c: usize| w2d.data[(r * 3 + c) * 1];
+        assert_eq!(at(0, 1), 0);
+        assert_eq!(at(1, 1), 1);
+        assert_eq!(at(2, 1), -1);
+        for r in 0..3 {
+            assert_eq!(at(r, 0), 0);
+            assert_eq!(at(r, 2), 0);
+        }
+    }
+
+    #[test]
+    fn receptive_field_paper() {
+        assert_eq!(receptive_field(3, &[1, 2, 4, 8]), 31);
+        assert_eq!(receptive_field(3, &[1; 12]), 25); // 12 undilated layers cover 24+
+    }
+
+    #[test]
+    fn dvs_maps_fit_hardware() {
+        // All DVS TCN layers must produce maps within the 64x64 limit.
+        for d in [1, 2, 4, 8] {
+            assert!(wrapped_rows(24, d) + 1 <= 64);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Load a network from the JSON manifest + `.ttn` weights emitted by
+//! `python/compile/aot.py`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{Layer, LayerKind, Network};
+use crate::tensor::ttn;
+use crate::util::json::Json;
+
+/// Load `<stem>.json`, resolving the `.ttn` weights file relative to the
+/// manifest's directory.
+pub fn load_network(manifest_path: impl AsRef<Path>) -> Result<Network> {
+    let manifest_path = manifest_path.as_ref();
+    let text = std::fs::read_to_string(manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", manifest_path.display()))?;
+
+    let weights_file = j
+        .get("weights_file")
+        .and_then(|v| v.as_str())
+        .context("manifest missing weights_file")?;
+    let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+    let bundle = ttn::read_file(dir.join(weights_file))?;
+
+    let str_field = |o: &Json, k: &str| -> Result<String> {
+        Ok(o.get(k).and_then(|v| v.as_str()).with_context(|| format!("missing {k}"))?.to_string())
+    };
+    let int_field = |o: &Json, k: &str| -> Result<usize> {
+        Ok(o.get(k).and_then(|v| v.as_i64()).with_context(|| format!("missing {k}"))? as usize)
+    };
+    let bool_field = |o: &Json, k: &str| o.get(k).and_then(|v| v.as_bool()).unwrap_or(false);
+
+    let mut layers = Vec::new();
+    for lj in j.get("layers").and_then(|v| v.as_array()).context("manifest missing layers")? {
+        let kind = match str_field(lj, "kind")?.as_str() {
+            "conv2d" => LayerKind::Conv2d,
+            "tcn" => LayerKind::Tcn,
+            "dense" => LayerKind::Dense,
+            other => bail!("unknown layer kind '{other}'"),
+        };
+        let name = str_field(lj, "name")?;
+        let wname = str_field(lj, "weights")?;
+        let weights = bundle
+            .get(&wname)
+            .with_context(|| format!("weights tensor '{wname}' not in bundle"))?
+            .as_trit()?
+            .clone();
+        let (lo, hi) = if kind == LayerKind::Dense {
+            (vec![], vec![])
+        } else {
+            let lo_name = str_field(lj, "lo")?;
+            let hi_name = str_field(lj, "hi")?;
+            (
+                bundle.get(&lo_name).context("lo tensor missing")?.as_int()?.data.clone(),
+                bundle.get(&hi_name).context("hi tensor missing")?.as_int()?.data.clone(),
+            )
+        };
+        layers.push(Layer {
+            name,
+            kind,
+            in_ch: int_field(lj, "in_ch")?,
+            out_ch: int_field(lj, "out_ch")?,
+            kernel: int_field(lj, "kernel")?,
+            dilation: int_field(lj, "dilation")?,
+            pool: bool_field(lj, "pool"),
+            global_pool: bool_field(lj, "global_pool"),
+            weights,
+            lo,
+            hi,
+        });
+    }
+
+    let net = Network {
+        name: str_field(&j, "name")?,
+        input_hw: int_field(&j, "input_hw")?,
+        tcn_steps: int_field(&j, "tcn_steps")?,
+        classes: int_field(&j, "classes")?,
+        layers,
+    };
+    net.validate()?;
+    Ok(net)
+}
+
+/// Locate the artifacts directory: `$TCN_CUTIE_ARTIFACTS`, else
+/// `./artifacts`, else `../artifacts` (for tests run from subdirs).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("TCN_CUTIE_ARTIFACTS") {
+        return p.into();
+    }
+    for cand in ["artifacts", "../artifacts"] {
+        let p = std::path::PathBuf::from(cand);
+        if p.is_dir() {
+            return p;
+        }
+    }
+    std::path::PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("cifar9_96.json").exists()
+    }
+
+    #[test]
+    fn loads_cifar9_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let net = load_network(artifacts_dir().join("cifar9_96.json")).unwrap();
+        assert_eq!(net.name, "cifar9_96");
+        assert_eq!(net.layers.len(), 9);
+        assert_eq!(net.input_hw, 32);
+        assert_eq!(net.layers[0].weights.dims, vec![3, 3, 3, 96]);
+        assert_eq!(net.layers[8].kind, LayerKind::Dense);
+    }
+
+    #[test]
+    fn loads_dvs_manifest() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let net = load_network(artifacts_dir().join("dvs_hybrid_96.json")).unwrap();
+        assert!(net.has_tcn());
+        assert_eq!(net.tcn_steps, 24);
+        assert_eq!(net.classes, 12);
+    }
+}

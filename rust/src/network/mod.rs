@@ -1,0 +1,279 @@
+//! Network description + manifest loader + bit-exact reference executor.
+//!
+//! The reference executor (`reference` submodule) computes layer outputs
+//! straight from the definitions — independently of the cycle-level CUTIE
+//! model — so the simulator can be verified three ways:
+//! JAX/Pallas oracle (via `.ttn` test vectors) == reference executor ==
+//! cycle-level datapath == PJRT golden model.
+
+pub mod loader;
+pub mod reference;
+
+use crate::tensor::TritTensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 3x3 (or 1x1) same-padding ternary conv, optional 2x2/2 max-pool and
+    /// global max-pool, two-threshold ternarization.
+    Conv2d,
+    /// Causal dilated 1D conv (N taps), executed through the §4 2D mapping.
+    Tcn,
+    /// Classifier: flatten + ternary matmul, raw i32 logits.
+    Dense,
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    /// Kernel size (conv2d: KxK; tcn: number of taps N <= 3).
+    pub kernel: usize,
+    pub dilation: usize,
+    pub pool: bool,
+    pub global_pool: bool,
+    /// conv2d: (K, K, Cin, Cout); tcn: (N, Cin, Cout); dense: (F, classes).
+    pub weights: TritTensor,
+    /// Per-output-channel thresholds (empty for dense).
+    pub lo: Vec<i32>,
+    pub hi: Vec<i32>,
+}
+
+impl Layer {
+    /// MAC fan-in of one output pixel/step.
+    pub fn fanin(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv2d => self.kernel * self.kernel * self.in_ch,
+            LayerKind::Tcn => 3 * self.in_ch, // mapped onto the 3x3 datapath
+            LayerKind::Dense => self.in_ch,
+        }
+    }
+
+    /// Validate the threshold contract and weight shape.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        use anyhow::bail;
+        let w = &self.weights.dims;
+        match self.kind {
+            LayerKind::Conv2d => {
+                if w != &[self.kernel, self.kernel, self.in_ch, self.out_ch] {
+                    bail!("{}: conv2d weight shape {w:?}", self.name);
+                }
+            }
+            LayerKind::Tcn => {
+                if w.len() != 3 || w[1] != self.in_ch || w[2] != self.out_ch || w[0] > 3 {
+                    bail!("{}: tcn weight shape {w:?}", self.name);
+                }
+            }
+            LayerKind::Dense => {
+                if w != &[self.in_ch, self.out_ch] {
+                    bail!("{}: dense weight shape {w:?}", self.name);
+                }
+            }
+        }
+        if self.kind != LayerKind::Dense {
+            if self.lo.len() != self.out_ch || self.hi.len() != self.out_ch {
+                bail!("{}: threshold length mismatch", self.name);
+            }
+            for c in 0..self.out_ch {
+                if self.lo[c] > self.hi[c] + 1 {
+                    bail!(
+                        "{}: channel {c} violates lo <= hi + 1 ({} > {} + 1)",
+                        self.name,
+                        self.lo[c],
+                        self.hi[c]
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub input_hw: usize,
+    pub tcn_steps: usize,
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Conv2d)
+    }
+
+    pub fn tcn_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Tcn)
+    }
+
+    pub fn has_tcn(&self) -> bool {
+        self.layers.iter().any(|l| l.kind == LayerKind::Tcn)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for l in &self.layers {
+            l.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Algorithmic multiply-accumulate count for one inference (2 Op/MAC is
+    /// the paper's convention), given the canonical input geometry.
+    pub fn macs_per_inference(&self) -> u64 {
+        let mut hw = self.input_hw;
+        let mut macs = 0u64;
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Conv2d => {
+                    macs += (hw * hw * l.fanin() * l.out_ch) as u64;
+                    if l.pool {
+                        hw /= 2;
+                    }
+                    if l.global_pool {
+                        hw = 1;
+                    }
+                }
+                LayerKind::Tcn => {
+                    macs += (self.tcn_steps * l.kernel * l.in_ch * l.out_ch) as u64;
+                }
+                LayerKind::Dense => {
+                    macs += (l.in_ch * l.out_ch) as u64;
+                }
+            }
+        }
+        macs
+    }
+}
+
+/// Seeded random network with controllable sparsity — used by benches and
+/// ablations. Mirrors python `model.init_params` thresholds (same formula).
+pub fn random_network(
+    name: &str,
+    layers: &[(LayerKind, usize, usize, usize, bool, bool)],
+    input_hw: usize,
+    tcn_steps: usize,
+    classes: usize,
+    seed: u64,
+    zero_frac: f64,
+) -> Network {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut out = Vec::new();
+    for (i, &(kind, in_ch, out_ch, dilation, pool, global_pool)) in layers.iter().enumerate() {
+        let kernel = if kind == LayerKind::Dense { 1 } else { 3 };
+        let dims: Vec<usize> = match kind {
+            LayerKind::Conv2d => vec![3, 3, in_ch, out_ch],
+            LayerKind::Tcn => vec![3, in_ch, out_ch],
+            LayerKind::Dense => vec![in_ch, out_ch],
+        };
+        let weights = TritTensor::random(&dims, &mut rng, zero_frac);
+        let fanin = match kind {
+            LayerKind::Conv2d | LayerKind::Tcn => 9.min(kernel * kernel) * in_ch,
+            LayerKind::Dense => in_ch,
+        };
+        let th = ((0.5 * ((fanin as f64) * (1.0 - zero_frac)).sqrt()) as i32).max(1);
+        let (lo, hi) = if kind == LayerKind::Dense {
+            (vec![], vec![])
+        } else {
+            (vec![-th; out_ch], vec![th; out_ch])
+        };
+        out.push(Layer {
+            name: format!("l{i}"),
+            kind,
+            in_ch,
+            out_ch,
+            kernel: if kind == LayerKind::Tcn { 3 } else { kernel },
+            dilation,
+            pool,
+            global_pool,
+            weights,
+            lo,
+            hi,
+        });
+    }
+    let net = Network {
+        name: name.to_string(),
+        input_hw,
+        tcn_steps,
+        classes,
+        layers: out,
+    };
+    net.validate().expect("random network must validate");
+    net
+}
+
+/// The paper's CIFAR-10 benchmark network with random weights (geometry
+/// matches `python/compile/model.py::cifar9`).
+pub fn cifar9_random(channels: usize, seed: u64, zero_frac: f64) -> Network {
+    let c = channels;
+    let mut specs = vec![(LayerKind::Conv2d, 3, c, 1, false, false)];
+    for i in 2..=8 {
+        specs.push((LayerKind::Conv2d, c, c, 1, i % 2 == 0, false));
+    }
+    specs.push((LayerKind::Dense, 2 * 2 * c, 10, 1, false, false));
+    random_network(&format!("cifar9_{c}_rand"), &specs, 32, 24, 10, seed, zero_frac)
+}
+
+/// The hybrid DVS network with random weights (geometry matches
+/// `python/compile/model.py::dvs_hybrid`).
+pub fn dvs_hybrid_random(channels: usize, seed: u64, zero_frac: f64) -> Network {
+    let c = channels;
+    let chans = [32.min(c), 64.min(c), c, c, c];
+    let mut specs = Vec::new();
+    let mut in_c = 2;
+    for (i, &oc) in chans.iter().enumerate() {
+        specs.push((LayerKind::Conv2d, in_c, oc, 1, true, i == 4));
+        in_c = oc;
+    }
+    for d in [1usize, 2, 4, 8] {
+        specs.push((LayerKind::Tcn, c, c, d, false, false));
+    }
+    specs.push((LayerKind::Dense, c, 12, 1, false, false));
+    random_network(&format!("dvs_hybrid_{c}_rand"), &specs, 64, 24, 12, seed, zero_frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cifar9_geometry() {
+        let net = cifar9_random(96, 0, 0.33);
+        assert_eq!(net.layers.len(), 9);
+        assert_eq!(net.conv_layers().count(), 8);
+        assert_eq!(net.layers.last().unwrap().in_ch, 2 * 2 * 96);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn dvs_geometry() {
+        let net = dvs_hybrid_random(96, 1, 0.5);
+        assert_eq!(net.tcn_layers().count(), 4);
+        let dil: Vec<usize> = net.tcn_layers().map(|l| l.dilation).collect();
+        assert_eq!(dil, vec![1, 2, 4, 8]);
+        assert!(net.has_tcn());
+    }
+
+    #[test]
+    fn macs_cifar96_order_of_magnitude() {
+        let net = cifar9_random(96, 0, 0.33);
+        let macs = net.macs_per_inference();
+        // C1 ~ 2.5 MMAC, C2 ~ 85 MMAC, C3/4 ~ 21 MMAC, ... ≈ 0.15 GMAC.
+        assert!(macs > 100_000_000 && macs < 300_000_000, "macs = {macs}");
+    }
+
+    #[test]
+    fn validate_catches_threshold_violation() {
+        let mut net = cifar9_random(8, 0, 0.3);
+        net.layers[0].lo[0] = net.layers[0].hi[0] + 2;
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_weight_shape() {
+        let mut net = cifar9_random(8, 0, 0.3);
+        net.layers[0].weights = TritTensor::zeros(&[3, 3, 2, 8]);
+        assert!(net.validate().is_err());
+    }
+}

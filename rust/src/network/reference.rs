@@ -1,0 +1,296 @@
+//! Bit-exact functional reference executor: computes network outputs
+//! straight from the layer definitions (scalar code, no architecture
+//! modelling). Independent of both the JAX oracle and the cycle-level
+//! datapath — the middle leg of the three-way verification.
+
+use anyhow::{ensure, Result};
+
+use super::{Layer, LayerKind, Network};
+use crate::mapping;
+use crate::tensor::{IntTensor, TritTensor};
+use crate::trit::ternarize;
+
+/// Same-padded KxK ternary convolution -> i32 accumulators.
+pub fn conv2d(x: &TritTensor, w: &TritTensor) -> IntTensor {
+    let (h, wid, cin) = (x.dims[0], x.dims[1], x.dims[2]);
+    let (kh, kw, wcin, cout) = (w.dims[0], w.dims[1], w.dims[2], w.dims[3]);
+    assert_eq!(cin, wcin, "channel mismatch");
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = IntTensor::zeros(&[h, wid, cout]);
+    for y in 0..h {
+        for xx in 0..wid {
+            for dy in 0..kh {
+                let sy = y as isize + dy as isize - ph as isize;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for dx in 0..kw {
+                    let sx = xx as isize + dx as isize - pw as isize;
+                    if sx < 0 || sx >= wid as isize {
+                        continue;
+                    }
+                    for ci in 0..cin {
+                        let xv = x.get3(sy as usize, sx as usize, ci) as i32;
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wbase = ((dy * kw + dx) * cin + ci) * cout;
+                        let obase = out.idx3(y, xx, 0);
+                        for co in 0..cout {
+                            out.data[obase + co] += xv * w.data[wbase + co] as i32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Two-threshold ternarization of an (H, W, C) accumulator map.
+pub fn ternarize_map(acc: &IntTensor, lo: &[i32], hi: &[i32]) -> TritTensor {
+    let c = *acc.dims.last().unwrap();
+    assert_eq!(lo.len(), c);
+    let mut out = TritTensor::zeros(&acc.dims);
+    for (i, &a) in acc.data.iter().enumerate() {
+        out.data[i] = ternarize(a, lo[i % c], hi[i % c]);
+    }
+    out
+}
+
+/// 2x2/2 max-pool over trits.
+pub fn maxpool2x2(t: &TritTensor) -> TritTensor {
+    let (h, w, c) = (t.dims[0], t.dims[1], t.dims[2]);
+    assert!(h % 2 == 0 && w % 2 == 0, "odd pooling input {h}x{w}");
+    let mut out = TritTensor::zeros(&[h / 2, w / 2, c]);
+    for y in 0..h / 2 {
+        for x in 0..w / 2 {
+            for ch in 0..c {
+                let m = t
+                    .get3(2 * y, 2 * x, ch)
+                    .max(t.get3(2 * y, 2 * x + 1, ch))
+                    .max(t.get3(2 * y + 1, 2 * x, ch))
+                    .max(t.get3(2 * y + 1, 2 * x + 1, ch));
+                out.set3(y, x, ch, m);
+            }
+        }
+    }
+    out
+}
+
+/// Global max-pool to a (1, 1, C)-shaped (C,) vector.
+pub fn global_maxpool(t: &TritTensor) -> TritTensor {
+    let (h, w, c) = (t.dims[0], t.dims[1], t.dims[2]);
+    let mut out = TritTensor::zeros(&[c]);
+    for ch in 0..c {
+        let mut m = -1i8;
+        for y in 0..h {
+            for x in 0..w {
+                m = m.max(t.get3(y, x, ch));
+            }
+        }
+        out.data[ch] = m;
+    }
+    out
+}
+
+/// One conv2d layer (conv -> ternarize -> pools).
+pub fn run_conv_layer(layer: &Layer, x: &TritTensor) -> TritTensor {
+    debug_assert_eq!(layer.kind, LayerKind::Conv2d);
+    let acc = conv2d(x, &layer.weights);
+    let mut t = ternarize_map(&acc, &layer.lo, &layer.hi);
+    if layer.pool {
+        t = maxpool2x2(&t);
+    }
+    if layer.global_pool {
+        t = global_maxpool(&t);
+    }
+    t
+}
+
+/// One TCN layer on a (T, C) sequence, through the §4 mapping.
+pub fn run_tcn_layer(layer: &Layer, x: &TritTensor) -> TritTensor {
+    debug_assert_eq!(layer.kind, LayerKind::Tcn);
+    let t_len = x.dims[0];
+    let z = mapping::map_input(x, layer.dilation);
+    let w2d = mapping::map_weights(&layer.weights);
+    let acc2d = conv2d(&z, &w2d);
+    let acc = mapping::unmap_output(&acc2d, t_len, layer.dilation);
+    // ternarize the (T, Cout) accumulators
+    let cout = layer.out_ch;
+    let mut out = TritTensor::zeros(&[t_len, cout]);
+    for t in 0..t_len {
+        for co in 0..cout {
+            out.data[t * cout + co] =
+                ternarize(acc.data[t * cout + co], layer.lo[co], layer.hi[co]);
+        }
+    }
+    out
+}
+
+/// Classifier: flatten + ternary matmul -> raw logits.
+pub fn run_dense_layer(layer: &Layer, x: &TritTensor) -> IntTensor {
+    debug_assert_eq!(layer.kind, LayerKind::Dense);
+    let f = layer.in_ch;
+    assert_eq!(x.numel(), f, "classifier input size");
+    let classes = layer.out_ch;
+    let mut out = IntTensor::zeros(&[classes]);
+    for (i, &xv) in x.data.iter().enumerate() {
+        if xv == 0 {
+            continue;
+        }
+        for co in 0..classes {
+            out.data[co] += xv as i32 * layer.weights.data[i * classes + co] as i32;
+        }
+    }
+    out
+}
+
+/// CNN front-end: (H, W, Cin) frame -> feature trits (map or vector).
+pub fn forward_cnn(net: &Network, frame: &TritTensor) -> Result<TritTensor> {
+    ensure!(frame.dims.len() == 3, "frame must be (H, W, C)");
+    let mut x = frame.clone();
+    for layer in net.conv_layers() {
+        ensure!(
+            x.dims[2] == layer.in_ch,
+            "layer {}: input channels {} != {}",
+            layer.name,
+            x.dims[2],
+            layer.in_ch
+        );
+        x = run_conv_layer(layer, &x);
+    }
+    Ok(x)
+}
+
+/// TCN back-end: (T, C) sequence -> (classes,) logits (uses last step).
+pub fn forward_tcn(net: &Network, seq: &TritTensor) -> Result<IntTensor> {
+    let mut x = seq.clone();
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Conv2d => continue,
+            LayerKind::Tcn => x = run_tcn_layer(layer, &x),
+            LayerKind::Dense => {
+                let t_len = x.dims[0];
+                let c = x.dims[1];
+                let last = TritTensor::from_vec(&[c], x.data[(t_len - 1) * c..].to_vec());
+                return Ok(run_dense_layer(layer, &last));
+            }
+        }
+    }
+    anyhow::bail!("network has no classifier layer")
+}
+
+/// Full inference. For TCN networks `input` is (T, H, W, C); otherwise
+/// (H, W, C).
+pub fn forward(net: &Network, input: &TritTensor) -> Result<IntTensor> {
+    if net.has_tcn() {
+        ensure!(input.dims.len() == 4, "TCN network input must be (T, H, W, C)");
+        let (t_len, h, w, c) = (input.dims[0], input.dims[1], input.dims[2], input.dims[3]);
+        let feat_ch = net.conv_layers().last().unwrap().out_ch;
+        let mut seq = TritTensor::zeros(&[t_len, feat_ch]);
+        for t in 0..t_len {
+            let frame = TritTensor::from_vec(
+                &[h, w, c],
+                input.data[t * h * w * c..(t + 1) * h * w * c].to_vec(),
+            );
+            let feat = forward_cnn(net, &frame)?;
+            ensure!(feat.numel() == feat_ch, "CNN must end in a feature vector");
+            seq.data[t * feat_ch..(t + 1) * feat_ch].copy_from_slice(&feat.data);
+        }
+        forward_tcn(net, &seq)
+    } else {
+        let feat = forward_cnn(net, input)?;
+        let flat = TritTensor::from_vec(&[feat.numel()], feat.data.clone());
+        let dense = net.layers.last().unwrap();
+        Ok(run_dense_layer(dense, &flat))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{cifar9_random, dvs_hybrid_random};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut rng = Rng::new(1);
+        let x = TritTensor::random(&[6, 6, 4], &mut rng, 0.3);
+        let mut w = TritTensor::zeros(&[3, 3, 4, 4]);
+        for c in 0..4 {
+            w.data[((1 * 3 + 1) * 4 + c) * 4 + c] = 1;
+        }
+        let acc = conv2d(&x, &w);
+        for i in 0..x.numel() {
+            assert_eq!(acc.data[i], x.data[i] as i32);
+        }
+    }
+
+    #[test]
+    fn conv_window_counts_at_edges() {
+        let x = TritTensor::from_vec(&[5, 5, 2], vec![1; 50]);
+        let w = TritTensor::from_vec(&[3, 3, 2, 1], vec![1; 18]);
+        let acc = conv2d(&x, &w);
+        assert_eq!(acc.data[acc.idx3(2, 2, 0)], 18);
+        assert_eq!(acc.data[acc.idx3(0, 0, 0)], 8);
+        assert_eq!(acc.data[acc.idx3(0, 2, 0)], 12);
+    }
+
+    #[test]
+    fn maxpool_trits() {
+        let t = TritTensor::from_vec(
+            &[4, 4, 1],
+            vec![-1, -1, 0, 1, 0, -1, -1, -1, 1, 1, 0, 0, 1, 0, 0, 0],
+        );
+        let p = maxpool2x2(&t);
+        assert_eq!(p.data, vec![0, 1, 1, 0]);
+    }
+
+    #[test]
+    fn global_pool() {
+        let mut t = TritTensor::zeros(&[3, 3, 2]);
+        t.set3(1, 1, 0, -1);
+        t.set3(2, 0, 1, 1);
+        let g = global_maxpool(&t);
+        assert_eq!(g.data, vec![0, 1]);
+    }
+
+    #[test]
+    fn cifar_forward_shapes() {
+        let net = cifar9_random(16, 3, 0.33);
+        let mut rng = Rng::new(4);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.2);
+        let logits = forward(&net, &input).unwrap();
+        assert_eq!(logits.dims, vec![10]);
+    }
+
+    #[test]
+    fn dvs_forward_shapes() {
+        let net = dvs_hybrid_random(16, 5, 0.5);
+        let mut rng = Rng::new(6);
+        let input = TritTensor::random(&[24, 64, 64, 2], &mut rng, 0.8);
+        let logits = forward(&net, &input).unwrap();
+        assert_eq!(logits.dims, vec![12]);
+    }
+
+    #[test]
+    fn dense_ignores_zero_inputs() {
+        let layer = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            in_ch: 4,
+            out_ch: 2,
+            kernel: 1,
+            dilation: 1,
+            pool: false,
+            global_pool: false,
+            weights: TritTensor::from_vec(&[4, 2], vec![1, -1, 1, 1, -1, 0, 0, 1]),
+            lo: vec![],
+            hi: vec![],
+        };
+        let x = TritTensor::from_vec(&[4], vec![1, 0, -1, 1]);
+        let logits = run_dense_layer(&layer, &x);
+        assert_eq!(logits.data, vec![1 + 1 - 0, -1 - 0 + 1]);
+    }
+}

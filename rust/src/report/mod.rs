@@ -1,0 +1,497 @@
+//! Paper-artifact generators: every table and figure of the evaluation
+//! (§7–§8) regenerated from the simulator + energy model. Shared by the
+//! benches, the examples and the `tcn-cutie report` CLI.
+//!
+//! Experiment index (DESIGN.md §4): T1 = Table 1, F5 = Figure 5,
+//! F6 = Figure 6, S8 = §8 comparisons, A1/A2 = ablations.
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::cutie::{CutieConfig, RunStats, Scheduler, SimMode, TcnStrategy};
+use crate::energy::{self, evaluate, EnergyParams, EnergyReport};
+use crate::network::{cifar9_random, dvs_hybrid_random, Network};
+use crate::tensor::TritTensor;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+
+/// Canonical benchmark workloads (seeded; sparsities chosen to match
+/// trained ternary nets — weights ~1/3 zero, DVS inputs ~90% sparse).
+pub fn cifar_workload() -> (Network, TritTensor) {
+    let net = cifar9_random(96, 1, 0.33);
+    let mut rng = Rng::new(2);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+    (net, input)
+}
+
+pub fn dvs_workload(frames: usize) -> (Network, Vec<TritTensor>) {
+    let net = dvs_hybrid_random(96, 3, 0.5);
+    let mut src = crate::coordinator::DvsSource::new(64, 11, crate::coordinator::GestureClass(3));
+    let frames = (0..frames).map(|_| src.next_frame()).collect();
+    (net, frames)
+}
+
+/// Run the CIFAR workload once (steady state: weights preloaded).
+pub fn cifar_stats(mode: SimMode) -> Result<RunStats> {
+    let (net, input) = cifar_workload();
+    let mut s = Scheduler::new(CutieConfig::kraken(), mode);
+    s.preload_weights(&net);
+    Ok(s.run_full(&net, &input)?.1)
+}
+
+/// Serve `n` DVS frames; returns per-frame stats (steady state reached
+/// once the TCN window is warm).
+pub fn dvs_stats(mode: SimMode, n: usize) -> Result<Vec<RunStats>> {
+    let (net, frames) = dvs_workload(n);
+    let mut s = Scheduler::new(CutieConfig::kraken(), mode);
+    s.preload_weights(&net);
+    frames.iter().map(|f| Ok(s.serve_frame(&net, f)?.1)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// T1 — Table 1
+// ---------------------------------------------------------------------------
+
+pub struct Table1Row {
+    pub row: baselines::BaselineRow,
+}
+
+/// Our rows at the two corners, measured from the simulator.
+pub fn cutie_rows(stats: &RunStats, p: &EnergyParams) -> Vec<baselines::BaselineRow> {
+    [0.5, 0.9]
+        .iter()
+        .map(|&v| {
+            let r = evaluate(stats, v, None, p);
+            baselines::BaselineRow {
+                name: if v == 0.5 { "This work @0.5V" } else { "This work @0.9V" },
+                computation: "digital",
+                weight_precision: "ternary",
+                act_precision: "ternary",
+                tech_nm: 22,
+                dataset: "CIFAR-10",
+                accuracy_pct: 86.0, // paper's trained accuracy (substituted net, see EXPERIMENTS.md)
+                energy_per_inf_uj: r.energy_j * 1e6,
+                core_area_mm2: 2.96,
+                voltage_v: v,
+                throughput_tops: r.peak_tops,
+                peak_eff_tops_w: r.peak_tops_per_watt,
+            }
+        })
+        .collect()
+}
+
+pub fn table1() -> Result<Table> {
+    let stats = cifar_stats(SimMode::Accurate)?;
+    let p = EnergyParams::default();
+    let mut rows = vec![baselines::binareye(), baselines::knag_bnn(true), baselines::knag_bnn(false)];
+    rows.extend(cutie_rows(&stats, &p));
+
+    let mut t = Table::new(&[
+        "Design", "Method", "W", "A", "Tech", "Acc%", "E/inf [µJ]", "Area [mm²]", "V", "TOp/s",
+        "TOp/s/W",
+    ]);
+    for r in rows {
+        t.row(&[
+            r.name.to_string(),
+            r.computation.to_string(),
+            r.weight_precision.to_string(),
+            r.act_precision.to_string(),
+            format!("{} nm", r.tech_nm),
+            format!("{:.0}", r.accuracy_pct),
+            format!("{:.2}", r.energy_per_inf_uj),
+            format!("{:.2}", r.core_area_mm2),
+            format!("{:.2}", r.voltage_v),
+            format!("{:.1}", r.throughput_tops),
+            format!("{:.0}", r.peak_eff_tops_w),
+        ]);
+    }
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// F5 — Figure 5: energy/inference + inf/s vs voltage, both networks
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig5Point {
+    pub voltage: f64,
+    pub freq_mhz: f64,
+    pub cifar_uj: f64,
+    pub cifar_inf_s: f64,
+    pub dvs_uj: f64,
+    pub dvs_inf_s: f64,
+}
+
+pub fn fig5() -> Result<Vec<Fig5Point>> {
+    let p = EnergyParams::default();
+    let cifar = cifar_stats(SimMode::Accurate)?;
+    // steady-state DVS frame (warm TCN window): last of a short stream
+    let dvs_all = dvs_stats(SimMode::Accurate, 6)?;
+    let dvs = dvs_all.last().unwrap();
+
+    Ok(energy::vf::sweep_points()
+        .into_iter()
+        .map(|v| {
+            let rc = evaluate(&cifar, v, None, &p);
+            let rd = evaluate(dvs, v, None, &p);
+            Fig5Point {
+                voltage: v,
+                freq_mhz: rc.freq_hz / 1e6,
+                cifar_uj: rc.energy_j * 1e6,
+                cifar_inf_s: 1.0 / rc.time_s,
+                dvs_uj: rd.energy_j * 1e6,
+                dvs_inf_s: 1.0 / rd.time_s,
+            }
+        })
+        .collect())
+}
+
+pub fn fig5_table(points: &[Fig5Point]) -> Table {
+    let mut t = Table::new(&[
+        "V", "fmax [MHz]", "CIFAR µJ/inf", "CIFAR inf/s", "DVS µJ/inf", "DVS inf/s",
+    ]);
+    for pt in points {
+        t.row(&[
+            format!("{:.2}", pt.voltage),
+            format!("{:.0}", pt.freq_mhz),
+            format!("{:.2}", pt.cifar_uj),
+            format!("{:.0}", pt.cifar_inf_s),
+            format!("{:.2}", pt.dvs_uj),
+            format!("{:.0}", pt.dvs_inf_s),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// F6 — Figure 6: peak efficiency + peak throughput vs voltage (CIFAR L1)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig6Point {
+    pub voltage: f64,
+    pub peak_tops: f64,
+    pub peak_tops_w: f64,
+}
+
+pub fn fig6() -> Result<Vec<Fig6Point>> {
+    let p = EnergyParams::default();
+    let stats = cifar_stats(SimMode::Accurate)?;
+    Ok(energy::vf::sweep_points()
+        .into_iter()
+        .map(|v| {
+            let r = evaluate(&stats, v, None, &p);
+            Fig6Point { voltage: v, peak_tops: r.peak_tops, peak_tops_w: r.peak_tops_per_watt }
+        })
+        .collect())
+}
+
+pub fn fig6_table(points: &[Fig6Point]) -> Table {
+    let mut t = Table::new(&["V", "Peak TOp/s", "Peak TOp/s/W"]);
+    for pt in points {
+        t.row(&[
+            format!("{:.2}", pt.voltage),
+            format!("{:.1}", pt.peak_tops),
+            format!("{:.0}", pt.peak_tops_w),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// S8 — §8 comparisons (TCN-KWS, TrueNorth, Loihi)
+// ---------------------------------------------------------------------------
+
+pub struct SoaComparison {
+    pub our_dvs_uj: f64,
+    pub our_energy_per_op_pj: f64,
+    pub kws_energy_per_op_pj: f64,
+    pub kws_ratio: f64,
+    pub truenorth_ratio: f64,
+    pub loihi_ratio: f64,
+}
+
+pub fn soa() -> Result<SoaComparison> {
+    let p = EnergyParams::default();
+    let dvs_all = dvs_stats(SimMode::Accurate, 6)?;
+    let dvs = dvs_all.last().unwrap();
+    let r = evaluate(dvs, 0.5, None, &p);
+    let our_uj = r.energy_j * 1e6;
+    // average energy per (algorithmic) op, the §8 TCN comparison metric
+    let our_e_op = r.energy_j / (dvs.alg_macs() as f64 * 2.0);
+    let kws = baselines::TcnKws::published();
+    Ok(SoaComparison {
+        our_dvs_uj: our_uj,
+        our_energy_per_op_pj: our_e_op * 1e12,
+        kws_energy_per_op_pj: kws.energy_per_op_j() * 1e12,
+        kws_ratio: kws.energy_per_op_j() / our_e_op,
+        truenorth_ratio: baselines::truenorth().energy_per_inf_uj / our_uj,
+        loihi_ratio: baselines::loihi().energy_per_inf_uj / our_uj,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// A1 — sparsity ablation ([1]: sparse nets cut inference energy ~36%)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct SparsityPoint {
+    pub zero_frac: f64,
+    pub energy_uj: f64,
+    pub toggle_rate: f64,
+}
+
+pub fn sparsity_sweep(fracs: &[f64]) -> Result<Vec<SparsityPoint>> {
+    let p = EnergyParams::default();
+    fracs
+        .iter()
+        .map(|&zf| {
+            let net = cifar9_random(96, 1, zf);
+            let mut rng = Rng::new(2);
+            let input = TritTensor::random(&[32, 32, 3], &mut rng, zf);
+            let mut s = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+            s.preload_weights(&net);
+            let (_, stats) = s.run_full(&net, &input)?;
+            let r = evaluate(&stats, 0.5, None, &p);
+            Ok(SparsityPoint {
+                zero_frac: zf,
+                energy_uj: r.energy_j * 1e6,
+                toggle_rate: stats.toggle_rate(),
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// A2 — mapping ablation (§4: mapped vs direct strided TCN execution)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct MappingAblation {
+    pub mapped_tcn_cycles: u64,
+    pub direct_tcn_cycles: u64,
+    pub mapped_stalls: u64,
+    pub direct_stalls: u64,
+    pub mapped_tcn_uj: f64,
+    pub direct_tcn_uj: f64,
+}
+
+fn tcn_only(stats: &RunStats) -> RunStats {
+    RunStats {
+        layers: stats.layers.iter().filter(|l| l.name.starts_with('l') && l.fanin <= 3 * 96 || l.name.starts_with('t')).cloned().collect(),
+        ..Default::default()
+    }
+}
+
+pub fn mapping_ablation() -> Result<MappingAblation> {
+    let (net, frames) = dvs_workload(4);
+    let p = EnergyParams::default();
+
+    let run = |strategy| -> Result<RunStats> {
+        let mut s = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate).with_tcn_strategy(strategy);
+        s.preload_weights(&net);
+        let mut last = None;
+        for f in &frames {
+            last = Some(s.serve_frame(&net, f)?.1);
+        }
+        Ok(last.unwrap())
+    };
+    let mapped = run(TcnStrategy::Mapped)?;
+    let direct = run(TcnStrategy::Direct)?;
+
+    // isolate the TCN layers (names t*/l5..l8 in the random net)
+    let tcn_names: Vec<String> = net
+        .layers
+        .iter()
+        .filter(|l| l.kind == crate::network::LayerKind::Tcn)
+        .map(|l| l.name.clone())
+        .collect();
+    let filter = |stats: &RunStats| -> RunStats {
+        RunStats {
+            layers: stats.layers.iter().filter(|l| tcn_names.contains(&l.name)).cloned().collect(),
+            ..Default::default()
+        }
+    };
+    let m = filter(&mapped);
+    let d = filter(&direct);
+    let rm = evaluate(&m, 0.5, None, &p);
+    let rd = evaluate(&d, 0.5, None, &p);
+    let _ = tcn_only;
+    Ok(MappingAblation {
+        mapped_tcn_cycles: m.total_cycles(),
+        direct_tcn_cycles: d.total_cycles(),
+        mapped_stalls: m.stall_cycles(),
+        direct_stalls: d.stall_cycles(),
+        mapped_tcn_uj: rm.energy_j * 1e6,
+        direct_tcn_uj: rd.energy_j * 1e6,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Shared report printing
+// ---------------------------------------------------------------------------
+
+pub fn print_energy_report(label: &str, r: &EnergyReport) {
+    println!(
+        "{label}: V={:.2}  f={:.0} MHz  {} cycles  {:.2} µs  {:.3} µJ  {:.2} mW  \
+         avg {:.2} TOp/s  peak {:.1} TOp/s  peak {:.0} TOp/s/W (layer {})",
+        r.voltage,
+        r.freq_hz / 1e6,
+        r.cycles,
+        r.time_s * 1e6,
+        r.energy_j * 1e6,
+        r.power_w * 1e3,
+        r.avg_tops,
+        r.peak_tops,
+        r.peak_tops_per_watt,
+        r.peak_layer,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_matches_paper() {
+        let pts = fig5().unwrap();
+        assert_eq!(pts.len(), 9);
+        // energy rises with voltage, rate rises with voltage — Fig. 5's shape
+        assert!(pts.last().unwrap().cifar_uj > pts[0].cifar_uj * 2.0);
+        assert!(pts.last().unwrap().cifar_inf_s > pts[0].cifar_inf_s * 2.0);
+        assert!(pts.last().unwrap().dvs_uj > pts[0].dvs_uj * 2.0);
+        // 0.5 V is the energy-optimal corner (paper's headline)
+        let min = pts.iter().map(|p| p.cifar_uj).fold(f64::INFINITY, f64::min);
+        assert_eq!(min, pts[0].cifar_uj);
+    }
+
+    #[test]
+    fn fig6_shape_matches_paper() {
+        let pts = fig6().unwrap();
+        // throughput up, efficiency down with voltage
+        assert!(pts.last().unwrap().peak_tops > 3.0 * pts[0].peak_tops);
+        assert!(pts[0].peak_tops_w > 2.0 * pts.last().unwrap().peak_tops_w);
+        // endpoints near the paper anchors
+        assert!((pts[0].peak_tops_w - 1036.0).abs() / 1036.0 < 0.05);
+        assert!((pts[8].peak_tops_w - 318.0).abs() / 318.0 < 0.05);
+    }
+
+    #[test]
+    fn sparsity_reduces_energy_like_cutie_paper() {
+        // [1] reports ~36% energy reduction for very sparse ternary nets;
+        // our sweep must show a monotone, same-order effect.
+        let pts = sparsity_sweep(&[0.1, 0.5, 0.9]).unwrap();
+        assert!(pts[0].energy_uj > pts[1].energy_uj);
+        assert!(pts[1].energy_uj > pts[2].energy_uj);
+        let reduction = 1.0 - pts[2].energy_uj / pts[0].energy_uj;
+        assert!(reduction > 0.25, "sparsity 0.1→0.9 reduction {reduction}");
+        assert!(pts[0].toggle_rate > pts[2].toggle_rate);
+    }
+
+    #[test]
+    fn mapping_beats_direct() {
+        let a = mapping_ablation().unwrap();
+        assert_eq!(a.mapped_stalls, 0);
+        assert!(a.direct_stalls > 0);
+        assert!(a.direct_tcn_uj > a.mapped_tcn_uj * 0.9, "direct should not be cheaper");
+    }
+
+    #[test]
+    fn config_sweep_larger_width_more_throughput() {
+        // A3: wider datapath = more peak TOp/s; efficiency stays within
+        // the same order (the paper picked 96 for the efficiency corner).
+        let pts = config_sweep(&[48, 96]).unwrap();
+        assert!(pts[1].peak_tops > pts[0].peak_tops * 1.5);
+        assert!(pts[1].energy_uj > pts[0].energy_uj);
+    }
+
+    #[test]
+    fn layer_breakdown_has_all_layers() {
+        let t = layer_breakdown().unwrap();
+        let _ = t; // printable table; 9 layers checked via cifar_stats
+        let stats = cifar_stats(SimMode::Fast).unwrap();
+        assert_eq!(stats.layers.len(), 9);
+    }
+
+    #[test]
+    fn soa_ratios_match_paper_claims() {
+        let s = soa().unwrap();
+        // §8: "5-15× lower" energy/op than the TCN-KWS accelerator
+        assert!(s.kws_ratio > 3.0, "kws ratio {}", s.kws_ratio);
+        // TrueNorth ~3250× and Loihi ~63× at our measured DVS energy —
+        // our DVS energy may differ from 5.5 µJ, the ratio scales with it
+        assert!(s.truenorth_ratio > 500.0);
+        assert!(s.loihi_ratio > 10.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A3 — configuration-size ablation (§8: "we improve on these
+// characteristics by ... using a smaller CUTIE configuration" — the
+// Kraken instance is 96-channel vs the original CUTIE paper's 128)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ConfigPoint {
+    pub channels: usize,
+    pub energy_uj: f64,
+    pub peak_tops: f64,
+    pub peak_tops_w: f64,
+    pub cycles: u64,
+}
+
+/// Sweep the accelerator channel width on a matched CIFAR-9 network
+/// (in/out channels scale with the datapath; same 0.33 sparsity).
+pub fn config_sweep(widths: &[usize]) -> Result<Vec<ConfigPoint>> {
+    let p = EnergyParams::default();
+    widths
+        .iter()
+        .map(|&c| {
+            let net = cifar9_random(c, 1, 0.33);
+            let mut rng = Rng::new(2);
+            let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+            let cfg = CutieConfig { channels: c, ..CutieConfig::kraken() };
+            let mut s = Scheduler::new(cfg, SimMode::Accurate);
+            s.preload_weights(&net);
+            let (_, stats) = s.run_full(&net, &input)?;
+            let r = evaluate(&stats, 0.5, None, &p);
+            Ok(ConfigPoint {
+                channels: c,
+                energy_uj: r.energy_j * 1e6,
+                peak_tops: r.peak_tops,
+                peak_tops_w: r.peak_tops_per_watt,
+                cycles: stats.total_cycles(),
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer breakdown (`tcn-cutie report layers`)
+// ---------------------------------------------------------------------------
+
+/// Per-layer cycle/activity/energy table for the CIFAR workload — the
+/// drill-down behind the Figure 6 "peak layer" story.
+pub fn layer_breakdown() -> Result<Table> {
+    let p = EnergyParams::default();
+    let stats = cifar_stats(SimMode::Accurate)?;
+    let mut t = Table::new(&[
+        "layer", "cycles", "act OCUs", "toggles", "toggle rate", "hw GOp", "µJ @0.5V", "TOp/s/W",
+    ]);
+    for l in &stats.layers {
+        let one = RunStats { layers: vec![l.clone()], ..Default::default() };
+        let r = evaluate(&one, 0.5, None, &p);
+        let clocked = l.mac_toggles + l.mac_idle;
+        t.row(&[
+            l.name.clone(),
+            l.total_cycles().to_string(),
+            l.active_ocus.to_string(),
+            l.mac_toggles.to_string(),
+            format!("{:.3}", if clocked > 0 { l.mac_toggles as f64 / clocked as f64 } else { 0.0 }),
+            format!("{:.2}", l.hw_ops as f64 / 1e9),
+            format!("{:.3}", r.energy_j * 1e6),
+            format!("{:.0}", r.peak_tops_per_watt),
+        ]);
+    }
+    Ok(t)
+}

@@ -1,0 +1,70 @@
+//! Golden-model co-simulation: run the same input through (a) the
+//! cycle-level CUTIE simulator and (b) the XLA execution of the
+//! JAX-authored network, and require identical integer outputs.
+
+use anyhow::{ensure, Result};
+
+use super::{to_i32, LoadedModel, Runtime};
+use crate::cutie::{CutieConfig, Scheduler, SimMode};
+use crate::network::Network;
+use crate::tensor::TritTensor;
+
+/// Result of one co-simulation check.
+#[derive(Debug)]
+pub struct GoldenCheck {
+    pub sim_logits: Vec<i32>,
+    pub xla_logits: Vec<i32>,
+    pub matched: bool,
+}
+
+/// cifar-style network: one (H, W, C) input → logits.
+pub fn check_feedforward(
+    rt: &Runtime,
+    model: &LoadedModel,
+    net: &Network,
+    input: &TritTensor,
+) -> Result<GoldenCheck> {
+    let _ = rt;
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    let (logits, _) = sched.run_full(net, input)?;
+    let xla_out = to_i32(&model.run_trits(input)?);
+    ensure!(xla_out.len() == logits.data.len(), "logit arity mismatch");
+    let matched = xla_out == logits.data;
+    Ok(GoldenCheck { sim_logits: logits.data.clone(), xla_logits: xla_out, matched })
+}
+
+/// Hybrid network served frame-by-frame: the simulator drives its TCN
+/// memory; the XLA side gets the equivalent (T, C) window for the
+/// back-end artifact.
+pub fn check_hybrid(
+    cnn: &LoadedModel,
+    tcn: &LoadedModel,
+    net: &Network,
+    frames: &TritTensor,
+) -> Result<GoldenCheck> {
+    ensure!(frames.dims.len() == 4, "frames must be (T, H, W, C)");
+    let (t_len, h, w, c) = (frames.dims[0], frames.dims[1], frames.dims[2], frames.dims[3]);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+
+    // XLA window accumulates CNN features exactly like the TCN memory.
+    let feat_ch = net.tcn_layers().next().unwrap().in_ch;
+    let mut window = vec![0f32; net.tcn_steps * feat_ch];
+    let mut sim_logits = None;
+    for t in 0..t_len {
+        let frame = TritTensor::from_vec(
+            &[h, w, c],
+            frames.data[t * h * w * c..(t + 1) * h * w * c].to_vec(),
+        );
+        let (logits, _) = sched.serve_frame(net, &frame)?;
+        sim_logits = Some(logits);
+        let feat = cnn.run_trits(&frame)?;
+        ensure!(feat.len() == feat_ch, "cnn artifact feature width");
+        // shift the window like the 24-deep shift register
+        window.drain(..feat_ch);
+        window.extend_from_slice(&feat);
+    }
+    let xla_logits = to_i32(&tcn.run_f32(&window, &[net.tcn_steps, feat_ch])?);
+    let sim = sim_logits.unwrap().data;
+    let matched = sim == xla_logits;
+    Ok(GoldenCheck { sim_logits: sim, xla_logits, matched })
+}

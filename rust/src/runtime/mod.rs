@@ -1,0 +1,109 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client via the
+//! `xla` crate. Python never runs here — the artifacts are self-contained.
+//!
+//! In this reproduction the runtime plays the role of the **golden model**
+//! in a classic hardware/software co-simulation flow: the cycle-level
+//! CUTIE simulator's outputs are checked against the XLA execution of the
+//! very same network (lowered from the same JAX source the Pallas kernels
+//! live in). See `golden` and the `golden_pjrt` integration test.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod golden;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::TritTensor;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+pub struct LoadedModel {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedModel {
+            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
+            exe,
+        })
+    }
+}
+
+impl LoadedModel {
+    /// Execute with one f32 input of shape `dims`; returns the flat f32
+    /// output (artifacts are lowered with return_tuple=True and a single
+    /// result).
+    pub fn run_f32(&self, input: &[f32], dims: &[usize]) -> Result<Vec<f32>> {
+        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims_i64)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute with a trit tensor (converted to f32 — the artifact ABI).
+    pub fn run_trits(&self, t: &TritTensor) -> Result<Vec<f32>> {
+        let input: Vec<f32> = t.data.iter().map(|&x| x as f32).collect();
+        self.run_f32(&input, &t.dims)
+    }
+}
+
+/// Round a f32 artifact output back to i32 (values are exact small ints).
+pub fn to_i32(v: &[f32]) -> Vec<i32> {
+    v.iter().map(|&x| x.round() as i32).collect()
+}
+
+/// Round a f32 artifact output back to trits, validating the range.
+pub fn to_trits(v: &[f32]) -> Result<Vec<i8>> {
+    v.iter()
+        .map(|&x| {
+            let r = x.round() as i32;
+            anyhow::ensure!((-1..=1).contains(&r), "non-trit output {x}");
+            Ok(r as i8)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_i32_rounds_exactly() {
+        assert_eq!(to_i32(&[1.0, -3.0, 0.0]), vec![1, -3, 0]);
+    }
+
+    #[test]
+    fn to_trits_validates() {
+        assert!(to_trits(&[1.0, 0.0, -1.0]).is_ok());
+        assert!(to_trits(&[2.0]).is_err());
+    }
+}

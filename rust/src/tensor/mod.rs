@@ -1,0 +1,153 @@
+//! Dense tensors: `TritTensor` (i8 trits) and `IntTensor` (i32
+//! accumulators), row-major with HWC layout for feature maps, plus the
+//! `.ttn` interchange reader/writer (`ttn` submodule).
+
+pub mod ttn;
+
+use crate::trit::PackedVec;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TritTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<i8>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IntTensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+impl TritTensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        TritTensor { dims: dims.to_vec(), data: vec![0; numel(dims)] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<i8>) -> Self {
+        assert_eq!(numel(dims), data.len(), "shape/data mismatch");
+        debug_assert!(data.iter().all(|t| (-1..=1).contains(t)), "non-trit data");
+        TritTensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Flat index for a 3D (H, W, C) tensor.
+    #[inline]
+    pub fn idx3(&self, y: usize, x: usize, c: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 3);
+        (y * self.dims[1] + x) * self.dims[2] + c
+    }
+
+    #[inline]
+    pub fn get3(&self, y: usize, x: usize, c: usize) -> i8 {
+        self.data[self.idx3(y, x, c)]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, y: usize, x: usize, c: usize, v: i8) {
+        let i = self.idx3(y, x, c);
+        self.data[i] = v;
+    }
+
+    /// Pack the channel vector at pixel (y, x) of an HWC map.
+    pub fn pack_pixel(&self, y: usize, x: usize) -> PackedVec {
+        let c = self.dims[2];
+        let base = (y * self.dims[1] + x) * c;
+        PackedVec::pack(&self.data[base..base + c])
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&t| t == 0).count() as f64 / self.data.len() as f64
+    }
+
+    /// Fill with seeded random trits (P(zero) = zero_frac).
+    pub fn random(dims: &[usize], rng: &mut crate::util::rng::Rng, zero_frac: f64) -> Self {
+        let data = (0..numel(dims)).map(|_| rng.trit(zero_frac)).collect();
+        TritTensor { dims: dims.to_vec(), data }
+    }
+}
+
+impl IntTensor {
+    pub fn zeros(dims: &[usize]) -> Self {
+        IntTensor { dims: dims.to_vec(), data: vec![0; numel(dims)] }
+    }
+
+    pub fn from_vec(dims: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(numel(dims), data.len(), "shape/data mismatch");
+        IntTensor { dims: dims.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn idx3(&self, y: usize, x: usize, c: usize) -> usize {
+        debug_assert_eq!(self.dims.len(), 3);
+        (y * self.dims[1] + x) * self.dims[2] + c
+    }
+
+    /// argmax with lowest-index tie-break (the classifier contract).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0usize;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn indexing_hwc() {
+        let mut t = TritTensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, -1);
+        assert_eq!(t.get3(1, 2, 3), -1);
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], -1);
+    }
+
+    #[test]
+    fn pack_pixel_matches_channels() {
+        let mut rng = Rng::new(5);
+        let t = TritTensor::random(&[4, 4, 17], &mut rng, 0.4);
+        let p = t.pack_pixel(2, 3);
+        for c in 0..17 {
+            assert_eq!(p.get(c), t.get3(2, 3, c));
+        }
+    }
+
+    #[test]
+    fn sparsity_estimate() {
+        let mut rng = Rng::new(6);
+        let t = TritTensor::random(&[32, 32, 96], &mut rng, 0.5);
+        assert!((t.sparsity() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        let t = IntTensor::from_vec(&[4], vec![3, 5, 5, 1]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        TritTensor::from_vec(&[2, 2], vec![0; 5]);
+    }
+}

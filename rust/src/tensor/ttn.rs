@@ -1,0 +1,209 @@
+//! `.ttn` binary interchange reader/writer — the Rust half of
+//! `python/compile/ttn.py`. Format documented there; all little-endian.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{IntTensor, TritTensor};
+
+pub const MAGIC: u32 = 0x314E5454; // "TTN1"
+
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    Trit(TritTensor),
+    Int(IntTensor),
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::Trit(t) => &t.dims,
+            Tensor::Int(t) => &t.dims,
+        }
+    }
+
+    pub fn as_trit(&self) -> Result<&TritTensor> {
+        match self {
+            Tensor::Trit(t) => Ok(t),
+            Tensor::Int(_) => bail!("expected trit tensor, found i32"),
+        }
+    }
+
+    pub fn as_int(&self) -> Result<&IntTensor> {
+        match self {
+            Tensor::Int(t) => Ok(t),
+            Tensor::Trit(_) => bail!("expected i32 tensor, found trit"),
+        }
+    }
+}
+
+pub type Bundle = BTreeMap<String, Tensor>;
+
+pub fn read_file(path: impl AsRef<Path>) -> Result<Bundle> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn read_bytes(mut b: &[u8]) -> Result<Bundle> {
+    let magic = read_u32(&mut b)?;
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x}");
+    }
+    let n = read_u32(&mut b)? as usize;
+    let mut out = Bundle::new();
+    for _ in 0..n {
+        let name_len = read_u16(&mut b)? as usize;
+        let name = String::from_utf8(take(&mut b, name_len)?.to_vec())?;
+        let dtype = read_u8(&mut b)?;
+        let ndim = read_u8(&mut b)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u32(&mut b)? as usize);
+        }
+        let count: usize = dims.iter().product();
+        let tensor = match dtype {
+            0 => {
+                let raw = take(&mut b, count)?;
+                let data: Vec<i8> = raw.iter().map(|&x| x as i8).collect();
+                if let Some(bad) = data.iter().find(|t| !(-1..=1).contains(*t)) {
+                    bail!("tensor '{name}': non-trit value {bad}");
+                }
+                Tensor::Trit(TritTensor::from_vec(&dims, data))
+            }
+            1 => {
+                let raw = take(&mut b, count * 4)?;
+                let data: Vec<i32> =
+                    raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
+                Tensor::Int(IntTensor::from_vec(&dims, data))
+            }
+            other => bail!("tensor '{name}': unknown dtype {other}"),
+        };
+        out.insert(name, tensor);
+    }
+    if !b.is_empty() {
+        bail!("{} trailing bytes", b.len());
+    }
+    Ok(out)
+}
+
+pub fn write_file(path: impl AsRef<Path>, tensors: &Bundle) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, t) in tensors {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        match t {
+            Tensor::Trit(tt) => {
+                out.push(0u8);
+                out.push(tt.dims.len() as u8);
+                for d in &tt.dims {
+                    out.extend_from_slice(&(*d as u32).to_le_bytes());
+                }
+                out.extend(tt.data.iter().map(|&x| x as u8));
+            }
+            Tensor::Int(it) => {
+                out.push(1u8);
+                out.push(it.dims.len() as u8);
+                for d in &it.dims {
+                    out.extend_from_slice(&(*d as u32).to_le_bytes());
+                }
+                for v in &it.data {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    f.write_all(&out)?;
+    Ok(())
+}
+
+fn take<'a>(b: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+    if b.len() < n {
+        bail!("unexpected eof (wanted {n}, have {})", b.len());
+    }
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    Ok(head)
+}
+
+fn read_u8(b: &mut &[u8]) -> Result<u8> {
+    Ok(take(b, 1)?[0])
+}
+
+fn read_u16(b: &mut &[u8]) -> Result<u16> {
+    Ok(u16::from_le_bytes(take(b, 2)?.try_into().unwrap()))
+}
+
+fn read_u32(b: &mut &[u8]) -> Result<u32> {
+    Ok(u32::from_le_bytes(take(b, 4)?.try_into().unwrap()))
+}
+
+// Suppress unused-import warning for Read (used via trait in some builds).
+#[allow(unused)]
+fn _assert_read_usable(r: &mut dyn Read) {
+    let _ = r;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_property() {
+        let mut rng = Rng::new(17);
+        for case in 0..20 {
+            let mut bundle = Bundle::new();
+            for t in 0..1 + case % 4 {
+                let ndim = 1 + rng.below(3);
+                let dims: Vec<usize> = (0..ndim).map(|_| 1 + rng.below(5)).collect();
+                let n: usize = dims.iter().product();
+                if rng.bool(0.5) {
+                    let data: Vec<i8> = (0..n).map(|_| rng.trit(0.3)).collect();
+                    bundle.insert(format!("t{t}"), Tensor::Trit(TritTensor::from_vec(&dims, data)));
+                } else {
+                    let data: Vec<i32> =
+                        (0..n).map(|_| rng.range_i32(-1_000_000, 1_000_000)).collect();
+                    bundle.insert(format!("t{t}"), Tensor::Int(IntTensor::from_vec(&dims, data)));
+                }
+            }
+            let dir = std::env::temp_dir().join(format!("ttn_test_{case}.ttn"));
+            write_file(&dir, &bundle).unwrap();
+            let back = read_file(&dir).unwrap();
+            std::fs::remove_file(&dir).ok();
+            assert_eq!(bundle.len(), back.len());
+            for (k, v) in &bundle {
+                match (v, &back[k]) {
+                    (Tensor::Trit(a), Tensor::Trit(b)) => assert_eq!(a, b),
+                    (Tensor::Int(a), Tensor::Int(b)) => assert_eq!(a, b),
+                    _ => panic!("dtype changed in roundtrip"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(read_bytes(&[0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bundle = Bundle::new();
+        bundle.insert(
+            "x".into(),
+            Tensor::Trit(TritTensor::from_vec(&[4], vec![1, 0, -1, 1])),
+        );
+        let path = std::env::temp_dir().join("ttn_trunc.ttn");
+        write_file(&path, &bundle).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(read_bytes(&bytes[..bytes.len() - 2]).is_err());
+    }
+}

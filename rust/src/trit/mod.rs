@@ -1,0 +1,277 @@
+//! Ternary value representation.
+//!
+//! Trits are `i8 ∈ {-1, 0, +1}` at API boundaries. The simulator hot path
+//! uses **bitplane packing**: a channel vector of up to 128 trits is two
+//! 128-bit masks, and the ternary dot product reduces to AND/XOR +
+//! popcount — the software analogue of CUTIE's wide adder trees, and
+//! simultaneously the source of the switching-activity statistics the
+//! energy model consumes (a non-zero partial product is a toggling
+//! multiplier in the RTL; see [1] §V).
+//!
+//! Encoding (perf pass iteration 1, see EXPERIMENTS.md §Perf): planes are
+//! (`pos`, `mask`) with `pos ⊆ mask`; `mask` flags non-zero trits and
+//! `pos` flags +1. For channels where both operands are non-zero
+//! (`nz = a.mask & b.mask`) the product is −1 exactly when the sign bits
+//! differ (`diff = nz & (a.pos ^ b.pos)`), so
+//!
+//! ```text
+//! dot     = popcount(nz) − 2·popcount(diff)
+//! toggles = popcount(nz)
+//! ```
+//!
+//! — two popcounts per word instead of the four the (pos, neg) encoding
+//! needs, and the toggle count comes for free.
+
+pub const MAX_CHANNELS: usize = 128;
+const WORDS: usize = MAX_CHANNELS / 64;
+
+/// A packed vector of up to 128 trits (CUTIE's channel dimension).
+/// Invariant: `pos & !mask == 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PackedVec {
+    /// Bit i set ⇔ trit i == +1.
+    pub pos: [u64; WORDS],
+    /// Bit i set ⇔ trit i != 0.
+    pub mask: [u64; WORDS],
+}
+
+impl PackedVec {
+    pub const ZERO: PackedVec = PackedVec { pos: [0; WORDS], mask: [0; WORDS] };
+
+    /// Pack a slice of trits (len <= 128). Panics on non-trit values.
+    pub fn pack(trits: &[i8]) -> PackedVec {
+        assert!(trits.len() <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
+        let mut v = PackedVec::ZERO;
+        for (i, &t) in trits.iter().enumerate() {
+            match t {
+                0 => {}
+                1 => {
+                    v.pos[i / 64] |= 1 << (i % 64);
+                    v.mask[i / 64] |= 1 << (i % 64);
+                }
+                -1 => v.mask[i / 64] |= 1 << (i % 64),
+                other => panic!("non-trit value {other}"),
+            }
+        }
+        v
+    }
+
+    /// Unpack the first `n` trits.
+    pub fn unpack(&self, n: usize) -> Vec<i8> {
+        (0..n).map(|i| self.get(i)).collect()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> i8 {
+        let (w, b) = (i / 64, i % 64);
+        if (self.mask[w] >> b) & 1 == 0 {
+            0
+        } else if (self.pos[w] >> b) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, t: i8) {
+        let (w, b) = (i / 64, i % 64);
+        self.pos[w] &= !(1 << b);
+        self.mask[w] &= !(1 << b);
+        match t {
+            1 => {
+                self.pos[w] |= 1 << b;
+                self.mask[w] |= 1 << b;
+            }
+            -1 => self.mask[w] |= 1 << b,
+            0 => {}
+            other => panic!("non-trit value {other}"),
+        }
+    }
+
+    /// Number of non-zero trits.
+    #[inline]
+    pub fn count_nonzero(&self) -> u32 {
+        self.mask.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// True if every trit is zero (cheap; used for sparsity skipping).
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.mask[0] == 0 && self.mask[1] == 0
+    }
+
+    /// Ternary dot product + non-zero-partial-product count (the toggling
+    /// proxy). acc = Σ a_i * b_i; toggles = #{i : a_i*b_i != 0}.
+    #[inline]
+    pub fn dot(&self, other: &PackedVec) -> (i32, u32) {
+        let mut acc = 0i32;
+        let mut toggles = 0u32;
+        for w in 0..WORDS {
+            let nz = self.mask[w] & other.mask[w];
+            let diff = nz & (self.pos[w] ^ other.pos[w]);
+            let n = nz.count_ones();
+            acc += n as i32 - 2 * diff.count_ones() as i32;
+            toggles += n;
+        }
+        (acc, toggles)
+    }
+
+    /// Single-word dot product: valid when both operands only populate
+    /// channels 0..64 (perf pass iteration 6 — halves the popcount work
+    /// for narrow layers like the DVS front-end).
+    #[inline]
+    pub fn dot_narrow(&self, other: &PackedVec) -> (i32, u32) {
+        debug_assert!(self.mask[1] == 0 || other.mask[1] == 0);
+        let nz = self.mask[0] & other.mask[0];
+        let diff = nz & (self.pos[0] ^ other.pos[0]);
+        let n = nz.count_ones();
+        (n as i32 - 2 * diff.count_ones() as i32, n)
+    }
+
+    /// Plain dot product (no activity reporting — same cost with this
+    /// encoding, kept for API compatibility of the fast path).
+    #[inline]
+    pub fn dot_fast(&self, other: &PackedVec) -> i32 {
+        let mut acc = 0i32;
+        for w in 0..WORDS {
+            let nz = self.mask[w] & other.mask[w];
+            let diff = nz & (self.pos[w] ^ other.pos[w]);
+            acc += nz.count_ones() as i32 - 2 * diff.count_ones() as i32;
+        }
+        acc
+    }
+}
+
+/// Scalar reference dot product (used by tests to validate the packed path).
+pub fn dot_scalar(a: &[i8], b: &[i8]) -> (i32, u32) {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0i32;
+    let mut toggles = 0u32;
+    for (&x, &y) in a.iter().zip(b) {
+        let p = (x as i32) * (y as i32);
+        acc += p;
+        if p != 0 {
+            toggles += 1;
+        }
+    }
+    (acc, toggles)
+}
+
+/// Ternarize an accumulator with the two-threshold contract
+/// (`lo <= hi + 1`; `lo == hi + 1` encodes an empty zero-region):
+/// +1 if acc > hi, -1 if acc < lo, else 0.
+#[inline]
+pub fn ternarize(acc: i32, lo: i32, hi: i32) -> i8 {
+    debug_assert!(lo <= hi + 1, "threshold contract violated: lo {lo} hi {hi}");
+    if acc > hi {
+        1
+    } else if acc < lo {
+        -1
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let trits: Vec<i8> = (0..n).map(|_| rng.trit(0.3)).collect();
+            let packed = PackedVec::pack(&trits);
+            assert_eq!(packed.unpack(n), trits);
+        }
+    }
+
+    #[test]
+    fn get_set() {
+        let mut v = PackedVec::ZERO;
+        v.set(5, 1);
+        v.set(70, -1);
+        assert_eq!(v.get(5), 1);
+        assert_eq!(v.get(70), -1);
+        assert_eq!(v.get(0), 0);
+        v.set(5, -1);
+        assert_eq!(v.get(5), -1);
+        v.set(5, 0);
+        assert_eq!(v.get(5), 0);
+        assert!(PackedVec::ZERO.is_zero());
+        assert!(!v.is_zero() || v.count_nonzero() == 0);
+    }
+
+    #[test]
+    fn invariant_pos_subset_mask() {
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let trits: Vec<i8> = (0..n).map(|_| rng.trit(0.3)).collect();
+            let v = PackedVec::pack(&trits);
+            for w in 0..2 {
+                assert_eq!(v.pos[w] & !v.mask[w], 0);
+            }
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_property() {
+        // Property test (seeded sweep): packed dot == scalar dot, with
+        // matching toggle counts, across lengths and sparsities.
+        let mut rng = Rng::new(2);
+        for case in 0..500 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+            let a: Vec<i8> = (0..n).map(|_| rng.trit(zf)).collect();
+            let b: Vec<i8> = (0..n).map(|_| rng.trit(zf)).collect();
+            let (acc_s, tog_s) = dot_scalar(&a, &b);
+            let (acc_p, tog_p) = PackedVec::pack(&a).dot(&PackedVec::pack(&b));
+            assert_eq!(acc_p, acc_s);
+            assert_eq!(tog_p, tog_s);
+            assert_eq!(PackedVec::pack(&a).dot_fast(&PackedVec::pack(&b)), acc_s);
+        }
+    }
+
+    #[test]
+    fn dot_bounds() {
+        let ones = vec![1i8; 96];
+        let v = PackedVec::pack(&ones);
+        assert_eq!(v.dot(&v), (96, 96));
+        let negs = vec![-1i8; 96];
+        let w = PackedVec::pack(&negs);
+        assert_eq!(v.dot(&w), (-96, 96));
+    }
+
+    #[test]
+    fn ternarize_contract() {
+        assert_eq!(ternarize(3, -2, 2), 1);
+        assert_eq!(ternarize(-3, -2, 2), -1);
+        assert_eq!(ternarize(2, -2, 2), 0);
+        assert_eq!(ternarize(-2, -2, 2), 0);
+        assert_eq!(ternarize(0, -2, 2), 0);
+        // empty zero-region: lo = hi + 1
+        assert_eq!(ternarize(3, 4, 3), -1);
+        assert_eq!(ternarize(4, 4, 3), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-trit")]
+    fn pack_rejects_non_trits() {
+        PackedVec::pack(&[0, 2]);
+    }
+
+    #[test]
+    fn count_nonzero_matches() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let a: Vec<i8> = (0..n).map(|_| rng.trit(0.5)).collect();
+            let expected = a.iter().filter(|&&t| t != 0).count() as u32;
+            assert_eq!(PackedVec::pack(&a).count_nonzero(), expected);
+        }
+    }
+}

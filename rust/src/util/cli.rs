@@ -1,0 +1,102 @@
+//! Tiny CLI argument parser (clap is unavailable offline): positional
+//! subcommand + `--key value` options + `--flag` booleans.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse; `flag_names` lists options that take no value.
+    pub fn parse(argv: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).map(|s| s.parse().expect("bad float option")).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).map(|s| s.parse().expect("bad int option")).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).map(|s| s.parse().expect("bad int option")).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            argv(&["report", "table1", "--voltage", "0.5", "--json", "--seed=7"]),
+            &["json"],
+        );
+        assert_eq!(a.positional, vec!["report", "table1"]);
+        assert_eq!(a.opt("voltage"), Some("0.5"));
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(argv(&["run", "--check"]), &[]);
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(&[]), &[]);
+        assert_eq!(a.opt_f64("voltage", 0.5), 0.5);
+        assert_eq!(a.opt_usize("n", 3), 3);
+    }
+}

@@ -1,0 +1,10 @@
+//! Self-contained substrates for the offline build environment (crates.io
+//! is unreachable here; see DESIGN.md §3): a minimal JSON parser/emitter, a
+//! deterministic PRNG, a CLI argument parser, a micro-benchmark harness and
+//! small statistics helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

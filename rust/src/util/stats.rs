@@ -1,0 +1,91 @@
+//! Small statistics helpers shared by the bench harness and the
+//! coordinator's latency metrics.
+
+/// Online latency histogram with exact percentiles (stores samples; fine at
+/// the request rates the serving example produces).
+#[derive(Debug, Default, Clone)]
+pub struct Percentiles {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// q in [0, 1]; nearest-rank.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty());
+        self.ensure_sorted();
+        let idx = ((self.samples.len() as f64 - 1.0) * q).round() as usize;
+        self.samples[idx]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.quantile(1.0)
+    }
+}
+
+/// Median and median-absolute-deviation of a sample set.
+pub fn median_mad(samples: &[f64]) -> (f64, f64) {
+    assert!(!samples.is_empty());
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = s[s.len() / 2];
+    let mut devs: Vec<f64> = s.iter().map(|x| (x - med).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, devs[devs.len() / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_basic() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.record(i as f64);
+        }
+        assert_eq!(p.quantile(0.0), 1.0);
+        assert_eq!(p.quantile(1.0), 100.0);
+        let p50 = p.quantile(0.5);
+        assert!((49.0..=51.0).contains(&p50));
+        assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_mad_basic() {
+        let (m, d) = median_mad(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(d, 1.0); // robust to the outlier
+    }
+}

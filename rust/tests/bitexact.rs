@@ -1,0 +1,85 @@
+//! Cross-language bit-exactness: the JAX oracle's test vectors
+//! (artifacts/testvec_*.ttn) must match both the functional reference
+//! executor and the cycle-level CUTIE simulator, trit for trit.
+
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
+use tcn_cutie::network::{loader, reference};
+use tcn_cutie::tensor::ttn;
+
+fn artifacts() -> std::path::PathBuf {
+    loader::artifacts_dir()
+}
+
+fn have(name: &str) -> bool {
+    artifacts().join(name).exists()
+}
+
+fn check_net(stem: &str, n_vecs: usize) {
+    if !have(&format!("{stem}.json")) {
+        eprintln!("skipping {stem}: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let net = loader::load_network(artifacts().join(format!("{stem}.json"))).unwrap();
+    let vecs = ttn::read_file(artifacts().join(format!("testvec_{stem}.ttn"))).unwrap();
+    for i in 0..n_vecs {
+        let input = vecs[&format!("in{i}")].as_trit().unwrap();
+        let want = vecs[&format!("out{i}")].as_int().unwrap();
+
+        // functional reference executor
+        let got_ref = reference::forward(&net, input).unwrap();
+        assert_eq!(got_ref.data, want.data, "{stem} vec {i}: reference executor mismatch");
+
+        // cycle-level simulator (fresh scheduler per vector: the JAX
+        // test vectors were generated with a cold TCN window)
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (got_sim, stats) = sched.run_full(&net, input).unwrap();
+        assert_eq!(got_sim.data, want.data, "{stem} vec {i}: simulator mismatch");
+        assert!(stats.total_cycles() > 0);
+        assert_eq!(stats.stall_cycles(), 0, "mapped execution must be stall-free");
+    }
+}
+
+#[test]
+fn cifar9_96_matches_jax_oracle() {
+    check_net("cifar9_96", 4);
+}
+
+#[test]
+fn cifar9_mini_trained_matches_jax_oracle() {
+    check_net("cifar9_mini", 4);
+}
+
+#[test]
+fn dvs_hybrid_matches_jax_oracle() {
+    check_net("dvs_hybrid_96", 2);
+}
+
+#[test]
+fn trained_net_accuracy_on_eval_set() {
+    // End-to-end: the build-time-trained network must classify the
+    // synthetic eval set on the *simulator* exactly as JAX reported
+    // (train_log.json records int_test_acc; we recompute ≥ that level).
+    if !have("evalset_cifar9_mini.ttn") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("cifar9_mini.json")).unwrap();
+    let eval = ttn::read_file(artifacts().join("evalset_cifar9_mini.ttn")).unwrap();
+    let images = eval["images"].as_trit().unwrap();
+    let labels = eval["labels"].as_int().unwrap();
+    let n = images.dims[0].min(64); // keep test time bounded
+    let (h, w, c) = (images.dims[1], images.dims[2], images.dims[3]);
+    let mut correct = 0usize;
+    for i in 0..n {
+        let img = tcn_cutie::tensor::TritTensor::from_vec(
+            &[h, w, c],
+            images.data[i * h * w * c..(i + 1) * h * w * c].to_vec(),
+        );
+        let logits = reference::forward(&net, &img).unwrap();
+        if logits.argmax() as i32 == labels.data[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "trained-net accuracy on simulator: {acc}");
+}

@@ -1,0 +1,98 @@
+//! Golden-model co-simulation over PJRT: simulator vs XLA execution of
+//! the AOT artifacts, including the Pallas-lowered first-layer kernel.
+
+use tcn_cutie::cutie::{CutieConfig, SimMode};
+use tcn_cutie::network::{loader, reference};
+use tcn_cutie::runtime::{golden, to_trits, Runtime};
+use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::util::rng::Rng;
+
+fn artifacts() -> std::path::PathBuf {
+    loader::artifacts_dir()
+}
+
+fn have(name: &str) -> bool {
+    artifacts().join(name).exists()
+}
+
+#[test]
+fn cifar_full_net_golden() {
+    if !have("cifar9_96.hlo.txt") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(artifacts().join("cifar9_96.hlo.txt")).unwrap();
+    let net = loader::load_network(artifacts().join("cifar9_96.json")).unwrap();
+    let mut rng = Rng::new(404);
+    for i in 0..3 {
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, [0.2, 0.5, 0.8][i]);
+        let check = golden::check_feedforward(&rt, &model, &net, &input).unwrap();
+        assert!(
+            check.matched,
+            "sim {:?} != xla {:?}",
+            check.sim_logits, check.xla_logits
+        );
+    }
+}
+
+#[test]
+fn pallas_first_layer_golden() {
+    // The interpret-mode Pallas kernel, lowered to HLO, loaded by PJRT,
+    // vs the cycle-level datapath on the same layer.
+    if !have("cifar9_96_l1_pallas.hlo.txt") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(artifacts().join("cifar9_96_l1_pallas.hlo.txt")).unwrap();
+    let net = loader::load_network(artifacts().join("cifar9_96.json")).unwrap();
+    let layer = &net.layers[0];
+    let mut rng = Rng::new(405);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+
+    let xla_out = to_trits(&model.run_trits(&input).unwrap()).unwrap();
+
+    let cfg = CutieConfig::kraken();
+    let sim =
+        tcn_cutie::cutie::datapath::run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
+    assert_eq!(sim.output.data, xla_out, "pallas kernel vs datapath");
+
+    let refo = reference::run_conv_layer(layer, &input);
+    assert_eq!(refo.data, xla_out, "pallas kernel vs reference executor");
+}
+
+#[test]
+fn dvs_hybrid_golden() {
+    if !have("dvs_hybrid_96_cnn.hlo.txt") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let cnn = rt.load(artifacts().join("dvs_hybrid_96_cnn.hlo.txt")).unwrap();
+    let tcn = rt.load(artifacts().join("dvs_hybrid_96_tcn.hlo.txt")).unwrap();
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+    let mut rng = Rng::new(406);
+    let frames = TritTensor::random(&[5, 64, 64, 2], &mut rng, 0.85);
+    let check = golden::check_hybrid(&cnn, &tcn, &net, &frames).unwrap();
+    assert!(
+        check.matched,
+        "sim {:?} != xla {:?}",
+        check.sim_logits, check.xla_logits
+    );
+}
+
+#[test]
+fn trained_mini_net_golden() {
+    if !have("cifar9_mini.hlo.txt") {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load(artifacts().join("cifar9_mini.hlo.txt")).unwrap();
+    let net = loader::load_network(artifacts().join("cifar9_mini.json")).unwrap();
+    let mut rng = Rng::new(407);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.4);
+    let check = golden::check_feedforward(&rt, &model, &net, &input).unwrap();
+    assert!(check.matched);
+}

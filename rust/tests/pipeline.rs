@@ -1,0 +1,126 @@
+//! Integration tests over the full serving pipeline with the real
+//! artifact-loaded networks (SRV experiment) plus failure injection.
+
+use tcn_cutie::coordinator::{DvsSource, GestureClass, Pipeline, PipelineConfig};
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode, TcnStrategy};
+use tcn_cutie::network::loader;
+use tcn_cutie::tensor::TritTensor;
+
+fn artifacts() -> std::path::PathBuf {
+    loader::artifacts_dir()
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("dvs_hybrid_96.json").exists()
+}
+
+#[test]
+fn serve_real_dvs_network() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+    let pipe = Pipeline::new(
+        net,
+        PipelineConfig { frames: 8, mode: SimMode::Fast, ..Default::default() },
+    );
+    let mut r = pipe.run_inline().unwrap();
+    assert_eq!(r.metrics.frames, 8);
+    assert_eq!(r.fc_wakeups, 8);
+    assert!(r.metrics.sim_latency_us.quantile(0.5) > 0.0);
+    assert!(r.soc_energy_j > 0.0);
+    assert!(r.labels.iter().all(|&l| l < 12));
+}
+
+#[test]
+fn threaded_serving_is_deterministic_vs_inline() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+    let cfg = PipelineConfig { frames: 6, mode: SimMode::Fast, ..Default::default() };
+    let a = Pipeline::new(net.clone(), cfg.clone()).run_inline().unwrap();
+    let b = Pipeline::new(net, cfg).run_threaded().unwrap();
+    assert_eq!(a.labels, b.labels);
+}
+
+#[test]
+fn tcn_window_warms_up_over_stream() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    sched.preload_weights(&net);
+    let mut src = DvsSource::new(64, 3, GestureClass(1));
+    for i in 0..26 {
+        let frame = src.next_frame();
+        sched.serve_frame(&net, &frame).unwrap();
+        assert_eq!(sched.tcn_mem.len(), (i + 1).min(24));
+    }
+    assert!(sched.tcn_mem.is_full());
+}
+
+#[test]
+fn direct_vs_mapped_strategy_on_real_net() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+    let mut mapped = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    let mut direct =
+        Scheduler::new(CutieConfig::kraken(), SimMode::Fast).with_tcn_strategy(TcnStrategy::Direct);
+    let mut src = DvsSource::new(64, 5, GestureClass(2));
+    for _ in 0..3 {
+        let f = src.next_frame();
+        let (lm, rm) = mapped.serve_frame(&net, &f).unwrap();
+        let (ld, rd) = direct.serve_frame(&net, &f).unwrap();
+        assert_eq!(lm, ld, "strategies must agree bit-exactly on the real net");
+        assert_eq!(rm.stall_cycles(), 0);
+        assert!(rd.stall_cycles() > 0);
+    }
+}
+
+#[test]
+fn oversized_input_rejected_cleanly() {
+    // failure injection: feature maps beyond the 64x64x96 hardware limit
+    // must produce an error, not a wrong answer
+    let net = tcn_cutie::network::cifar9_random(96, 1, 0.3);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    let too_big = TritTensor::zeros(&[128, 128, 3]);
+    assert!(sched.run_full(&net, &too_big).is_err());
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    // failure injection: loader must reject malformed manifests
+    let dir = std::env::temp_dir().join("tcn_cutie_corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let man = dir.join("bad.json");
+    std::fs::write(&man, "{\"name\": \"x\"").unwrap();
+    assert!(loader::load_network(&man).is_err());
+    std::fs::write(&man, "{\"name\": \"x\", \"layers\": []}").unwrap();
+    assert!(loader::load_network(&man).is_err());
+}
+
+#[test]
+fn corrupt_ttn_rejected() {
+    // failure injection: truncated/garbage weight files must error
+    let dir = std::env::temp_dir().join("tcn_cutie_corrupt2");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("weights.ttn"), [0u8; 16]).unwrap();
+    std::fs::write(
+        dir.join("net.json"),
+        r#"{"name":"x","input_hw":32,"tcn_steps":24,"classes":10,
+            "weights_file":"weights.ttn","layers":[
+            {"name":"c1","kind":"conv2d","in_ch":3,"out_ch":8,"kernel":3,
+             "dilation":1,"pool":false,"global_pool":false,
+             "weights":"c1.w","lo":"c1.lo","hi":"c1.hi"}]}"#,
+    )
+    .unwrap();
+    assert!(loader::load_network(dir.join("net.json")).is_err());
+}

@@ -1,0 +1,150 @@
+//! Property tests (seeded randomized sweeps — proptest is unavailable in
+//! this offline environment, same coverage intent): simulator/reference
+//! equivalence across random geometries, scheduler state invariants, and
+//! energy-model monotonicity laws.
+
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode, TcnStrategy};
+use tcn_cutie::energy::{evaluate, fmax_hz, EnergyParams};
+use tcn_cutie::network::{self, reference, LayerKind};
+use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::util::rng::Rng;
+
+/// Random small hybrid networks: cycle-level simulator must equal the
+/// functional reference executor bit-for-bit, for any geometry/sparsity.
+#[test]
+fn simulator_equals_reference_random_networks() {
+    let mut rng = Rng::new(2024);
+    for case in 0..10 {
+        let ch = [8, 16, 24][case % 3];
+        let zf = [0.1, 0.5, 0.8][case % 3];
+        let net = network::cifar9_random(ch, 3000 + case as u64, zf);
+        let input_zf = rng.f64() * 0.8;
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, input_zf);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (sim, _) = sched.run_full(&net, &input).unwrap();
+        let want = reference::forward(&net, &input).unwrap();
+        assert_eq!(sim, want, "case {case}");
+    }
+}
+
+/// Mapped and direct TCN strategies must agree on every random stream
+/// (§4: the mapping is exactly equivalent).
+#[test]
+fn tcn_strategies_equivalent_random_streams() {
+    let mut rng = Rng::new(77);
+    for case in 0..5 {
+        let net = network::dvs_hybrid_random(16, 4000 + case, 0.5);
+        let mut a = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        let mut b = Scheduler::new(CutieConfig::kraken(), SimMode::Fast)
+            .with_tcn_strategy(TcnStrategy::Direct);
+        for _ in 0..5 {
+            let zf = 0.7 + 0.25 * rng.f64();
+            let f = TritTensor::random(&[64, 64, 2], &mut rng, zf);
+            let (la, _) = a.serve_frame(&net, &f).unwrap();
+            let (lb, _) = b.serve_frame(&net, &f).unwrap();
+            assert_eq!(la, lb);
+        }
+    }
+}
+
+/// Scheduler state invariants across a served stream: TCN occupancy is
+/// min(frames, depth); weight loads only on first touch; stall-free.
+#[test]
+fn scheduler_state_invariants() {
+    let net = network::dvs_hybrid_random(16, 9, 0.5);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    let mut rng = Rng::new(5);
+    let mut total_weight_cycles = Vec::new();
+    for i in 0..30 {
+        let f = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        let (_, stats) = sched.serve_frame(&net, &f).unwrap();
+        assert_eq!(sched.tcn_mem.len(), (i + 1).min(24));
+        assert_eq!(stats.stall_cycles(), 0);
+        total_weight_cycles
+            .push(stats.layers.iter().map(|l| l.weight_load_cycles).sum::<u64>());
+        // conservation: every layer's activity is bounded by its clocked
+        // positions
+        for l in &stats.layers {
+            let clocked = (l.active_ocus * 96 * 9) as u64 * l.compute_cycles;
+            assert!(l.mac_toggles + l.mac_idle == clocked || l.compute_cycles == 0);
+        }
+    }
+    // steady state: bank switches only (1 cycle per non-dense layer)
+    let steady = *total_weight_cycles.last().unwrap();
+    let n_switchable = net.layers.iter().filter(|l| l.kind != LayerKind::Dense).count() as u64;
+    assert_eq!(steady, n_switchable);
+    assert!(total_weight_cycles[0] > steady, "first frame streams weights");
+}
+
+/// Energy model laws: monotone in voltage (energy up, efficiency down),
+/// monotone in activity, breakdown always sums to total.
+#[test]
+fn energy_model_monotonicity() {
+    let mut rng = Rng::new(6);
+    let p = EnergyParams::default();
+    for case in 0..6 {
+        let net = network::cifar9_random(32, 5000 + case, 0.2 + 0.1 * case as f64);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (_, stats) = sched.run_full(&net, &input).unwrap();
+        let mut last_e = 0.0;
+        let mut last_eff = f64::INFINITY;
+        for v in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            let r = evaluate(&stats, v, None, &p);
+            assert!(r.energy_j > last_e, "energy must rise with V");
+            assert!(r.avg_tops_per_watt < last_eff, "efficiency must fall with V");
+            assert!((r.breakdown.total() - r.energy_j).abs() < 1e-15);
+            assert!(r.freq_hz == fmax_hz(v));
+            last_e = r.energy_j;
+            last_eff = r.avg_tops_per_watt;
+        }
+    }
+}
+
+/// Sparser inputs can only reduce toggling (monotone activity law).
+#[test]
+fn toggles_monotone_in_sparsity() {
+    let mut last = u64::MAX;
+    for zf in [0.0, 0.3, 0.6, 0.9] {
+        let net = network::cifar9_random(32, 42, zf);
+        let mut rng = Rng::new(7);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, zf);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let (_, stats) = sched.run_full(&net, &input).unwrap();
+        assert!(stats.mac_toggles() < last, "toggles must fall with sparsity");
+        last = stats.mac_toggles();
+    }
+}
+
+/// Cycle counts are input-independent (the datapath is fully unrolled,
+/// one pixel per cycle regardless of data) — the paper's constant-time
+/// inference property.
+#[test]
+fn cycles_input_independent() {
+    let net = network::cifar9_random(48, 11, 0.33);
+    let mut cycles = None;
+    let mut rng = Rng::new(8);
+    for zf in [0.0, 0.5, 0.95] {
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, zf);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        sched.preload_weights(&net);
+        let (_, stats) = sched.run_full(&net, &input).unwrap();
+        match cycles {
+            None => cycles = Some(stats.total_cycles()),
+            Some(c) => assert_eq!(stats.total_cycles(), c, "constant-time inference"),
+        }
+    }
+}
+
+/// hw-ops accounting: total hw_ops equals Σ active_ocus·K²·C·2·cycles.
+#[test]
+fn hw_ops_accounting_consistent() {
+    let net = network::cifar9_random(96, 13, 0.33);
+    let mut rng = Rng::new(9);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+    let (_, stats) = sched.run_full(&net, &input).unwrap();
+    for l in &stats.layers {
+        assert_eq!(l.hw_ops, (l.active_ocus * 9 * 96 * 2) as u64 * l.compute_cycles);
+    }
+}
