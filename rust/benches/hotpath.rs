@@ -1,22 +1,29 @@
 //! Perf — simulator hot-path microbenchmarks (EXPERIMENTS.md §Perf):
 //! packed-bitplane OCU dot products vs a scalar i8 baseline, the
-//! per-layer datapath loop, and end-to-end serving throughput in both
-//! sim modes. The §Perf target: the full DVS pipeline simulates faster
-//! than the 0.5 V silicon serves it (≥1x realtime).
+//! per-layer datapath loop (column-stationary vs the retained
+//! window-stationary baseline), and end-to-end serving throughput —
+//! inline vs the batched multi-frame engine. The §Perf target: the full
+//! DVS pipeline simulates faster than the 0.5 V silicon serves it
+//! (≥1x realtime).
+//!
+//! Emits the machine-readable perf ledger `BENCH_hotpath.json`
+//! (override the path with the BENCH_JSON env var), tracking name,
+//! median_s and speedup across PRs.
 //!
 //!     cargo bench --bench hotpath
 
 use tcn_cutie::coordinator::{Pipeline, PipelineConfig};
-use tcn_cutie::cutie::datapath::run_conv_layer;
+use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, SimMode};
 use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
 use tcn_cutie::tensor::TritTensor;
 use tcn_cutie::trit::{dot_scalar, PackedVec};
-use tcn_cutie::util::bench::{bench, black_box};
+use tcn_cutie::util::bench::{bench, black_box, BenchSuite};
 use tcn_cutie::util::rng::Rng;
 
 fn main() {
     let mut rng = Rng::new(99);
+    let mut suite = BenchSuite::new();
 
     // --- microbench: ternary dot product, packed vs scalar ---
     let a: Vec<i8> = (0..96).map(|_| rng.trit(0.33)).collect();
@@ -37,46 +44,67 @@ fn main() {
         }
         acc
     });
-    let r_fast = bench("dot 96ch: bitplane popcount (fast)", 3, 30, || {
-        let mut acc = 0i64;
-        for _ in 0..10_000 {
-            acc += black_box(&pa).dot_fast(black_box(&pb)) as i64;
-        }
-        acc
-    });
-    println!(
-        "  speedup packed vs scalar: {:.1}x (fast: {:.1}x)\n",
-        r_scalar.median_s / r_packed.median_s,
-        r_scalar.median_s / r_fast.median_s
-    );
+    println!("  speedup packed vs scalar: {:.1}x\n", r_scalar.median_s / r_packed.median_s);
+    suite.push(&r_scalar);
+    suite.push_speedup(&r_packed, &r_scalar);
 
-    // --- one 96x96 conv layer on the datapath ---
+    // --- one 96x96 conv layer on the datapath: window- vs column-stationary ---
     let net = cifar9_random(96, 7, 0.33);
     let cfg = CutieConfig::kraken();
     let input = TritTensor::random(&[32, 32, 96], &mut rng, 0.4);
-    bench("datapath layer 32x32x96→96 (accurate)", 2, 10, || {
-        run_conv_layer(&net.layers[2], &input, &cfg, SimMode::Accurate).unwrap()
+    let prep = PreparedLayer::new(&net.layers[2]);
+    let r_window = bench("datapath layer 32x32x96→96 window-stationary (baseline)", 2, 10, || {
+        run_prepared_window(&prep, &input, &cfg, SimMode::Accurate).unwrap()
     });
-    bench("datapath layer 32x32x96→96 (fast)", 2, 10, || {
-        run_conv_layer(&net.layers[2], &input, &cfg, SimMode::Fast).unwrap()
+    let r_col = bench("datapath layer 32x32x96→96 (accurate)", 2, 10, || {
+        run_prepared(&prep, &input, &cfg, SimMode::Accurate).unwrap()
     });
+    let r_col_fast = bench("datapath layer 32x32x96→96 (fast)", 2, 10, || {
+        run_prepared(&prep, &input, &cfg, SimMode::Fast).unwrap()
+    });
+    println!(
+        "  speedup column vs window: {:.2}x\n",
+        r_window.median_s / r_col.median_s
+    );
+    suite.push(&r_window);
+    suite.push_speedup(&r_col, &r_window);
+    suite.push_speedup(&r_col_fast, &r_window);
 
-    // --- end-to-end serving throughput vs realtime ---
+    // --- end-to-end serving throughput: inline vs batched, vs realtime ---
     let dnet = dvs_hybrid_random(96, 3, 0.5);
     for (label, mode) in [("accurate", SimMode::Accurate), ("fast", SimMode::Fast)] {
         let pipe = Pipeline::new(
             dnet.clone(),
             PipelineConfig { frames: 8, mode, ..Default::default() },
         );
-        let r = bench(&format!("DVS serve 8 frames ({label})"), 1, 5, || pipe.run_inline().unwrap());
+        let r_inline =
+            bench(&format!("DVS serve 8 frames inline ({label})"), 1, 5, || {
+                pipe.run_inline().unwrap()
+            });
+        let r_batch =
+            bench(&format!("DVS serve 8 frames batched ({label})"), 1, 5, || {
+                pipe.run_batched(0).unwrap()
+            });
         let rep = pipe.run_inline().unwrap();
         let sim_time = rep.metrics.sim_time_s;
-        let wall_per_run = r.median_s;
         println!(
-            "  realtime ratio ({label}): sim {:.1} µs of 0.5 V silicon in {:.1} ms wall → {:.2}x realtime\n",
-            sim_time * 1e6,
-            wall_per_run * 1e3,
-            sim_time / wall_per_run
+            "  serve speedup batched vs inline ({label}): {:.2}x",
+            r_inline.median_s / r_batch.median_s
         );
+        println!(
+            "  realtime ratio ({label}): sim {:.1} µs of 0.5 V silicon in {:.1} ms wall → {:.2}x realtime (batched: {:.2}x)\n",
+            sim_time * 1e6,
+            r_inline.median_s * 1e3,
+            sim_time / r_inline.median_s,
+            sim_time / r_batch.median_s
+        );
+        suite.push(&r_inline);
+        suite.push_speedup(&r_batch, &r_inline);
+    }
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match suite.write_json(&path) {
+        Ok(_) => println!("wrote perf ledger: {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

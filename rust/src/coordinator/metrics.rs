@@ -29,6 +29,22 @@ impl ServingMetrics {
         self.sim_time_s += sim_us * 1e-6;
     }
 
+    /// Roll up the metrics of another, independent serving run (e.g.
+    /// per-gesture pipelines benched separately). Counts and energies
+    /// are sums; the latency histograms concatenate their sample sets,
+    /// so percentiles over the merged set do not depend on merge order.
+    /// (`run_batched` itself needs no merge: it records its frames
+    /// sequentially into one `ServingMetrics`.)
+    pub fn merge(&mut self, other: &ServingMetrics) {
+        self.sim_latency_us.absorb(&other.sim_latency_us);
+        self.wall_latency_us.absorb(&other.wall_latency_us);
+        self.frames += other.frames;
+        self.labels_emitted += other.labels_emitted;
+        self.core_energy_j += other.core_energy_j;
+        self.soc_energy_j += other.soc_energy_j;
+        self.sim_time_s += other.sim_time_s;
+    }
+
     /// Simulated inferences per second (sustained).
     pub fn sim_inf_per_s(&self) -> f64 {
         if self.sim_time_s == 0.0 {
@@ -69,5 +85,29 @@ mod tests {
         assert!((m.sim_inf_per_s() - 10_000.0).abs() < 1.0);
         assert!((m.core_energy_j - 1e-5).abs() < 1e-12);
         assert!(m.summary().contains("frames 10"));
+    }
+
+    #[test]
+    fn merge_is_shard_order_independent() {
+        let mut shard_a = ServingMetrics::default();
+        let mut shard_b = ServingMetrics::default();
+        for i in 0..5 {
+            shard_a.record_frame(100.0 + i as f64, 5.0, 1e-6);
+            shard_b.record_frame(200.0 + i as f64, 7.0, 2e-6);
+        }
+        let mut ab = ServingMetrics::default();
+        ab.merge(&shard_a);
+        ab.merge(&shard_b);
+        let mut ba = ServingMetrics::default();
+        ba.merge(&shard_b);
+        ba.merge(&shard_a);
+        assert_eq!(ab.frames, 10);
+        assert_eq!(ab.frames, ba.frames);
+        assert_eq!(ab.core_energy_j.to_bits(), ba.core_energy_j.to_bits());
+        assert_eq!(
+            ab.sim_latency_us.quantile(0.5).to_bits(),
+            ba.sim_latency_us.quantile(0.5).to_bits()
+        );
+        assert_eq!(ab.sim_latency_us.quantile(1.0), 204.0);
     }
 }

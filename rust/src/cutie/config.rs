@@ -16,6 +16,12 @@ pub struct CutieConfig {
     pub weight_banks: usize,
     /// µDMA bus width in bits (frame ingress).
     pub dma_bits: usize,
+    /// Host-side cap on row-parallel datapath sharding (simulator knob,
+    /// not an architectural parameter; counters are sharding-invariant).
+    /// The batched serving engine pins its per-frame workers to 1 so
+    /// frame-level parallelism is not oversubscribed by layer-level
+    /// parallelism.
+    pub max_threads: usize,
 }
 
 impl Default for CutieConfig {
@@ -27,6 +33,7 @@ impl Default for CutieConfig {
             kernel: 3,
             weight_banks: 9,
             dma_bits: 32,
+            max_threads: usize::MAX,
         }
     }
 }

@@ -1,9 +1,20 @@
 //! Per-layer cycle loop: the completely unrolled datapath. One output
-//! pixel position per cycle; all active OCUs consume the same full
-//! 3×3×C_in window from the linebuffer (input-stationary), accumulate in
-//! one pipeline stage, threshold, optionally pool, and write back.
+//! pixel position per cycle; all active OCUs consume the same 3×3×C_in
+//! window from the linebuffer, accumulate in one pipeline stage,
+//! threshold, optionally pool, and write back.
 //!
-//! This is the simulator's hot path (see EXPERIMENTS.md §Perf).
+//! This is the simulator's hot path (see EXPERIMENTS.md §Perf). Since
+//! perf pass iteration 7 the software loop is **column-stationary**:
+//! adjacent output windows share two of their three columns, so instead
+//! of re-evaluating the full 3×3 window per output pixel (9·OCUs packed
+//! dots), each *input* column is packed once into a dense
+//! [`TritCol`] vector and fused-dotted against the three kernel-column
+//! vectors (3·OCUs fused dots); every output pixel is then the sum of
+//! three cached column partials. Bit-exact by construction: both the
+//! accumulators and the popcount-based toggle statistics are additive
+//! over partial products, so every counter matches the window-stationary
+//! loop — which is retained below ([`run_prepared_window`]) as the
+//! equivalence-test reference and A/B benchmark baseline.
 
 use anyhow::{ensure, Result};
 
@@ -14,7 +25,7 @@ use super::stats::LayerStats;
 use super::SimMode;
 use crate::network::{Layer, LayerKind};
 use crate::tensor::{IntTensor, TritTensor};
-use crate::trit::PackedVec;
+use crate::trit::{ternarize, PackedVec, TritCol};
 
 pub struct LayerResult {
     pub output: TritTensor,
@@ -24,7 +35,8 @@ pub struct LayerResult {
 /// A layer pre-flattened for the datapath: contiguous position-major
 /// packed kernels + threshold arrays (perf pass iteration 5 — built once
 /// per layer and cached by the scheduler across frames instead of being
-/// re-packed on every inference).
+/// re-packed on every inference), plus the column-major fused kernel
+/// vectors the column-stationary loop consumes (iteration 7).
 pub struct PreparedLayer {
     pub name: String,
     pub kind: LayerKind,
@@ -33,7 +45,15 @@ pub struct PreparedLayer {
     pub k: usize,
     pub pool: bool,
     pub global_pool: bool,
+    /// Position-major kernels: `weights_flat[kk * out_ch + co]` (window
+    /// loop operand).
     weights_flat: Vec<PackedVec>,
+    /// Column-major fused kernels: `wcols[kc * out_ch + co]` packs the
+    /// three kernel rows of column kc into one dense [`TritCol`]
+    /// (column loop operand; built for 3×3 kernels only).
+    wcols: Vec<TritCol>,
+    /// Dense words per column vector for this layer's C_in.
+    col_words: usize,
     lo_flat: Vec<i32>,
     hi_flat: Vec<i32>,
 }
@@ -50,6 +70,18 @@ impl PreparedLayer {
                 weights_flat[kk * active + co] = ocu.weights[kk];
             }
         }
+        let (mut wcols, mut col_words) = (Vec::new(), 0);
+        if k == 3 {
+            col_words = TritCol::words(layer.in_ch);
+            wcols = vec![TritCol::ZERO; 3 * active];
+            for (co, ocu) in ocus.iter().enumerate() {
+                for kc in 0..3 {
+                    let rows =
+                        [ocu.weights[kc], ocu.weights[3 + kc], ocu.weights[6 + kc]];
+                    wcols[kc * active + co] = TritCol::pack_rows(&rows, layer.in_ch);
+                }
+            }
+        }
         PreparedLayer {
             name: layer.name.clone(),
             kind: layer.kind,
@@ -61,6 +93,8 @@ impl PreparedLayer {
             lo_flat: ocus.iter().map(|o| o.lo).collect(),
             hi_flat: ocus.iter().map(|o| o.hi).collect(),
             weights_flat,
+            wcols,
+            col_words,
         }
     }
 }
@@ -79,54 +113,200 @@ pub fn run_conv_layer(
     run_prepared(&PreparedLayer::new(layer), input, cfg, mode)
 }
 
-/// Run a prepared layer. Weight-load cycles are charged by the scheduler
-/// (it owns the weight memory); this accounts for everything downstream
-/// of the weight buffers.
-pub fn run_prepared(
+fn check_geometry(
     prep: &PreparedLayer,
     input: &TritTensor,
     cfg: &CutieConfig,
-    mode: SimMode,
-) -> Result<LayerResult> {
+) -> Result<(usize, usize, usize)> {
     ensure!(input.dims.len() == 3, "conv input must be (H, W, C)");
     let (h, w, cin) = (input.dims[0], input.dims[1], input.dims[2]);
     ensure!(cin == prep.in_ch, "{}: input channels {cin} != {}", prep.name, prep.in_ch);
     ensure!(cin <= cfg.channels, "{}: {cin} input channels exceed the {} datapath", prep.name, cfg.channels);
     ensure!(prep.out_ch <= cfg.channels, "{}: {} output channels exceed {} OCUs", prep.name, prep.out_ch, cfg.channels);
     ensure!(h <= cfg.max_hw && w <= cfg.max_hw, "{}: {h}×{w} exceeds {}²", prep.name, cfg.max_hw);
+    ensure!(prep.k == cfg.kernel, "{}: kernel {} != datapath {}", prep.name, prep.k, cfg.kernel);
+    Ok((h, w, cin))
+}
 
-    // Mapped TCN weights arrive pre-projected from the scheduler as 3×3
-    // kernels; plain conv layers carry their own.
+/// Row-parallel compute (perf pass iteration 3): output rows are
+/// independent, so they are sharded over threads; each shard drives its
+/// own linebuffer. Counters stay exact: toggles are summed across shards,
+/// and in the stall-free design every input pixel is fetched exactly once
+/// (h·w reads) regardless of sharding. Iteration 7 also bails to a single
+/// thread on small maps (e.g. the 25×1 mapped-TCN wraps) where the
+/// spawn/join cost dwarfs the per-shard work.
+fn shard_threads(cfg: &CutieConfig, h: usize, w: usize, active: usize, cin: usize) -> usize {
+    if cfg.max_threads <= 1 || h * w < 256 || h * w * active * cin < 64 * 64 * 16 {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cfg.max_threads)
+        .min(h)
+}
+
+fn base_stats(prep: &PreparedLayer, cfg: &CutieConfig, h: usize, w: usize, cin: usize) -> LayerStats {
+    let mut stats = LayerStats {
+        name: prep.name.clone(),
+        active_ocus: prep.out_ch,
+        fanin: prep.k * prep.k * cin,
+        ..Default::default()
+    };
+    stats.lb_fill_cycles = LineBuffer::new(prep.k, w).fill_cycles(w);
+    stats.compute_cycles = (h * w) as u64;
+    stats.drain_cycles = 1; // single OCU pipeline stage (§3, Fig. 2)
+    stats.lb_pushes = (h * w) as u64; // every input pixel enters the FFs once
+    stats.act_reads = (h * w) as u64; // one word per input pixel
+    stats.hw_ops = cfg.hw_ops_per_cycle(prep.out_ch) * stats.compute_cycles;
+    stats.alg_macs = (h * w * stats.fanin * prep.out_ch) as u64;
+    stats
+}
+
+/// On-the-fly pooling in the OCUs (§3): decimates write-back traffic,
+/// costs no extra cycles. Finishes the activity ledger shared by both
+/// loop organisations (any divergence here would break their bit-exact
+/// counter equivalence, so it is factored out).
+fn finalize_conv(
+    prep: &PreparedLayer,
+    cfg: &CutieConfig,
+    out: TritTensor,
+    mac_toggles: u64,
+    mut stats: LayerStats,
+) -> LayerResult {
+    stats.mac_toggles = mac_toggles;
+    // Clocked multiplier positions in active OCUs span the full C-channel
+    // datapath even when C_in < C (inputs are zero-padded wires).
+    let clocked =
+        (prep.out_ch * cfg.channels * prep.k * prep.k) as u64 * stats.compute_cycles;
+    stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
+
+    let mut result = out;
+    if prep.pool {
+        result = crate::network::reference::maxpool2x2(&result);
+    }
+    if prep.global_pool {
+        result = crate::network::reference::global_maxpool(&result);
+    }
+    stats.act_writes = if result.dims.len() == 3 {
+        (result.dims[0] * result.dims[1]) as u64
+    } else {
+        1
+    };
+    LayerResult { output: result, stats }
+}
+
+/// Run a prepared layer through the **column-stationary** loop (perf pass
+/// iteration 7, the default). Weight-load cycles are charged by the
+/// scheduler (it owns the weight memory); this accounts for everything
+/// downstream of the weight buffers.
+pub fn run_prepared(
+    prep: &PreparedLayer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<LayerResult> {
+    let (h, w, cin) = check_geometry(prep, input, cfg)?;
+    if prep.k != 3 {
+        // the fused column path is hardwired to the 3×3 RTL geometry;
+        // non-3×3 configs keep the generic window-stationary loop
+        return run_prepared_window(prep, input, cfg, mode);
+    }
     let k = prep.k;
-    ensure!(k == cfg.kernel, "{}: kernel {k} != datapath {}", prep.name, cfg.kernel);
+    let active = prep.out_ch;
+    let col_words = prep.col_words;
+    let wcols = &prep.wcols;
+    let lo_flat = &prep.lo_flat;
+    let hi_flat = &prep.hi_flat;
+    let stats = base_stats(prep, cfg, h, w, cin);
+    let _ = mode; // both modes share the loop: toggle counting is free now
+
+    let mut out = TritTensor::zeros(&[h, w, active]);
+    let threads = shard_threads(cfg, h, w, active, cin);
+    let rows_per = h.div_ceil(threads);
+    let mut row_chunks: Vec<&mut [i8]> = out.data.chunks_mut(rows_per * w * active).collect();
+    let toggle_counts: Vec<u64> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, chunk) in row_chunks.drain(..).enumerate() {
+            let handle = scope.spawn(move || {
+                let y0 = t * rows_per;
+                let y1 = (y0 + rows_per).min(h);
+                let mut lb = LineBuffer::new(k, w);
+                let mut col = [PackedVec::ZERO; 3];
+                let mut acc_row = vec![0i32; w * active];
+                let mut toggles = 0u64;
+                for y in y0..y1 {
+                    lb.advance_to(y, input);
+                    acc_row.fill(0);
+                    for cx in 0..w {
+                        // pack the 3-row input column once; it is reused
+                        // by all three kernel columns × all OCUs
+                        lb.col(y, cx, h, &mut col);
+                        let xcol = TritCol::pack_rows(&col, cin);
+                        // whole-zero columns (common on sparse DVS maps)
+                        // contribute neither acc nor toggles — bit-exact
+                        if xcol.is_zero(col_words) {
+                            continue;
+                        }
+                        for kc in 0..3 {
+                            // input column cx feeds kernel column kc of
+                            // the output pixel at ox = cx - kc + 1
+                            let ox = cx as isize + 1 - kc as isize;
+                            if ox < 0 || ox >= w as isize {
+                                continue;
+                            }
+                            let obase = ox as usize * active;
+                            let wrow = &wcols[kc * active..(kc + 1) * active];
+                            let accs = &mut acc_row[obase..obase + active];
+                            for (a, wv) in accs.iter_mut().zip(wrow) {
+                                let (d, tog) = wv.dot(&xcol, col_words);
+                                *a += d;
+                                toggles += tog as u64;
+                            }
+                        }
+                    }
+                    let rbase = (y - y0) * w * active;
+                    for x in 0..w {
+                        let base = x * active;
+                        for co in 0..active {
+                            chunk[rbase + base + co] =
+                                ternarize(acc_row[base + co], lo_flat[co], hi_flat[co]);
+                        }
+                    }
+                }
+                toggles
+            });
+            handles.push(handle);
+        }
+        handles.into_iter().map(|h| h.join().expect("datapath shard")).collect()
+    });
+
+    Ok(finalize_conv(prep, cfg, out, toggle_counts.iter().sum(), stats))
+}
+
+/// The pre-iteration-7 **window-stationary** loop: re-evaluates the full
+/// 3×3 window per output pixel (9·OCUs packed dots). Retained as the
+/// bit-exactness reference for the column-stationary loop (see
+/// `tests/column_reuse.rs`) and as the A/B baseline in the hotpath bench.
+pub fn run_prepared_window(
+    prep: &PreparedLayer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<LayerResult> {
+    let (h, w, cin) = check_geometry(prep, input, cfg)?;
+    let k = prep.k;
     let k2 = k * k;
     let active = prep.out_ch;
     let weights_flat = &prep.weights_flat;
     let lo_flat = &prep.lo_flat;
     let hi_flat = &prep.hi_flat;
-
-    let mut stats = LayerStats {
-        name: prep.name.clone(),
-        active_ocus: active,
-        fanin: k * k * cin,
-        ..Default::default()
-    };
-
-    stats.lb_fill_cycles = LineBuffer::new(k, w).fill_cycles(w);
-
-    // Row-parallel compute (perf pass iteration 3): output rows are
-    // independent, so they are sharded over threads; each shard drives its
-    // own linebuffer. Counters stay exact: toggles are summed across
-    // shards, and in the stall-free design every input pixel is fetched
-    // exactly once (h·w reads) regardless of sharding.
-    let mut out = TritTensor::zeros(&[h, w, active]);
-    let threads = if h * w * active * cin >= 64 * 64 * 16 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(h)
-    } else {
-        1
-    };
+    let stats = base_stats(prep, cfg, h, w, cin);
     let narrow = cin <= 64;
     let _ = mode; // both modes share the loop: toggle counting is free now
+
+    let mut out = TritTensor::zeros(&[h, w, active]);
+    let threads = shard_threads(cfg, h, w, active, cin);
     let rows_per = h.div_ceil(threads);
     let mut row_chunks: Vec<&mut [i8]> = out.data.chunks_mut(rows_per * w * active).collect();
     let toggle_counts: Vec<u64> = std::thread::scope(|scope| {
@@ -146,17 +326,15 @@ pub fn run_prepared(
                         acc.fill(0);
                         // position-major accumulation: the OCU dimension is
                         // the contiguous inner loop; zero window positions
-                        // (common on sparse DVS maps) are skipped outright
-                        // — bit-exact, they contribute no acc and no
-                        // toggles.
+                        // are skipped outright — bit-exact, they contribute
+                        // no acc and no toggles.
                         for (kk, xw) in window.iter().enumerate() {
                             if xw.is_zero() {
                                 continue;
                             }
                             let wrow = &weights_flat[kk * active..(kk + 1) * active];
                             // narrow layers (C_in <= 64) use the
-                            // single-word dot; toggle counting is free in
-                            // this encoding, so both modes share it
+                            // single-word dot
                             if narrow {
                                 for (a, wv) in acc.iter_mut().zip(wrow) {
                                     let (d, tog) = wv.dot_narrow(xw);
@@ -173,8 +351,7 @@ pub fn run_prepared(
                         }
                         let obase = ((y - y0) * w + x) * active;
                         for co in 0..active {
-                            chunk[obase + co] =
-                                crate::trit::ternarize(acc[co], lo_flat[co], hi_flat[co]);
+                            chunk[obase + co] = ternarize(acc[co], lo_flat[co], hi_flat[co]);
                         }
                     }
                 }
@@ -184,52 +361,67 @@ pub fn run_prepared(
         }
         handles.into_iter().map(|h| h.join().expect("datapath shard")).collect()
     });
-    stats.mac_toggles = toggle_counts.iter().sum();
-    stats.compute_cycles = (h * w) as u64;
-    stats.drain_cycles = 1; // single OCU pipeline stage (§3, Fig. 2)
-    stats.lb_pushes = (h * w) as u64; // every input pixel enters the FFs once
-    stats.act_reads = (h * w) as u64; // one word per input pixel
-    stats.hw_ops = cfg.hw_ops_per_cycle(active) * stats.compute_cycles;
-    stats.alg_macs = (h * w * stats.fanin * active) as u64;
-    // Clocked multiplier positions in active OCUs span the full C-channel
-    // datapath even when C_in < C (inputs are zero-padded wires).
-    let clocked = (active * cfg.channels * k * k) as u64 * stats.compute_cycles;
-    stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
 
-    // On-the-fly pooling in the OCUs (§3): decimates write-back traffic,
-    // costs no extra cycles.
-    let mut result = out;
-    if prep.pool {
-        result = crate::network::reference::maxpool2x2(&result);
-    }
-    if prep.global_pool {
-        result = crate::network::reference::global_maxpool(&result);
-    }
-    stats.act_writes = if result.dims.len() == 3 {
-        (result.dims[0] * result.dims[1]) as u64
-    } else {
-        1
-    };
-
-    Ok(LayerResult { output: result, stats })
+    Ok(finalize_conv(prep, cfg, out, toggle_counts.iter().sum(), stats))
 }
 
-/// Classifier layer: the feature vector streams through the adder trees
-/// C-channels per cycle; `classes` OCUs stay active, the rest are gated.
-/// Raw accumulators go out over the config port (no ternarization).
-pub fn run_dense_layer(
-    layer: &Layer,
+/// Classifier weights packed once and cached by the scheduler instead of
+/// being re-packed per chunk per output per frame (perf pass iteration 7
+/// satellite): `weights[chunk * classes + co]` holds the chunk's channel
+/// slice for output class co.
+pub struct PreparedDense {
+    pub name: String,
+    pub in_ch: usize,
+    pub classes: usize,
+    /// Chunk width the weights were packed for (= the datapath's channel
+    /// count at preparation time).
+    chunk_channels: usize,
+    weights: Vec<PackedVec>,
+}
+
+impl PreparedDense {
+    pub fn new(layer: &Layer, chunk_channels: usize) -> Self {
+        debug_assert_eq!(layer.kind, LayerKind::Dense);
+        let f = layer.in_ch;
+        let classes = layer.out_ch;
+        let chunks = f.div_ceil(chunk_channels);
+        let mut weights = vec![PackedVec::ZERO; chunks * classes];
+        for chunk in 0..chunks {
+            let lo_i = chunk * chunk_channels;
+            let hi_i = ((chunk + 1) * chunk_channels).min(f);
+            for co in 0..classes {
+                let trits: Vec<i8> =
+                    (lo_i..hi_i).map(|i| layer.weights.data[i * classes + co]).collect();
+                weights[chunk * classes + co] = PackedVec::pack(&trits);
+            }
+        }
+        PreparedDense { name: layer.name.clone(), in_ch: f, classes, chunk_channels, weights }
+    }
+}
+
+/// Classifier layer on a prepared weight set: the feature vector streams
+/// through the adder trees C-channels per cycle; `classes` OCUs stay
+/// active, the rest are gated. Raw accumulators go out over the config
+/// port (no ternarization).
+pub fn run_dense_prepared(
+    prep: &PreparedDense,
     input: &TritTensor,
     cfg: &CutieConfig,
     mode: SimMode,
 ) -> Result<(IntTensor, LayerStats)> {
-    ensure!(layer.kind == LayerKind::Dense);
-    let f = layer.in_ch;
-    ensure!(input.numel() == f, "{}: classifier input {} != {}", layer.name, input.numel(), f);
-    let classes = layer.out_ch;
+    let f = prep.in_ch;
+    ensure!(input.numel() == f, "{}: classifier input {} != {}", prep.name, input.numel(), f);
+    ensure!(
+        prep.chunk_channels == cfg.channels,
+        "{}: weights packed for a {}-channel datapath, config has {}",
+        prep.name,
+        prep.chunk_channels,
+        cfg.channels
+    );
+    let classes = prep.classes;
 
     let mut stats = LayerStats {
-        name: layer.name.clone(),
+        name: prep.name.clone(),
         active_ocus: classes,
         fanin: f,
         ..Default::default()
@@ -241,18 +433,21 @@ pub fn run_dense_layer(
         let lo_i = chunk * cfg.channels;
         let hi_i = ((chunk + 1) * cfg.channels).min(f);
         let x = PackedVec::pack(&input.data[lo_i..hi_i]);
-        for co in 0..classes {
-            // weight slice for this chunk/output
-            let trits: Vec<i8> =
-                (lo_i..hi_i).map(|i| layer.weights.data[i * classes + co]).collect();
-            let wv = PackedVec::pack(&trits);
-            match mode {
-                SimMode::Accurate => {
+        // all-zero feature chunks contribute neither logits nor toggles
+        if x.is_zero() {
+            continue;
+        }
+        let wrow = &prep.weights[chunk * classes..(chunk + 1) * classes];
+        match mode {
+            SimMode::Accurate => {
+                for (co, wv) in wrow.iter().enumerate() {
                     let (acc, toggles) = wv.dot(&x);
                     logits.data[co] += acc;
                     stats.mac_toggles += toggles as u64;
                 }
-                SimMode::Fast => {
+            }
+            SimMode::Fast => {
+                for (co, wv) in wrow.iter().enumerate() {
                     logits.data[co] += wv.dot_fast(&x);
                 }
             }
@@ -267,6 +462,19 @@ pub fn run_dense_layer(
     let clocked = (classes * cfg.channels * cfg.kernel * cfg.kernel) as u64 * stats.compute_cycles;
     stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
     Ok((logits, stats))
+}
+
+/// Stateless classifier wrapper: packs the weights and runs. The
+/// scheduler caches [`PreparedDense`] and calls [`run_dense_prepared`]
+/// directly.
+pub fn run_dense_layer(
+    layer: &Layer,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<(IntTensor, LayerStats)> {
+    ensure!(layer.kind == LayerKind::Dense);
+    run_dense_prepared(&PreparedDense::new(layer, cfg.channels), input, cfg, mode)
 }
 
 #[cfg(test)]
@@ -301,6 +509,26 @@ mod tests {
             // Fast mode reports it too
             assert_eq!(fast.stats.mac_toggles, got.stats.mac_toggles);
         }
+    }
+
+    #[test]
+    fn column_loop_matches_window_loop_smoke() {
+        // The exhaustive sweep lives in tests/column_reuse.rs; this is
+        // the in-module smoke check.
+        let mut rng = Rng::new(76);
+        let cfg = CutieConfig::kraken();
+        let net = cifar9_random(24, 110, 0.33);
+        let layer = &net.layers[2];
+        let prep = PreparedLayer::new(layer);
+        let input = TritTensor::random(&[10, 7, layer.in_ch], &mut rng, 0.5);
+        let col = run_prepared(&prep, &input, &cfg, SimMode::Accurate).unwrap();
+        let win = run_prepared_window(&prep, &input, &cfg, SimMode::Accurate).unwrap();
+        assert_eq!(col.output, win.output);
+        assert_eq!(col.stats.mac_toggles, win.stats.mac_toggles);
+        assert_eq!(col.stats.mac_idle, win.stats.mac_idle);
+        assert_eq!(col.stats.compute_cycles, win.stats.compute_cycles);
+        assert_eq!(col.stats.act_reads, win.stats.act_reads);
+        assert_eq!(col.stats.act_writes, win.stats.act_writes);
     }
 
     #[test]
@@ -361,6 +589,30 @@ mod tests {
         let want = reference::run_dense_layer(fc, &x);
         assert_eq!(logits, want);
         assert_eq!(stats.compute_cycles, (fc.in_ch as u64).div_ceil(96));
+    }
+
+    #[test]
+    fn dense_prepared_matches_stateless_wrapper() {
+        let net = cifar9_random(32, 14, 0.4);
+        let cfg = CutieConfig::kraken();
+        let mut rng = Rng::new(77);
+        let fc = net.layers.last().unwrap();
+        let prep = PreparedDense::new(fc, cfg.channels);
+        for case in 0..6 {
+            let zf = [0.1, 0.5, 0.9][case % 3];
+            let x = TritTensor::random(&[fc.in_ch], &mut rng, zf);
+            let (a, sa) = run_dense_layer(fc, &x, &cfg, SimMode::Accurate).unwrap();
+            let (b, sb) = run_dense_prepared(&prep, &x, &cfg, SimMode::Accurate).unwrap();
+            assert_eq!(a, b, "case {case}");
+            assert_eq!(sa.mac_toggles, sb.mac_toggles);
+            assert_eq!(sa.compute_cycles, sb.compute_cycles);
+            let (c, _) = run_dense_prepared(&prep, &x, &cfg, SimMode::Fast).unwrap();
+            assert_eq!(a, c);
+        }
+        // wrong-config guard
+        let narrow_cfg = CutieConfig { channels: 48, ..CutieConfig::kraken() };
+        let x = TritTensor::random(&[fc.in_ch], &mut rng, 0.3);
+        assert!(run_dense_prepared(&prep, &x, &narrow_cfg, SimMode::Fast).is_err());
     }
 
     #[test]

@@ -85,6 +85,22 @@ impl LineBuffer {
         }
     }
 
+    /// Extract the K-row input column at x for output row y (input rows
+    /// y-pad..y+pad, zero-padded outside [0, h)). `out` must have length
+    /// K. This is the column-stationary datapath's access pattern: one
+    /// fresh column per output pixel instead of a full K×K window.
+    pub fn col(&self, y: usize, x: usize, h: usize, out: &mut [PackedVec]) {
+        let pad = (self.k / 2) as isize;
+        for (ky, slot) in out.iter_mut().enumerate() {
+            let sy = y as isize + ky as isize - pad;
+            *slot = if sy < 0 || sy >= h as isize {
+                PackedVec::ZERO
+            } else {
+                self.rows[(sy - self.base_row) as usize][x]
+            };
+        }
+    }
+
     /// Cycles to prime the buffer before the first window: (K-1) rows plus
     /// (K-1) pixels of the next row, matching the RTL fill behaviour.
     pub fn fill_cycles(&self, input_w: usize) -> u64 {
@@ -122,6 +138,32 @@ mod tests {
                                 assert_eq!(*got, img.pack_pixel(sy as usize, sx as usize));
                             }
                         }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cols_match_window_columns() {
+        let mut rng = Rng::new(24);
+        for _ in 0..10 {
+            let h = 3 + rng.below(8);
+            let w = 3 + rng.below(8);
+            let c = 1 + rng.below(32);
+            let img = TritTensor::random(&[h, w, c], &mut rng, 0.4);
+            let mut lb = LineBuffer::new(3, w);
+            let mut window = vec![PackedVec::ZERO; 9];
+            let mut col = [PackedVec::ZERO; 3];
+            for y in 0..h {
+                lb.advance_to(y, &img);
+                for x in 0..w {
+                    lb.window(y, x, h, &mut window);
+                    lb.col(y, x, h, &mut col);
+                    // col(y, x) is the middle column (kx = 1) of the
+                    // window centred at (y, x)
+                    for ky in 0..3 {
+                        assert_eq!(col[ky], window[ky * 3 + 1], "y {y} x {x} ky {ky}");
                     }
                 }
             }

@@ -13,7 +13,7 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 use super::actmem::ActivationMemory;
-use super::datapath::{run_dense_layer, run_prepared, PreparedLayer};
+use super::datapath::{run_dense_prepared, run_prepared, PreparedDense, PreparedLayer};
 use super::stats::{LayerStats, RunStats};
 use super::tcnmem::TcnMemory;
 use super::weightmem::{WeightAccess, WeightMemory};
@@ -43,6 +43,9 @@ pub struct Scheduler {
     /// the software analogue of the weights staying resident in the OCU
     /// buffers (perf pass iteration 5; see EXPERIMENTS.md §Perf).
     prepared: HashMap<String, PreparedLayer>,
+    /// Packed classifier weights, cached the same way (iteration 7
+    /// satellite — previously re-packed per chunk per output per frame).
+    prepared_dense: HashMap<String, PreparedDense>,
 }
 
 impl Scheduler {
@@ -58,12 +61,19 @@ impl Scheduler {
             tcn_mem,
             actmem,
             prepared: HashMap::new(),
+            prepared_dense: HashMap::new(),
         }
     }
 
     pub fn with_tcn_strategy(mut self, s: TcnStrategy) -> Self {
         self.tcn_strategy = s;
         self
+    }
+
+    /// Number of cached prepared layers: (conv/TCN kernels, classifiers).
+    /// Observability hook for the caching tests.
+    pub fn cached_layers(&self) -> (usize, usize) {
+        (self.prepared.len(), self.prepared_dense.len())
     }
 
     /// Pre-load every layer's weights (boot). Returns boot cycles; after
@@ -189,7 +199,12 @@ impl Scheduler {
                     let t_len = seq.dims[0];
                     let c = seq.dims[1];
                     let last = TritTensor::from_vec(&[c], seq.data[(t_len - 1) * c..].to_vec());
-                    let (logits, stats) = run_dense_layer(layer, &last, &self.cfg, self.mode)?;
+                    let channels = self.cfg.channels;
+                    let prep = self
+                        .prepared_dense
+                        .entry(layer.name.clone())
+                        .or_insert_with(|| PreparedDense::new(layer, channels));
+                    let (logits, stats) = run_dense_prepared(prep, &last, &self.cfg, self.mode)?;
                     run.layers.push(stats);
                     return Ok((logits, run));
                 }
@@ -327,7 +342,12 @@ impl Scheduler {
             run.merge(r);
             let flat = TritTensor::from_vec(&[feat.numel()], feat.data.clone());
             let dense = net.layers.last().unwrap();
-            let (logits, stats) = run_dense_layer(dense, &flat, &self.cfg, self.mode)?;
+            let channels = self.cfg.channels;
+            let prep = self
+                .prepared_dense
+                .entry(dense.name.clone())
+                .or_insert_with(|| PreparedDense::new(dense, channels));
+            let (logits, stats) = run_dense_prepared(prep, &flat, &self.cfg, self.mode)?;
             run.layers.push(stats);
             Ok((logits, run))
         }
@@ -445,6 +465,35 @@ mod tests {
         }
         assert!(sched.tcn_mem.is_full());
         assert_eq!(sched.tcn_mem.len(), 24);
+    }
+
+    #[test]
+    fn dense_weights_packed_once_and_cached() {
+        let net = cifar9_random(16, 93, 0.33);
+        let mut rng = Rng::new(94);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        assert_eq!(sched.cached_layers(), (0, 0));
+        let (a, _) = sched.run_full(&net, &input).unwrap();
+        // 8 conv kernels + 1 packed classifier now resident
+        assert_eq!(sched.cached_layers(), (8, 1));
+        let (b, _) = sched.run_full(&net, &input).unwrap();
+        assert_eq!(sched.cached_layers(), (8, 1), "steady state must not re-prepare");
+        assert_eq!(a, b);
+        assert_eq!(a, reference::forward(&net, &input).unwrap());
+    }
+
+    #[test]
+    fn hybrid_caches_mapped_and_dense_layers() {
+        let net = dvs_hybrid_random(16, 95, 0.5);
+        let mut rng = Rng::new(96);
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        let f = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        sched.serve_frame(&net, &f).unwrap();
+        // 5 conv + 4 mapped-TCN kernels, 1 packed classifier
+        assert_eq!(sched.cached_layers(), (9, 1));
+        sched.serve_frame(&net, &f).unwrap();
+        assert_eq!(sched.cached_layers(), (9, 1));
     }
 
     #[test]

@@ -28,7 +28,7 @@ fn main() {
 
 const USAGE: &str = "usage: tcn-cutie <info|run|serve|golden|report> [options]
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
-  serve  --frames 32 --voltage 0.5 [--threaded] [--gesture 0..11]
+  serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>";
 
@@ -112,13 +112,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let threaded = args.flag("threaded");
+    // --batch N shards the CNN front-end across N workers (0 = one per
+    // core); results are byte-identical to inline serving.
+    let batch = args.opt("batch").map(|s| s.parse::<usize>().expect("bad int option"));
+    if threaded && batch.is_some() {
+        bail!("--threaded and --batch are mutually exclusive");
+    }
     let pipe = Pipeline::new(net, cfg);
-    let mut r = if threaded { pipe.run_threaded()? } else { pipe.run_inline()? };
-    println!(
-        "serving ({}): {}",
-        if threaded { "threaded" } else { "inline" },
-        r.metrics.summary()
-    );
+    let (label, mut r) = if let Some(b) = batch {
+        (format!("batched x{b}"), pipe.run_batched(b)?)
+    } else if threaded {
+        ("threaded".to_string(), pipe.run_threaded()?)
+    } else {
+        ("inline".to_string(), pipe.run_inline()?)
+    };
+    println!("serving ({label}): {}", r.metrics.summary());
     println!(
         "  SoC energy {:.2} µJ  avg power {:.2} mW  FC wakeups {}",
         r.soc_energy_j * 1e6,

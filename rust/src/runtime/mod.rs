@@ -1,59 +1,56 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the XLA CPU client via the
-//! `xla` crate. Python never runs here — the artifacts are self-contained.
+//! PJRT golden-model runtime interface.
 //!
-//! In this reproduction the runtime plays the role of the **golden model**
-//! in a classic hardware/software co-simulation flow: the cycle-level
-//! CUTIE simulator's outputs are checked against the XLA execution of the
-//! very same network (lowered from the same JAX source the Pallas kernels
-//! live in). See `golden` and the `golden_pjrt` integration test.
+//! In the full environment this loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the XLA CPU client (the
+//! `xla` PJRT bindings), playing the golden-model role of a classic
+//! hardware/software co-simulation flow: the cycle-level CUTIE
+//! simulator's outputs are checked against the XLA execution of the very
+//! same network. See `golden` and the `golden_pjrt` integration test.
 //!
-//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! The build environment for this repository is fully offline (crates.io
+//! and the `xla_extension` binary distribution are unreachable), so the
+//! PJRT client is **stubbed**: the API surface is kept intact — the
+//! golden tests and examples gate on the presence of the AOT artifacts
+//! and skip cleanly when they are absent — but constructing a [`Runtime`]
+//! reports an explanatory error instead of linking XLA. Swapping the stub
+//! back for the real bindings only touches this file.
 
 pub mod golden;
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Result};
 
 use crate::tensor::TritTensor;
 
+/// Error text shared by every stubbed entry point.
+const OFFLINE_MSG: &str = "PJRT/XLA runtime unavailable in this offline build: \
+     the `xla` bindings and `xla_extension` runtime are not vendored. \
+     Golden co-simulation requires the full environment (see runtime/mod.rs)";
+
+/// Handle to a PJRT client (stub: carries only the platform label).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    platform: String,
 }
 
+/// A loaded + compiled HLO artifact (stub: never constructed).
 pub struct LoadedModel {
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU PJRT client. Always errors in the offline build.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        bail!("{OFFLINE_MSG}")
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 
     /// Load + compile one HLO-text artifact.
     pub fn load(&self, path: impl AsRef<Path>) -> Result<LoadedModel> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(LoadedModel {
-            name: path.file_stem().unwrap().to_string_lossy().into_owned(),
-            exe,
-        })
+        bail!("cannot load {}: {OFFLINE_MSG}", path.as_ref().display())
     }
 }
 
@@ -61,12 +58,8 @@ impl LoadedModel {
     /// Execute with one f32 input of shape `dims`; returns the flat f32
     /// output (artifacts are lowered with return_tuple=True and a single
     /// result).
-    pub fn run_f32(&self, input: &[f32], dims: &[usize]) -> Result<Vec<f32>> {
-        let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims_i64)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    pub fn run_f32(&self, _input: &[f32], _dims: &[usize]) -> Result<Vec<f32>> {
+        bail!("cannot execute '{}': {OFFLINE_MSG}", self.name)
     }
 
     /// Execute with a trit tensor (converted to f32 — the artifact ABI).
@@ -105,5 +98,11 @@ mod tests {
     fn to_trits_validates() {
         assert!(to_trits(&[1.0, 0.0, -1.0]).is_ok());
         assert!(to_trits(&[2.0]).is_err());
+    }
+
+    #[test]
+    fn offline_stub_reports_clearly() {
+        let err = Runtime::cpu().unwrap_err().to_string();
+        assert!(err.contains("offline"), "unexpected error text: {err}");
     }
 }

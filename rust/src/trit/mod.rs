@@ -143,6 +143,117 @@ impl PackedVec {
     }
 }
 
+/// Words in a dense 3-row column vector (3 × MAX_CHANNELS bits).
+pub const COL_WORDS: usize = 3 * MAX_CHANNELS / 64;
+
+/// OR the low `nbits` (≤ 128) of a two-word bitplane into `dst` starting
+/// at bit offset `shift`. The column-vector packing primitive (perf pass
+/// iteration 7, see EXPERIMENTS.md §Perf).
+#[inline]
+fn or_shifted(dst: &mut [u64; COL_WORDS], src: &[u64; WORDS], shift: usize, nbits: usize) {
+    let w = shift / 64;
+    let b = shift % 64;
+    let m0 = if nbits >= 64 { u64::MAX } else { (1u64 << nbits) - 1 };
+    let m1 = if nbits <= 64 {
+        0
+    } else if nbits >= 128 {
+        u64::MAX
+    } else {
+        (1u64 << (nbits - 64)) - 1
+    };
+    let s0 = src[0] & m0;
+    let s1 = src[1] & m1;
+    if b == 0 {
+        dst[w] |= s0;
+        if s1 != 0 {
+            dst[w + 1] |= s1;
+        }
+    } else {
+        dst[w] |= s0 << b;
+        dst[w + 1] |= (s0 >> (64 - b)) | (s1 << b);
+        if s1 != 0 {
+            dst[w + 2] |= s1 >> (64 - b);
+        }
+    }
+}
+
+/// A densely packed 3-row column of trit channel vectors — the operand of
+/// the fused column dot product the column-stationary datapath runs once
+/// per (input column, kernel column) instead of three separate
+/// per-position dots. Row r's channels occupy bits [r·C_in, (r+1)·C_in),
+/// so a C_in-channel column needs ⌈3·C_in/64⌉ dense words instead of the
+/// 3·⌈C_in/64⌉ a row-per-word layout costs (e.g. 5 vs 6 at C_in = 96,
+/// 1 vs 3 at C_in ≤ 21) — fewer popcounts for the same bit-exact result.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TritCol {
+    /// Bit i set ⇔ trit i == +1 (dense row-major layout).
+    pub pos: [u64; COL_WORDS],
+    /// Bit i set ⇔ trit i != 0.
+    pub mask: [u64; COL_WORDS],
+}
+
+impl TritCol {
+    pub const ZERO: TritCol = TritCol { pos: [0; COL_WORDS], mask: [0; COL_WORDS] };
+
+    /// Dense words a C_in-channel column occupies (≥ 1).
+    #[inline]
+    pub fn words(cin: usize) -> usize {
+        (3 * cin).div_ceil(64).max(1)
+    }
+
+    /// Pack three pixel words (kernel rows top→bottom) into one dense
+    /// column vector. Bits ≥ C_in per row must be zero in `rows`, which
+    /// always holds for vectors from [`PackedVec::pack`] /
+    /// `TritTensor::pack_pixel` over C_in channels.
+    #[inline]
+    pub fn pack_rows(rows: &[PackedVec; 3], cin: usize) -> TritCol {
+        let mut c = TritCol::ZERO;
+        for (r, row) in rows.iter().enumerate() {
+            or_shifted(&mut c.pos, &row.pos, r * cin, cin);
+            or_shifted(&mut c.mask, &row.mask, r * cin, cin);
+        }
+        c
+    }
+
+    /// Fused ternary column dot product + toggle count over the first
+    /// `nwords` dense words. Bit-exact equal to the sum of the three
+    /// per-row [`PackedVec::dot`]s: the dense layout only concatenates
+    /// disjoint bit ranges, and both acc and popcount are additive.
+    #[inline]
+    pub fn dot(&self, other: &TritCol, nwords: usize) -> (i32, u32) {
+        let mut acc = 0i32;
+        let mut toggles = 0u32;
+        for w in 0..nwords {
+            let nz = self.mask[w] & other.mask[w];
+            let diff = nz & (self.pos[w] ^ other.pos[w]);
+            let n = nz.count_ones();
+            acc += n as i32 - 2 * diff.count_ones() as i32;
+            toggles += n;
+        }
+        (acc, toggles)
+    }
+
+    /// True if every trit in the first `nwords` words is zero (whole-column
+    /// sparsity skip; contributes neither acc nor toggles, so bit-exact).
+    #[inline]
+    pub fn is_zero(&self, nwords: usize) -> bool {
+        self.mask[..nwords].iter().all(|&w| w == 0)
+    }
+
+    /// Read back row r's trit at channel ci (test/debug helper).
+    pub fn get(&self, r: usize, ci: usize, cin: usize) -> i8 {
+        let bit = r * cin + ci;
+        let (w, b) = (bit / 64, bit % 64);
+        if (self.mask[w] >> b) & 1 == 0 {
+            0
+        } else if (self.pos[w] >> b) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
 /// Scalar reference dot product (used by tests to validate the packed path).
 pub fn dot_scalar(a: &[i8], b: &[i8]) -> (i32, u32) {
     assert_eq!(a.len(), b.len());
@@ -262,6 +373,62 @@ mod tests {
     #[should_panic(expected = "non-trit")]
     fn pack_rejects_non_trits() {
         PackedVec::pack(&[0, 2]);
+    }
+
+    #[test]
+    fn tritcol_dot_matches_three_row_dots_property() {
+        // Seeded sweep across channel widths (incl. the 42/43 and 64
+        // word-boundary straddles) and sparsities: the fused column dot
+        // must equal the sum of three per-row packed dots, acc and
+        // toggles both.
+        let mut rng = Rng::new(91);
+        for case in 0..400 {
+            let cin = 1 + rng.below(MAX_CHANNELS);
+            let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+            let xr: Vec<Vec<i8>> = (0..3).map(|_| (0..cin).map(|_| rng.trit(zf)).collect()).collect();
+            let wr: Vec<Vec<i8>> = (0..3).map(|_| (0..cin).map(|_| rng.trit(zf)).collect()).collect();
+            let xp = [PackedVec::pack(&xr[0]), PackedVec::pack(&xr[1]), PackedVec::pack(&xr[2])];
+            let wp = [PackedVec::pack(&wr[0]), PackedVec::pack(&wr[1]), PackedVec::pack(&wr[2])];
+            let mut want_acc = 0i32;
+            let mut want_tog = 0u32;
+            for r in 0..3 {
+                let (a, t) = wp[r].dot(&xp[r]);
+                want_acc += a;
+                want_tog += t;
+            }
+            let xc = TritCol::pack_rows(&xp, cin);
+            let wc = TritCol::pack_rows(&wp, cin);
+            let nw = TritCol::words(cin);
+            let (acc, tog) = wc.dot(&xc, nw);
+            assert_eq!(acc, want_acc, "cin {cin} case {case}");
+            assert_eq!(tog, want_tog, "cin {cin} case {case}");
+            assert_eq!(xc.is_zero(nw), xr.iter().all(|r| r.iter().all(|&t| t == 0)));
+        }
+    }
+
+    #[test]
+    fn tritcol_roundtrip_and_word_count() {
+        let mut rng = Rng::new(92);
+        for &cin in &[1, 2, 21, 22, 42, 43, 64, 96, 128] {
+            let rows: Vec<Vec<i8>> =
+                (0..3).map(|_| (0..cin).map(|_| rng.trit(0.3)).collect()).collect();
+            let packed = [
+                PackedVec::pack(&rows[0]),
+                PackedVec::pack(&rows[1]),
+                PackedVec::pack(&rows[2]),
+            ];
+            let col = TritCol::pack_rows(&packed, cin);
+            for r in 0..3 {
+                for ci in 0..cin {
+                    assert_eq!(col.get(r, ci, cin), rows[r][ci], "cin {cin} r {r} ci {ci}");
+                }
+            }
+            assert_eq!(TritCol::words(cin), (3 * cin).div_ceil(64).max(1));
+        }
+        // 96-channel column: 288 bits in 5 words, not 6
+        assert_eq!(TritCol::words(96), 5);
+        assert_eq!(TritCol::words(128), 6);
+        assert_eq!(TritCol::words(2), 1);
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Micro-benchmark harness (criterion is unavailable offline). Used by all
 //! `benches/*.rs` (harness = false) and the performance pass: warmup,
-//! timed iterations, median + MAD, and simple aligned table output for the
-//! paper-table reproductions.
+//! timed iterations, median + MAD, simple aligned table output for the
+//! paper-table reproductions, and the machine-readable [`BenchSuite`]
+//! ledger (`BENCH_*.json`) tracking the perf trajectory across PRs.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::median_mad;
 
 pub struct BenchResult {
@@ -59,6 +62,89 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 /// Identity that the optimizer must assume is opaque.
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+struct SuiteEntry {
+    name: String,
+    median_s: f64,
+    mad_s: f64,
+    iters: usize,
+    /// Speedup over the recorded baseline (baseline.median / this.median).
+    speedup: Option<f64>,
+}
+
+/// Machine-readable bench ledger: collects [`BenchResult`]s (optionally
+/// with a speedup against a named baseline run) and serializes them to
+/// the `BENCH_*.json` files CI archives, so the perf trajectory is
+/// comparable across PRs (EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct BenchSuite {
+    entries: Vec<SuiteEntry>,
+}
+
+impl BenchSuite {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.entries.push(SuiteEntry {
+            name: r.name.clone(),
+            median_s: r.median_s,
+            mad_s: r.mad_s,
+            iters: r.iters,
+            speedup: None,
+        });
+    }
+
+    /// Record a result together with its speedup over `baseline`.
+    pub fn push_speedup(&mut self, r: &BenchResult, baseline: &BenchResult) {
+        self.entries.push(SuiteEntry {
+            name: r.name.clone(),
+            median_s: r.median_s,
+            mad_s: r.mad_s,
+            iters: r.iters,
+            speedup: Some(baseline.median_s / r.median_s),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let benches: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(e.name.clone()));
+                m.insert("median_s".to_string(), Json::Float(e.median_s));
+                m.insert("mad_s".to_string(), Json::Float(e.mad_s));
+                m.insert("iters".to_string(), Json::Int(e.iters as i64));
+                if let Some(s) = e.speedup {
+                    m.insert("speedup".to_string(), Json::Float(s));
+                }
+                Json::Object(m)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("benches".to_string(), Json::Array(benches));
+        Json::Object(root)
+    }
+
+    /// Write the suite as pretty-printed JSON; returns the serialized
+    /// text (also useful for asserting in tests).
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<String> {
+        let text = self.to_json().to_string_pretty(2);
+        std::fs::write(path, &text)?;
+        Ok(text)
+    }
 }
 
 /// Aligned table printer for paper-table reproductions.
@@ -123,5 +209,39 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".to_string()]);
+    }
+
+    #[test]
+    fn suite_serializes_names_medians_and_speedups() {
+        let base = BenchResult { name: "base".into(), iters: 5, median_s: 0.2, mad_s: 0.01 };
+        let fast = BenchResult { name: "fast".into(), iters: 5, median_s: 0.05, mad_s: 0.002 };
+        let mut suite = BenchSuite::new();
+        suite.push(&base);
+        suite.push_speedup(&fast, &base);
+        assert_eq!(suite.len(), 2);
+        let text = suite.to_json().to_string_pretty(2);
+        assert!(text.contains("\"name\": \"fast\""));
+        assert!(text.contains("\"median_s\""));
+        assert!(text.contains("\"speedup\": 4"));
+        // parse back and check the speedup value numerically
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let benches = j.get("benches").unwrap().as_array().unwrap();
+        assert_eq!(benches.len(), 2);
+        assert!(benches[0].get("speedup").is_none());
+        let s = benches[1].get("speedup").unwrap().as_f64().unwrap();
+        assert!((s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn suite_writes_json_file() {
+        let r = BenchResult { name: "x".into(), iters: 1, median_s: 1e-3, mad_s: 0.0 };
+        let mut suite = BenchSuite::new();
+        suite.push(&r);
+        let path = std::env::temp_dir().join("tcn_cutie_bench_suite_test.json");
+        let text = suite.write_json(&path).unwrap();
+        let on_disk = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(text, on_disk);
+        assert!(crate::util::json::Json::parse(&on_disk).is_ok());
     }
 }

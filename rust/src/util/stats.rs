@@ -42,6 +42,13 @@ impl Percentiles {
         self.samples[idx]
     }
 
+    /// Merge another histogram's samples. Percentiles over the union do
+    /// not depend on the merge order (the set is re-sorted on query).
+    pub fn absorb(&mut self, other: &Percentiles) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return 0.0;
@@ -80,6 +87,20 @@ mod tests {
         let p50 = p.quantile(0.5);
         assert!((49.0..=51.0).contains(&p50));
         assert!((p.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_merges_sample_sets() {
+        let mut a = Percentiles::new();
+        let mut b = Percentiles::new();
+        for i in 1..=50 {
+            a.record(i as f64);
+            b.record((i + 50) as f64);
+        }
+        a.absorb(&b);
+        assert_eq!(a.len(), 100);
+        assert_eq!(a.quantile(0.0), 1.0);
+        assert_eq!(a.quantile(1.0), 100.0);
     }
 
     #[test]
