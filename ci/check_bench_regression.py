@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json perf ledgers and flag median regressions.
+
+Usage: check_bench_regression.py PREVIOUS.json CURRENT.json [--threshold 0.10]
+
+Benches are matched by name; a bench whose current median_s exceeds the
+previous median_s by more than the threshold fraction is flagged and the
+script exits non-zero. Benches present in only one ledger (renamed/new
+cases) are reported but never flagged. A missing or unparsable previous
+ledger is treated as "no baseline" and passes, so the first CI run after
+the ledger format lands stays green.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_benches(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {b["name"]: b for b in doc.get("benches", []) if "median_s" in b}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="flag if current median exceeds previous by this fraction")
+    args = ap.parse_args()
+
+    try:
+        prev = load_benches(args.previous)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"no usable previous ledger ({e}); skipping regression check")
+        return 0
+    try:
+        cur = load_benches(args.current)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"cannot read current ledger {args.current}: {e}")
+        return 1
+
+    regressions = []
+    dropped = []
+    for name in sorted(set(prev) | set(cur)):
+        if name not in prev:
+            print(f"  NEW       {name}")
+            continue
+        if name not in cur:
+            print(f"  DROPPED   {name}")
+            dropped.append(name)
+            continue
+        old = prev[name]["median_s"]
+        new = cur[name]["median_s"]
+        if old <= 0:
+            continue
+        delta = new / old - 1.0
+        marker = "ok"
+        if delta > args.threshold:
+            marker = "REGRESSED"
+            regressions.append((name, delta))
+        print(f"  {marker:<9} {name}: {old:.3e}s -> {new:.3e}s ({delta:+.1%})")
+
+    if dropped:
+        # a renamed/deleted bench silently disarms its regression gate —
+        # shout so reviewers confirm the rename was intentional
+        print(f"\nWARNING: {len(dropped)} bench(es) present in the previous "
+              f"ledger have no counterpart in the current one (renamed or "
+              f"deleted?): {', '.join(dropped)}")
+    if regressions:
+        print(f"\n{len(regressions)} bench(es) regressed beyond "
+              f"{args.threshold:.0%} on the median:")
+        for name, delta in regressions:
+            print(f"  {name}: {delta:+.1%}")
+        return 1
+    print("\nno median regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,22 +1,24 @@
 //! Perf — simulator hot-path microbenchmarks (EXPERIMENTS.md §Perf):
 //! packed-bitplane OCU dot products vs a scalar i8 baseline, the
-//! per-layer datapath loop (column-stationary vs the retained
-//! window-stationary baseline), and end-to-end serving throughput —
-//! inline vs the batched multi-frame engine. The §Perf target: the full
-//! DVS pipeline simulates faster than the 0.5 V silicon serves it
-//! (≥1x realtime).
+//! per-layer datapath loop (packed column-stationary vs the retained
+//! i8 window-stationary baseline), the end-to-end packed-vs-i8 dataflow
+//! A/B on the 64×64 DVS serving workload's CNN front-end, and
+//! end-to-end serving throughput — inline vs the batched multi-frame
+//! engine. The §Perf target: the full DVS pipeline simulates faster
+//! than the 0.5 V silicon serves it (≥1x realtime).
 //!
 //! Emits the machine-readable perf ledger `BENCH_hotpath.json`
 //! (override the path with the BENCH_JSON env var), tracking name,
-//! median_s and speedup across PRs.
+//! median_s and speedup across PRs; CI archives it per push and flags
+//! >10 % median regressions against the previous run's artifact.
 //!
 //!     cargo bench --bench hotpath
 
-use tcn_cutie::coordinator::{Pipeline, PipelineConfig};
+use tcn_cutie::coordinator::{DvsSource, GestureClass, Pipeline, PipelineConfig};
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, SimMode};
 use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
-use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::tensor::{PackedMap, TritTensor};
 use tcn_cutie::trit::{dot_scalar, PackedVec};
 use tcn_cutie::util::bench::{bench, black_box, BenchSuite};
 use tcn_cutie::util::rng::Rng;
@@ -48,30 +50,61 @@ fn main() {
     suite.push(&r_scalar);
     suite.push_speedup(&r_packed, &r_scalar);
 
-    // --- one 96x96 conv layer on the datapath: window- vs column-stationary ---
+    // --- one 96x96 conv layer: i8 window-stationary vs packed column ---
     let net = cifar9_random(96, 7, 0.33);
     let cfg = CutieConfig::kraken();
     let input = TritTensor::random(&[32, 32, 96], &mut rng, 0.4);
+    let input_packed = PackedMap::from_trit(&input);
     let prep = PreparedLayer::new(&net.layers[2]);
-    let r_window = bench("datapath layer 32x32x96→96 window-stationary (baseline)", 2, 10, || {
+    let r_window = bench("datapath layer 32x32x96→96 i8 window (baseline)", 2, 10, || {
         run_prepared_window(&prep, &input, &cfg, SimMode::Accurate).unwrap()
     });
-    let r_col = bench("datapath layer 32x32x96→96 (accurate)", 2, 10, || {
-        run_prepared(&prep, &input, &cfg, SimMode::Accurate).unwrap()
+    let r_col = bench("datapath layer 32x32x96→96 packed (accurate)", 2, 10, || {
+        run_prepared(&prep, &input_packed, &cfg, SimMode::Accurate).unwrap()
     });
-    let r_col_fast = bench("datapath layer 32x32x96→96 (fast)", 2, 10, || {
-        run_prepared(&prep, &input, &cfg, SimMode::Fast).unwrap()
+    let r_col_fast = bench("datapath layer 32x32x96→96 packed (fast)", 2, 10, || {
+        run_prepared(&prep, &input_packed, &cfg, SimMode::Fast).unwrap()
     });
     println!(
-        "  speedup column vs window: {:.2}x\n",
+        "  speedup packed column vs i8 window: {:.2}x\n",
         r_window.median_s / r_col.median_s
     );
     suite.push(&r_window);
     suite.push_speedup(&r_col, &r_window);
     suite.push_speedup(&r_col_fast, &r_window);
 
-    // --- end-to-end serving throughput: inline vs batched, vs realtime ---
+    // --- packed-vs-i8 dataflow A/B: the 64×64 DVS CNN front-end ---
+    // The tentpole measurement (perf pass iteration 8): the same 5-layer
+    // CNN over the same high-sparsity event frame, once with i8 maps
+    // between layers (per-pixel packing in every linebuffer fetch,
+    // scalar ternarize + pooling) and once fully packed.
     let dnet = dvs_hybrid_random(96, 3, 0.5);
+    let preps: Vec<PreparedLayer> = dnet.conv_layers().map(PreparedLayer::new).collect();
+    let mut src = DvsSource::new(64, 11, GestureClass(3));
+    let frame = src.next_frame();
+    let frame_i8 = frame.to_trit();
+    let r_cnn_i8 = bench("DVS CNN 64x64 frame i8 dataflow (baseline)", 2, 10, || {
+        let mut x = frame_i8.clone();
+        for p in &preps {
+            x = run_prepared_window(p, &x, &cfg, SimMode::Accurate).unwrap().output;
+        }
+        x
+    });
+    let r_cnn_packed = bench("DVS CNN 64x64 frame packed dataflow", 2, 10, || {
+        let mut x = frame.clone();
+        for p in &preps {
+            x = run_prepared(p, &x, &cfg, SimMode::Accurate).unwrap().output;
+        }
+        x
+    });
+    println!(
+        "  speedup packed vs i8 dataflow (DVS CNN): {:.2}x\n",
+        r_cnn_i8.median_s / r_cnn_packed.median_s
+    );
+    suite.push(&r_cnn_i8);
+    suite.push_speedup(&r_cnn_packed, &r_cnn_i8);
+
+    // --- end-to-end serving throughput: inline vs batched, vs realtime ---
     for (label, mode) in [("accurate", SimMode::Accurate), ("fast", SimMode::Fast)] {
         let pipe = Pipeline::new(
             dnet.clone(),

@@ -1,5 +1,8 @@
 //! The serving pipeline: producer thread (DVS source → bounded channel,
 //! i.e. backpressure) + inference loop (scheduler + SoC model + metrics).
+//! Frames travel as bit-packed [`PackedMap`]s end to end (perf pass
+//! iteration 8): the source emits packed, the queue carries packed, and
+//! the scheduler serves packed — i8 never appears on the serving path.
 //!
 //! Three modes:
 //! * [`Pipeline::run_inline`] — single-threaded, fully deterministic;
@@ -20,11 +23,11 @@ use anyhow::Result;
 
 use super::metrics::ServingMetrics;
 use super::source::{DvsSource, GestureClass};
-use crate::cutie::{CutieConfig, RunStats, Scheduler, SimMode};
+use crate::cutie::{dma_ingress_bytes, CutieConfig, RunStats, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
 use crate::network::Network;
 use crate::soc::{Irq, KrakenSoc};
-use crate::tensor::TritTensor;
+use crate::tensor::PackedMap;
 
 #[derive(Debug, Clone)]
 pub struct PipelineConfig {
@@ -80,12 +83,11 @@ impl Pipeline {
         params: &EnergyParams,
         metrics: &mut ServingMetrics,
         labels: &mut Vec<usize>,
-        frame: &TritTensor,
+        frame: &PackedMap,
     ) -> Result<()> {
         let wall0 = Instant::now();
         // µDMA ingress (SoC timeline) + frame-ready IRQ starts CUTIE
-        let bytes = (frame.numel() * 2).div_ceil(8) as u64;
-        soc.dma_ingest(bytes);
+        soc.dma_ingest(dma_ingress_bytes(frame.numel()));
         soc.raise_irq(Irq::FrameReady);
 
         // accelerator: CNN → TCN memory → TCN window → logits
@@ -158,7 +160,7 @@ impl Pipeline {
         // Same deterministic frame stream as run_inline.
         let mut src =
             DvsSource::new(self.net.input_hw, self.cfg.seed, GestureClass(self.cfg.gesture));
-        let frames: Vec<TritTensor> = (0..self.cfg.frames).map(|_| src.next_frame()).collect();
+        let frames: Vec<PackedMap> = (0..self.cfg.frames).map(|_| src.next_frame()).collect();
 
         // Phase 1: CNN front-end on the worker pool. Layer-level row
         // sharding is pinned off inside workers (max_threads = 1) —
@@ -166,8 +168,8 @@ impl Pipeline {
         let worker_cfg = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
         let net = &self.net;
         let mode = self.cfg.mode;
-        let mut cnn: Vec<Option<(TritTensor, RunStats)>> = vec![None; frames.len()];
-        let results: Vec<Vec<(usize, Result<(TritTensor, RunStats)>)>> =
+        let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; frames.len()];
+        let results: Vec<Vec<(usize, Result<(PackedMap, RunStats)>)>> =
             std::thread::scope(|scope| {
                 let mut handles = Vec::new();
                 for wi in 0..workers {
@@ -202,8 +204,7 @@ impl Pipeline {
         let mut frame_reports = Vec::with_capacity(frames.len());
         for (frame, slot) in frames.iter().zip(cnn.into_iter()) {
             let (feat, mut run) = slot.expect("all frames dispatched");
-            let bytes = (frame.numel() * 2).div_ceil(8) as u64;
-            soc.dma_ingest(bytes);
+            soc.dma_ingest(dma_ingress_bytes(frame.numel()));
             soc.raise_irq(Irq::FrameReady);
             sched.push_feature(&feat);
             let (logits, r) = sched.run_tcn(&self.net)?;
@@ -232,7 +233,7 @@ impl Pipeline {
 
     /// Producer/consumer topology with a bounded frame queue.
     pub fn run_threaded(&self) -> Result<ServingReport> {
-        let (tx, rx) = mpsc::sync_channel::<TritTensor>(self.cfg.queue_depth);
+        let (tx, rx) = mpsc::sync_channel::<PackedMap>(self.cfg.queue_depth);
         let hw = self.net.input_hw;
         let seed = self.cfg.seed;
         let gesture = self.cfg.gesture;

@@ -2,9 +2,13 @@
 //! DVS128 camera): per-class moving-blob "gestures" (12 directions/arm
 //! motions like the DVS128 task) over Poisson background noise, rendered
 //! as 2-channel (ON/OFF polarity) ternary frames with the high
-//! unstructured sparsity event sensors produce.
+//! unstructured sparsity event sensors produce. Frames are emitted
+//! directly as bit-packed [`PackedMap`]s — events set (pos, mask) plane
+//! bits, so a frame is born in the representation the µDMA ships and the
+//! activation SRAM stores (perf pass iteration 8): no i8 staging buffer,
+//! no per-pixel packing on ingest.
 
-use crate::tensor::TritTensor;
+use crate::tensor::PackedMap;
 use crate::util::rng::Rng;
 
 /// 12 gesture classes ≈ the DVS128 label set.
@@ -50,17 +54,17 @@ impl DvsSource {
         }
     }
 
-    /// Render the next event frame: (hw, hw, 2) trits, channel 0 = ON
-    /// events (+1), channel 1 = OFF events (−1 encoded as −1).
-    pub fn next_frame(&mut self) -> TritTensor {
+    /// Render the next event frame: (hw, hw, 2) packed trits, channel 0 =
+    /// ON events (+1), channel 1 = OFF events (−1 encoded as −1).
+    pub fn next_frame(&mut self) -> PackedMap {
         let hw = self.hw;
-        let mut frame = TritTensor::zeros(&[hw, hw, 2]);
+        let mut frame = PackedMap::zeros(hw, hw, 2);
         // background noise events
         for y in 0..hw {
             for x in 0..hw {
                 if self.rng.bool(self.noise_rate) {
                     let ch = self.rng.below(2);
-                    frame.set3(y, x, ch, if ch == 0 { 1 } else { -1 });
+                    frame.set_trit(y, x, ch, if ch == 0 { 1 } else { -1 });
                 }
             }
         }
@@ -80,9 +84,9 @@ impl DvsSource {
                     // project onto motion direction: front = ON, back = OFF
                     let along = ddx * dx + ddy * dy;
                     if along >= 0.0 {
-                        frame.set3(y, x, 0, 1);
+                        frame.set_trit(y, x, 0, 1);
                     } else {
-                        frame.set3(y, x, 1, -1);
+                        frame.set_trit(y, x, 1, -1);
                     }
                 }
             }
@@ -116,15 +120,15 @@ mod tests {
         let mut src = DvsSource::new(64, 7, GestureClass(3));
         for _ in 0..5 {
             let f = src.next_frame();
-            assert_eq!(f.dims, vec![64, 64, 2]);
+            assert_eq!((f.h, f.w, f.c), (64, 64, 2));
             let sparsity = f.sparsity();
             assert!(sparsity > 0.9, "DVS frames must be sparse, got {sparsity}");
-            assert!(f.data.iter().all(|t| (-1..=1).contains(t)));
+            assert!(f.unpack_data().iter().all(|t| (-1..=1).contains(t)));
             // polarity encoding: ch0 ∈ {0,1}, ch1 ∈ {-1,0}
             for y in 0..64 {
                 for x in 0..64 {
-                    assert!(f.get3(y, x, 0) >= 0);
-                    assert!(f.get3(y, x, 1) <= 0);
+                    assert!(f.get_trit(y, x, 0) >= 0);
+                    assert!(f.get_trit(y, x, 1) <= 0);
                 }
             }
         }
@@ -146,7 +150,7 @@ mod tests {
         for _ in 0..4 {
             let fa = a.next_frame();
             let fb = b.next_frame();
-            diff += fa.data.iter().zip(&fb.data).filter(|(x, y)| x != y).count();
+            diff += fa.pixels.iter().zip(&fb.pixels).filter(|(x, y)| x != y).count();
         }
         assert!(diff > 0);
     }

@@ -1,18 +1,22 @@
-//! Double-buffered activation SRAM. One word = one pixel = 2·C bits. The
-//! datapath reads layer N's input from one buffer and writes layer N's
-//! output to the other; buffers swap between layers (ping-pong), so
+//! Double-buffered activation SRAM. One word = one pixel = 2·C bits —
+//! and since perf pass iteration 8 the buffers hold exactly that
+//! representation: ping-ponged [`PackedMap`]s whose per-pixel (pos, mask)
+//! bitplanes are the SRAM words, so the access counters below count real
+//! packed words and feature maps never exist in i8 form between layers.
+//! The datapath reads layer N's input from one buffer and writes layer
+//! N's output to the other; buffers swap between layers (ping-pong), so
 //! feature maps never move. Below 0.5 V the macros bit-error (§7) — the
 //! model exposes `min_voltage`.
 
 use anyhow::{ensure, Result};
 
-use crate::tensor::TritTensor;
+use crate::tensor::PackedMap;
 
 pub struct ActivationMemory {
     pub max_hw: usize,
     pub channels: usize,
-    /// Ping-pong buffers as whole feature maps.
-    buf: [Option<TritTensor>; 2],
+    /// Ping-pong buffers as whole packed feature maps.
+    buf: [Option<PackedMap>; 2],
     /// Which buffer the next layer reads from.
     front: usize,
     pub reads: u64,
@@ -28,24 +32,29 @@ impl ActivationMemory {
         ActivationMemory { max_hw, channels, buf: [None, None], front: 0, reads: 0, writes: 0 }
     }
 
-    /// Capacity check for a feature map.
-    pub fn fits(&self, dims: &[usize]) -> bool {
-        match dims {
-            [h, w, c] => *h <= self.max_hw && *w <= self.max_hw && *c <= self.channels,
-            _ => false,
-        }
+    /// Capacity check for an H×W×C feature map.
+    pub fn fits(&self, h: usize, w: usize, c: usize) -> bool {
+        h <= self.max_hw && w <= self.max_hw && c <= self.channels
     }
 
     /// DMA or front-end write of a whole input map into the front buffer.
-    pub fn load_input(&mut self, map: TritTensor) -> Result<()> {
-        ensure!(self.fits(&map.dims), "feature map {:?} exceeds {}² × {}", map.dims, self.max_hw, self.channels);
-        self.writes += (map.dims[0] * map.dims[1]) as u64;
+    pub fn load_input(&mut self, map: PackedMap) -> Result<()> {
+        ensure!(
+            self.fits(map.h, map.w, map.c),
+            "feature map {}×{}×{} exceeds {}² × {}",
+            map.h,
+            map.w,
+            map.c,
+            self.max_hw,
+            self.channels
+        );
+        self.writes += (map.h * map.w) as u64;
         self.buf[self.front] = Some(map);
         Ok(())
     }
 
     /// The map the next layer reads.
-    pub fn front(&self) -> Option<&TritTensor> {
+    pub fn front(&self) -> Option<&PackedMap> {
         self.buf[self.front].as_ref()
     }
 
@@ -55,10 +64,15 @@ impl ActivationMemory {
     }
 
     /// Write a layer's output map to the back buffer and swap.
-    pub fn store_output_and_swap(&mut self, map: TritTensor) -> Result<()> {
-        ensure!(self.fits(&map.dims) || map.dims.len() < 3, "output {:?} too large", map.dims);
-        let px = if map.dims.len() == 3 { map.dims[0] * map.dims[1] } else { 1 };
-        self.writes += px as u64;
+    pub fn store_output_and_swap(&mut self, map: PackedMap) -> Result<()> {
+        ensure!(
+            self.fits(map.h, map.w, map.c),
+            "output {}×{}×{} too large",
+            map.h,
+            map.w,
+            map.c
+        );
+        self.writes += (map.h * map.w) as u64;
         let back = 1 - self.front;
         self.buf[back] = Some(map);
         self.front = back;
@@ -69,14 +83,19 @@ impl ActivationMemory {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::TritTensor;
     use crate::util::rng::Rng;
+
+    fn random_map(dims: &[usize], rng: &mut Rng, zf: f64) -> PackedMap {
+        PackedMap::from_trit(&TritTensor::random(dims, rng, zf))
+    }
 
     #[test]
     fn ping_pong_swaps() {
         let mut rng = Rng::new(31);
         let mut mem = ActivationMemory::new(8, 16);
-        let a = TritTensor::random(&[4, 4, 8], &mut rng, 0.3);
-        let b = TritTensor::random(&[2, 2, 16], &mut rng, 0.3);
+        let a = random_map(&[4, 4, 8], &mut rng, 0.3);
+        let b = random_map(&[2, 2, 16], &mut rng, 0.3);
         mem.load_input(a.clone()).unwrap();
         assert_eq!(mem.front().unwrap(), &a);
         mem.store_output_and_swap(b.clone()).unwrap();
@@ -87,16 +106,16 @@ mod tests {
     #[test]
     fn rejects_oversized() {
         let mut mem = ActivationMemory::new(4, 8);
-        let big = TritTensor::zeros(&[8, 8, 8]);
+        let big = PackedMap::zeros(8, 8, 8);
         assert!(mem.load_input(big).is_err());
-        let wide = TritTensor::zeros(&[2, 2, 16]);
+        let wide = PackedMap::zeros(2, 2, 16);
         assert!(mem.load_input(wide).is_err());
     }
 
     #[test]
     fn kraken_capacity() {
         let mem = ActivationMemory::new(64, 96);
-        assert!(mem.fits(&[64, 64, 96]));
-        assert!(!mem.fits(&[65, 64, 96]));
+        assert!(mem.fits(64, 64, 96));
+        assert!(!mem.fits(65, 64, 96));
     }
 }

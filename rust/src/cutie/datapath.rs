@@ -4,30 +4,41 @@
 //! threshold, optionally pool, and write back.
 //!
 //! This is the simulator's hot path (see EXPERIMENTS.md §Perf). Since
-//! perf pass iteration 7 the software loop is **column-stationary**:
-//! adjacent output windows share two of their three columns, so instead
-//! of re-evaluating the full 3×3 window per output pixel (9·OCUs packed
-//! dots), each *input* column is packed once into a dense
-//! [`TritCol`] vector and fused-dotted against the three kernel-column
-//! vectors (3·OCUs fused dots); every output pixel is then the sum of
-//! three cached column partials. Bit-exact by construction: both the
-//! accumulators and the popcount-based toggle statistics are additive
-//! over partial products, so every counter matches the window-stationary
-//! loop — which is retained below ([`run_prepared_window`]) as the
-//! equivalence-test reference and A/B benchmark baseline.
+//! perf pass iteration 8 the loop is **packed end to end**: feature maps
+//! arrive and leave as bit-packed [`PackedMap`]s (the activation SRAM's
+//! native 2-bit encoding), the linebuffer borrows packed rows zero-copy
+//! ([`PackedLineBuffer`]), ternarization writes (pos, mask) words
+//! directly ([`ternarize_packed`]) and pooling is two bitwise ops per
+//! word — no i8 conversion anywhere between layers. The loop itself is
+//! **column-stationary** (iteration 7): each *input* column is packed
+//! once into a dense [`TritCol`] vector and fused-dotted against the
+//! three kernel-column vectors; every output pixel is the sum of three
+//! cached column partials. Bit-exact by construction: accumulators and
+//! popcount-based toggle statistics are additive over partial products,
+//! so every counter matches the legacy loop — which is retained below
+//! ([`run_prepared_window`]) as the **i8 window-stationary baseline**
+//! for the packed-vs-i8 equivalence tests (`tests/column_reuse.rs`,
+//! `tests/packed.rs`) and the A/B case in the hotpath bench.
 
 use anyhow::{ensure, Result};
 
 use super::config::CutieConfig;
-use super::linebuffer::LineBuffer;
+use super::linebuffer::{LineBuffer, PackedLineBuffer};
 use super::ocu::{build_ocus, Ocu};
 use super::stats::LayerStats;
 use super::SimMode;
 use crate::network::{Layer, LayerKind};
-use crate::tensor::{IntTensor, TritTensor};
-use crate::trit::{ternarize, PackedVec, TritCol};
+use crate::tensor::{IntTensor, PackedMap, TritTensor};
+use crate::trit::{ternarize, ternarize_packed, PackedVec, TritCol};
 
+/// Result of the packed (default) conv loop.
 pub struct LayerResult {
+    pub output: PackedMap,
+    pub stats: LayerStats,
+}
+
+/// Result of the retained i8-currency baseline loop.
+pub struct LayerResultI8 {
     pub output: TritTensor,
     pub stats: LayerStats,
 }
@@ -100,9 +111,10 @@ impl PreparedLayer {
 }
 
 /// Run one conv2d-style layer (also used for mapped TCN layers, which are
-/// plain 3×3 layers by construction). Stateless wrapper: prepares the
-/// layer and runs it. The scheduler caches [`PreparedLayer`]s and calls
-/// [`run_prepared`] directly (perf pass iteration 5).
+/// plain 3×3 layers by construction). Stateless i8-edge wrapper: packs
+/// the input, prepares the layer and runs the packed loop. The scheduler
+/// caches [`PreparedLayer`]s and calls [`run_prepared`] directly on the
+/// packed maps it ping-pongs (perf pass iterations 5 and 8).
 pub fn run_conv_layer(
     layer: &Layer,
     input: &TritTensor,
@@ -110,22 +122,22 @@ pub fn run_conv_layer(
     mode: SimMode,
 ) -> Result<LayerResult> {
     ensure!(layer.kind == LayerKind::Conv2d || layer.kind == LayerKind::Tcn);
-    run_prepared(&PreparedLayer::new(layer), input, cfg, mode)
+    run_prepared(&PreparedLayer::new(layer), &PackedMap::from_trit(input), cfg, mode)
 }
 
 fn check_geometry(
     prep: &PreparedLayer,
-    input: &TritTensor,
+    h: usize,
+    w: usize,
+    cin: usize,
     cfg: &CutieConfig,
-) -> Result<(usize, usize, usize)> {
-    ensure!(input.dims.len() == 3, "conv input must be (H, W, C)");
-    let (h, w, cin) = (input.dims[0], input.dims[1], input.dims[2]);
+) -> Result<()> {
     ensure!(cin == prep.in_ch, "{}: input channels {cin} != {}", prep.name, prep.in_ch);
     ensure!(cin <= cfg.channels, "{}: {cin} input channels exceed the {} datapath", prep.name, cfg.channels);
     ensure!(prep.out_ch <= cfg.channels, "{}: {} output channels exceed {} OCUs", prep.name, prep.out_ch, cfg.channels);
     ensure!(h <= cfg.max_hw && w <= cfg.max_hw, "{}: {h}×{w} exceeds {}²", prep.name, cfg.max_hw);
     ensure!(prep.k == cfg.kernel, "{}: kernel {} != datapath {}", prep.name, prep.k, cfg.kernel);
-    Ok((h, w, cin))
+    Ok(())
 }
 
 /// Row-parallel compute (perf pass iteration 3): output rows are
@@ -163,24 +175,49 @@ fn base_stats(prep: &PreparedLayer, cfg: &CutieConfig, h: usize, w: usize, cin: 
     stats
 }
 
-/// On-the-fly pooling in the OCUs (§3): decimates write-back traffic,
-/// costs no extra cycles. Finishes the activity ledger shared by both
-/// loop organisations (any divergence here would break their bit-exact
-/// counter equivalence, so it is factored out).
-fn finalize_conv(
-    prep: &PreparedLayer,
-    cfg: &CutieConfig,
-    out: TritTensor,
-    mac_toggles: u64,
-    mut stats: LayerStats,
-) -> LayerResult {
+/// Shared tail of the activity ledger — one site for the idle-position
+/// model so the packed and i8 loops cannot diverge on it.
+fn finish_activity(prep: &PreparedLayer, cfg: &CutieConfig, mac_toggles: u64, stats: &mut LayerStats) {
     stats.mac_toggles = mac_toggles;
     // Clocked multiplier positions in active OCUs span the full C-channel
     // datapath even when C_in < C (inputs are zero-padded wires).
     let clocked =
         (prep.out_ch * cfg.channels * prep.k * prep.k) as u64 * stats.compute_cycles;
     stats.mac_idle = clocked.saturating_sub(stats.mac_toggles);
+}
 
+/// On-the-fly pooling in the OCUs (§3): decimates write-back traffic,
+/// costs no extra cycles. Finishes the activity ledger. The i8 baseline
+/// loop has a scalar twin ([`finalize_conv_i8`]); the packed-vs-i8
+/// equivalence tests enforce that the two stay counter-identical.
+fn finalize_conv(
+    prep: &PreparedLayer,
+    cfg: &CutieConfig,
+    out: PackedMap,
+    mac_toggles: u64,
+    mut stats: LayerStats,
+) -> LayerResult {
+    finish_activity(prep, cfg, mac_toggles, &mut stats);
+    let mut result = out;
+    if prep.pool {
+        result = result.maxpool2x2();
+    }
+    if prep.global_pool {
+        result = result.global_maxpool();
+    }
+    stats.act_writes = (result.h * result.w) as u64;
+    LayerResult { output: result, stats }
+}
+
+/// Scalar-pooling twin of [`finalize_conv`] for the i8 baseline loop.
+fn finalize_conv_i8(
+    prep: &PreparedLayer,
+    cfg: &CutieConfig,
+    out: TritTensor,
+    mac_toggles: u64,
+    mut stats: LayerStats,
+) -> LayerResultI8 {
+    finish_activity(prep, cfg, mac_toggles, &mut stats);
     let mut result = out;
     if prep.pool {
         result = crate::network::reference::maxpool2x2(&result);
@@ -193,24 +230,28 @@ fn finalize_conv(
     } else {
         1
     };
-    LayerResult { output: result, stats }
+    LayerResultI8 { output: result, stats }
 }
 
-/// Run a prepared layer through the **column-stationary** loop (perf pass
-/// iteration 7, the default). Weight-load cycles are charged by the
-/// scheduler (it owns the weight memory); this accounts for everything
-/// downstream of the weight buffers.
+/// Run a prepared layer through the **packed column-stationary** loop
+/// (perf pass iterations 7+8, the default): packed map in, packed map
+/// out. Weight-load cycles are charged by the scheduler (it owns the
+/// weight memory); this accounts for everything downstream of the
+/// weight buffers.
 pub fn run_prepared(
     prep: &PreparedLayer,
-    input: &TritTensor,
+    input: &PackedMap,
     cfg: &CutieConfig,
     mode: SimMode,
 ) -> Result<LayerResult> {
-    let (h, w, cin) = check_geometry(prep, input, cfg)?;
+    let (h, w, cin) = (input.h, input.w, input.c);
+    check_geometry(prep, h, w, cin, cfg)?;
     if prep.k != 3 {
         // the fused column path is hardwired to the 3×3 RTL geometry;
-        // non-3×3 configs keep the generic window-stationary loop
-        return run_prepared_window(prep, input, cfg, mode);
+        // non-3×3 configs fall back to the generic window loop (i8 at
+        // the edges of this rarely-taken branch only)
+        let r = run_prepared_window(prep, &input.to_trit(), cfg, mode)?;
+        return Ok(LayerResult { output: PackedMap::from_trit(&r.output), stats: r.stats });
     }
     let k = prep.k;
     let active = prep.out_ch;
@@ -221,27 +262,28 @@ pub fn run_prepared(
     let stats = base_stats(prep, cfg, h, w, cin);
     let _ = mode; // both modes share the loop: toggle counting is free now
 
-    let mut out = TritTensor::zeros(&[h, w, active]);
+    let mut out = PackedMap::zeros(h, w, active);
     let threads = shard_threads(cfg, h, w, active, cin);
     let rows_per = h.div_ceil(threads);
-    let mut row_chunks: Vec<&mut [i8]> = out.data.chunks_mut(rows_per * w * active).collect();
+    let mut row_chunks: Vec<&mut [PackedVec]> = out.pixels.chunks_mut(rows_per * w).collect();
     let toggle_counts: Vec<u64> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for (t, chunk) in row_chunks.drain(..).enumerate() {
             let handle = scope.spawn(move || {
                 let y0 = t * rows_per;
                 let y1 = (y0 + rows_per).min(h);
-                let mut lb = LineBuffer::new(k, w);
+                let mut lb = PackedLineBuffer::new(k, input);
                 let mut col = [PackedVec::ZERO; 3];
                 let mut acc_row = vec![0i32; w * active];
                 let mut toggles = 0u64;
                 for y in y0..y1 {
-                    lb.advance_to(y, input);
+                    lb.advance_to(y);
                     acc_row.fill(0);
                     for cx in 0..w {
-                        // pack the 3-row input column once; it is reused
-                        // by all three kernel columns × all OCUs
-                        lb.col(y, cx, h, &mut col);
+                        // borrow the 3-row input column zero-copy and
+                        // pack it once; it is reused by all three kernel
+                        // columns × all OCUs
+                        lb.col(y, cx, &mut col);
                         let xcol = TritCol::pack_rows(&col, cin);
                         // whole-zero columns (common on sparse DVS maps)
                         // contribute neither acc nor toggles — bit-exact
@@ -265,13 +307,15 @@ pub fn run_prepared(
                             }
                         }
                     }
-                    let rbase = (y - y0) * w * active;
+                    // branchless packed write-back: one (pos, mask) word
+                    // pair per pixel, straight into the output map
+                    let rbase = (y - y0) * w;
                     for x in 0..w {
-                        let base = x * active;
-                        for co in 0..active {
-                            chunk[rbase + base + co] =
-                                ternarize(acc_row[base + co], lo_flat[co], hi_flat[co]);
-                        }
+                        chunk[rbase + x] = ternarize_packed(
+                            &acc_row[x * active..(x + 1) * active],
+                            lo_flat,
+                            hi_flat,
+                        );
                     }
                 }
                 toggles
@@ -284,17 +328,22 @@ pub fn run_prepared(
     Ok(finalize_conv(prep, cfg, out, toggle_counts.iter().sum(), stats))
 }
 
-/// The pre-iteration-7 **window-stationary** loop: re-evaluates the full
-/// 3×3 window per output pixel (9·OCUs packed dots). Retained as the
-/// bit-exactness reference for the column-stationary loop (see
-/// `tests/column_reuse.rs`) and as the A/B baseline in the hotpath bench.
+/// The retained **i8 window-stationary** baseline: i8 map in, i8 map
+/// out, full 3×3 window re-evaluated per output pixel (9·OCUs packed
+/// dots), per-pixel i8 packing in the linebuffer, scalar ternarize and
+/// scalar pooling — the pre-iteration-8 dataflow, kept verbatim as the
+/// bit-exactness reference for the packed loop (see
+/// `tests/column_reuse.rs` and `tests/packed.rs`) and as the A/B
+/// baseline in the hotpath bench.
 pub fn run_prepared_window(
     prep: &PreparedLayer,
     input: &TritTensor,
     cfg: &CutieConfig,
     mode: SimMode,
-) -> Result<LayerResult> {
-    let (h, w, cin) = check_geometry(prep, input, cfg)?;
+) -> Result<LayerResultI8> {
+    ensure!(input.dims.len() == 3, "conv input must be (H, W, C)");
+    let (h, w, cin) = (input.dims[0], input.dims[1], input.dims[2]);
+    check_geometry(prep, h, w, cin, cfg)?;
     let k = prep.k;
     let k2 = k * k;
     let active = prep.out_ch;
@@ -362,7 +411,7 @@ pub fn run_prepared_window(
         handles.into_iter().map(|h| h.join().expect("datapath shard")).collect()
     });
 
-    Ok(finalize_conv(prep, cfg, out, toggle_counts.iter().sum(), stats))
+    Ok(finalize_conv_i8(prep, cfg, out, toggle_counts.iter().sum(), stats))
 }
 
 /// Classifier weights packed once and cached by the scheduler instead of
@@ -402,7 +451,10 @@ impl PreparedDense {
 /// Classifier layer on a prepared weight set: the feature vector streams
 /// through the adder trees C-channels per cycle; `classes` OCUs stay
 /// active, the rest are gated. Raw accumulators go out over the config
-/// port (no ternarization).
+/// port (no ternarization). Since the (pos, mask) encoding, toggle
+/// counting is free here too, so Fast and Accurate report identical
+/// counters (perf pass iteration 8 satellite — previously Fast skipped
+/// toggles and the two modes' `mac_toggles`/`mac_idle` diverged).
 pub fn run_dense_prepared(
     prep: &PreparedDense,
     input: &TritTensor,
@@ -419,6 +471,7 @@ pub fn run_dense_prepared(
         cfg.channels
     );
     let classes = prep.classes;
+    let _ = mode; // both modes share the loop: toggle counting is free now
 
     let mut stats = LayerStats {
         name: prep.name.clone(),
@@ -438,19 +491,10 @@ pub fn run_dense_prepared(
             continue;
         }
         let wrow = &prep.weights[chunk * classes..(chunk + 1) * classes];
-        match mode {
-            SimMode::Accurate => {
-                for (co, wv) in wrow.iter().enumerate() {
-                    let (acc, toggles) = wv.dot(&x);
-                    logits.data[co] += acc;
-                    stats.mac_toggles += toggles as u64;
-                }
-            }
-            SimMode::Fast => {
-                for (co, wv) in wrow.iter().enumerate() {
-                    logits.data[co] += wv.dot_fast(&x);
-                }
-            }
+        for (co, wv) in wrow.iter().enumerate() {
+            let (acc, toggles) = wv.dot(&x);
+            logits.data[co] += acc;
+            stats.mac_toggles += toggles as u64;
         }
     }
     stats.compute_cycles = chunks as u64;
@@ -500,10 +544,10 @@ mod tests {
             let input = TritTensor::random(&[hw, hw, layer.in_ch], &mut rng, 0.4);
             let got = run_conv_layer(layer, &input, &cfg, SimMode::Accurate).unwrap();
             let want = reference::run_conv_layer(layer, &input);
-            assert_eq!(got.output, want, "case {case}");
+            assert_eq!(got.output.to_trit(), want, "case {case}");
             // Fast mode must agree too.
             let fast = run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
-            assert_eq!(fast.output, want);
+            assert_eq!(fast.output.to_trit(), want);
             assert_eq!(fast.stats.compute_cycles, got.stats.compute_cycles);
             // since the (pos, mask) encoding, toggle counting is free and
             // Fast mode reports it too
@@ -512,18 +556,18 @@ mod tests {
     }
 
     #[test]
-    fn column_loop_matches_window_loop_smoke() {
-        // The exhaustive sweep lives in tests/column_reuse.rs; this is
-        // the in-module smoke check.
+    fn packed_loop_matches_i8_window_loop_smoke() {
+        // The exhaustive packed-vs-i8 sweep lives in
+        // tests/column_reuse.rs; this is the in-module smoke check.
         let mut rng = Rng::new(76);
         let cfg = CutieConfig::kraken();
         let net = cifar9_random(24, 110, 0.33);
         let layer = &net.layers[2];
         let prep = PreparedLayer::new(layer);
         let input = TritTensor::random(&[10, 7, layer.in_ch], &mut rng, 0.5);
-        let col = run_prepared(&prep, &input, &cfg, SimMode::Accurate).unwrap();
+        let col = run_prepared(&prep, &PackedMap::from_trit(&input), &cfg, SimMode::Accurate).unwrap();
         let win = run_prepared_window(&prep, &input, &cfg, SimMode::Accurate).unwrap();
-        assert_eq!(col.output, win.output);
+        assert_eq!(col.output.to_trit(), win.output);
         assert_eq!(col.stats.mac_toggles, win.stats.mac_toggles);
         assert_eq!(col.stats.mac_idle, win.stats.mac_idle);
         assert_eq!(col.stats.compute_cycles, win.stats.compute_cycles);
@@ -557,7 +601,7 @@ mod tests {
         let r = run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
         assert_eq!(r.stats.compute_cycles, 256);
         assert_eq!(r.stats.act_writes, 64); // 8×8 after pooling
-        assert_eq!(r.output.dims, vec![8, 8, 16]);
+        assert_eq!((r.output.h, r.output.w, r.output.c), (8, 8, 16));
     }
 
     #[test]
@@ -606,8 +650,13 @@ mod tests {
             assert_eq!(a, b, "case {case}");
             assert_eq!(sa.mac_toggles, sb.mac_toggles);
             assert_eq!(sa.compute_cycles, sb.compute_cycles);
-            let (c, _) = run_dense_prepared(&prep, &x, &cfg, SimMode::Fast).unwrap();
+            // Fast mode reports the full counter set too (iteration 8
+            // satellite): logits AND activity identical to Accurate.
+            let (c, sc) = run_dense_prepared(&prep, &x, &cfg, SimMode::Fast).unwrap();
             assert_eq!(a, c);
+            assert_eq!(sb.mac_toggles, sc.mac_toggles, "case {case}: Fast must count toggles");
+            assert_eq!(sb.mac_idle, sc.mac_idle, "case {case}");
+            assert_eq!(sb.compute_cycles, sc.compute_cycles);
         }
         // wrong-config guard
         let narrow_cfg = CutieConfig { channels: 48, ..CutieConfig::kraken() };

@@ -4,19 +4,34 @@
 //! initial fill (K-1 rows + K-1 pixels). Zero padding at the edges is
 //! produced combinationally (no memory access).
 //!
+//! Two variants share the residency/push accounting semantics:
+//!
+//! * [`LineBuffer`] — the legacy i8 ingest path: rows are packed from an
+//!   i8 `TritTensor` on fetch (the per-pixel conversion tax the packed
+//!   dataflow eliminates) and held in a `VecDeque` ring (perf pass
+//!   iteration 8 satellite: scrolling used to `Vec::remove(0)`-shift
+//!   every retained row, O(rows·W) per output row).
+//! * [`PackedLineBuffer`] — the packed dataflow path: the activation
+//!   memory already holds [`PackedMap`] rows in the datapath's native
+//!   encoding, so the buffer borrows them zero-copy and only tracks
+//!   residency for the push (shift-register activity) ledger.
+//!
 //! The ablation A2 ("direct strided access", what a dilated conv would do
 //! *without* the §4 mapping) is modelled in
 //! [`crate::cutie::scheduler`], which charges explicit stall cycles per
 //! non-contiguous fetch; this module is always the stall-free variant.
 
-use crate::tensor::TritTensor;
+use std::collections::VecDeque;
+
+use crate::tensor::{PackedMap, TritTensor};
 use crate::trit::PackedVec;
 
 pub struct LineBuffer {
     k: usize,
     width: usize,
-    /// `rows[r]` is input row `base_row + r`, packed per pixel.
-    rows: Vec<Vec<PackedVec>>,
+    /// `rows[r]` is input row `base_row + r`, packed per pixel. Ring
+    /// buffer: scroll-out is a pop_front, never an element shift.
+    rows: VecDeque<Vec<PackedVec>>,
     base_row: isize,
     /// Pixel pushes (shift-register activity for the energy model).
     pub pushes: u64,
@@ -24,7 +39,7 @@ pub struct LineBuffer {
 
 impl LineBuffer {
     pub fn new(k: usize, width: usize) -> Self {
-        LineBuffer { k, width, rows: Vec::new(), base_row: 0, pushes: 0 }
+        LineBuffer { k, width, rows: VecDeque::new(), base_row: 0, pushes: 0 }
     }
 
     /// Load the window rows needed to produce output row `y` of an
@@ -42,20 +57,20 @@ impl LineBuffer {
             self.base_row = lo;
             for r in lo..=hi {
                 let row = self.fetch_row(r as usize, input);
-                self.rows.push(row);
+                self.rows.push_back(row);
                 fetched += 1;
             }
         } else {
             // drop rows that scrolled out
             while self.base_row < lo {
-                self.rows.remove(0);
+                self.rows.pop_front();
                 self.base_row += 1;
             }
             // fetch rows that scrolled in
             while self.base_row + (self.rows.len() as isize) <= hi {
                 let r = self.base_row + self.rows.len() as isize;
                 let row = self.fetch_row(r as usize, input);
-                self.rows.push(row);
+                self.rows.push_back(row);
                 fetched += 1;
             }
         }
@@ -85,24 +100,87 @@ impl LineBuffer {
         }
     }
 
+    /// Cycles to prime the buffer before the first window: (K-1) rows plus
+    /// (K-1) pixels of the next row, matching the RTL fill behaviour.
+    pub fn fill_cycles(&self, input_w: usize) -> u64 {
+        ((self.k - 1) * input_w + (self.k - 1)) as u64
+    }
+}
+
+/// Zero-copy linebuffer over a packed activation map (perf pass
+/// iteration 8): the map's rows *are* the buffer contents, so residency
+/// is pure index bookkeeping and `col` reads pixels straight out of the
+/// borrowed map — no per-pixel packing, no row copies. `advance_to` and
+/// `pushes` follow [`LineBuffer`]'s accounting exactly (every input
+/// pixel enters the shift registers once), keeping the energy-model
+/// counters bit-identical to the i8 ingest path.
+pub struct PackedLineBuffer<'a> {
+    k: usize,
+    map: &'a PackedMap,
+    /// Resident rows are `base_row .. base_row + rows` of the map.
+    base_row: isize,
+    rows: usize,
+    pub pushes: u64,
+}
+
+impl<'a> PackedLineBuffer<'a> {
+    pub fn new(k: usize, map: &'a PackedMap) -> Self {
+        PackedLineBuffer { k, map, base_row: 0, rows: 0, pushes: 0 }
+    }
+
+    /// Mark the window rows for output row `y` resident; returns the
+    /// number of newly fetched rows (1 in steady state).
+    pub fn advance_to(&mut self, y: usize) -> usize {
+        let h = self.map.h as isize;
+        let pad = (self.k / 2) as isize;
+        let lo = (y as isize - pad).max(0);
+        let hi = (y as isize + pad).min(h - 1);
+        let width = self.map.w as u64;
+        let mut fetched = 0;
+        if self.rows == 0 || lo > self.base_row + self.rows as isize - 1 {
+            // (re)fill from scratch
+            self.base_row = lo;
+            self.rows = (hi - lo + 1) as usize;
+            fetched = self.rows;
+            self.pushes += self.rows as u64 * width;
+        } else {
+            // drop rows that scrolled out
+            if self.base_row < lo {
+                self.rows -= (lo - self.base_row) as usize;
+                self.base_row = lo;
+            }
+            // fetch rows that scrolled in
+            while self.base_row + self.rows as isize <= hi {
+                self.rows += 1;
+                fetched += 1;
+                self.pushes += width;
+            }
+        }
+        fetched
+    }
+
     /// Extract the K-row input column at x for output row y (input rows
-    /// y-pad..y+pad, zero-padded outside [0, h)). `out` must have length
-    /// K. This is the column-stationary datapath's access pattern: one
-    /// fresh column per output pixel instead of a full K×K window.
-    pub fn col(&self, y: usize, x: usize, h: usize, out: &mut [PackedVec]) {
+    /// y-pad..y+pad, zero-padded outside the map). `out` must have
+    /// length K. This is the column-stationary datapath's access
+    /// pattern: one fresh column per output pixel.
+    pub fn col(&self, y: usize, x: usize, out: &mut [PackedVec]) {
+        let h = self.map.h as isize;
         let pad = (self.k / 2) as isize;
         for (ky, slot) in out.iter_mut().enumerate() {
             let sy = y as isize + ky as isize - pad;
-            *slot = if sy < 0 || sy >= h as isize {
+            *slot = if sy < 0 || sy >= h {
                 PackedVec::ZERO
             } else {
-                self.rows[(sy - self.base_row) as usize][x]
+                debug_assert!(
+                    sy >= self.base_row && sy < self.base_row + self.rows as isize,
+                    "row {sy} not resident"
+                );
+                *self.map.pixel(sy as usize, x)
             };
         }
     }
 
-    /// Cycles to prime the buffer before the first window: (K-1) rows plus
-    /// (K-1) pixels of the next row, matching the RTL fill behaviour.
+    /// Same fill-cost model as [`LineBuffer::fill_cycles`].
     pub fn fill_cycles(&self, input_w: usize) -> u64 {
         ((self.k - 1) * input_w + (self.k - 1)) as u64
     }
@@ -145,21 +223,25 @@ mod tests {
     }
 
     #[test]
-    fn cols_match_window_columns() {
+    fn packed_cols_match_window_columns() {
         let mut rng = Rng::new(24);
         for _ in 0..10 {
             let h = 3 + rng.below(8);
             let w = 3 + rng.below(8);
             let c = 1 + rng.below(32);
             let img = TritTensor::random(&[h, w, c], &mut rng, 0.4);
+            let map = PackedMap::from_trit(&img);
             let mut lb = LineBuffer::new(3, w);
+            let mut plb = PackedLineBuffer::new(3, &map);
             let mut window = vec![PackedVec::ZERO; 9];
             let mut col = [PackedVec::ZERO; 3];
             for y in 0..h {
-                lb.advance_to(y, &img);
+                let fetched = lb.advance_to(y, &img);
+                assert_eq!(plb.advance_to(y), fetched, "y {y}: fetch accounting");
+                assert_eq!(plb.pushes, lb.pushes, "y {y}: push accounting");
                 for x in 0..w {
                     lb.window(y, x, h, &mut window);
-                    lb.col(y, x, h, &mut col);
+                    plb.col(y, x, &mut col);
                     // col(y, x) is the middle column (kx = 1) of the
                     // window centred at (y, x)
                     for ky in 0..3 {
@@ -179,6 +261,14 @@ mod tests {
         assert_eq!(lb.advance_to(1, &img), 1); // row 2
         assert_eq!(lb.advance_to(2, &img), 1);
         assert_eq!(lb.advance_to(7, &img), 2); // jump: refill rows 6, 7
+
+        let map = PackedMap::from_trit(&img);
+        let mut plb = PackedLineBuffer::new(3, &map);
+        assert_eq!(plb.advance_to(0), 2);
+        assert_eq!(plb.advance_to(1), 1);
+        assert_eq!(plb.advance_to(2), 1);
+        assert_eq!(plb.advance_to(7), 2);
+        assert_eq!(plb.pushes, lb.pushes);
     }
 
     #[test]
@@ -197,5 +287,7 @@ mod tests {
     fn fill_cycles_formula() {
         let lb = LineBuffer::new(3, 32);
         assert_eq!(lb.fill_cycles(32), 2 * 32 + 2);
+        let map = PackedMap::zeros(4, 32, 2);
+        assert_eq!(PackedLineBuffer::new(3, &map).fill_cycles(32), 2 * 32 + 2);
     }
 }

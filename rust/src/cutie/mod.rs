@@ -28,14 +28,26 @@ pub use scheduler::Scheduler;
 pub use scheduler::TcnStrategy;
 pub use stats::{LayerStats, Phase, RunStats};
 
+/// µDMA ingress footprint of `numel` 2-bit trits, in bytes — the single
+/// source of truth for frame-ingress byte math (the scheduler's DMA
+/// cycle model and the SoC timeline both consume it; perf pass
+/// iteration 8 satellite). With packed frames this is exactly the
+/// packed-word payload: ⌈2·numel / 8⌉ bytes.
+#[inline]
+pub fn dma_ingress_bytes(numel: usize) -> u64 {
+    (numel * 2).div_ceil(8) as u64
+}
+
 /// Activity-counting mode for the datapath.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimMode {
     /// Count per-MAC toggling activity (needed for the energy model).
     Accurate,
     /// Originally skipped toggle counting; since the (pos, mask) bitplane
-    /// encoding (perf pass) activity comes for free on the conv datapath,
-    /// so Fast now differs from Accurate only on the classifier/ablation
-    /// paths. Kept as an explicit mode for benchmarks and API stability.
+    /// encoding (perf pass) activity comes for free, Fast reports the
+    /// same counters as Accurate on both the conv datapath and the
+    /// classifier (iteration 8 satellite), and differs only on the A2
+    /// direct-strided ablation path. Kept as an explicit mode for
+    /// benchmarks and API stability.
     Fast,
 }

@@ -20,7 +20,7 @@ use super::weightmem::{WeightAccess, WeightMemory};
 use super::{CutieConfig, SimMode};
 use crate::mapping;
 use crate::network::{Layer, LayerKind, Network};
-use crate::tensor::{IntTensor, TritTensor};
+use crate::tensor::{IntTensor, PackedMap, TritTensor};
 use crate::trit::ternarize;
 
 /// How TCN layers are executed.
@@ -114,45 +114,64 @@ impl Scheduler {
     }
 
     /// µDMA ingress of an input frame (2-bit trits over a `dma_bits` bus).
-    fn dma_in(&self, dims: &[usize]) -> (u64, u64) {
-        let trits: usize = dims.iter().product();
-        let bytes = (trits * 2).div_ceil(8) as u64;
+    fn dma_in(&self, numel: usize) -> (u64, u64) {
+        let bytes = super::dma_ingress_bytes(numel);
         let cycles = bytes.div_ceil((self.cfg.dma_bits / 8) as u64);
         (cycles, bytes)
     }
 
-    /// Run the CNN front-end on one frame. Ends either in the
+    /// Run the CNN front-end on one packed frame. Ends either in the
     /// pre-classifier map (cifar9) or a per-step feature vector (hybrid).
-    pub fn run_cnn(&mut self, net: &Network, frame: &TritTensor) -> Result<(TritTensor, RunStats)> {
-        ensure!(frame.dims.len() == 3, "frame must be (H, W, C)");
+    /// The frame lands in the activation memory once and every layer
+    /// reads its input straight out of the ping-pong buffer — no i8
+    /// conversion and no per-layer map clone anywhere in the loop (perf
+    /// pass iteration 8).
+    pub fn run_cnn(&mut self, net: &Network, frame: &PackedMap) -> Result<(PackedMap, RunStats)> {
         let mut run = RunStats::default();
-        let (dc, db) = self.dma_in(&frame.dims);
+        let (dc, db) = self.dma_in(frame.numel());
         run.dma_cycles = dc;
         run.dma_bytes = db;
         self.actmem.load_input(frame.clone())?;
 
-        let mut x = frame.clone();
+        // Globally pooled maps bypass the activation SRAM (they leave the
+        // datapath as feature vectors), so they are carried by value.
+        let mut carried: Option<PackedMap> = None;
         for layer in net.layers.iter().filter(|l| l.kind == LayerKind::Conv2d) {
             let prep = self
                 .prepared
                 .entry(layer.name.clone())
                 .or_insert_with(|| PreparedLayer::new(layer));
-            let mut result = run_prepared(prep, &x, &self.cfg, self.mode)?;
+            let mut result = {
+                let input = match carried.as_ref() {
+                    Some(m) => m,
+                    None => self.actmem.front().expect("input frame loaded"),
+                };
+                run_prepared(prep, input, &self.cfg, self.mode)?
+            };
             self.charge_weights(layer, &mut result.stats);
-            x = result.output;
-            if x.dims.len() == 3 {
-                self.actmem.store_output_and_swap(x.clone())?;
-            }
             run.layers.push(result.stats);
+            if layer.global_pool {
+                carried = Some(result.output);
+            } else {
+                self.actmem.store_output_and_swap(result.output)?;
+                carried = None;
+            }
         }
-        Ok((x, run))
+        let feat = match carried {
+            Some(m) => m,
+            None => self.actmem.front().expect("at least the input frame").clone(),
+        };
+        Ok((feat, run))
     }
 
-    /// Push a CNN feature vector into the TCN memory (§4). Vectors
-    /// narrower than the hardware's channel width ride zero-padded, as in
-    /// the RTL (unused channels are tied off).
-    pub fn push_feature(&mut self, feat: &TritTensor) {
-        let mut padded = feat.data.clone();
+    /// Push a CNN feature vector (a 1×1 packed map) into the TCN memory
+    /// (§4). Vectors narrower than the hardware's channel width ride
+    /// zero-padded, as in the RTL (unused channels are tied off).
+    pub fn push_feature(&mut self, feat: &PackedMap) {
+        // hard assert: silently truncating an HxW map to pixel (0,0)
+        // would serve plausible-looking but wrong labels
+        assert!(feat.h == 1 && feat.w == 1, "CNN must end in a 1×1 feature vector");
+        let mut padded = feat.pixel(0, 0).unpack(feat.c);
         padded.resize(self.cfg.channels, 0);
         self.tcn_mem.push(&padded);
     }
@@ -216,7 +235,7 @@ impl Scheduler {
     /// §4 mapping: wrap → plain 3×3 layer on the datapath → unwrap.
     fn run_tcn_mapped(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
         let t_len = seq.dims[0];
-        let z = mapping::map_input(seq, layer.dilation);
+        let z = PackedMap::from_trit(&mapping::map_input(seq, layer.dilation));
         let key = format!("{}::mapped", layer.name);
         let prep = self.prepared.entry(key).or_insert_with(|| {
             let mapped = Layer {
@@ -239,7 +258,7 @@ impl Scheduler {
         for n in 0..t_len {
             let (q, m) = (n / layer.dilation, n % layer.dilation);
             for co in 0..cout {
-                out.data[n * cout + co] = acc_trits.get3(q, m, co);
+                out.data[n * cout + co] = acc_trits.get_trit(q, m, co);
             }
         }
         stats.name = layer.name.clone();
@@ -315,19 +334,20 @@ impl Scheduler {
         Ok((out, stats))
     }
 
-    /// Full inference: cifar-style nets take (H, W, C); hybrid nets take a
-    /// (T, H, W, C) frame stack that streams through CNN → TCN memory →
-    /// TCN (the logits correspond to the last frame's window).
+    /// Full inference from an i8 input (API edge — the one place a whole
+    /// frame is packed): cifar-style nets take (H, W, C); hybrid nets
+    /// take a (T, H, W, C) frame stack that streams through CNN → TCN
+    /// memory → TCN (the logits correspond to the last frame's window).
     pub fn run_full(&mut self, net: &Network, input: &TritTensor) -> Result<(IntTensor, RunStats)> {
         if net.has_tcn() {
             ensure!(input.dims.len() == 4, "hybrid input must be (T, H, W, C)");
             let (t_len, h, w, c) = (input.dims[0], input.dims[1], input.dims[2], input.dims[3]);
             let mut run = RunStats::default();
             for t in 0..t_len {
-                let frame = TritTensor::from_vec(
+                let frame = PackedMap::from_trit(&TritTensor::from_vec(
                     &[h, w, c],
                     input.data[t * h * w * c..(t + 1) * h * w * c].to_vec(),
-                );
+                ));
                 let (feat, r) = self.run_cnn(net, &frame)?;
                 run.merge(r);
                 self.push_feature(&feat);
@@ -338,9 +358,9 @@ impl Scheduler {
         } else {
             ensure!(input.dims.len() == 3, "input must be (H, W, C)");
             let mut run = RunStats::default();
-            let (feat, r) = self.run_cnn(net, input)?;
+            let (feat, r) = self.run_cnn(net, &PackedMap::from_trit(input))?;
             run.merge(r);
-            let flat = TritTensor::from_vec(&[feat.numel()], feat.data.clone());
+            let flat = TritTensor::from_vec(&[feat.numel()], feat.unpack_data());
             let dense = net.layers.last().unwrap();
             let channels = self.cfg.channels;
             let prep = self
@@ -353,10 +373,10 @@ impl Scheduler {
         }
     }
 
-    /// One serving step of the hybrid pipeline: frame in → CNN → TCN
-    /// memory push → TCN window inference → logits. This is the §5
+    /// One serving step of the hybrid pipeline: packed frame in → CNN →
+    /// TCN memory push → TCN window inference → logits. This is the §5
     /// autonomous data-to-label flow.
-    pub fn serve_frame(&mut self, net: &Network, frame: &TritTensor) -> Result<(IntTensor, RunStats)> {
+    pub fn serve_frame(&mut self, net: &Network, frame: &PackedMap) -> Result<(IntTensor, RunStats)> {
         let (feat, mut run) = self.run_cnn(net, frame)?;
         self.push_feature(&feat);
         let (logits, r) = self.run_tcn(net)?;
@@ -413,8 +433,9 @@ mod tests {
     fn direct_strategy_same_result_more_stalls() {
         let net = dvs_hybrid_random(16, 85, 0.4);
         let mut rng = Rng::new(86);
-        let seqs: Vec<TritTensor> =
-            (0..4).map(|_| TritTensor::random(&[64, 64, 2], &mut rng, 0.8)).collect();
+        let seqs: Vec<PackedMap> = (0..4)
+            .map(|_| PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.8)))
+            .collect();
 
         let mut mapped = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
         let mut direct = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate)
@@ -455,7 +476,7 @@ mod tests {
     fn serve_frame_pushes_tcn_memory() {
         let net = dvs_hybrid_random(16, 89, 0.5);
         let mut rng = Rng::new(90);
-        let frame = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        let frame = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
         let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
         assert!(sched.tcn_mem.is_empty());
         sched.serve_frame(&net, &frame).unwrap();
@@ -488,7 +509,7 @@ mod tests {
         let net = dvs_hybrid_random(16, 95, 0.5);
         let mut rng = Rng::new(96);
         let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
-        let f = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
         sched.serve_frame(&net, &f).unwrap();
         // 5 conv + 4 mapped-TCN kernels, 1 packed classifier
         assert_eq!(sched.cached_layers(), (9, 1));

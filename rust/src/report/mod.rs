@@ -11,7 +11,7 @@ use crate::baselines;
 use crate::cutie::{CutieConfig, RunStats, Scheduler, SimMode, TcnStrategy};
 use crate::energy::{self, evaluate, EnergyParams, EnergyReport};
 use crate::network::{cifar9_random, dvs_hybrid_random, Network};
-use crate::tensor::TritTensor;
+use crate::tensor::{PackedMap, TritTensor};
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
 
@@ -24,7 +24,7 @@ pub fn cifar_workload() -> (Network, TritTensor) {
     (net, input)
 }
 
-pub fn dvs_workload(frames: usize) -> (Network, Vec<TritTensor>) {
+pub fn dvs_workload(frames: usize) -> (Network, Vec<PackedMap>) {
     let net = dvs_hybrid_random(96, 3, 0.5);
     let mut src = crate::coordinator::DvsSource::new(64, 11, crate::coordinator::GestureClass(3));
     let frames = (0..frames).map(|_| src.next_frame()).collect();

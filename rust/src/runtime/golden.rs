@@ -7,7 +7,7 @@ use anyhow::{ensure, Result};
 use super::{to_i32, LoadedModel, Runtime};
 use crate::cutie::{CutieConfig, Scheduler, SimMode};
 use crate::network::Network;
-use crate::tensor::TritTensor;
+use crate::tensor::{PackedMap, TritTensor};
 
 /// Result of one co-simulation check.
 #[derive(Debug)]
@@ -55,7 +55,7 @@ pub fn check_hybrid(
             &[h, w, c],
             frames.data[t * h * w * c..(t + 1) * h * w * c].to_vec(),
         );
-        let (logits, _) = sched.serve_frame(net, &frame)?;
+        let (logits, _) = sched.serve_frame(net, &PackedMap::from_trit(&frame))?;
         sim_logits = Some(logits);
         let feat = cnn.run_trits(&frame)?;
         ensure!(feat.len() == feat_ch, "cnn artifact feature width");

@@ -1,8 +1,13 @@
 //! Dense tensors: `TritTensor` (i8 trits) and `IntTensor` (i32
-//! accumulators), row-major with HWC layout for feature maps, plus the
-//! `.ttn` interchange reader/writer (`ttn` submodule).
+//! accumulators), row-major with HWC layout for feature maps, the
+//! bit-packed activation map (`packed` submodule) that is the
+//! simulator's native inter-layer currency, plus the `.ttn` interchange
+//! reader/writer (`ttn` submodule).
 
+pub mod packed;
 pub mod ttn;
+
+pub use packed::PackedMap;
 
 use crate::trit::PackedVec;
 

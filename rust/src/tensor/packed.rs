@@ -1,0 +1,218 @@
+//! Bit-packed activation maps: the native inter-layer currency of the
+//! simulator since perf pass iteration 8 (see EXPERIMENTS.md §Perf).
+//!
+//! A `PackedMap` is an H×W feature map whose pixels are (pos, mask)
+//! bitplane channel vectors ([`PackedVec`]) — the same 2-bit-per-trit
+//! encoding the activation SRAM holds in silicon and the dot kernels
+//! already consume. Keeping feature maps packed end to end removes the
+//! per-pixel i8↔bitplane conversion tax the i8 `TritTensor` currency
+//! paid on every linebuffer fetch and every ternarization write-back,
+//! and shrinks inter-layer memory traffic to the hardware's 2·C bits
+//! per pixel. i8 tensors remain the representation at API edges only
+//! (network weights, the reference executor, `.ttn` interchange).
+
+use crate::trit::{PackedVec, MAX_CHANNELS};
+
+use super::TritTensor;
+
+/// H×W pixels of packed C-channel trit vectors (HWC feature map).
+///
+/// Invariants: `pixels.len() == h * w`, and every pixel's plane bits at
+/// positions ≥ `c` are clear (so whole-word bitwise ops — pooling, dots,
+/// column packing — never see stale channels).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedMap {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Row-major pixel words; one `PackedVec` = one activation-SRAM word.
+    pub pixels: Vec<PackedVec>,
+}
+
+impl PackedMap {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        assert!(c <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
+        PackedMap { h, w, c, pixels: vec![PackedVec::ZERO; h * w] }
+    }
+
+    /// Pack an i8 map (API-edge conversion). Accepts an (H, W, C) feature
+    /// map or a flat (C,) feature vector, which becomes a 1×1 map.
+    pub fn from_trit(t: &TritTensor) -> Self {
+        match t.dims.as_slice() {
+            &[h, w, c] => {
+                let mut m = PackedMap::zeros(h, w, c);
+                for y in 0..h {
+                    for x in 0..w {
+                        m.pixels[y * w + x] = t.pack_pixel(y, x);
+                    }
+                }
+                m
+            }
+            &[c] => PackedMap { h: 1, w: 1, c, pixels: vec![PackedVec::pack(&t.data)] },
+            other => panic!("PackedMap::from_trit: unsupported dims {other:?}"),
+        }
+    }
+
+    /// Unpack to an i8 (H, W, C) tensor (API-edge conversion).
+    pub fn to_trit(&self) -> TritTensor {
+        TritTensor::from_vec(&[self.h, self.w, self.c], self.unpack_data())
+    }
+
+    /// Unpack to flat i8 trits in HWC order (the flatten the classifier
+    /// consumes).
+    pub fn unpack_data(&self) -> Vec<i8> {
+        let mut data = Vec::with_capacity(self.numel());
+        for px in &self.pixels {
+            data.extend(px.unpack(self.c));
+        }
+        data
+    }
+
+    /// Trits in the map (h·w·c).
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    #[inline]
+    pub fn pixel(&self, y: usize, x: usize) -> &PackedVec {
+        &self.pixels[y * self.w + x]
+    }
+
+    /// Borrow input row `y` — the zero-copy linebuffer access path.
+    #[inline]
+    pub fn row(&self, y: usize) -> &[PackedVec] {
+        &self.pixels[y * self.w..(y + 1) * self.w]
+    }
+
+    #[inline]
+    pub fn get_trit(&self, y: usize, x: usize, ch: usize) -> i8 {
+        debug_assert!(ch < self.c);
+        self.pixel(y, x).get(ch)
+    }
+
+    #[inline]
+    pub fn set_trit(&mut self, y: usize, x: usize, ch: usize, v: i8) {
+        debug_assert!(ch < self.c);
+        self.pixels[y * self.w + x].set(ch, v);
+    }
+
+    /// Fraction of zero trits.
+    pub fn sparsity(&self) -> f64 {
+        if self.pixels.is_empty() || self.c == 0 {
+            return 0.0;
+        }
+        let nz: u64 = self.pixels.iter().map(|p| p.count_nonzero() as u64).sum();
+        1.0 - nz as f64 / self.numel() as f64
+    }
+
+    /// 2×2/2 max-pool on packed planes: two bitwise ops per word per
+    /// pairwise ternary max ([`PackedVec::max`]), no unpacking. Matches
+    /// `reference::maxpool2x2` trit for trit.
+    pub fn maxpool2x2(&self) -> PackedMap {
+        assert!(self.h % 2 == 0 && self.w % 2 == 0, "odd pooling input {}x{}", self.h, self.w);
+        let (oh, ow) = (self.h / 2, self.w / 2);
+        let mut out = PackedMap::zeros(oh, ow, self.c);
+        for y in 0..oh {
+            for x in 0..ow {
+                let top = self.pixel(2 * y, 2 * x).max(self.pixel(2 * y, 2 * x + 1));
+                let bot = self.pixel(2 * y + 1, 2 * x).max(self.pixel(2 * y + 1, 2 * x + 1));
+                out.pixels[y * ow + x] = top.max(&bot);
+            }
+        }
+        out
+    }
+
+    /// Global max-pool to a 1×1 map (the CNN→TCN feature vector).
+    /// Matches `reference::global_maxpool` trit for trit.
+    pub fn global_maxpool(&self) -> PackedMap {
+        let mut acc = self.pixels[0];
+        for px in &self.pixels[1..] {
+            acc = acc.max(px);
+        }
+        PackedMap { h: 1, w: 1, c: self.c, pixels: vec![acc] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::reference;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrip_and_accessors() {
+        let mut rng = Rng::new(41);
+        for &(h, w, c) in &[(1usize, 1usize, 1usize), (4, 6, 17), (5, 3, 96), (2, 2, 128)] {
+            let t = TritTensor::random(&[h, w, c], &mut rng, 0.4);
+            let m = PackedMap::from_trit(&t);
+            assert_eq!(m.to_trit(), t);
+            assert_eq!(m.numel(), t.numel());
+            for y in 0..h {
+                for x in 0..w {
+                    assert_eq!(*m.pixel(y, x), t.pack_pixel(y, x));
+                    assert_eq!(m.row(y)[x], t.pack_pixel(y, x));
+                    for ch in 0..c {
+                        assert_eq!(m.get_trit(y, x, ch), t.get3(y, x, ch));
+                    }
+                }
+            }
+            assert!((m.sparsity() - t.sparsity()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn vector_packs_as_single_pixel() {
+        let t = TritTensor::from_vec(&[5], vec![1, -1, 0, 0, 1]);
+        let m = PackedMap::from_trit(&t);
+        assert_eq!((m.h, m.w, m.c), (1, 1, 5));
+        assert_eq!(m.unpack_data(), t.data);
+    }
+
+    #[test]
+    fn set_trit_roundtrip() {
+        let mut m = PackedMap::zeros(3, 3, 8);
+        m.set_trit(1, 2, 5, -1);
+        m.set_trit(2, 0, 0, 1);
+        assert_eq!(m.get_trit(1, 2, 5), -1);
+        assert_eq!(m.get_trit(2, 0, 0), 1);
+        m.set_trit(1, 2, 5, 0);
+        assert_eq!(m.get_trit(1, 2, 5), 0);
+    }
+
+    #[test]
+    fn packed_maxpool_matches_reference() {
+        let mut rng = Rng::new(42);
+        for case in 0..40 {
+            let h = 2 * (1 + rng.below(5));
+            let w = 2 * (1 + rng.below(5));
+            let c = 1 + rng.below(MAX_CHANNELS);
+            let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+            let t = TritTensor::random(&[h, w, c], &mut rng, zf);
+            let want = reference::maxpool2x2(&t);
+            let got = PackedMap::from_trit(&t).maxpool2x2();
+            assert_eq!(got.to_trit(), want, "h {h} w {w} c {c} case {case}");
+        }
+    }
+
+    #[test]
+    fn packed_global_maxpool_matches_reference() {
+        let mut rng = Rng::new(43);
+        for case in 0..40 {
+            let h = 1 + rng.below(8);
+            let w = 1 + rng.below(8);
+            let c = 1 + rng.below(MAX_CHANNELS);
+            let zf = [0.0, 0.5, 0.95, 1.0][case % 4];
+            let t = TritTensor::random(&[h, w, c], &mut rng, zf);
+            let want = reference::global_maxpool(&t); // dims (C,)
+            let got = PackedMap::from_trit(&t).global_maxpool();
+            assert_eq!((got.h, got.w, got.c), (1, 1, c));
+            assert_eq!(got.unpack_data(), want.data, "h {h} w {w} c {c} case {case}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "odd pooling input")]
+    fn maxpool_rejects_odd() {
+        PackedMap::zeros(3, 4, 2).maxpool2x2();
+    }
+}

@@ -141,6 +141,23 @@ impl PackedVec {
         }
         acc
     }
+
+    /// Channel-wise ternary max — the packed pooling primitive (perf pass
+    /// iteration 8). On the (pos, mask) planes `max(a, b)` is two bitwise
+    /// ops per word: the result is +1 iff either operand is +1
+    /// (`pos = a.pos | b.pos`) and non-zero unless one operand is 0 and
+    /// neither is +1 (`mask = pos | (a.mask & b.mask)` — both-(−1) keeps
+    /// the mask bit, anything touching a 0 clears it).
+    #[inline]
+    pub fn max(&self, other: &PackedVec) -> PackedVec {
+        let mut out = PackedVec::ZERO;
+        for w in 0..WORDS {
+            let pos = self.pos[w] | other.pos[w];
+            out.pos[w] = pos;
+            out.mask[w] = pos | (self.mask[w] & other.mask[w]);
+        }
+        out
+    }
 }
 
 /// Words in a dense 3-row column vector (3 × MAX_CHANNELS bits).
@@ -282,6 +299,30 @@ pub fn ternarize(acc: i32, lo: i32, hi: i32) -> i8 {
     } else {
         0
     }
+}
+
+/// Branchless vectorized [`ternarize`] (perf pass iteration 8): threshold
+/// one pixel's accumulator row (≤ 128 channels, one accumulator per
+/// active OCU) straight into (pos, mask) bitplanes. Channel i of the
+/// result is +1 iff `acc[i] > hi[i]` and non-zero iff it is +1 or
+/// `acc[i] < lo[i]` — exactly the scalar two-threshold contract, but the
+/// output trits are written as packed words with no per-trit branch or
+/// i8 store. With the contract `lo <= hi + 1` the two comparisons are
+/// mutually exclusive, so `pos ⊆ mask` holds by construction.
+#[inline]
+pub fn ternarize_packed(acc: &[i32], lo: &[i32], hi: &[i32]) -> PackedVec {
+    debug_assert!(acc.len() <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
+    debug_assert_eq!(acc.len(), lo.len());
+    debug_assert_eq!(acc.len(), hi.len());
+    let mut v = PackedVec::ZERO;
+    for (i, &a) in acc.iter().enumerate() {
+        debug_assert!(lo[i] <= hi[i] + 1, "threshold contract violated: lo {} hi {}", lo[i], hi[i]);
+        let p = (a > hi[i]) as u64;
+        let nz = p | ((a < lo[i]) as u64);
+        v.pos[i / 64] |= p << (i % 64);
+        v.mask[i / 64] |= nz << (i % 64);
+    }
+    v
 }
 
 #[cfg(test)]
@@ -429,6 +470,48 @@ mod tests {
         assert_eq!(TritCol::words(96), 5);
         assert_eq!(TritCol::words(128), 6);
         assert_eq!(TritCol::words(2), 1);
+    }
+
+    #[test]
+    fn ternary_max_matches_scalar() {
+        let mut rng = Rng::new(14);
+        for case in 0..300 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+            let a: Vec<i8> = (0..n).map(|_| rng.trit(zf)).collect();
+            let b: Vec<i8> = (0..n).map(|_| rng.trit(zf)).collect();
+            let want: Vec<i8> = a.iter().zip(&b).map(|(&x, &y)| x.max(y)).collect();
+            let got = PackedVec::pack(&a).max(&PackedVec::pack(&b));
+            assert_eq!(got.unpack(n), want, "n {n} case {case}");
+            for w in 0..2 {
+                assert_eq!(got.pos[w] & !got.mask[w], 0, "pos ⊆ mask violated");
+            }
+        }
+    }
+
+    #[test]
+    fn ternarize_packed_matches_scalar() {
+        let mut rng = Rng::new(15);
+        for case in 0..300 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let acc: Vec<i32> =
+                (0..n).map(|_| rng.below(41) as i32 - 20).collect();
+            let (lo, hi): (Vec<i32>, Vec<i32>) = (0..n)
+                .map(|_| {
+                    let hi = rng.below(9) as i32 - 4;
+                    // exercise the empty zero-region (lo = hi + 1) too
+                    let lo = hi + 1 - rng.below(8) as i32;
+                    (lo, hi)
+                })
+                .unzip();
+            let want: Vec<i8> =
+                (0..n).map(|i| ternarize(acc[i], lo[i], hi[i])).collect();
+            let got = ternarize_packed(&acc, &lo, &hi);
+            assert_eq!(got.unpack(n), want, "n {n} case {case}");
+            for w in 0..2 {
+                assert_eq!(got.pos[w] & !got.mask[w], 0, "pos ⊆ mask violated");
+            }
+        }
     }
 
     #[test]

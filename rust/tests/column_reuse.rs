@@ -1,17 +1,22 @@
-//! Property tests for the column-stationary datapath (perf pass
-//! iteration 7): across sizes, sparsities (including 0.95 DVS-like
-//! maps) and channel widths C_in ∈ {16, 64, 96, 128}, the
-//! column-stationary loop must produce the **same output trits and the
-//! same activity counters** — `mac_toggles`, `compute_cycles`,
-//! `act_reads`, `act_writes`, `mac_idle`, `hw_ops` — as both the
-//! retained window-stationary loop and the functional reference
-//! executor. The equivalence is what lets the energy model stay
-//! calibrated while the software loop gets faster.
+//! Property tests for the packed column-stationary datapath (perf pass
+//! iterations 7+8): across sizes, sparsities (including 0.95 DVS-like
+//! maps) and channel widths C_in ∈ {16, 64, 96, 128}, the packed loop —
+//! `PackedMap` in, `PackedMap` out, packed ternarize, packed pooling —
+//! must produce the **same output trits and the same activity
+//! counters** — `mac_toggles`, `compute_cycles`, `act_reads`,
+//! `act_writes`, `mac_idle`, `hw_ops` — as both the retained i8
+//! window-stationary loop and the functional reference executor. The
+//! equivalence is what lets the energy model stay calibrated while the
+//! software loop gets faster. (The whole-network packed-vs-i8 sweep,
+//! including the EXPERIMENTS.md anchor workload, lives in
+//! `tests/packed.rs`.)
 
-use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, LayerResult, PreparedLayer};
+use tcn_cutie::cutie::datapath::{
+    run_prepared, run_prepared_window, LayerResult, LayerResultI8, PreparedLayer,
+};
 use tcn_cutie::cutie::{CutieConfig, SimMode};
 use tcn_cutie::network::{reference, Layer, LayerKind};
-use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::tensor::{PackedMap, TritTensor};
 use tcn_cutie::util::rng::Rng;
 
 fn conv_layer(name: &str, cin: usize, cout: usize, rng: &mut Rng, zf: f64, pool: bool) -> Layer {
@@ -32,25 +37,25 @@ fn conv_layer(name: &str, cin: usize, cout: usize, rng: &mut Rng, zf: f64, pool:
     }
 }
 
-fn assert_equivalent(col: &LayerResult, win: &LayerResult, ctx: &str) {
-    assert_eq!(col.output, win.output, "{ctx}: output trits");
-    assert_eq!(col.stats.mac_toggles, win.stats.mac_toggles, "{ctx}: mac_toggles");
-    assert_eq!(col.stats.mac_idle, win.stats.mac_idle, "{ctx}: mac_idle");
-    assert_eq!(col.stats.compute_cycles, win.stats.compute_cycles, "{ctx}: compute_cycles");
-    assert_eq!(col.stats.act_reads, win.stats.act_reads, "{ctx}: act_reads");
-    assert_eq!(col.stats.act_writes, win.stats.act_writes, "{ctx}: act_writes");
-    assert_eq!(col.stats.lb_fill_cycles, win.stats.lb_fill_cycles, "{ctx}: lb_fill_cycles");
-    assert_eq!(col.stats.lb_pushes, win.stats.lb_pushes, "{ctx}: lb_pushes");
-    assert_eq!(col.stats.hw_ops, win.stats.hw_ops, "{ctx}: hw_ops");
-    assert_eq!(col.stats.alg_macs, win.stats.alg_macs, "{ctx}: alg_macs");
-    assert_eq!(col.stats.drain_cycles, win.stats.drain_cycles, "{ctx}: drain_cycles");
-    assert_eq!(col.stats.stall_cycles, win.stats.stall_cycles, "{ctx}: stall_cycles");
+fn assert_equivalent(packed: &LayerResult, i8_run: &LayerResultI8, ctx: &str) {
+    assert_eq!(packed.output.to_trit(), i8_run.output, "{ctx}: output trits");
+    assert_eq!(packed.stats.mac_toggles, i8_run.stats.mac_toggles, "{ctx}: mac_toggles");
+    assert_eq!(packed.stats.mac_idle, i8_run.stats.mac_idle, "{ctx}: mac_idle");
+    assert_eq!(packed.stats.compute_cycles, i8_run.stats.compute_cycles, "{ctx}: compute_cycles");
+    assert_eq!(packed.stats.act_reads, i8_run.stats.act_reads, "{ctx}: act_reads");
+    assert_eq!(packed.stats.act_writes, i8_run.stats.act_writes, "{ctx}: act_writes");
+    assert_eq!(packed.stats.lb_fill_cycles, i8_run.stats.lb_fill_cycles, "{ctx}: lb_fill_cycles");
+    assert_eq!(packed.stats.lb_pushes, i8_run.stats.lb_pushes, "{ctx}: lb_pushes");
+    assert_eq!(packed.stats.hw_ops, i8_run.stats.hw_ops, "{ctx}: hw_ops");
+    assert_eq!(packed.stats.alg_macs, i8_run.stats.alg_macs, "{ctx}: alg_macs");
+    assert_eq!(packed.stats.drain_cycles, i8_run.stats.drain_cycles, "{ctx}: drain_cycles");
+    assert_eq!(packed.stats.stall_cycles, i8_run.stats.stall_cycles, "{ctx}: stall_cycles");
 }
 
-/// The headline property: output AND counters match the window loop and
-/// the reference executor across channel widths and sparsities.
+/// The headline property: output AND counters match the i8 window loop
+/// and the reference executor across channel widths and sparsities.
 #[test]
-fn column_matches_window_and_reference_across_geometries() {
+fn packed_matches_i8_window_and_reference_across_geometries() {
     let mut rng = Rng::new(7001);
     for &cin in &[16usize, 64, 96, 128] {
         // widen the datapath for the 128-channel case (original CUTIE
@@ -63,14 +68,15 @@ fn column_matches_window_and_reference_across_geometries() {
             let layer = conv_layer(&format!("c{cin}_{case}"), cin, cout, &mut rng, zf, pool);
             let hw = 2 * (2 + rng.below(6)); // even (pooling-safe), 4..14
             let input = TritTensor::random(&[hw, hw, cin], &mut rng, zf);
+            let packed_in = PackedMap::from_trit(&input);
             let prep = PreparedLayer::new(&layer);
             for mode in [SimMode::Accurate, SimMode::Fast] {
                 let ctx = format!("cin={cin} zf={zf} hw={hw} cout={cout} mode={mode:?}");
-                let col = run_prepared(&prep, &input, &cfg, mode).unwrap();
+                let packed = run_prepared(&prep, &packed_in, &cfg, mode).unwrap();
                 let win = run_prepared_window(&prep, &input, &cfg, mode).unwrap();
-                assert_equivalent(&col, &win, &ctx);
+                assert_equivalent(&packed, &win, &ctx);
                 let want = reference::run_conv_layer(&layer, &input);
-                assert_eq!(col.output, want, "{ctx}: reference executor");
+                assert_eq!(packed.output.to_trit(), want, "{ctx}: reference executor");
             }
         }
     }
@@ -79,7 +85,7 @@ fn column_matches_window_and_reference_across_geometries() {
 /// Degenerate and rectangular geometries: single-row, single-column and
 /// narrow maps exercise the column loop's output-column clipping.
 #[test]
-fn column_loop_edge_geometries() {
+fn packed_loop_edge_geometries() {
     let mut rng = Rng::new(7002);
     let cfg = CutieConfig::kraken();
     for &(h, w) in &[(1usize, 1usize), (1, 5), (5, 1), (2, 7), (7, 2), (3, 3)] {
@@ -90,10 +96,12 @@ fn column_loop_edge_geometries() {
             let input = TritTensor::random(&[h, w, cin], &mut rng, zf);
             let prep = PreparedLayer::new(&layer);
             let ctx = format!("h={h} w={w} cin={cin} cout={cout} zf={zf}");
-            let col = run_prepared(&prep, &input, &cfg, SimMode::Accurate).unwrap();
+            let packed =
+                run_prepared(&prep, &PackedMap::from_trit(&input), &cfg, SimMode::Accurate)
+                    .unwrap();
             let win = run_prepared_window(&prep, &input, &cfg, SimMode::Accurate).unwrap();
-            assert_equivalent(&col, &win, &ctx);
-            assert_eq!(col.output, reference::run_conv_layer(&layer, &input), "{ctx}");
+            assert_equivalent(&packed, &win, &ctx);
+            assert_eq!(packed.output.to_trit(), reference::run_conv_layer(&layer, &input), "{ctx}");
         }
     }
 }
@@ -101,15 +109,15 @@ fn column_loop_edge_geometries() {
 /// All-zero inputs and all-zero weights: the whole-column sparsity skip
 /// must leave both acc and toggle counters at exactly zero activity.
 #[test]
-fn column_loop_zero_operands() {
+fn packed_loop_zero_operands() {
     let mut rng = Rng::new(7003);
     let cfg = CutieConfig::kraken();
     let layer = conv_layer("z", 32, 16, &mut rng, 0.3, false);
-    let zeros = TritTensor::zeros(&[6, 6, 32]);
+    let zeros = PackedMap::zeros(6, 6, 32);
     let prep = PreparedLayer::new(&layer);
-    let col = run_prepared(&prep, &zeros, &cfg, SimMode::Accurate).unwrap();
-    assert_eq!(col.stats.mac_toggles, 0);
-    assert!(col.output.data.iter().all(|&t| t == 0));
+    let packed = run_prepared(&prep, &zeros, &cfg, SimMode::Accurate).unwrap();
+    assert_eq!(packed.stats.mac_toggles, 0);
+    assert!(packed.output.unpack_data().iter().all(|&t| t == 0));
 
     let zero_w = Layer {
         weights: TritTensor::zeros(&[3, 3, 32, 16]),
@@ -117,23 +125,29 @@ fn column_loop_zero_operands() {
     };
     let input = TritTensor::random(&[6, 6, 32], &mut rng, 0.2);
     let prep_zw = PreparedLayer::new(&zero_w);
-    let col_zw = run_prepared(&prep_zw, &input, &cfg, SimMode::Accurate).unwrap();
+    let packed_zw =
+        run_prepared(&prep_zw, &PackedMap::from_trit(&input), &cfg, SimMode::Accurate).unwrap();
     let win_zw = run_prepared_window(&prep_zw, &input, &cfg, SimMode::Accurate).unwrap();
-    assert_eq!(col_zw.stats.mac_toggles, 0);
-    assert_equivalent(&col_zw, &win_zw, "zero weights");
+    assert_eq!(packed_zw.stats.mac_toggles, 0);
+    assert_equivalent(&packed_zw, &win_zw, "zero weights");
 }
 
 /// Multi-row sharding must not change results or counters: force maps
 /// large enough to shard, then compare against the single-threaded run.
 #[test]
-fn column_loop_sharding_invariant() {
+fn packed_loop_sharding_invariant() {
     let mut rng = Rng::new(7004);
     let parallel = CutieConfig::kraken();
     let serial = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
     let layer = conv_layer("s", 96, 96, &mut rng, 0.33, false);
-    let input = TritTensor::random(&[32, 32, 96], &mut rng, 0.4);
+    let input = PackedMap::from_trit(&TritTensor::random(&[32, 32, 96], &mut rng, 0.4));
     let prep = PreparedLayer::new(&layer);
     let par = run_prepared(&prep, &input, &parallel, SimMode::Accurate).unwrap();
     let ser = run_prepared(&prep, &input, &serial, SimMode::Accurate).unwrap();
-    assert_equivalent(&par, &ser, "sharded vs serial");
+    assert_eq!(par.output, ser.output, "sharded vs serial: output");
+    assert_eq!(par.stats.mac_toggles, ser.stats.mac_toggles, "sharded vs serial: mac_toggles");
+    assert_eq!(par.stats.mac_idle, ser.stats.mac_idle, "sharded vs serial: mac_idle");
+    assert_eq!(par.stats.compute_cycles, ser.stats.compute_cycles, "sharded vs serial: cycles");
+    assert_eq!(par.stats.act_reads, ser.stats.act_reads, "sharded vs serial: act_reads");
+    assert_eq!(par.stats.act_writes, ser.stats.act_writes, "sharded vs serial: act_writes");
 }

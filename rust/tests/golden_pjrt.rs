@@ -56,7 +56,7 @@ fn pallas_first_layer_golden() {
     let cfg = CutieConfig::kraken();
     let sim =
         tcn_cutie::cutie::datapath::run_conv_layer(layer, &input, &cfg, SimMode::Fast).unwrap();
-    assert_eq!(sim.output.data, xla_out, "pallas kernel vs datapath");
+    assert_eq!(sim.output.unpack_data(), xla_out, "pallas kernel vs datapath");
 
     let refo = reference::run_conv_layer(layer, &input);
     assert_eq!(refo.data, xla_out, "pallas kernel vs reference executor");

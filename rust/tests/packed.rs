@@ -1,0 +1,197 @@
+//! Property tests for the packed activation dataflow (perf pass
+//! iteration 8): the new packed primitives — branchless vectorized
+//! ternarize and bitwise packed max-pooling — against their scalar
+//! references across channel widths straddling the 64-bit word
+//! boundaries (c ∈ {1, 21, 63, 64, 65, 96, 128}) and sparsities up to
+//! 0.95, plus whole-network packed-vs-i8 equivalence: labels, logits
+//! and every LayerStats activity counter must be bit-identical between
+//! the packed pipeline and the retained i8 window-stationary dataflow.
+//! The EXPERIMENTS.md §Anchors workload (seeded `cifar9_random(96, 1,
+//! 0.33)`, 0.3-sparse input — 45.14 M MAC toggles, 4 424 activation
+//! words, 3 189 cycles) is pinned the same way, so the energy-model
+//! calibration cannot drift under the representation change.
+
+use tcn_cutie::cutie::datapath::{run_dense_layer, run_prepared_window, PreparedLayer};
+use tcn_cutie::cutie::{CutieConfig, LayerStats, Scheduler, SimMode};
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, reference, Network};
+use tcn_cutie::tensor::{IntTensor, PackedMap, TritTensor};
+use tcn_cutie::trit::{ternarize, ternarize_packed};
+use tcn_cutie::util::rng::Rng;
+
+const WIDTHS: [usize; 7] = [1, 21, 63, 64, 65, 96, 128];
+const SPARSITIES: [f64; 4] = [0.0, 0.33, 0.66, 0.95];
+
+#[test]
+fn vectorized_ternarize_matches_scalar_across_word_boundaries() {
+    let mut rng = Rng::new(8001);
+    for &c in &WIDTHS {
+        for case in 0..40 {
+            // accumulators in a window around the thresholds, including
+            // the empty-zero-region contract lo = hi + 1
+            let acc: Vec<i32> = (0..c).map(|_| rng.below(61) as i32 - 30).collect();
+            let (lo, hi): (Vec<i32>, Vec<i32>) = (0..c)
+                .map(|_| {
+                    let hi = rng.below(21) as i32 - 10;
+                    let lo = hi + 1 - rng.below(20) as i32;
+                    (lo, hi)
+                })
+                .unzip();
+            let packed = ternarize_packed(&acc, &lo, &hi);
+            for i in 0..c {
+                assert_eq!(
+                    packed.get(i),
+                    ternarize(acc[i], lo[i], hi[i]),
+                    "c={c} case={case} i={i}"
+                );
+            }
+            // invariant the bitwise downstream ops rely on: pos ⊆ mask
+            // and no stale bits above channel c
+            assert_eq!(packed.unpack(c).len(), c);
+            let repacked = tcn_cutie::trit::PackedVec::pack(&packed.unpack(c));
+            assert_eq!(packed, repacked, "c={c} case={case}: bits above c must be clear");
+        }
+    }
+}
+
+#[test]
+fn packed_maxpool_matches_scalar_across_word_boundaries() {
+    let mut rng = Rng::new(8002);
+    for &c in &WIDTHS {
+        for (case, &zf) in SPARSITIES.iter().enumerate() {
+            let h = 2 * (1 + rng.below(6));
+            let w = 2 * (1 + rng.below(6));
+            let t = TritTensor::random(&[h, w, c], &mut rng, zf);
+            let m = PackedMap::from_trit(&t);
+            let want = reference::maxpool2x2(&t);
+            assert_eq!(m.maxpool2x2().to_trit(), want, "c={c} zf={zf} case={case}");
+            let gwant = reference::global_maxpool(&t);
+            assert_eq!(m.global_maxpool().unpack_data(), gwant.data, "c={c} zf={zf} global");
+        }
+    }
+}
+
+/// Run a cifar-style network through the retained i8 dataflow: i8 maps
+/// between layers, window-stationary loop, scalar pooling — the
+/// pre-iteration-8 pipeline, reconstructed layer by layer.
+fn run_net_i8(
+    net: &Network,
+    input: &TritTensor,
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> (IntTensor, Vec<LayerStats>) {
+    let mut x = input.clone();
+    let mut layers = Vec::new();
+    for layer in net.conv_layers() {
+        let prep = PreparedLayer::new(layer);
+        let r = run_prepared_window(&prep, &x, cfg, mode).unwrap();
+        x = r.output;
+        layers.push(r.stats);
+    }
+    let flat = TritTensor::from_vec(&[x.numel()], x.data.clone());
+    let dense = net.layers.last().unwrap();
+    let (logits, stats) = run_dense_layer(dense, &flat, cfg, mode).unwrap();
+    layers.push(stats);
+    (logits, layers)
+}
+
+/// Datapath-derived counters that must be representation-invariant.
+/// (Weight-memory charges and TCN-port reads are scheduler bookkeeping
+/// on top of the datapath and are excluded — the i8 chain below runs
+/// the bare datapath.)
+fn assert_layer_counters_equal(packed: &LayerStats, i8_stats: &LayerStats, ctx: &str) {
+    assert_eq!(packed.name, i8_stats.name, "{ctx}: layer order");
+    assert_eq!(packed.mac_toggles, i8_stats.mac_toggles, "{ctx}: mac_toggles");
+    assert_eq!(packed.mac_idle, i8_stats.mac_idle, "{ctx}: mac_idle");
+    assert_eq!(packed.compute_cycles, i8_stats.compute_cycles, "{ctx}: compute_cycles");
+    assert_eq!(packed.lb_fill_cycles, i8_stats.lb_fill_cycles, "{ctx}: lb_fill_cycles");
+    assert_eq!(packed.drain_cycles, i8_stats.drain_cycles, "{ctx}: drain_cycles");
+    assert_eq!(packed.stall_cycles, i8_stats.stall_cycles, "{ctx}: stall_cycles");
+    assert_eq!(packed.act_reads, i8_stats.act_reads, "{ctx}: act_reads");
+    assert_eq!(packed.act_writes, i8_stats.act_writes, "{ctx}: act_writes");
+    assert_eq!(packed.lb_pushes, i8_stats.lb_pushes, "{ctx}: lb_pushes");
+    assert_eq!(packed.hw_ops, i8_stats.hw_ops, "{ctx}: hw_ops");
+    assert_eq!(packed.alg_macs, i8_stats.alg_macs, "{ctx}: alg_macs");
+    assert_eq!(packed.active_ocus, i8_stats.active_ocus, "{ctx}: active_ocus");
+    assert_eq!(packed.fanin, i8_stats.fanin, "{ctx}: fanin");
+}
+
+/// Whole-network sweep: the packed scheduler pipeline vs the i8 datapath
+/// chain — labels, logits and all per-layer activity counters.
+#[test]
+fn whole_net_packed_vs_i8_equivalence_sweep() {
+    let mut rng = Rng::new(8003);
+    for (case, &(ch, zf)) in
+        [(16usize, 0.0), (24, 0.33), (32, 0.66), (16, 0.95)].iter().enumerate()
+    {
+        let net = cifar9_random(ch, 8100 + case as u64, zf);
+        let input = TritTensor::random(&[32, 32, 3], &mut rng, zf);
+        let cfg = CutieConfig::kraken();
+        for mode in [SimMode::Accurate, SimMode::Fast] {
+            let mut sched = Scheduler::new(cfg.clone(), mode);
+            let (packed_logits, packed_run) = sched.run_full(&net, &input).unwrap();
+            let (i8_logits, i8_layers) = run_net_i8(&net, &input, &cfg, mode);
+            let ctx = format!("ch={ch} zf={zf} mode={mode:?}");
+            assert_eq!(packed_logits, i8_logits, "{ctx}: logits");
+            assert_eq!(packed_logits.argmax(), i8_logits.argmax(), "{ctx}: label");
+            assert_eq!(
+                packed_logits,
+                reference::forward(&net, &input).unwrap(),
+                "{ctx}: reference executor"
+            );
+            assert_eq!(packed_run.layers.len(), i8_layers.len(), "{ctx}: layer count");
+            for (p, w) in packed_run.layers.iter().zip(&i8_layers) {
+                assert_layer_counters_equal(p, w, &format!("{ctx} layer {}", p.name));
+            }
+        }
+    }
+}
+
+/// Hybrid (CNN→TCN) networks: the packed serving path must agree with
+/// the functional reference executor on logits for high-sparsity
+/// DVS-like streams (the TCN tail shares the packed conv datapath via
+/// the §4 mapping).
+#[test]
+fn hybrid_packed_serving_matches_reference() {
+    let net = dvs_hybrid_random(16, 8200, 0.5);
+    let mut rng = Rng::new(8004);
+    let input = TritTensor::random(&[6, 64, 64, 2], &mut rng, 0.9);
+    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+    let (logits, _) = sched.run_full(&net, &input).unwrap();
+    let want = reference::forward(&net, &input).unwrap();
+    assert_eq!(logits, want);
+}
+
+/// The EXPERIMENTS.md §Anchors workload, pinned: the packed pipeline's
+/// activity counters on seeded `cifar9_random(96, 1, 0.33)` with the
+/// canonical 0.3-sparse input must be bit-identical to the i8 dataflow's
+/// — the counters the energy-model calibration (2.72 µJ @0.5 V,
+/// 1036 TOp/s/W) is fitted against.
+#[test]
+fn anchor_workload_counters_bit_exact_vs_i8_path() {
+    let (net, input) = tcn_cutie::report::cifar_workload();
+    let cfg = CutieConfig::kraken();
+    let mut sched = Scheduler::new(cfg.clone(), SimMode::Accurate);
+    sched.preload_weights(&net);
+    let (packed_logits, packed_run) = sched.run_full(&net, &input).unwrap();
+    let (i8_logits, i8_layers) = run_net_i8(&net, &input, &cfg, SimMode::Accurate);
+
+    assert_eq!(packed_logits, i8_logits, "anchor: logits");
+    assert_eq!(packed_run.layers.len(), i8_layers.len());
+    for (p, w) in packed_run.layers.iter().zip(&i8_layers) {
+        assert_layer_counters_equal(p, w, &format!("anchor layer {}", p.name));
+    }
+
+    // Aggregate sanity against the published anchor magnitudes (coarse
+    // bands only — the exact values are locked by the equality above
+    // plus the ±5 % energy anchors in the calibration tests).
+    let toggles = packed_run.mac_toggles();
+    let (reads, writes) = packed_run.act_accesses();
+    let act_words = reads + writes;
+    let cycles = packed_run.total_cycles(); // incl. µDMA ingress
+    assert!(
+        (40_000_000..52_000_000).contains(&toggles),
+        "anchor MAC toggles drifted: {toggles}"
+    );
+    assert!((4_000..5_000).contains(&act_words), "anchor activation words drifted: {act_words}");
+    assert!((3_000..3_400).contains(&cycles), "anchor cycles drifted: {cycles}");
+}

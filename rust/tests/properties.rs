@@ -6,7 +6,7 @@
 use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode, TcnStrategy};
 use tcn_cutie::energy::{evaluate, fmax_hz, EnergyParams};
 use tcn_cutie::network::{self, reference, LayerKind};
-use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::tensor::{PackedMap, TritTensor};
 use tcn_cutie::util::rng::Rng;
 
 /// Random small hybrid networks: cycle-level simulator must equal the
@@ -39,7 +39,7 @@ fn tcn_strategies_equivalent_random_streams() {
             .with_tcn_strategy(TcnStrategy::Direct);
         for _ in 0..5 {
             let zf = 0.7 + 0.25 * rng.f64();
-            let f = TritTensor::random(&[64, 64, 2], &mut rng, zf);
+            let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, zf));
             let (la, _) = a.serve_frame(&net, &f).unwrap();
             let (lb, _) = b.serve_frame(&net, &f).unwrap();
             assert_eq!(la, lb);
@@ -56,7 +56,7 @@ fn scheduler_state_invariants() {
     let mut rng = Rng::new(5);
     let mut total_weight_cycles = Vec::new();
     for i in 0..30 {
-        let f = TritTensor::random(&[64, 64, 2], &mut rng, 0.85);
+        let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
         let (_, stats) = sched.serve_frame(&net, &f).unwrap();
         assert_eq!(sched.tcn_mem.len(), (i + 1).min(24));
         assert_eq!(stats.stall_cycles(), 0);
