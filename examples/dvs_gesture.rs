@@ -31,10 +31,10 @@ fn main() -> Result<()> {
     );
 
     let cfg = PipelineConfig {
-        voltage: args.opt_f64("voltage", 0.5),
-        frames: args.opt_usize("frames", 64),
-        gesture: args.opt_usize("gesture", 3),
-        seed: args.opt_u64("seed", 7),
+        voltage: args.opt_f64("voltage", 0.5)?,
+        frames: args.opt_usize("frames", 64)?,
+        gesture: args.opt_usize("gesture", 3)?,
+        seed: args.opt_u64("seed", 7)?,
         mode: if args.flag("fast") { SimMode::Fast } else { SimMode::Accurate },
         ..Default::default()
     };

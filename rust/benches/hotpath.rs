@@ -14,7 +14,9 @@
 //!
 //!     cargo bench --bench hotpath
 
-use tcn_cutie::coordinator::{DvsSource, GestureClass, Pipeline, PipelineConfig};
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig,
+};
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, SimMode};
 use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
@@ -134,6 +136,35 @@ fn main() {
         suite.push(&r_inline);
         suite.push_speedup(&r_batch, &r_inline);
     }
+
+    // --- multi-stream engine serving: 4 sessions interleaved ---
+    // The serving-throughput ledger entry (api_redesign pass): the same
+    // 32 frames as 4 independent streams through one engine, serial vs
+    // worker-pool CNN sharding. Counters are identical either way (the
+    // engine determinism tests prove it); this measures wall throughput.
+    let serve_streams = |workers: usize| {
+        let mut engine =
+            Engine::new(&dnet, EngineConfig { mode: SimMode::Fast, workers, ..Default::default() });
+        let mut srcs: Vec<DvsSource> =
+            (0..4).map(|s| DvsSource::new(64, 11 + s as u64, GestureClass(s % 12))).collect();
+        for _ in 0..8 {
+            for (sid, src) in srcs.iter_mut().enumerate() {
+                engine.submit(sid, src.next_frame());
+            }
+        }
+        engine.drain().unwrap();
+        engine.aggregate_report()
+    };
+    let r_eng1 = bench("DVS engine 4 streams x 8 frames serial (fast)", 1, 5, || serve_streams(1));
+    let r_engn = bench("DVS engine 4 streams x 8 frames pooled (fast)", 1, 5, || serve_streams(0));
+    let engine_frames = 4 * 8;
+    println!(
+        "  engine speedup pooled vs serial: {:.2}x  ({engine_frames} frames, {:.0} wall inf/s pooled)\n",
+        r_eng1.median_s / r_engn.median_s,
+        engine_frames as f64 / r_engn.median_s
+    );
+    suite.push(&r_eng1);
+    suite.push_speedup(&r_engn, &r_eng1);
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {

@@ -1,0 +1,267 @@
+//! The multi-stream serving engine — the one serve path every topology
+//! policy (inline / threaded / batched, `N`-stream CLI serving) is a
+//! thin wrapper over.
+//!
+//! Split of responsibilities (the api_redesign tentpole):
+//!
+//! * *who produces frames* — any [`FrameSource`] (live synthetic camera,
+//!   replayed word-stream, mixer); the engine never constructs sources;
+//! * *which stream a frame belongs to* — the `session_id` of
+//!   [`Engine::submit`]; each [`Session`] owns its stream's recurrent
+//!   state (TCN window, SoC ledger, labels, metrics);
+//! * *how work is scheduled* — [`Engine::drain`] runs the stateless CNN
+//!   front-end of all pending frames across a pool of preloaded worker
+//!   [`Scheduler`]s (round-robin sharding, the dominant per-frame cost),
+//!   then reduces each frame's stateful tail — TCN-window push + TCN
+//!   inference + SoC timeline — in submission order, which preserves
+//!   per-session frame order.
+//!
+//! Determinism: every counter the energy model consumes is
+//! sharding-invariant (the datapath's counters are analytic in the
+//! geometry and toggle sums are order-independent), workers preload the
+//! network so weight accesses are the same steady-state bank switches
+//! the inline scheduler charges, and all cross-frame recurrent state is
+//! per-session (checked out into the tail scheduler per frame via
+//! [`Scheduler::swap_tcn`]). Interleaving K sessions through one engine
+//! is therefore byte-identical to serving each stream alone — asserted
+//! for K ∈ {1, 2, 5} and both [`SimMode`]s in `tests/engine.rs`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::{ServingMetrics, ServingReport};
+use super::session::Session;
+use super::source::FrameSource;
+use crate::cutie::{CutieConfig, RunStats, Scheduler, SimMode};
+use crate::energy::{evaluate, EnergyParams};
+use crate::network::Network;
+use crate::tensor::PackedMap;
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub voltage: f64,
+    /// Clock override (None → fmax(V)).
+    pub freq_hz: Option<f64>,
+    pub mode: SimMode,
+    /// CNN front-end pool width: 1 → serial (fully inline), 0 → one
+    /// worker per available core.
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { voltage: 0.5, freq_hz: None, mode: SimMode::Accurate, workers: 1 }
+    }
+}
+
+pub struct Engine<'n> {
+    net: &'n Network,
+    cfg: EngineConfig,
+    params: EnergyParams,
+    /// Stateful tail executor: per-session TCN windows are swapped into
+    /// it frame by frame; also runs the CNN when the pool is serial.
+    tail: Scheduler,
+    /// Preloaded CNN workers (empty when `cfg.workers` resolves to 1).
+    workers: Vec<Scheduler>,
+    sessions: BTreeMap<usize, Session>,
+    /// Submitted, not yet drained (session, frame) pairs in arrival order.
+    pending: Vec<(usize, PackedMap)>,
+}
+
+impl<'n> Engine<'n> {
+    pub fn new(net: &'n Network, cfg: EngineConfig) -> Self {
+        let pool = if cfg.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.workers
+        };
+        let mut tail = Scheduler::new(CutieConfig::kraken(), cfg.mode);
+        tail.preload_weights(net);
+        let workers = if pool <= 1 {
+            Vec::new()
+        } else {
+            // Layer-level row sharding is pinned off inside pool workers
+            // (max_threads = 1): frame-level parallelism replaces it
+            // without oversubscription. Counters are sharding-invariant.
+            let wcfg = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
+            (0..pool)
+                .map(|_| {
+                    let mut s = Scheduler::new(wcfg.clone(), cfg.mode);
+                    s.preload_weights(net);
+                    s
+                })
+                .collect()
+        };
+        Engine {
+            net,
+            cfg,
+            params: EnergyParams::default(),
+            tail,
+            workers,
+            sessions: BTreeMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Register (or fetch) a stream's session. `submit` opens sessions
+    /// implicitly; opening one explicitly matters only for zero-frame
+    /// streams that still want a (empty) report.
+    pub fn open_session(&mut self, id: usize) -> &mut Session {
+        let voltage = self.cfg.voltage;
+        let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
+        self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, depth, channels))
+    }
+
+    /// Enqueue one frame on a stream. Work happens at the next `drain`.
+    pub fn submit(&mut self, session_id: usize, frame: PackedMap) {
+        self.open_session(session_id);
+        self.pending.push((session_id, frame));
+    }
+
+    /// Pull up to `max_frames` frames from a source onto a stream;
+    /// returns how many the source yielded before drying up.
+    pub fn submit_from(
+        &mut self,
+        session_id: usize,
+        src: &mut dyn FrameSource,
+        max_frames: usize,
+    ) -> usize {
+        let mut n = 0;
+        while n < max_frames {
+            match src.next_frame() {
+                Some(f) => {
+                    self.submit(session_id, f);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    pub fn pending_frames(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn session_ids(&self) -> Vec<usize> {
+        self.sessions.keys().copied().collect()
+    }
+
+    pub fn session(&self, id: usize) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    /// Serve every pending frame; returns how many were served.
+    ///
+    /// Phase 1 (stateless, parallel): CNN front-ends across the worker
+    /// pool. Phase 2 (stateful, sequential): per-frame TCN/SoC tail in
+    /// submission order — per-session frame order is preserved because
+    /// submission order is.
+    pub fn drain(&mut self) -> Result<usize> {
+        if self.pending.is_empty() {
+            return Ok(0);
+        }
+        let wall0 = Instant::now();
+        let pending = std::mem::take(&mut self.pending);
+
+        // Phase 1: CNN front-end.
+        let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; pending.len()];
+        if self.workers.is_empty() {
+            for (i, (_, frame)) in pending.iter().enumerate() {
+                cnn[i] = Some(self.tail.run_cnn(self.net, frame)?);
+            }
+        } else {
+            let net = self.net;
+            let nw = self.workers.len();
+            let results: Vec<Vec<(usize, Result<(PackedMap, RunStats)>)>> =
+                std::thread::scope(|scope| {
+                    let mut handles = Vec::new();
+                    for (wi, sched) in self.workers.iter_mut().enumerate() {
+                        let pending = &pending;
+                        handles.push(scope.spawn(move || {
+                            let mut out = Vec::new();
+                            let mut i = wi;
+                            while i < pending.len() {
+                                out.push((i, sched.run_cnn(net, &pending[i].1)));
+                                i += nw;
+                            }
+                            out
+                        }));
+                    }
+                    handles.into_iter().map(|h| h.join().expect("cnn worker")).collect()
+                });
+            for (i, r) in results.into_iter().flatten() {
+                cnn[i] = Some(r?);
+            }
+        }
+
+        // Phase 2: stateful per-session tail, in submission order.
+        let mut served: Vec<(usize, f64, f64)> = Vec::with_capacity(pending.len());
+        for ((sid, frame), slot) in pending.into_iter().zip(cnn.into_iter()) {
+            let (feat, mut run) = slot.expect("all frames dispatched");
+            let sess = self.sessions.get_mut(&sid).expect("submit opened the session");
+            sess.ingest(&frame);
+            // check the stream's recurrent TCN window out into the tail
+            self.tail.swap_tcn(&mut sess.tcn);
+            self.tail.push_feature(&feat);
+            let tcn_result = self.tail.run_tcn(self.net);
+            self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
+            let (logits, r) = tcn_result?;
+            run.merge(r);
+            let report = evaluate(&run, self.cfg.voltage, self.cfg.freq_hz, &self.params);
+            sess.settle(report.time_s, report.energy_j);
+            sess.labels.push(logits.argmax());
+            served.push((sid, report.time_s * 1e6, report.energy_j));
+        }
+
+        // Host wall-clock is a measurement, not a simulation output:
+        // amortize the drain across its frames (a 1-frame drain is the
+        // inline policy's per-frame latency).
+        let n = served.len();
+        let wall_us = wall0.elapsed().as_secs_f64() * 1e6 / n.max(1) as f64;
+        for (sid, sim_us, core_j) in served {
+            let sess = self.sessions.get_mut(&sid).expect("session exists");
+            sess.metrics.record_frame(sim_us, wall_us, core_j);
+        }
+        Ok(n)
+    }
+
+    /// Close one session into its final report (removes it).
+    pub fn finish_session(&mut self, id: usize) -> Option<ServingReport> {
+        self.sessions.remove(&id).map(Session::into_report)
+    }
+
+    /// Close every session, in session-id order.
+    pub fn finish_all(&mut self) -> Vec<(usize, ServingReport)> {
+        let ids = self.session_ids();
+        ids.into_iter().map(|id| (id, self.finish_session(id).expect("listed id"))).collect()
+    }
+
+    /// Cross-session roll-up (latency samples concatenate, energies and
+    /// wakeups sum, labels concatenate in session-id order). Average SoC
+    /// power is total energy over total simulated SoC time.
+    pub fn aggregate_report(&self) -> ServingReport {
+        let mut metrics = ServingMetrics::default();
+        let mut labels = Vec::new();
+        let mut energy_j = 0.0;
+        let mut fc_wakeups = 0u64;
+        let mut now_ns = 0u64;
+        for sess in self.sessions.values() {
+            metrics.merge(&sess.metrics);
+            energy_j += sess.soc.energy_j();
+            fc_wakeups += sess.soc.fc_wakeups();
+            now_ns += sess.soc.now_ns();
+            labels.extend_from_slice(&sess.labels);
+        }
+        metrics.soc_energy_j = energy_j;
+        ServingReport {
+            soc_energy_j: energy_j,
+            soc_avg_power_w: if now_ns == 0 { 0.0 } else { energy_j / (now_ns as f64 * 1e-9) },
+            fc_wakeups,
+            metrics,
+            labels,
+        }
+    }
+}

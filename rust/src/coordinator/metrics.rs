@@ -1,9 +1,11 @@
 //! Serving metrics: latency percentiles (both simulated-hardware time and
-//! host wallclock), throughput, and the energy ledger summary.
+//! host wallclock), throughput, the energy ledger summary, and the
+//! [`ServingReport`] every serving policy returns.
 
+use crate::soc::KrakenSoc;
 use crate::util::stats::Percentiles;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct ServingMetrics {
     /// Simulated on-chip latency per served frame (µs).
     pub sim_latency_us: Percentiles,
@@ -71,9 +73,55 @@ impl ServingMetrics {
     }
 }
 
+/// Final result of a serving run (one session's stream, or a
+/// cross-session aggregate).
+#[derive(Debug)]
+pub struct ServingReport {
+    pub metrics: ServingMetrics,
+    pub soc_energy_j: f64,
+    pub soc_avg_power_w: f64,
+    pub fc_wakeups: u64,
+    pub labels: Vec<usize>,
+}
+
+impl ServingReport {
+    /// The one place report fields are assembled from a finished SoC
+    /// ledger (previously triplicated across the three `run_*` serve
+    /// loops; any field drift now fails every path at once).
+    pub fn from_parts(mut metrics: ServingMetrics, soc: &KrakenSoc, labels: Vec<usize>) -> Self {
+        metrics.soc_energy_j = soc.energy_j();
+        ServingReport {
+            soc_energy_j: soc.energy_j(),
+            soc_avg_power_w: soc.avg_power_w(),
+            fc_wakeups: soc.fc_wakeups(),
+            metrics,
+            labels,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn report_fields_come_from_the_ledger() {
+        let mut soc = KrakenSoc::new(0.5);
+        soc.dma_ingest(256);
+        soc.raise_irq(crate::soc::Irq::FrameReady);
+        soc.advance_ns(10_000);
+        soc.add_core_energy(1e-6);
+        soc.raise_irq(crate::soc::Irq::CutieDone);
+        soc.fc_service_done();
+        let mut m = ServingMetrics::default();
+        m.record_frame(10.0, 5.0, 1e-6);
+        let r = ServingReport::from_parts(m, &soc, vec![3]);
+        assert_eq!(r.soc_energy_j.to_bits(), soc.energy_j().to_bits());
+        assert_eq!(r.metrics.soc_energy_j.to_bits(), soc.energy_j().to_bits());
+        assert_eq!(r.soc_avg_power_w.to_bits(), soc.avg_power_w().to_bits());
+        assert_eq!(r.fc_wakeups, 1);
+        assert_eq!(r.labels, vec![3]);
+    }
 
     #[test]
     fn rates_and_energy() {

@@ -4,15 +4,25 @@
 //! into the TCN memory; the TCN back-end classifies the 24-step window;
 //! CUTIE's done-interrupt wakes the fabric controller for label readout.
 //!
-//! The coordinator owns the event loop, the process topology (producer /
-//! inference threads over bounded channels — tokio is unavailable in this
-//! offline environment, std threads are used), metrics, and the SoC
-//! energy ledger.
+//! The coordinator owns the serving surface (api_redesign pass): frame
+//! production behind the [`FrameSource`] trait (synthetic camera,
+//! replayable packed word-streams, mixers), per-stream recurrent state
+//! in [`Session`]s, and the multi-stream [`Engine`] whose
+//! submit/drain path every topology policy — inline, threaded
+//! producer/consumer (std threads over bounded channels; tokio is
+//! unavailable in this offline environment), batched worker-pool — is a
+//! thin wrapper over.
 
+pub mod engine;
 pub mod metrics;
 pub mod pipeline;
+pub mod session;
 pub mod source;
+pub mod stream;
 
-pub use metrics::ServingMetrics;
-pub use pipeline::{Pipeline, PipelineConfig, ServingReport};
-pub use source::{DvsSource, GestureClass};
+pub use engine::{Engine, EngineConfig};
+pub use metrics::{ServingMetrics, ServingReport};
+pub use pipeline::{Pipeline, PipelineConfig};
+pub use session::Session;
+pub use source::{DvsSource, FrameSource, GestureClass, MixedSource};
+pub use stream::PackedStream;

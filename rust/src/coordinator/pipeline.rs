@@ -1,29 +1,34 @@
-//! The serving pipeline: producer thread (DVS source → bounded channel,
-//! i.e. backpressure) + inference loop (scheduler + SoC model + metrics).
-//! Frames travel as bit-packed [`PackedMap`]s end to end (perf pass
-//! iteration 8): the source emits packed, the queue carries packed, and
-//! the scheduler serves packed — i8 never appears on the serving path.
+//! Single-stream serving policies — thin topology wrappers over the one
+//! [`Engine`] serve path (api_redesign pass; the three previously
+//! copy-pasted serve loops are gone):
 //!
-//! Three modes:
-//! * [`Pipeline::run_inline`] — single-threaded, fully deterministic;
+//! * [`Pipeline::run_inline`] — submit + drain one frame at a time on a
+//!   serial engine: fully deterministic, per-frame wall latency;
 //! * [`Pipeline::run_threaded`] — producer/consumer over
-//!   `std::sync::mpsc::sync_channel`, the process topology a real
-//!   deployment would use (tokio is unavailable offline);
-//! * [`Pipeline::run_batched`] — the multi-frame serving engine: the
-//!   CNN front-end (the dominant per-frame cost) is sharded round-robin
-//!   across a pool of worker schedulers, then the *stateful* tail — TCN
-//!   window, SoC ledger, metrics — reduces sequentially in frame order.
-//!   Labels, interrupt counts and energy ledgers are byte-identical to
-//!   `run_inline` (asserted in tests); only host wall-clock changes.
+//!   `std::sync::mpsc::sync_channel` (bounded queue = µDMA-style
+//!   backpressure on the synthetic camera; tokio is unavailable
+//!   offline), consuming into the same serial engine;
+//! * [`Pipeline::run_batched`] — submit the whole stream, drain once
+//!   with a CNN worker pool: the multi-frame throughput policy.
+//!
+//! All three produce byte-identical [`ServingReport`]s (labels,
+//! `fc_wakeups`, both energy ledgers, per-frame sim latencies) — the
+//! engine's determinism argument lives in [`super::engine`]. As the
+//! equivalence oracle, the pre-engine single-scheduler serve loop is
+//! retained verbatim as [`Pipeline::run_reference`] and the tests assert
+//! the engine path against it bit for bit, the same pattern as the
+//! retained i8 window-stationary datapath loop.
 
 use std::sync::mpsc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+pub use super::metrics::ServingReport;
+use super::engine::{Engine, EngineConfig};
 use super::metrics::ServingMetrics;
 use super::source::{DvsSource, GestureClass};
-use crate::cutie::{dma_ingress_bytes, CutieConfig, RunStats, Scheduler, SimMode};
+use crate::cutie::{dma_ingress_bytes, CutieConfig, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
 use crate::network::Network;
 use crate::soc::{Irq, KrakenSoc};
@@ -57,15 +62,6 @@ impl Default for PipelineConfig {
     }
 }
 
-#[derive(Debug)]
-pub struct ServingReport {
-    pub metrics: ServingMetrics,
-    pub soc_energy_j: f64,
-    pub soc_avg_power_w: f64,
-    pub fc_wakeups: u64,
-    pub labels: Vec<usize>,
-}
-
 pub struct Pipeline {
     pub net: Network,
     pub cfg: PipelineConfig,
@@ -76,170 +72,44 @@ impl Pipeline {
         Pipeline { net, cfg }
     }
 
-    fn serve_one(
-        &self,
-        sched: &mut Scheduler,
-        soc: &mut KrakenSoc,
-        params: &EnergyParams,
-        metrics: &mut ServingMetrics,
-        labels: &mut Vec<usize>,
-        frame: &PackedMap,
-    ) -> Result<()> {
-        let wall0 = Instant::now();
-        // µDMA ingress (SoC timeline) + frame-ready IRQ starts CUTIE
-        soc.dma_ingest(dma_ingress_bytes(frame.numel()));
-        soc.raise_irq(Irq::FrameReady);
-
-        // accelerator: CNN → TCN memory → TCN window → logits
-        let (logits, stats) = sched.serve_frame(&self.net, frame)?;
-        let report = evaluate(&stats, self.cfg.voltage, self.cfg.freq_hz, params);
-
-        // advance the SoC timeline by the accelerator's busy time and add
-        // the core energy on top of the domain baseline
-        soc.advance_ns((report.time_s * 1e9) as u64);
-        soc.add_core_energy(report.energy_j);
-        soc.raise_irq(Irq::CutieDone);
-        soc.fc_service_done();
-
-        labels.push(logits.argmax());
-        let wall_us = wall0.elapsed().as_secs_f64() * 1e6;
-        metrics.record_frame(report.time_s * 1e6, wall_us, report.energy_j);
-        Ok(())
+    /// The engine this pipeline's policies are wrappers over.
+    fn engine(&self, workers: usize) -> Engine<'_> {
+        Engine::new(
+            &self.net,
+            EngineConfig {
+                voltage: self.cfg.voltage,
+                freq_hz: self.cfg.freq_hz,
+                mode: self.cfg.mode,
+                workers,
+            },
+        )
     }
 
-    /// Deterministic single-threaded serving run.
+    /// This pipeline's deterministic synthetic gesture stream.
+    fn source(&self) -> DvsSource {
+        DvsSource::new(self.net.input_hw, self.cfg.seed, GestureClass(self.cfg.gesture))
+    }
+
+    /// Deterministic single-threaded serving run: one session, one frame
+    /// submitted and drained at a time.
     pub fn run_inline(&self) -> Result<ServingReport> {
-        let params = EnergyParams::default();
-        let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);
-        sched.preload_weights(&self.net);
-        let mut soc = KrakenSoc::new(self.cfg.voltage);
-        let mut src = DvsSource::new(self.net.input_hw, self.cfg.seed, GestureClass(self.cfg.gesture));
-        let mut metrics = ServingMetrics::default();
-        let mut labels = Vec::new();
+        let mut engine = self.engine(1);
+        engine.open_session(0);
+        let mut src = self.source();
         for _ in 0..self.cfg.frames {
-            let frame = src.next_frame();
-            self.serve_one(&mut sched, &mut soc, &params, &mut metrics, &mut labels, &frame)?;
+            engine.submit(0, src.next_frame());
+            engine.drain()?;
         }
-        metrics.soc_energy_j = soc.ledger.energy_j;
-        Ok(ServingReport {
-            soc_energy_j: soc.ledger.energy_j,
-            soc_avg_power_w: soc.avg_power_w(),
-            fc_wakeups: soc.ledger.fc_wakeups,
-            metrics,
-            labels,
-        })
+        Ok(engine.finish_session(0).expect("session opened"))
     }
 
-    /// Batched multi-frame serving: shard the CNN front-end across
-    /// `workers` scheduler clones (0 → one per available core), then
-    /// reduce the stateful TCN window + SoC ledger + metrics sequentially
-    /// in frame order.
-    ///
-    /// Determinism argument: every per-frame counter the energy model
-    /// consumes is sharding-invariant (the datapath's counters are
-    /// analytic in the geometry, and toggle sums are order-independent),
-    /// and each worker preloads the network so its weight accesses are
-    /// the same steady-state bank switches the preloaded inline
-    /// scheduler charges. The sequential reduce then replays exactly the
-    /// operation sequence of [`Pipeline::run_inline`]'s serve loop, so
-    /// labels, `fc_wakeups`, per-frame sim latencies and both energy
-    /// ledgers come out byte-identical. Host wall-clock latency is a
-    /// measurement, not a simulation output, and is amortized over the
-    /// batch.
-    pub fn run_batched(&self, workers: usize) -> Result<ServingReport> {
-        let workers = if workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            workers
-        };
-        if workers <= 1 {
-            return self.run_inline();
-        }
-        let wall0 = Instant::now();
-
-        // Same deterministic frame stream as run_inline.
-        let mut src =
-            DvsSource::new(self.net.input_hw, self.cfg.seed, GestureClass(self.cfg.gesture));
-        let frames: Vec<PackedMap> = (0..self.cfg.frames).map(|_| src.next_frame()).collect();
-
-        // Phase 1: CNN front-end on the worker pool. Layer-level row
-        // sharding is pinned off inside workers (max_threads = 1) —
-        // frame-level parallelism replaces it without oversubscription.
-        let worker_cfg = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
-        let net = &self.net;
-        let mode = self.cfg.mode;
-        let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; frames.len()];
-        let results: Vec<Vec<(usize, Result<(PackedMap, RunStats)>)>> =
-            std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for wi in 0..workers {
-                    let frames = &frames;
-                    let wcfg = worker_cfg.clone();
-                    handles.push(scope.spawn(move || {
-                        let mut sched = Scheduler::new(wcfg, mode);
-                        sched.preload_weights(net);
-                        let mut out = Vec::new();
-                        let mut i = wi;
-                        while i < frames.len() {
-                            out.push((i, sched.run_cnn(net, &frames[i])));
-                            i += workers;
-                        }
-                        out
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().expect("cnn worker")).collect()
-            });
-        for (i, r) in results.into_iter().flatten() {
-            cnn[i] = Some(r?);
-        }
-
-        // Phase 2: stateful reduce in frame order — exactly the inline
-        // serve loop's operation sequence.
-        let params = EnergyParams::default();
-        let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);
-        sched.preload_weights(&self.net);
-        let mut soc = KrakenSoc::new(self.cfg.voltage);
-        let mut metrics = ServingMetrics::default();
-        let mut labels = Vec::new();
-        let mut frame_reports = Vec::with_capacity(frames.len());
-        for (frame, slot) in frames.iter().zip(cnn.into_iter()) {
-            let (feat, mut run) = slot.expect("all frames dispatched");
-            soc.dma_ingest(dma_ingress_bytes(frame.numel()));
-            soc.raise_irq(Irq::FrameReady);
-            sched.push_feature(&feat);
-            let (logits, r) = sched.run_tcn(&self.net)?;
-            run.merge(r);
-            let report = evaluate(&run, self.cfg.voltage, self.cfg.freq_hz, &params);
-            soc.advance_ns((report.time_s * 1e9) as u64);
-            soc.add_core_energy(report.energy_j);
-            soc.raise_irq(Irq::CutieDone);
-            soc.fc_service_done();
-            labels.push(logits.argmax());
-            frame_reports.push((report.time_s * 1e6, report.energy_j));
-        }
-        let wall_us = wall0.elapsed().as_secs_f64() * 1e6 / frames.len().max(1) as f64;
-        for (sim_us, core_j) in frame_reports {
-            metrics.record_frame(sim_us, wall_us, core_j);
-        }
-        metrics.soc_energy_j = soc.ledger.energy_j;
-        Ok(ServingReport {
-            soc_energy_j: soc.ledger.energy_j,
-            soc_avg_power_w: soc.avg_power_w(),
-            fc_wakeups: soc.ledger.fc_wakeups,
-            metrics,
-            labels,
-        })
-    }
-
-    /// Producer/consumer topology with a bounded frame queue.
+    /// Producer/consumer topology with a bounded frame queue feeding the
+    /// serial engine — the process topology a real deployment would use.
     pub fn run_threaded(&self) -> Result<ServingReport> {
         let (tx, rx) = mpsc::sync_channel::<PackedMap>(self.cfg.queue_depth);
-        let hw = self.net.input_hw;
-        let seed = self.cfg.seed;
-        let gesture = self.cfg.gesture;
+        let mut src = self.source();
         let frames = self.cfg.frames;
         let producer = std::thread::spawn(move || {
-            let mut src = DvsSource::new(hw, seed, GestureClass(gesture));
             for _ in 0..frames {
                 // send blocks when the queue is full → backpressure on
                 // the (synthetic) camera, like µDMA flow control
@@ -249,24 +119,76 @@ impl Pipeline {
             }
         });
 
+        let mut engine = self.engine(1);
+        engine.open_session(0);
+        while let Ok(frame) = rx.recv() {
+            engine.submit(0, frame);
+            engine.drain()?;
+        }
+        producer.join().expect("producer thread");
+        Ok(engine.finish_session(0).expect("session opened"))
+    }
+
+    /// Batched multi-frame serving: submit the whole stream, then one
+    /// drain with the CNN front-end sharded across `workers` scheduler
+    /// clones (0 → one per available core). Labels, interrupt counts and
+    /// energy ledgers are byte-identical to `run_inline` (asserted in
+    /// tests); only host wall-clock changes.
+    pub fn run_batched(&self, workers: usize) -> Result<ServingReport> {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        if workers <= 1 {
+            return self.run_inline();
+        }
+        let mut engine = self.engine(workers);
+        engine.open_session(0);
+        let mut src = self.source();
+        for _ in 0..self.cfg.frames {
+            engine.submit(0, src.next_frame());
+        }
+        engine.drain()?;
+        Ok(engine.finish_session(0).expect("session opened"))
+    }
+
+    /// The retained pre-engine serve loop: one scheduler, one SoC, the §5
+    /// per-frame sequence written out long-hand. Kept verbatim as the
+    /// equivalence oracle the engine path is asserted byte-identical
+    /// against (`engine_path_matches_reference_loop`), not used for
+    /// serving.
+    pub fn run_reference(&self) -> Result<ServingReport> {
         let params = EnergyParams::default();
         let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);
         sched.preload_weights(&self.net);
         let mut soc = KrakenSoc::new(self.cfg.voltage);
+        let mut src = self.source();
         let mut metrics = ServingMetrics::default();
         let mut labels = Vec::new();
-        while let Ok(frame) = rx.recv() {
-            self.serve_one(&mut sched, &mut soc, &params, &mut metrics, &mut labels, &frame)?;
+        for _ in 0..self.cfg.frames {
+            let frame = src.next_frame();
+            let wall0 = Instant::now();
+            // µDMA ingress (SoC timeline) + frame-ready IRQ starts CUTIE
+            soc.dma_ingest(dma_ingress_bytes(frame.numel()));
+            soc.raise_irq(Irq::FrameReady);
+
+            // accelerator: CNN → TCN memory → TCN window → logits
+            let (logits, stats) = sched.serve_frame(&self.net, &frame)?;
+            let report = evaluate(&stats, self.cfg.voltage, self.cfg.freq_hz, &params);
+
+            // advance the SoC timeline by the accelerator's busy time and
+            // add the core energy on top of the domain baseline
+            soc.advance_ns((report.time_s * 1e9) as u64);
+            soc.add_core_energy(report.energy_j);
+            soc.raise_irq(Irq::CutieDone);
+            soc.fc_service_done();
+
+            labels.push(logits.argmax());
+            let wall_us = wall0.elapsed().as_secs_f64() * 1e6;
+            metrics.record_frame(report.time_s * 1e6, wall_us, report.energy_j);
         }
-        producer.join().expect("producer thread");
-        metrics.soc_energy_j = soc.ledger.energy_j;
-        Ok(ServingReport {
-            soc_energy_j: soc.ledger.energy_j,
-            soc_avg_power_w: soc.avg_power_w(),
-            fc_wakeups: soc.ledger.fc_wakeups,
-            metrics,
-            labels,
-        })
+        Ok(ServingReport::from_parts(metrics, &soc, labels))
     }
 }
 
@@ -281,6 +203,47 @@ mod tests {
             net,
             PipelineConfig { frames, mode: SimMode::Fast, ..Default::default() },
         )
+    }
+
+    fn assert_byte_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
+        assert_eq!(a.labels, b.labels, "{ctx}: labels must match");
+        assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+        assert_eq!(
+            a.soc_energy_j.to_bits(),
+            b.soc_energy_j.to_bits(),
+            "{ctx}: SoC ledger must be byte-identical"
+        );
+        assert_eq!(a.metrics.soc_energy_j.to_bits(), b.metrics.soc_energy_j.to_bits(), "{ctx}");
+        assert_eq!(a.soc_avg_power_w.to_bits(), b.soc_avg_power_w.to_bits(), "{ctx}");
+        assert_eq!(a.metrics.core_energy_j.to_bits(), b.metrics.core_energy_j.to_bits(), "{ctx}");
+        assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}");
+        assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}");
+        // per-frame simulated latency distribution identical too
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(
+                a.metrics.sim_latency_us.quantile(q).to_bits(),
+                b.metrics.sim_latency_us.quantile(q).to_bits(),
+                "{ctx} q {q}"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_path_matches_reference_loop() {
+        // The acceptance gate of the api_redesign pass: the engine-backed
+        // policies must reproduce the pre-engine serve loop bit for bit,
+        // in both sim modes.
+        for mode in [SimMode::Fast, SimMode::Accurate] {
+            let net = dvs_hybrid_random(16, 5, 0.5);
+            let p = Pipeline::new(net, PipelineConfig { frames: 5, mode, ..Default::default() });
+            let mut want = p.run_reference().unwrap();
+            let mut inline = p.run_inline().unwrap();
+            assert_byte_identical(&mut inline, &mut want, &format!("inline {mode:?}"));
+            let mut batched = p.run_batched(2).unwrap();
+            assert_byte_identical(&mut batched, &mut want, &format!("batched {mode:?}"));
+            let mut threaded = p.run_threaded().unwrap();
+            assert_byte_identical(&mut threaded, &mut want, &format!("threaded {mode:?}"));
+        }
     }
 
     #[test]
@@ -299,24 +262,7 @@ mod tests {
         let mut a = p.run_inline().unwrap();
         for workers in [1, 2, 3] {
             let mut b = p.run_batched(workers).unwrap();
-            assert_eq!(a.labels, b.labels, "workers {workers}: labels must match");
-            assert_eq!(a.fc_wakeups, b.fc_wakeups, "workers {workers}");
-            assert_eq!(
-                a.soc_energy_j.to_bits(),
-                b.soc_energy_j.to_bits(),
-                "workers {workers}: SoC ledger must be byte-identical"
-            );
-            assert_eq!(a.metrics.core_energy_j.to_bits(), b.metrics.core_energy_j.to_bits());
-            assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits());
-            assert_eq!(a.metrics.frames, b.metrics.frames);
-            // per-frame simulated latency distribution identical too
-            for q in [0.0, 0.5, 1.0] {
-                assert_eq!(
-                    a.metrics.sim_latency_us.quantile(q).to_bits(),
-                    b.metrics.sim_latency_us.quantile(q).to_bits(),
-                    "workers {workers} q {q}"
-                );
-            }
+            assert_byte_identical(&mut b, &mut a, &format!("workers {workers}"));
         }
     }
 
@@ -343,6 +289,16 @@ mod tests {
         let r = p.run_inline().unwrap();
         assert_eq!(r.fc_wakeups, 5);
         assert_eq!(r.labels.len(), 5);
+    }
+
+    #[test]
+    fn zero_frame_run_yields_empty_report() {
+        let p = small_pipeline(0);
+        let r = p.run_inline().unwrap();
+        assert_eq!(r.metrics.frames, 0);
+        assert_eq!(r.fc_wakeups, 0);
+        assert!(r.labels.is_empty());
+        assert_eq!(r.soc_energy_j, 0.0);
     }
 
     #[test]

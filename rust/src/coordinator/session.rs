@@ -1,0 +1,63 @@
+//! Per-stream serving state. One [`Session`] = one user's frame stream:
+//! its own 24-step TCN window (the recurrent state of the hybrid
+//! network), its own [`KrakenSoc`] energy/time ledger, label history and
+//! latency metrics. Sessions share the engine's stateless compute
+//! (scheduler pool, weight residency, prepared-layer caches) but never
+//! each other's recurrent state, so N streams can interleave through one
+//! engine with byte-identical results to serving each alone.
+
+use crate::cutie::TcnMemory;
+use crate::soc::KrakenSoc;
+use crate::tensor::PackedMap;
+
+use super::metrics::{ServingMetrics, ServingReport};
+
+pub struct Session {
+    pub id: usize,
+    /// The stream's recurrent TCN window; checked out into the tail
+    /// scheduler for the duration of each of this session's frames.
+    pub tcn: TcnMemory,
+    /// The stream's SoC timeline: µDMA ingress, IRQs, FC wakeups, energy.
+    pub soc: KrakenSoc,
+    pub metrics: ServingMetrics,
+    pub labels: Vec<usize>,
+}
+
+impl Session {
+    pub fn new(id: usize, voltage: f64, tcn_depth: usize, channels: usize) -> Self {
+        Session {
+            id,
+            tcn: TcnMemory::new(tcn_depth, channels),
+            soc: KrakenSoc::new(voltage),
+            metrics: ServingMetrics::default(),
+            labels: Vec::new(),
+        }
+    }
+
+    /// Frames served so far (== labels emitted).
+    pub fn frames_served(&self) -> u64 {
+        self.metrics.frames
+    }
+
+    /// Close the session into its final report.
+    pub fn into_report(self) -> ServingReport {
+        ServingReport::from_parts(self.metrics, &self.soc, self.labels)
+    }
+
+    /// The per-frame SoC preamble of the §5 autonomous flow: µDMA ingress
+    /// of the packed payload, then the frame-ready IRQ that starts CUTIE.
+    pub(crate) fn ingest(&mut self, frame: &PackedMap) {
+        self.soc.dma_ingest(crate::cutie::dma_ingress_bytes(frame.numel()));
+        self.soc.raise_irq(crate::soc::Irq::FrameReady);
+    }
+
+    /// The per-frame SoC postamble: advance the timeline by the
+    /// accelerator's busy time, add core energy on the domain baseline,
+    /// then the done-IRQ → FC readout → back to sleep.
+    pub(crate) fn settle(&mut self, time_s: f64, energy_j: f64) {
+        self.soc.advance_ns((time_s * 1e9) as u64);
+        self.soc.add_core_energy(energy_j);
+        self.soc.raise_irq(crate::soc::Irq::CutieDone);
+        self.soc.fc_service_done();
+    }
+}

@@ -1,15 +1,33 @@
-//! Synthetic DVS event-frame generator (DESIGN.md §2 substitution for the
-//! DVS128 camera): per-class moving-blob "gestures" (12 directions/arm
-//! motions like the DVS128 task) over Poisson background noise, rendered
-//! as 2-channel (ON/OFF polarity) ternary frames with the high
-//! unstructured sparsity event sensors produce. Frames are emitted
-//! directly as bit-packed [`PackedMap`]s — events set (pos, mask) plane
-//! bits, so a frame is born in the representation the µDMA ships and the
-//! activation SRAM stores (perf pass iteration 8): no i8 staging buffer,
-//! no per-pixel packing on ingest.
+//! Frame producers for the serving engine.
+//!
+//! [`FrameSource`] is the engine's packed-native producer abstraction:
+//! anything that can hand out bit-packed [`PackedMap`]s frame by frame —
+//! the synthetic [`DvsSource`] camera, a replayed
+//! [`super::stream::PackedStream`] word-stream, or the deterministic
+//! multi-gesture [`MixedSource`]. Sources never touch i8: a frame is
+//! born in the representation the µDMA ships and the activation SRAM
+//! stores (perf pass iteration 8).
+//!
+//! [`DvsSource`] itself is the DESIGN.md §2 substitution for the DVS128
+//! camera: per-class moving-blob "gestures" (12 directions/arm motions
+//! like the DVS128 task) over Poisson background noise, rendered as
+//! 2-channel (ON/OFF polarity) ternary frames with the high unstructured
+//! sparsity event sensors produce.
 
 use crate::tensor::PackedMap;
 use crate::util::rng::Rng;
+
+/// A pluggable producer of packed event frames.
+///
+/// `None` means the stream is exhausted (finite sources such as replayed
+/// word-streams); camera-like generators never exhaust. Implementations
+/// must be deterministic given their construction parameters — the
+/// engine's multi-stream determinism guarantee (interleaved == isolated,
+/// byte-identical) is only as strong as its sources'.
+pub trait FrameSource {
+    /// Pull the next packed frame, or `None` once the stream has dried.
+    fn next_frame(&mut self) -> Option<PackedMap>;
+}
 
 /// 12 gesture classes ≈ the DVS128 label set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -100,6 +118,55 @@ impl DvsSource {
     }
 }
 
+impl FrameSource for DvsSource {
+    /// The synthetic camera never runs dry.
+    fn next_frame(&mut self) -> Option<PackedMap> {
+        Some(DvsSource::next_frame(self))
+    }
+}
+
+/// Deterministic multi-gesture mixer: round-robins over its inner
+/// sources, skipping exhausted ones, until every source has dried. The
+/// schedule depends only on construction order, so a mixed stream is as
+/// replayable as its parts.
+pub struct MixedSource {
+    sources: Vec<Box<dyn FrameSource>>,
+    next: usize,
+}
+
+impl MixedSource {
+    pub fn new(sources: Vec<Box<dyn FrameSource>>) -> Self {
+        MixedSource { sources, next: 0 }
+    }
+
+    /// One synthetic DVS generator per gesture class in `classes`, seeded
+    /// `seed`, `seed + 1`, … in order.
+    pub fn of_gestures(hw: usize, seed: u64, classes: &[usize]) -> Self {
+        let sources = classes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                Box::new(DvsSource::new(hw, seed + i as u64, GestureClass(c)))
+                    as Box<dyn FrameSource>
+            })
+            .collect();
+        MixedSource::new(sources)
+    }
+}
+
+impl FrameSource for MixedSource {
+    fn next_frame(&mut self) -> Option<PackedMap> {
+        for _ in 0..self.sources.len() {
+            let i = self.next;
+            self.next = (self.next + 1) % self.sources.len();
+            if let Some(f) = self.sources[i].next_frame() {
+                return Some(f);
+            }
+        }
+        None
+    }
+}
+
 fn wrapped_delta(a: f64, b: f64, period: f64) -> f64 {
     let mut d = a - b;
     if d > period / 2.0 {
@@ -153,6 +220,45 @@ mod tests {
             diff += fa.pixels.iter().zip(&fb.pixels).filter(|(x, y)| x != y).count();
         }
         assert!(diff > 0);
+    }
+
+    #[test]
+    fn mixer_round_robins_deterministically() {
+        // The mixer must interleave its inner streams in construction
+        // order, frame for frame identical to driving clones by hand.
+        let mut mixed = MixedSource::of_gestures(16, 50, &[0, 4, 9]);
+        let mut a = DvsSource::new(16, 50, GestureClass(0));
+        let mut b = DvsSource::new(16, 51, GestureClass(4));
+        let mut c = DvsSource::new(16, 52, GestureClass(9));
+        for _ in 0..4 {
+            assert_eq!(FrameSource::next_frame(&mut mixed), Some(a.next_frame()));
+            assert_eq!(FrameSource::next_frame(&mut mixed), Some(b.next_frame()));
+            assert_eq!(FrameSource::next_frame(&mut mixed), Some(c.next_frame()));
+        }
+    }
+
+    #[test]
+    fn mixer_skips_exhausted_sources() {
+        struct Finite(usize);
+        impl FrameSource for Finite {
+            fn next_frame(&mut self) -> Option<PackedMap> {
+                if self.0 == 0 {
+                    return None;
+                }
+                self.0 -= 1;
+                Some(PackedMap::zeros(2, 2, 1))
+            }
+        }
+        let mut m = MixedSource::new(vec![
+            Box::new(Finite(1)) as Box<dyn FrameSource>,
+            Box::new(Finite(3)),
+        ]);
+        let mut served = 0;
+        while FrameSource::next_frame(&mut m).is_some() {
+            served += 1;
+        }
+        assert_eq!(served, 4);
+        assert!(FrameSource::next_frame(&mut m).is_none());
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! `PackedStream` — the flat (pos, mask) word-stream frame format: the
+//! software twin of the camera µDMA payload (ROADMAP "packed µDMA
+//! payloads" item). A recorded stream is replayable byte-for-byte, so a
+//! serving run can be captured once and re-served deterministically, and
+//! a producer can write the payload words straight into the activation
+//! buffer — no struct marshalling on the ingress path.
+//!
+//! ## Format (little-endian u64 words)
+//!
+//! ```text
+//! stream := MAGIC u64 | h u64 | w u64 | c u64 | frame*
+//! frame  := payload_bytes u64 | word{⌈payload_bytes/8⌉}
+//! ```
+//!
+//! Within a frame payload, trit `i` (flattened `y·(w·c) + x·c + ch`
+//! order — the activation SRAM's HWC order) occupies payload bits
+//! `[2i, 2i+2)`: bit `2i` is the *mask* plane (non-zero), bit `2i+1` the
+//! *pos* plane (+1). Pairs are 2-bit aligned so a trit never straddles a
+//! word. `payload_bytes` is therefore exactly
+//! [`dma_ingress_bytes`]`(h·w·c)` — the frame record's length prefix IS
+//! the µDMA ingress byte count the SoC timeline charges, asserted by the
+//! round-trip tests.
+
+use anyhow::{bail, ensure, Result};
+
+use super::source::FrameSource;
+use crate::cutie::dma_ingress_bytes;
+use crate::tensor::PackedMap;
+
+/// `b"TCNPKS1\0"` as a little-endian u64.
+pub const MAGIC: u64 = u64::from_le_bytes(*b"TCNPKS1\0");
+
+/// Decode-side sanity cap on trits per frame (64 Mtrit ≈ 16 MiB payload
+/// — far above any real feature map, small enough that a corrupt or
+/// crafted header cannot overflow the size math or drive a huge
+/// allocation before the length checks run).
+const MAX_FRAME_TRITS: u64 = 1 << 26;
+
+/// A replayable sequence of packed frames with one shared geometry.
+///
+/// Implements [`FrameSource`]: frames are served in order, then the
+/// stream reports exhaustion (`None`). [`PackedStream::rewind`] restarts
+/// it; a `clone` preserves the cursor.
+#[derive(Debug, Clone)]
+pub struct PackedStream {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    frames: Vec<PackedMap>,
+    cursor: usize,
+}
+
+impl PackedStream {
+    /// Wrap frames that already exist in memory. All frames must share
+    /// one geometry (a stream is one camera's payload).
+    pub fn from_frames(frames: Vec<PackedMap>) -> Result<Self> {
+        ensure!(!frames.is_empty(), "a packed stream needs at least one frame");
+        let (h, w, c) = (frames[0].h, frames[0].w, frames[0].c);
+        for (i, f) in frames.iter().enumerate() {
+            ensure!(
+                (f.h, f.w, f.c) == (h, w, c),
+                "frame {i} geometry {}x{}x{} != stream {h}x{w}x{c}",
+                f.h,
+                f.w,
+                f.c
+            );
+        }
+        Ok(PackedStream { h, w, c, frames, cursor: 0 })
+    }
+
+    /// Record up to `n` frames from a live source (stops early if the
+    /// source dries up; errors if it produces nothing).
+    pub fn capture(src: &mut dyn FrameSource, n: usize) -> Result<Self> {
+        let mut frames = Vec::with_capacity(n);
+        while frames.len() < n {
+            match src.next_frame() {
+                Some(f) => frames.push(f),
+                None => break,
+            }
+        }
+        Self::from_frames(frames)
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Restart replay from the first frame.
+    pub fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Tight per-frame payload size: exactly the µDMA ingress bytes the
+    /// SoC model charges for one frame of this geometry.
+    pub fn frame_payload_bytes(&self) -> u64 {
+        dma_ingress_bytes(self.h * self.w * self.c)
+    }
+
+    /// Serialize to the flat word-stream form (see module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let payload_bytes = self.frame_payload_bytes();
+        let words_per_frame = (payload_bytes as usize).div_ceil(8);
+        let mut out = Vec::with_capacity(32 + self.frames.len() * (8 + 8 * words_per_frame));
+        for v in [MAGIC, self.h as u64, self.w as u64, self.c as u64] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for frame in &self.frames {
+            out.extend_from_slice(&payload_bytes.to_le_bytes());
+            let mut words = vec![0u64; words_per_frame];
+            let mut bit = 0usize;
+            for px in &frame.pixels {
+                for ch in 0..self.c {
+                    // 2-bit aligned, so both plane bits land in one word
+                    match px.get(ch) {
+                        0 => {}
+                        1 => words[bit / 64] |= 0b11 << (bit % 64),
+                        _ => words[bit / 64] |= 0b01 << (bit % 64),
+                    }
+                    bit += 2;
+                }
+            }
+            for w in words {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a flat word-stream back into frames.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut rd = Reader { bytes, at: 0 };
+        ensure!(rd.u64()? == MAGIC, "not a packed frame stream (bad magic)");
+        let (h64, w64, c64) = (rd.u64()?, rd.u64()?, rd.u64()?);
+        let numel64 = h64
+            .checked_mul(w64)
+            .and_then(|hw| hw.checked_mul(c64))
+            .filter(|&n| n > 0 && n <= MAX_FRAME_TRITS);
+        ensure!(
+            c64 >= 1 && c64 <= 128 && numel64.is_some(),
+            "bad stream geometry {h64}x{w64}x{c64}"
+        );
+        let (h, w, c) = (h64 as usize, w64 as usize, c64 as usize);
+        let payload_bytes = dma_ingress_bytes(h * w * c);
+        let words_per_frame = (payload_bytes as usize).div_ceil(8);
+        let mut frames = Vec::new();
+        while !rd.done() {
+            let prefix = rd.u64()?;
+            ensure!(
+                prefix == payload_bytes,
+                "frame {} length prefix {prefix} != {payload_bytes} for {h}x{w}x{c}",
+                frames.len()
+            );
+            let mut words = Vec::with_capacity(words_per_frame);
+            for _ in 0..words_per_frame {
+                words.push(rd.u64()?);
+            }
+            let mut m = PackedMap::zeros(h, w, c);
+            let mut bit = 0usize;
+            for y in 0..h {
+                for x in 0..w {
+                    for ch in 0..c {
+                        let pair = (words[bit / 64] >> (bit % 64)) & 0b11;
+                        match pair {
+                            0b00 => {}
+                            0b11 => m.set_trit(y, x, ch, 1),
+                            0b01 => m.set_trit(y, x, ch, -1),
+                            _ => bail!("invalid trit encoding (pos without mask) at bit {bit}"),
+                        }
+                        bit += 2;
+                    }
+                }
+            }
+            frames.push(m);
+        }
+        Self::from_frames(frames)
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.encode())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let bytes = std::fs::read(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.as_ref().display()))?;
+        Self::decode(&bytes)
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl Reader<'_> {
+    fn u64(&mut self) -> Result<u64> {
+        ensure!(self.at + 8 <= self.bytes.len(), "truncated stream at byte {}", self.at);
+        let v = u64::from_le_bytes(self.bytes[self.at..self.at + 8].try_into().unwrap());
+        self.at += 8;
+        Ok(v)
+    }
+
+    fn done(&self) -> bool {
+        self.at == self.bytes.len()
+    }
+}
+
+impl FrameSource for PackedStream {
+    fn next_frame(&mut self) -> Option<PackedMap> {
+        let f = self.frames.get(self.cursor)?.clone();
+        self.cursor += 1;
+        Some(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::source::{DvsSource, GestureClass};
+    use crate::tensor::TritTensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_across_geometries() {
+        let mut rng = Rng::new(60);
+        for &(h, w, c, n) in &[(1usize, 1usize, 1usize, 1usize), (4, 6, 17, 3), (8, 8, 96, 2), (2, 3, 128, 4)] {
+            let frames: Vec<PackedMap> = (0..n)
+                .map(|_| PackedMap::from_trit(&TritTensor::random(&[h, w, c], &mut rng, 0.5)))
+                .collect();
+            let s = PackedStream::from_frames(frames.clone()).unwrap();
+            let bytes = s.encode();
+            // container overhead: 4 header words + 1 prefix word per frame
+            let words_per_frame = (s.frame_payload_bytes() as usize).div_ceil(8);
+            assert_eq!(bytes.len(), 32 + n * (8 + 8 * words_per_frame));
+            let d = PackedStream::decode(&bytes).unwrap();
+            assert_eq!((d.h, d.w, d.c, d.len()), (h, w, c, n));
+            let mut d = d;
+            for f in &frames {
+                assert_eq!(FrameSource::next_frame(&mut d).as_ref(), Some(f));
+            }
+            assert!(FrameSource::next_frame(&mut d).is_none());
+        }
+    }
+
+    #[test]
+    fn length_prefix_is_dma_ingress_bytes() {
+        // The frame record's length prefix must be the exact µDMA ingress
+        // byte count — the payload IS what the camera DMA would ship.
+        let mut src = DvsSource::new(16, 9, GestureClass(5));
+        let s = PackedStream::capture(&mut src, 3).unwrap();
+        assert_eq!(s.frame_payload_bytes(), dma_ingress_bytes(16 * 16 * 2));
+        let bytes = s.encode();
+        let prefix = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        assert_eq!(prefix, dma_ingress_bytes(16 * 16 * 2));
+    }
+
+    #[test]
+    fn rewind_replays_identically() {
+        let mut src = DvsSource::new(16, 10, GestureClass(2));
+        let mut s = PackedStream::capture(&mut src, 4).unwrap();
+        let first: Vec<_> = std::iter::from_fn(|| FrameSource::next_frame(&mut s)).collect();
+        assert_eq!(first.len(), 4);
+        s.rewind();
+        let again: Vec<_> = std::iter::from_fn(|| FrameSource::next_frame(&mut s)).collect();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn corrupt_streams_rejected() {
+        let mut src = DvsSource::new(8, 11, GestureClass(0));
+        let s = PackedStream::capture(&mut src, 2).unwrap();
+        let good = s.encode();
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(PackedStream::decode(&bad).is_err());
+        // truncated mid-frame
+        assert!(PackedStream::decode(&good[..good.len() - 3]).is_err());
+        // pos-without-mask is not a trit
+        let mut bad = good.clone();
+        bad[40] = 0b10; // first payload byte: pair (pos=1, mask=0)
+        assert!(PackedStream::decode(&bad).is_err());
+        // absurd header geometry must be a clean decode error, not an
+        // overflow panic or a huge up-front allocation
+        let mut crafted = Vec::new();
+        for v in [MAGIC, 1u64 << 32, 1u64 << 32, 2u64] {
+            crafted.extend_from_slice(&v.to_le_bytes());
+        }
+        let e = PackedStream::decode(&crafted).unwrap_err().to_string();
+        assert!(e.contains("bad stream geometry"), "got: {e}");
+        // mixed geometry refused at construction
+        assert!(PackedStream::from_frames(vec![
+            PackedMap::zeros(2, 2, 4),
+            PackedMap::zeros(2, 2, 5),
+        ])
+        .is_err());
+    }
+}

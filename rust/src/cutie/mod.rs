@@ -27,6 +27,7 @@ pub use config::CutieConfig;
 pub use scheduler::Scheduler;
 pub use scheduler::TcnStrategy;
 pub use stats::{LayerStats, Phase, RunStats};
+pub use tcnmem::TcnMemory;
 
 /// µDMA ingress footprint of `numel` 2-bit trits, in bytes — the single
 /// source of truth for frame-ingress byte math (the scheduler's DMA

@@ -70,6 +70,17 @@ impl Scheduler {
         self
     }
 
+    /// Swap a per-session TCN window in or out (the serving engine's
+    /// checkout). The window is the scheduler's only cross-frame
+    /// recurrent state — the weight memory and prepared-layer caches are
+    /// session-independent (steady-state bank switches and pure packed
+    /// forms of the network) — so swapping the window is all a
+    /// multi-stream engine needs to time-multiplex streams over one
+    /// scheduler with byte-identical counters.
+    pub fn swap_tcn(&mut self, mem: &mut TcnMemory) {
+        std::mem::swap(&mut self.tcn_mem, mem);
+    }
+
     /// Number of cached prepared layers: (conv/TCN kernels, classifiers).
     /// Observability hook for the caching tests.
     pub fn cached_layers(&self) -> (usize, usize) {

@@ -3,16 +3,20 @@
 //! Subcommands:
 //!   info                         accelerator + calibration summary
 //!   run    [--net M] [--voltage V] [--freq MHZ] run one inference + report
-//!   serve  [--frames N] [--voltage V] [--threaded] autonomous DVS serving
+//!   serve  [--frames N] [--voltage V] [--streams K] multi-stream serving
 //!   golden [--net STEM]          co-simulate simulator vs PJRT artifact
 //!   report table1|fig5|fig6|soa|sparsity|mapping|config|layers|all
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use tcn_cutie::coordinator::{Pipeline, PipelineConfig};
+use tcn_cutie::coordinator::source::NUM_CLASSES;
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, FrameSource, GestureClass, PackedStream, Pipeline,
+    PipelineConfig, ServingReport,
+};
 use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
-use tcn_cutie::network::loader;
+use tcn_cutie::network::{dvs_hybrid_random, loader, Network};
 use tcn_cutie::report;
 use tcn_cutie::runtime::{golden, Runtime};
 use tcn_cutie::tensor::TritTensor;
@@ -29,8 +33,15 @@ fn main() {
 const USAGE: &str = "usage: tcn-cutie <info|run|serve|golden|report> [options]
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
   serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
+         [--streams K] [--replay FILE|--record FILE] [--net synthetic]
   golden --net cifar9_96
-  report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>";
+  report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
+
+serve streams frames per session through the engine: session s uses
+gesture (gesture+s) mod 12 and seed seed+s, or replays FILE (a packed
+(pos, mask) word-stream; --record FILE captures one to replay).
+--net synthetic serves the random-weight DVS hybrid network (no
+artifacts needed).";
 
 fn run() -> Result<()> {
     let args = Args::from_env(&["threaded", "json", "fast"]);
@@ -67,9 +78,9 @@ fn info() -> Result<()> {
 fn cmd_run(args: &Args) -> Result<()> {
     let default_net = loader::artifacts_dir().join("cifar9_96.json");
     let manifest = args.opt_or("net", default_net.to_str().unwrap());
-    let v = args.opt_f64("voltage", 0.5);
-    let freq = args.opt("freq").map(|m| m.parse::<f64>().unwrap() * 1e6);
-    let seed = args.opt_u64("seed", 2);
+    let v = args.opt_f64("voltage", 0.5)?;
+    let freq = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
+    let seed = args.opt_u64("seed", 2)?;
     let mode = if args.flag("fast") { SimMode::Fast } else { SimMode::Accurate };
 
     let net = loader::load_network(&manifest).with_context(|| format!("loading {manifest}"))?;
@@ -99,34 +110,19 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
+fn serve_net(args: &Args, seed: u64) -> Result<Network> {
     let default_net = loader::artifacts_dir().join("dvs_hybrid_96.json");
     let manifest = args.opt_or("net", default_net.to_str().unwrap());
-    let net = loader::load_network(&manifest)?;
-    let cfg = PipelineConfig {
-        voltage: args.opt_f64("voltage", 0.5),
-        frames: args.opt_usize("frames", 32),
-        seed: args.opt_u64("seed", 7),
-        gesture: args.opt_usize("gesture", 3),
-        mode: if args.flag("fast") { SimMode::Fast } else { SimMode::Accurate },
-        ..Default::default()
-    };
-    let threaded = args.flag("threaded");
-    // --batch N shards the CNN front-end across N workers (0 = one per
-    // core); results are byte-identical to inline serving.
-    let batch = args.opt("batch").map(|s| s.parse::<usize>().expect("bad int option"));
-    if threaded && batch.is_some() {
-        bail!("--threaded and --batch are mutually exclusive");
+    if manifest == "synthetic" {
+        // random-weight DVS hybrid geometry — lets serving (and the CI
+        // smoke) run without compiled artifacts
+        return Ok(dvs_hybrid_random(96, seed, 0.5));
     }
-    let pipe = Pipeline::new(net, cfg);
-    let (label, mut r) = if let Some(b) = batch {
-        (format!("batched x{b}"), pipe.run_batched(b)?)
-    } else if threaded {
-        ("threaded".to_string(), pipe.run_threaded()?)
-    } else {
-        ("inline".to_string(), pipe.run_inline()?)
-    };
-    println!("serving ({label}): {}", r.metrics.summary());
+    loader::load_network(&manifest).with_context(|| format!("loading {manifest}"))
+}
+
+fn print_report(tag: &str, r: &mut ServingReport) {
+    println!("{tag}: {}", r.metrics.summary());
     println!(
         "  SoC energy {:.2} µJ  avg power {:.2} mW  FC wakeups {}",
         r.soc_energy_j * 1e6,
@@ -134,6 +130,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.fc_wakeups
     );
     println!("  labels: {:?}", &r.labels[..r.labels.len().min(16)]);
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let voltage = args.opt_f64("voltage", 0.5)?;
+    let freq_hz = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
+    let frames = args.opt_usize("frames", 32)?;
+    let seed = args.opt_u64("seed", 7)?;
+    let gesture = args.opt_usize("gesture", 3)?;
+    let streams = args.opt_usize("streams", 1)?;
+    ensure!(streams >= 1, "--streams must be at least 1");
+    ensure!(gesture < NUM_CLASSES, "--gesture must be 0..{}", NUM_CLASSES - 1);
+    let mode = if args.flag("fast") { SimMode::Fast } else { SimMode::Accurate };
+    let threaded = args.flag("threaded");
+    // --batch N shards the CNN front-end across N workers (0 = one per
+    // core); results are byte-identical to inline serving.
+    let batch = args.opt_parsed::<usize>("batch")?;
+    let replay = args.opt("replay");
+    if threaded && batch.is_some() {
+        bail!("--threaded and --batch are mutually exclusive");
+    }
+    if threaded && (streams > 1 || replay.is_some()) {
+        bail!("--threaded serves a single live stream; drop it or use --batch");
+    }
+    let net = serve_net(args, seed)?;
+
+    // --record FILE: capture the stream-0 gesture source as a replayable
+    // packed word-stream (the µDMA payload twin), then serve as usual.
+    if let Some(path) = args.opt("record") {
+        let mut src = DvsSource::new(net.input_hw, seed, GestureClass(gesture));
+        let stream = PackedStream::capture(&mut src, frames)?;
+        stream.save(path)?;
+        println!(
+            "recorded {} frames ({} B/frame payload) -> {path}",
+            stream.len(),
+            stream.frame_payload_bytes()
+        );
+    }
+
+    // Single gesture stream, no replay: the classic topology policies
+    // (all thin wrappers over the same engine path).
+    if streams == 1 && replay.is_none() {
+        let cfg = PipelineConfig {
+            voltage,
+            freq_hz,
+            frames,
+            seed,
+            gesture,
+            mode,
+            ..Default::default()
+        };
+        let pipe = Pipeline::new(net, cfg);
+        let (label, mut r) = if let Some(b) = batch {
+            (format!("batched x{b}"), pipe.run_batched(b)?)
+        } else if threaded {
+            ("threaded".to_string(), pipe.run_threaded()?)
+        } else {
+            ("inline".to_string(), pipe.run_inline()?)
+        };
+        print_report(&format!("serving ({label})"), &mut r);
+        return Ok(());
+    }
+
+    // Multi-stream (or replayed) serving: drive the engine directly.
+    let replay_stream = match replay {
+        Some(path) => {
+            let ps = PackedStream::load(path)?;
+            ensure!(
+                (ps.h, ps.w, ps.c) == (net.input_hw, net.input_hw, 2),
+                "replay stream is {}x{}x{} but {} expects {}x{}x2 frames",
+                ps.h,
+                ps.w,
+                ps.c,
+                net.name,
+                net.input_hw,
+                net.input_hw
+            );
+            Some(ps)
+        }
+        None => None,
+    };
+    let mut sources: Vec<Box<dyn FrameSource>> = (0..streams)
+        .map(|s| match &replay_stream {
+            // every session replays the same recorded payload
+            Some(ps) => Box::new(ps.clone()) as Box<dyn FrameSource>,
+            None => Box::new(DvsSource::new(
+                net.input_hw,
+                seed + s as u64,
+                GestureClass((gesture + s) % NUM_CLASSES),
+            )) as Box<dyn FrameSource>,
+        })
+        .collect();
+
+    let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) };
+    let pool = ecfg.workers;
+    let mut engine = Engine::new(&net, ecfg);
+    // deterministic round-robin interleave across sessions
+    for sid in 0..streams {
+        engine.open_session(sid);
+    }
+    // Drain each round-robin round: memory stays bounded to one frame
+    // per stream and wall latency gets a sample per round (the engine's
+    // determinism tests prove reports are drain-cadence-invariant).
+    let mut served = 0;
+    for _ in 0..frames {
+        for (sid, src) in sources.iter_mut().enumerate() {
+            if let Some(f) = src.next_frame() {
+                engine.submit(sid, f);
+            }
+        }
+        served += engine.drain()?;
+    }
+    println!(
+        "serving (engine: {streams} streams, {} workers, {served} frames{})",
+        if pool == 0 { "auto".to_string() } else { pool.to_string() },
+        if replay_stream.is_some() { ", replayed" } else { "" }
+    );
+    let mut agg = engine.aggregate_report();
+    for (sid, mut r) in engine.finish_all() {
+        print_report(&format!("  [session {sid}]"), &mut r);
+    }
+    print_report("aggregate", &mut agg);
     Ok(())
 }
 
@@ -143,7 +260,7 @@ fn cmd_golden(args: &Args) -> Result<()> {
     let net = loader::load_network(dir.join(format!("{stem}.json")))?;
     let rt = Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
-    let mut rng = Rng::new(args.opt_u64("seed", 1));
+    let mut rng = Rng::new(args.opt_u64("seed", 1)?);
     let check = if net.has_tcn() {
         let cnn = rt.load(dir.join(format!("{stem}_cnn.hlo.txt")))?;
         let tcn = rt.load(dir.join(format!("{stem}_tcn.hlo.txt")))?;

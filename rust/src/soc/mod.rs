@@ -227,6 +227,22 @@ impl KrakenSoc {
         dur
     }
 
+    /// Total simulated SoC energy so far (J).
+    pub fn energy_j(&self) -> f64 {
+        self.ledger.energy_j
+    }
+
+    /// Fabric-controller wakeups so far (one per served frame in the §5
+    /// autonomous flow).
+    pub fn fc_wakeups(&self) -> u64 {
+        self.ledger.fc_wakeups
+    }
+
+    /// Simulated SoC timeline position (ns since boot).
+    pub fn now_ns(&self) -> u64 {
+        self.ledger.now_ns
+    }
+
     /// Average power so far (W).
     pub fn avg_power_w(&self) -> f64 {
         if self.ledger.now_ns == 0 {

@@ -1,7 +1,11 @@
 //! Tiny CLI argument parser (clap is unavailable offline): positional
-//! subcommand + `--key value` options + `--flag` booleans.
+//! subcommand + `--key value` options + `--flag` booleans. Typed option
+//! accessors return `Result` — malformed values (`--freq zap`) surface
+//! as proper CLI errors, never panics.
 
 use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -49,16 +53,33 @@ impl Args {
         self.opt(key).unwrap_or(default).to_string()
     }
 
-    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
-        self.opt(key).map(|s| s.parse().expect("bad float option")).unwrap_or(default)
+    /// Parse `--key value` into any `FromStr` type; `Ok(None)` when the
+    /// option is absent, `Err` (naming the flag and the offending value)
+    /// when it does not parse.
+    pub fn opt_parsed<T>(&self, key: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("invalid --{key} value {s:?}: {e}")),
+        }
     }
 
-    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
-        self.opt(key).map(|s| s.parse().expect("bad int option")).unwrap_or(default)
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        Ok(self.opt_parsed(key)?.unwrap_or(default))
     }
 
-    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
-        self.opt(key).map(|s| s.parse().expect("bad int option")).unwrap_or(default)
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.opt_parsed(key)?.unwrap_or(default))
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> Result<u64> {
+        Ok(self.opt_parsed(key)?.unwrap_or(default))
     }
 
     pub fn flag(&self, name: &str) -> bool {
@@ -96,7 +117,18 @@ mod tests {
     #[test]
     fn defaults() {
         let a = Args::parse(argv(&[]), &[]);
-        assert_eq!(a.opt_f64("voltage", 0.5), 0.5);
-        assert_eq!(a.opt_usize("n", 3), 3);
+        assert_eq!(a.opt_f64("voltage", 0.5).unwrap(), 0.5);
+        assert_eq!(a.opt_usize("n", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn malformed_values_are_errors_not_panics() {
+        let a = Args::parse(argv(&["run", "--freq", "zap", "--frames", "-3"]), &[]);
+        let e = a.opt_parsed::<f64>("freq").unwrap_err().to_string();
+        assert!(e.contains("--freq") && e.contains("zap"), "got: {e}");
+        assert!(a.opt_f64("freq", 100.0).is_err());
+        assert!(a.opt_usize("frames", 1).is_err(), "negative usize must not parse");
+        // absent keys still fall back to defaults
+        assert_eq!(a.opt_u64("seed", 9).unwrap(), 9);
     }
 }

@@ -1,7 +1,9 @@
 //! Integration tests over the full serving pipeline with the real
 //! artifact-loaded networks (SRV experiment) plus failure injection.
 
-use tcn_cutie::coordinator::{DvsSource, GestureClass, Pipeline, PipelineConfig};
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig,
+};
 use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode, TcnStrategy};
 use tcn_cutie::network::loader;
 use tcn_cutie::tensor::TritTensor;
@@ -44,6 +46,54 @@ fn threaded_serving_is_deterministic_vs_inline() {
     let a = Pipeline::new(net.clone(), cfg.clone()).run_inline().unwrap();
     let b = Pipeline::new(net, cfg).run_threaded().unwrap();
     assert_eq!(a.labels, b.labels);
+}
+
+#[test]
+fn engine_reference_and_multi_stream_on_real_net() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = loader::load_network(artifacts().join("dvs_hybrid_96.json")).unwrap();
+
+    // engine-backed inline policy == retained pre-engine loop, on the
+    // real artifact network
+    let cfg = PipelineConfig { frames: 4, mode: SimMode::Fast, ..Default::default() };
+    let p = Pipeline::new(net.clone(), cfg);
+    let a = p.run_reference().unwrap();
+    let b = p.run_inline().unwrap();
+    assert_eq!(a.labels, b.labels);
+    assert_eq!(a.fc_wakeups, b.fc_wakeups);
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits());
+    assert_eq!(a.metrics.core_energy_j.to_bits(), b.metrics.core_energy_j.to_bits());
+
+    // two interleaved sessions == two isolated runs
+    let solo: Vec<_> = (0..2)
+        .map(|s| {
+            let ecfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+            let mut e = Engine::new(&net, ecfg);
+            let mut src = DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s));
+            for _ in 0..3 {
+                e.submit(s, src.next_frame());
+                e.drain().unwrap();
+            }
+            e.finish_session(s).unwrap()
+        })
+        .collect();
+    let ecfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut e = Engine::new(&net, ecfg);
+    let mut srcs: Vec<DvsSource> =
+        (0..2).map(|s| DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s))).collect();
+    for _ in 0..3 {
+        for (s, src) in srcs.iter_mut().enumerate() {
+            e.submit(s, src.next_frame());
+        }
+        e.drain().unwrap();
+    }
+    for (s, rep) in e.finish_all() {
+        assert_eq!(rep.labels, solo[s].labels, "session {s}");
+        assert_eq!(rep.soc_energy_j.to_bits(), solo[s].soc_energy_j.to_bits(), "session {s}");
+    }
 }
 
 #[test]
