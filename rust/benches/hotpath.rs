@@ -18,7 +18,7 @@ use tcn_cutie::coordinator::{
     DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig,
 };
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
-use tcn_cutie::cutie::{CutieConfig, SimMode};
+use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
 use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
 use tcn_cutie::tensor::{PackedMap, TritTensor};
 use tcn_cutie::trit::{dot_scalar, PackedVec};
@@ -105,6 +105,58 @@ fn main() {
     );
     suite.push(&r_cnn_i8);
     suite.push_speedup(&r_cnn_packed, &r_cnn_i8);
+
+    // --- packed-vs-i8 TCN tail A/B (perf pass iteration 9) ---
+    // The same warm 24-step window through the 4-layer mapped TCN +
+    // classifier, once via the retained i8 marshalling tail (window →
+    // (T, C) i8 → per-layer map_input re-pack → i8 unwrap/slice) and
+    // once packed-native (wrap images straight off the memory's
+    // multiplexed port, word-copy unwrap, packed last-step read).
+    // Counters are identical either way (tests/tcn_packed.rs proves it);
+    // this measures the marshalling tax the tentpole removes.
+    let mut tail = Scheduler::new(cfg.clone(), SimMode::Accurate);
+    tail.preload_weights(&dnet);
+    let mut warm = DvsSource::new(64, 12, GestureClass(5));
+    for _ in 0..24 {
+        let f = warm.next_frame();
+        let (feat, _) = tail.run_cnn(&dnet, &f).unwrap();
+        tail.push_feature(&feat).unwrap();
+    }
+    let r_tail_i8 = bench("TCN tail 24-step window i8 marshalling (baseline)", 3, 30, || {
+        tail.run_tcn_i8(&dnet).unwrap()
+    });
+    let r_tail_packed = bench("TCN tail 24-step window packed", 3, 30, || {
+        tail.run_tcn(&dnet).unwrap()
+    });
+    println!(
+        "  speedup packed vs i8 TCN tail: {:.2}x\n",
+        r_tail_i8.median_s / r_tail_packed.median_s
+    );
+    suite.push(&r_tail_i8);
+    suite.push_speedup(&r_tail_packed, &r_tail_i8);
+
+    // --- full DVS frame loop A/B: CNN + TCN-memory push + tail ---
+    // The whole per-frame serving hot path (what every engine stream
+    // pays per frame), packed end to end vs the same CNN with the i8
+    // marshalling tail.
+    let mut loop_i8 = Scheduler::new(cfg.clone(), SimMode::Accurate);
+    let mut loop_packed = Scheduler::new(cfg.clone(), SimMode::Accurate);
+    loop_i8.preload_weights(&dnet);
+    loop_packed.preload_weights(&dnet);
+    let r_frame_i8 = bench("DVS frame loop CNN + i8 TCN tail (baseline)", 2, 10, || {
+        let (feat, _) = loop_i8.run_cnn(&dnet, &frame).unwrap();
+        loop_i8.push_feature(&feat).unwrap();
+        loop_i8.run_tcn_i8(&dnet).unwrap()
+    });
+    let r_frame_packed = bench("DVS frame loop packed serve_frame", 2, 10, || {
+        loop_packed.serve_frame(&dnet, &frame).unwrap()
+    });
+    println!(
+        "  speedup packed vs i8 full frame loop: {:.2}x\n",
+        r_frame_i8.median_s / r_frame_packed.median_s
+    );
+    suite.push(&r_frame_i8);
+    suite.push_speedup(&r_frame_packed, &r_frame_i8);
 
     // --- end-to-end serving throughput: inline vs batched, vs realtime ---
     for (label, mode) in [("accurate", SimMode::Accurate), ("fast", SimMode::Fast)] {

@@ -203,10 +203,13 @@ impl<'n> Engine<'n> {
             let (feat, mut run) = slot.expect("all frames dispatched");
             let sess = self.sessions.get_mut(&sid).expect("submit opened the session");
             sess.ingest(&frame);
-            // check the stream's recurrent TCN window out into the tail
+            // check the stream's recurrent TCN window out into the tail;
+            // the packed feature word moves into it as-is (no unpack)
             self.tail.swap_tcn(&mut sess.tcn);
-            self.tail.push_feature(&feat);
-            let tcn_result = self.tail.run_tcn(self.net);
+            let tcn_result = match self.tail.push_feature(&feat) {
+                Ok(()) => self.tail.run_tcn(self.net),
+                Err(e) => Err(e),
+            };
             self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
             let (logits, r) = tcn_result?;
             run.merge(r);

@@ -1,7 +1,10 @@
 //! Per-stream serving state. One [`Session`] = one user's frame stream:
 //! its own 24-step TCN window (the recurrent state of the hybrid
-//! network), its own [`KrakenSoc`] energy/time ledger, label history and
-//! latency metrics. Sessions share the engine's stateless compute
+//! network, held as packed (pos, mask) feature words — it checks out
+//! into the tail scheduler via `swap_tcn` and back in without ever
+//! leaving the 2-bit encoding), its own [`KrakenSoc`] energy/time
+//! ledger, label history and latency metrics. Sessions share the
+//! engine's stateless compute
 //! (scheduler pool, weight residency, prepared-layer caches) but never
 //! each other's recurrent state, so N streams can interleave through one
 //! engine with byte-identical results to serving each alone.
@@ -14,8 +17,9 @@ use super::metrics::{ServingMetrics, ServingReport};
 
 pub struct Session {
     pub id: usize,
-    /// The stream's recurrent TCN window; checked out into the tail
-    /// scheduler for the duration of each of this session's frames.
+    /// The stream's recurrent TCN window (a packed-word ring); checked
+    /// out into the tail scheduler for the duration of each of this
+    /// session's frames.
     pub tcn: TcnMemory,
     /// The stream's SoC timeline: µDMA ingress, IRQs, FC wakeups, energy.
     pub soc: KrakenSoc,

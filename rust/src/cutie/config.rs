@@ -56,9 +56,10 @@ impl CutieConfig {
         (active_ocus * self.kernel * self.kernel * self.channels * 2) as u64
     }
 
-    /// TCN memory size in bytes (2-bit trits, depth × channels).
+    /// TCN memory size in bytes (2-bit trits, depth × channels; rounded
+    /// up per step — see `TcnMemory::size_bytes`).
     pub fn tcn_mem_bytes(&self) -> usize {
-        self.tcn_depth * self.channels * 2 / 8
+        self.tcn_depth * (self.channels * 2).div_ceil(8)
     }
 
     /// Activation memory size in bytes per buffer (double-buffered).

@@ -463,6 +463,37 @@ pub fn run_dense_prepared(
 ) -> Result<(IntTensor, LayerStats)> {
     let f = prep.in_ch;
     ensure!(input.numel() == f, "{}: classifier input {} != {}", prep.name, input.numel(), f);
+    let chunks: Vec<PackedVec> = (0..f.div_ceil(cfg.channels))
+        .map(|chunk| {
+            let lo_i = chunk * cfg.channels;
+            let hi_i = ((chunk + 1) * cfg.channels).min(f);
+            PackedVec::pack(&input.data[lo_i..hi_i])
+        })
+        .collect();
+    run_dense_packed(prep, &chunks, cfg, mode)
+}
+
+/// Core classifier loop over pre-chunked packed feature words — the
+/// packed-native entry the TCN tail feeds directly (the last-step word
+/// comes straight out of the packed sequence; perf pass iteration 9).
+/// `chunks[i]` must hold channels [i·C, min((i+1)·C, f)) with all
+/// higher plane bits clear — true for any word the packed pipeline
+/// produces over those channels. Counter-identical to
+/// [`run_dense_prepared`] by construction (same words, same skips).
+pub fn run_dense_packed(
+    prep: &PreparedDense,
+    chunks: &[PackedVec],
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<(IntTensor, LayerStats)> {
+    let f = prep.in_ch;
+    ensure!(
+        chunks.len() == f.div_ceil(cfg.channels),
+        "{}: classifier chunk count {} != {}",
+        prep.name,
+        chunks.len(),
+        f.div_ceil(cfg.channels)
+    );
     ensure!(
         prep.chunk_channels == cfg.channels,
         "{}: weights packed for a {}-channel datapath, config has {}",
@@ -480,26 +511,22 @@ pub fn run_dense_prepared(
         ..Default::default()
     };
 
-    let chunks = f.div_ceil(cfg.channels);
     let mut logits = IntTensor::zeros(&[classes]);
-    for chunk in 0..chunks {
-        let lo_i = chunk * cfg.channels;
-        let hi_i = ((chunk + 1) * cfg.channels).min(f);
-        let x = PackedVec::pack(&input.data[lo_i..hi_i]);
+    for (chunk, x) in chunks.iter().enumerate() {
         // all-zero feature chunks contribute neither logits nor toggles
         if x.is_zero() {
             continue;
         }
         let wrow = &prep.weights[chunk * classes..(chunk + 1) * classes];
         for (co, wv) in wrow.iter().enumerate() {
-            let (acc, toggles) = wv.dot(&x);
+            let (acc, toggles) = wv.dot(x);
             logits.data[co] += acc;
             stats.mac_toggles += toggles as u64;
         }
     }
-    stats.compute_cycles = chunks as u64;
+    stats.compute_cycles = chunks.len() as u64;
     stats.drain_cycles = 1;
-    stats.act_reads = chunks as u64;
+    stats.act_reads = chunks.len() as u64;
     stats.act_writes = 0; // logits leave via the config port / interrupt
     stats.hw_ops = cfg.hw_ops_per_cycle(classes) * stats.compute_cycles;
     stats.alg_macs = (f * classes) as u64;

@@ -13,7 +13,9 @@ use std::collections::HashMap;
 use anyhow::{ensure, Result};
 
 use super::actmem::ActivationMemory;
-use super::datapath::{run_dense_prepared, run_prepared, PreparedDense, PreparedLayer};
+use super::datapath::{
+    run_dense_packed, run_dense_prepared, run_prepared, PreparedDense, PreparedLayer,
+};
 use super::stats::{LayerStats, RunStats};
 use super::tcnmem::TcnMemory;
 use super::weightmem::{WeightAccess, WeightMemory};
@@ -30,6 +32,29 @@ pub enum TcnStrategy {
     Mapped,
     /// Direct strided access — the baseline the mapping replaces.
     Direct,
+}
+
+/// Fetch-or-build the cached §4-mapped form of a TCN layer (taps
+/// projected into the middle column of a 3×3 kernel, cached under
+/// `{name}::mapped`). Shared by the packed and i8 mapped paths so the
+/// prepared-kernel cache cannot diverge between them. Free function
+/// over the cache field so callers keep disjoint borrows of the
+/// scheduler's other fields.
+fn prepared_mapped<'a>(
+    prepared: &'a mut HashMap<String, PreparedLayer>,
+    layer: &Layer,
+) -> &'a mut PreparedLayer {
+    prepared.entry(format!("{}::mapped", layer.name)).or_insert_with(|| {
+        let mapped = Layer {
+            weights: mapping::map_weights(&layer.weights),
+            kernel: 3,
+            kind: LayerKind::Tcn,
+            pool: false,
+            global_pool: false,
+            ..layer.clone()
+        };
+        PreparedLayer::new(&mapped)
+    })
 }
 
 pub struct Scheduler {
@@ -176,30 +201,140 @@ impl Scheduler {
     }
 
     /// Push a CNN feature vector (a 1×1 packed map) into the TCN memory
-    /// (§4). Vectors narrower than the hardware's channel width ride
-    /// zero-padded, as in the RTL (unused channels are tied off).
-    pub fn push_feature(&mut self, feat: &PackedMap) {
-        // hard assert: silently truncating an HxW map to pixel (0,0)
-        // would serve plausible-looking but wrong labels
-        assert!(feat.h == 1 && feat.w == 1, "CNN must end in a 1×1 feature vector");
-        let mut padded = feat.pixel(0, 0).unpack(feat.c);
-        padded.resize(self.cfg.channels, 0);
-        self.tcn_mem.push(&padded);
+    /// (§4) — the (pos, mask) word moves as-is, no unpack/re-pack
+    /// (perf pass iteration 9). Vectors narrower than the hardware's
+    /// channel width ride zero-padded for free (plane bits ≥ `c` are
+    /// clear by the `PackedMap` invariant — unused channels are tied
+    /// off, as in the RTL); wider ones are rejected instead of being
+    /// silently truncated to the hardware width, which would serve
+    /// plausible-looking but wrong labels.
+    pub fn push_feature(&mut self, feat: &PackedMap) -> Result<()> {
+        // an HxW map silently collapsed to pixel (0,0) would also serve
+        // plausible-looking but wrong labels — reject it outright
+        ensure!(
+            feat.h == 1 && feat.w == 1,
+            "CNN must end in a 1×1 feature vector, got {}×{}",
+            feat.h,
+            feat.w
+        );
+        ensure!(
+            feat.c <= self.tcn_mem.channels,
+            "feature vector of {} channels exceeds the {}-channel TCN memory",
+            feat.c,
+            self.tcn_mem.channels
+        );
+        self.tcn_mem.push_packed(*feat.pixel(0, 0));
+        Ok(())
+    }
+
+    /// Feature width of the TCN tail: the first TCN layer's input
+    /// channels (the RTL's channels above it are tied to zero).
+    fn feat_width(&self, net: &Network) -> usize {
+        net.tcn_layers().next().map(|l| l.in_ch).unwrap_or(self.cfg.channels)
     }
 
     /// Run the TCN back-end + classifier over the TCN memory window.
+    /// The §4 mapped strategy is packed-native end to end (perf pass
+    /// iteration 9): the wrap images come off the TCN memory's
+    /// multiplexed read port / the packed wrapper as `PackedMap`s, the
+    /// inter-layer sequences stay (pos, mask) words, and the classifier
+    /// consumes the last-step word directly. The direct ablation
+    /// strategy routes through the retained i8 reference tail
+    /// ([`run_tcn_i8`]).
     pub fn run_tcn(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
+        match self.tcn_strategy {
+            TcnStrategy::Mapped => self.run_tcn_packed(net),
+            TcnStrategy::Direct => self.run_tcn_i8(net),
+        }
+    }
+
+    /// The packed-native §4 tail (the iteration 9 tentpole): no i8
+    /// unpack/re-pack anywhere between the CNN's final feature map and
+    /// the classifier's logits. Counter-identical to [`run_tcn_i8`]
+    /// with the mapped strategy — asserted across the DVS serving
+    /// workload by `tests/tcn_packed.rs`.
+    fn run_tcn_packed(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
+        let mut run = RunStats::default();
+        let feat_ch = self.feat_width(net);
+        // None until the first TCN layer runs: that layer reads its wrap
+        // image straight off the memory's address-multiplexed port.
+        let mut seq: Option<PackedMap> = None;
+        let mut first = true;
+        for layer in &net.layers {
+            match layer.kind {
+                LayerKind::Conv2d => continue,
+                LayerKind::Tcn => {
+                    let reads_before = self.tcn_mem.reads;
+                    let z = match seq.as_ref() {
+                        None => self.tcn_mem.wrap_image(layer.dilation, feat_ch),
+                        Some(s) => mapping::map_input_packed(s, layer.dilation),
+                    };
+                    let (out, mut stats) = self.run_tcn_mapped_packed(layer, &z)?;
+                    if first {
+                        // first TCN layer reads straight out of the TCN
+                        // memory's multiplexed port
+                        stats.tcn_reads = self.tcn_mem.reads - reads_before;
+                        first = false;
+                    }
+                    self.charge_weights(layer, &mut stats);
+                    run.layers.push(stats);
+                    seq = Some(out);
+                }
+                LayerKind::Dense => {
+                    let last = match seq.as_ref() {
+                        Some(s) => {
+                            ensure!(
+                                s.c == layer.in_ch,
+                                "{}: classifier input {} != {}",
+                                layer.name,
+                                s.c,
+                                layer.in_ch
+                            );
+                            *s.pixel(s.h - 1, 0)
+                        }
+                        // no TCN layers: the classifier reads the newest
+                        // step off the memory's packed window
+                        None => {
+                            let w = self.tcn_mem.packed_window(feat_ch);
+                            ensure!(
+                                feat_ch == layer.in_ch,
+                                "{}: classifier input {} != {}",
+                                layer.name,
+                                feat_ch,
+                                layer.in_ch
+                            );
+                            *w.pixel(w.h - 1, 0)
+                        }
+                    };
+                    let channels = self.cfg.channels;
+                    let prep = self
+                        .prepared_dense
+                        .entry(layer.name.clone())
+                        .or_insert_with(|| PreparedDense::new(layer, channels));
+                    // one last-step word == one chunk (tail widths are
+                    // ≤ the datapath's channel count by construction)
+                    let (logits, stats) = run_dense_packed(prep, &[last], &self.cfg, self.mode)?;
+                    run.layers.push(stats);
+                    return Ok((logits, run));
+                }
+            }
+        }
+        anyhow::bail!("network has no classifier layer")
+    }
+
+    /// Retained i8 reference tail — the pre-iteration-9 marshalling
+    /// dataflow (window → (T, C) i8 sequence → per-layer `map_input`
+    /// wrap → i8 unwrap → i8 last-step slice). Serves as the A/B
+    /// equivalence baseline for the packed tail (`tests/tcn_packed.rs`,
+    /// the hotpath bench) and hosts the direct-strided A2 ablation.
+    pub fn run_tcn_i8(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
         let mut run = RunStats::default();
         let reads_before = self.tcn_mem.reads;
         let window = self.tcn_mem.window();
         let window_reads = self.tcn_mem.reads - reads_before;
         // Slice the hardware-width window down to the network's feature
         // width (the RTL's unused channels are tied to zero).
-        let feat_ch = net
-            .tcn_layers()
-            .next()
-            .map(|l| l.in_ch)
-            .unwrap_or(self.cfg.channels);
+        let feat_ch = self.feat_width(net);
         let mut seq = TritTensor::zeros(&[self.cfg.tcn_depth, feat_ch]);
         for t in 0..self.cfg.tcn_depth {
             for c in 0..feat_ch {
@@ -247,18 +382,7 @@ impl Scheduler {
     fn run_tcn_mapped(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
         let t_len = seq.dims[0];
         let z = PackedMap::from_trit(&mapping::map_input(seq, layer.dilation));
-        let key = format!("{}::mapped", layer.name);
-        let prep = self.prepared.entry(key).or_insert_with(|| {
-            let mapped = Layer {
-                weights: mapping::map_weights(&layer.weights),
-                kernel: 3,
-                kind: LayerKind::Tcn,
-                pool: false,
-                global_pool: false,
-                ..layer.clone()
-            };
-            PreparedLayer::new(&mapped)
-        });
+        let prep = prepared_mapped(&mut self.prepared, layer);
         let result = run_prepared(prep, &z, &self.cfg, self.mode)?;
         let mut stats = result.stats;
         // unmap: address arithmetic only, no cycles, no data movement —
@@ -273,6 +397,26 @@ impl Scheduler {
             }
         }
         stats.name = layer.name.clone();
+        Ok((out, stats))
+    }
+
+    /// §4 mapping, packed-native (perf pass iteration 9): the wrap image
+    /// arrives as a `PackedMap` (built by the TCN memory's multiplexed
+    /// read port or [`mapping::map_input_packed`]), runs the packed
+    /// column-stationary loop, and the un-mapping gathers whole
+    /// (pos, mask) words — address arithmetic only, no cycles, no i8.
+    /// Shares the `{name}::mapped` prepared-kernel cache with the i8
+    /// twin ([`Self::run_tcn_mapped`]); only the marshalling differs.
+    fn run_tcn_mapped_packed(
+        &mut self,
+        layer: &Layer,
+        z: &PackedMap,
+    ) -> Result<(PackedMap, LayerStats)> {
+        let prep = prepared_mapped(&mut self.prepared, layer);
+        let result = run_prepared(prep, z, &self.cfg, self.mode)?;
+        let mut stats = result.stats;
+        stats.name = layer.name.clone();
+        let out = mapping::unmap_output_packed(&result.output, self.cfg.tcn_depth, layer.dilation);
         Ok((out, stats))
     }
 
@@ -361,7 +505,7 @@ impl Scheduler {
                 ));
                 let (feat, r) = self.run_cnn(net, &frame)?;
                 run.merge(r);
-                self.push_feature(&feat);
+                self.push_feature(&feat)?;
             }
             let (logits, r) = self.run_tcn(net)?;
             run.merge(r);
@@ -389,7 +533,7 @@ impl Scheduler {
     /// autonomous data-to-label flow.
     pub fn serve_frame(&mut self, net: &Network, frame: &PackedMap) -> Result<(IntTensor, RunStats)> {
         let (feat, mut run) = self.run_cnn(net, frame)?;
-        self.push_feature(&feat);
+        self.push_feature(&feat)?;
         let (logits, r) = self.run_tcn(net)?;
         run.merge(r);
         Ok((logits, run))
@@ -497,6 +641,40 @@ mod tests {
         }
         assert!(sched.tcn_mem.is_full());
         assert_eq!(sched.tcn_mem.len(), 24);
+    }
+
+    #[test]
+    fn push_feature_rejects_bad_shapes() {
+        let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        // wider than the hardware channel count: silently truncating
+        // would serve wrong labels — must be a proper error
+        assert!(sched.push_feature(&PackedMap::zeros(1, 1, 128)).is_err());
+        // not a 1×1 feature vector
+        assert!(sched.push_feature(&PackedMap::zeros(2, 2, 4)).is_err());
+        assert_eq!(sched.tcn_mem.len(), 0, "rejected features must not be stored");
+        // narrow features ride zero-padded
+        assert!(sched.push_feature(&PackedMap::zeros(1, 1, 16)).is_ok());
+        assert_eq!(sched.tcn_mem.len(), 1);
+    }
+
+    #[test]
+    fn packed_tail_matches_i8_reference_tail() {
+        // The in-module smoke check; the exhaustive sweep (counters,
+        // energy bits, cold start → post-eviction) is tests/tcn_packed.rs.
+        let net = dvs_hybrid_random(16, 97, 0.5);
+        let mut rng = Rng::new(98);
+        let mut packed = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        let mut i8ref = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        for _ in 0..4 {
+            let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
+            let (lp, _) = packed.serve_frame(&net, &f).unwrap();
+            let (feat, _) = i8ref.run_cnn(&net, &f).unwrap();
+            i8ref.push_feature(&feat).unwrap();
+            let (li, _) = i8ref.run_tcn_i8(&net).unwrap();
+            assert_eq!(lp, li, "packed and i8 tails must agree bitwise");
+        }
+        assert_eq!(packed.tcn_mem.shift_toggles, i8ref.tcn_mem.shift_toggles);
+        assert_eq!(packed.tcn_mem.reads, i8ref.tcn_mem.reads);
     }
 
     #[test]

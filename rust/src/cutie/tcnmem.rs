@@ -5,15 +5,28 @@
 //! the activation memory... achieved by multiplexing three time steps
 //! according to the address of the first required pixel" — i.e. reads are
 //! address-multiplexed, never marshalled.
+//!
+//! Since perf pass iteration 9 the memory is **packed-native**: it stores
+//! the CNN's (pos, mask) feature words as-is ([`TcnMemory::push_packed`])
+//! and its read port produces the §4 wrapped map directly as a
+//! [`PackedMap`] ([`TcnMemory::wrap_image`]) — causal zero row,
+//! cold-start zero padding and (q+1, m) placement are pure word-level
+//! copies, exactly the no-marshalling property the silicon's multiplexed
+//! read port has. The i8 entry points ([`TcnMemory::push`],
+//! [`TcnMemory::window`]) survive as the reference/ablation edge and the
+//! equivalence-test baseline. The ring evicts with a `pop_front`, never
+//! an O(depth) element shift (same fix class as the PR 2 linebuffer).
 
-use crate::tensor::TritTensor;
+use std::collections::VecDeque;
+
+use crate::tensor::{PackedMap, TritTensor};
 use crate::trit::PackedVec;
 
 pub struct TcnMemory {
     pub depth: usize,
     pub channels: usize,
-    /// Newest-last ring of feature vectors.
-    steps: Vec<PackedVec>,
+    /// Newest-last ring of packed feature words (front = oldest).
+    steps: VecDeque<PackedVec>,
     pub pushes: u64,
     pub reads: u64,
     /// Trit positions that changed value on shift (flip-flop toggle proxy).
@@ -22,7 +35,14 @@ pub struct TcnMemory {
 
 impl TcnMemory {
     pub fn new(depth: usize, channels: usize) -> Self {
-        TcnMemory { depth, channels, steps: Vec::new(), pushes: 0, reads: 0, shift_toggles: 0 }
+        TcnMemory {
+            depth,
+            channels,
+            steps: VecDeque::with_capacity(depth),
+            pushes: 0,
+            reads: 0,
+            shift_toggles: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -37,25 +57,39 @@ impl TcnMemory {
         self.steps.len() == self.depth
     }
 
-    /// Push one feature vector (oldest drops once full). Counts flip-flop
-    /// toggle activity: every occupied slot shifts by one position.
-    pub fn push(&mut self, feat: &[i8]) {
-        assert_eq!(feat.len(), self.channels, "feature width");
-        let v = PackedVec::pack(feat);
+    /// Push one packed feature word straight off the CNN's 1×1 feature
+    /// map — the word IS the stored SCM content, nothing is unpacked or
+    /// re-packed. Plane bits at positions ≥ the word's channel width are
+    /// clear by the `PackedMap` invariant, so narrow features ride
+    /// zero-padded for free (unused channels are tied off, as in the
+    /// RTL). Oldest step drops once full. Counts flip-flop toggle
+    /// activity: every occupied slot shifts by one position.
+    pub fn push_packed(&mut self, v: PackedVec) {
+        // the packed twin of the old i8 width assert: a word with plane
+        // bits at positions ≥ the memory's channel count would silently
+        // lose them on the i8 window() read
+        assert!(v.masked(self.channels) == v, "feature word wider than the {}-channel memory", self.channels);
         // toggle proxy: each resident vector moves one slot; charge the
         // non-zero trits that physically flip wires.
         for s in &self.steps {
             self.shift_toggles += s.count_nonzero() as u64;
         }
         if self.steps.len() == self.depth {
-            self.steps.remove(0);
+            self.steps.pop_front();
         }
-        self.steps.push(v);
+        self.steps.push_back(v);
         self.pushes += 1;
     }
 
+    /// i8-edge push (reference executor and tests): packs, then stores.
+    pub fn push(&mut self, feat: &[i8]) {
+        assert_eq!(feat.len(), self.channels, "feature width");
+        self.push_packed(PackedVec::pack(feat));
+    }
+
     /// Read the window as a (T, C) sequence, zero-padded at the old end if
-    /// fewer than `depth` steps have been pushed (cold start).
+    /// fewer than `depth` steps have been pushed (cold start). i8
+    /// reference path; the frame loop reads [`wrap_image`] instead.
     pub fn window(&mut self) -> TritTensor {
         self.reads += self.steps.len() as u64;
         let mut out = TritTensor::zeros(&[self.depth, self.channels]);
@@ -68,9 +102,46 @@ impl TcnMemory {
         out
     }
 
+    /// Read the window as a (T, 1, C_f) packed column of feature words —
+    /// the packed twin of [`window`] sliced to `feat_ch` channels
+    /// (word-level masking replaces the slice), charging the same read
+    /// activity.
+    pub fn packed_window(&mut self, feat_ch: usize) -> PackedMap {
+        self.reads += self.steps.len() as u64;
+        let mut out = PackedMap::zeros(self.depth, 1, feat_ch);
+        let pad = self.depth - self.steps.len();
+        for (i, s) in self.steps.iter().enumerate() {
+            out.pixels[pad + i] = s.masked(feat_ch);
+        }
+        out
+    }
+
+    /// The §4 address-multiplexed read port: produce the wrapped
+    /// (R+1, D, C_f) map for dilation `d` directly from the ring.
+    /// Leading causal zero row, cold-start zero padding and the
+    /// z[q+1, m] = x[q·D + m] placement are all word-level copies — no
+    /// (T, C) window is materialized and nothing round-trips through i8.
+    /// Charges the same read activity as [`window`] (one read per
+    /// resident step: the port multiplexes, it does not copy).
+    pub fn wrap_image(&mut self, d: usize, feat_ch: usize) -> PackedMap {
+        self.reads += self.steps.len() as u64;
+        let rows = self.depth.div_ceil(d);
+        let mut z = PackedMap::zeros(rows + 1, d, feat_ch);
+        let pad = self.depth - self.steps.len();
+        for (i, s) in self.steps.iter().enumerate() {
+            let n = pad + i;
+            let (q, m) = (n / d, n % d);
+            z.pixels[(q + 1) * d + m] = s.masked(feat_ch);
+        }
+        z
+    }
+
     /// Memory size in bytes (2-bit trits) — §5 sizes this at 576 B.
+    /// Rounded up per step, so channel widths that are not a multiple of
+    /// 4 don't under-report (e.g. depth=4, channels=3 is 4 B, not the
+    /// truncated 3 B).
     pub fn size_bytes(&self) -> usize {
-        self.depth * self.channels * 2 / 8
+        self.depth * (self.channels * 2).div_ceil(8)
     }
 }
 
@@ -82,6 +153,15 @@ mod tests {
     fn kraken_is_576_bytes() {
         let m = TcnMemory::new(24, 96);
         assert_eq!(m.size_bytes(), 576);
+    }
+
+    #[test]
+    fn size_bytes_rounds_up_per_step() {
+        // 3 channels = 6 bits/step → 1 byte/step × 4 steps = 4 B; the
+        // old whole-memory truncation (4·3·2/8) under-reported.
+        assert_eq!(TcnMemory::new(4, 3).size_bytes(), 4);
+        assert_eq!(TcnMemory::new(24, 1).size_bytes(), 24);
+        assert_eq!(TcnMemory::new(2, 5).size_bytes(), 2 * 2);
     }
 
     #[test]
@@ -99,11 +179,56 @@ mod tests {
     }
 
     #[test]
+    fn packed_push_matches_i8_push() {
+        let mut a = TcnMemory::new(3, 4);
+        let mut b = TcnMemory::new(3, 4);
+        for step in [[1i8, -1, 0, 0], [0, 0, 1, 0], [-1, -1, -1, 1], [0, 1, 0, 0]] {
+            a.push(&step);
+            b.push_packed(PackedVec::pack(&step));
+            assert_eq!(a.window().data, b.window().data);
+            assert_eq!(a.pushes, b.pushes);
+            assert_eq!(a.shift_toggles, b.shift_toggles);
+        }
+    }
+
+    #[test]
     fn cold_start_zero_pads_old_end() {
         let mut m = TcnMemory::new(4, 2);
         m.push(&[1, -1]);
         let w = m.window();
         assert_eq!(w.data, vec![0, 0, 0, 0, 0, 0, 1, -1]);
+        // packed twin: same padding, same content, as packed words
+        let p = m.packed_window(2);
+        assert_eq!((p.h, p.w, p.c), (4, 1, 2));
+        assert_eq!(p.unpack_data(), w.data);
+    }
+
+    #[test]
+    fn wrap_image_places_causal_row_and_cold_start() {
+        // depth 4, one resident step [1, -1], dilation 2: n = 3 lands at
+        // (q+1, m) = (2, 1); rows 0 (causal) and all padded cells zero.
+        let mut m = TcnMemory::new(4, 2);
+        m.push(&[1, -1]);
+        let z = m.wrap_image(2, 2);
+        assert_eq!((z.h, z.w, z.c), (3, 2, 2));
+        for y in 0..3 {
+            for x in 0..2 {
+                let want: &[i8] = if (y, x) == (2, 1) { &[1, -1] } else { &[0, 0] };
+                assert_eq!(z.pixel(y, x).unpack(2), want, "({y}, {x})");
+            }
+        }
+        assert_eq!(m.reads, 1, "one resident step multiplexed once");
+    }
+
+    #[test]
+    fn packed_window_masks_to_feature_width() {
+        // A full-width i8 push with junk above feat_ch must read back
+        // masked, matching the i8 path's channel slice.
+        let mut m = TcnMemory::new(2, 6);
+        m.push(&[1, -1, 0, 1, 1, -1]);
+        let p = m.packed_window(3);
+        assert_eq!(p.c, 3);
+        assert_eq!(p.pixel(1, 0).unpack(6), vec![1, -1, 0, 0, 0, 0]);
     }
 
     #[test]

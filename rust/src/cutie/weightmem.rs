@@ -4,12 +4,16 @@
 //! *switches* banks (1 cycle); streaming loads are charged only when a
 //! layer's kernels are not resident (capacity miss or first boot).
 
+use std::collections::VecDeque;
+
 #[derive(Debug, Clone)]
 pub struct WeightMemory {
     pub banks: usize,
     pub channels: usize,
-    /// Layer names resident per bank slot (LRU order, front = oldest).
-    resident: Vec<String>,
+    /// Layer names resident per bank slot (LRU ring, front = oldest;
+    /// capacity eviction is a `pop_front`, never an element shift —
+    /// same fix class as the PR 2 linebuffer).
+    resident: VecDeque<String>,
     pub bank_switches: u64,
     pub streamed_words: u64,
 }
@@ -26,7 +30,7 @@ impl WeightMemory {
         WeightMemory {
             banks,
             channels,
-            resident: Vec::new(),
+            resident: VecDeque::new(),
             bank_switches: 0,
             streamed_words: 0,
         }
@@ -37,8 +41,8 @@ impl WeightMemory {
     pub fn prepare(&mut self, name: &str, kernel_sq: usize, in_ch: usize, active: usize) -> WeightAccess {
         if let Some(pos) = self.resident.iter().position(|r| r == name) {
             // hit: refresh LRU, 1-cycle bank switch
-            let n = self.resident.remove(pos);
-            self.resident.push(n);
+            let n = self.resident.remove(pos).expect("position is in range");
+            self.resident.push_back(n);
             self.bank_switches += 1;
             return WeightAccess::Switch;
         }
@@ -46,9 +50,9 @@ impl WeightMemory {
         // receiving one C_in-wide word per cycle → K² · ceil(C_in / C)
         // cycles (C_in <= C in Kraken, so K² cycles).
         while self.resident.len() >= self.banks {
-            self.resident.remove(0);
+            self.resident.pop_front();
         }
-        self.resident.push(name.to_string());
+        self.resident.push_back(name.to_string());
         let cycles = (kernel_sq * in_ch.div_ceil(self.channels)) as u64;
         let words = cycles * active as u64;
         self.streamed_words += words;

@@ -75,9 +75,17 @@ fn info() -> Result<()> {
     Ok(())
 }
 
+/// Default artifact path as a UTF-8 string — a non-UTF-8 artifacts
+/// directory is a proper error, not a panic (PR 3 CLI-hardening pass).
+fn default_net_path(file: &str) -> Result<String> {
+    let p = loader::artifacts_dir().join(file);
+    Ok(p.to_str()
+        .with_context(|| format!("artifacts path {} is not valid UTF-8", p.display()))?
+        .to_string())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
-    let default_net = loader::artifacts_dir().join("cifar9_96.json");
-    let manifest = args.opt_or("net", default_net.to_str().unwrap());
+    let manifest = args.opt_or("net", &default_net_path("cifar9_96.json")?);
     let v = args.opt_f64("voltage", 0.5)?;
     let freq = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
     let seed = args.opt_u64("seed", 2)?;
@@ -111,8 +119,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn serve_net(args: &Args, seed: u64) -> Result<Network> {
-    let default_net = loader::artifacts_dir().join("dvs_hybrid_96.json");
-    let manifest = args.opt_or("net", default_net.to_str().unwrap());
+    let manifest = args.opt_or("net", &default_net_path("dvs_hybrid_96.json")?);
     if manifest == "synthetic" {
         // random-weight DVS hybrid geometry — lets serving (and the CI
         // smoke) run without compiled artifacts

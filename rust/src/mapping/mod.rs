@@ -6,7 +6,7 @@
 //!   3x3 conv with the 1D taps bottom-aligned in the middle column;
 //!   y[n] = out[n / D, n % D].
 
-use crate::tensor::{IntTensor, TritTensor};
+use crate::tensor::{IntTensor, PackedMap, TritTensor};
 
 /// Rows of the wrapped map z (excluding the causal pad row).
 pub fn wrapped_rows(t_len: usize, dilation: usize) -> usize {
@@ -27,6 +27,39 @@ pub fn map_input(x: &TritTensor, dilation: usize) -> TritTensor {
         }
     }
     z
+}
+
+/// Packed twin of [`map_input`] (perf pass iteration 9): wrap a
+/// (T, 1, C) packed feature sequence into the (R+1, D, C) wrapped map
+/// with pure word-level copies — leading causal zero row included,
+/// nothing round-trips through i8. Bit-identical to
+/// `PackedMap::from_trit(&map_input(seq_i8, d))`; the property sweep in
+/// `tests/tcn_packed.rs` enforces it.
+pub fn map_input_packed(seq: &PackedMap, dilation: usize) -> PackedMap {
+    assert_eq!(seq.w, 1, "expected a (T, 1, C) packed sequence");
+    let (t_len, c) = (seq.h, seq.c);
+    let rows = wrapped_rows(t_len, dilation);
+    let mut z = PackedMap::zeros(rows + 1, dilation, c);
+    for n in 0..t_len {
+        let (q, m) = (n / dilation, n % dilation);
+        z.pixels[(q + 1) * dilation + m] = seq.pixels[n];
+    }
+    z
+}
+
+/// Packed twin of the §4 un-mapping: gather y[n] = z2d[n / D, n % D]
+/// back into a (T, 1, C_out) packed sequence — address arithmetic and
+/// whole-word gathers only, no cycles, no data conversion (the ternary
+/// wrapped-map outputs stay in their (pos, mask) encoding between TCN
+/// layers).
+pub fn unmap_output_packed(acc2d: &PackedMap, t_len: usize, dilation: usize) -> PackedMap {
+    assert_eq!(acc2d.w, dilation, "wrapped map width must equal the dilation");
+    let mut out = PackedMap::zeros(t_len, 1, acc2d.c);
+    for n in 0..t_len {
+        let (q, m) = (n / dilation, n % dilation);
+        out.pixels[n] = acc2d.pixels[q * dilation + m];
+    }
+    out
 }
 
 /// Project (N, Cin, Cout) 1D taps into the middle column of a 3x3 kernel,
@@ -161,6 +194,35 @@ mod tests {
 
             let want = naive_dilated_conv1d(&x, &w, d);
             assert_eq!(got, want, "t={t_len} d={d} n={n} cin={cin} cout={cout}");
+        }
+    }
+
+    #[test]
+    fn packed_wrap_matches_i8_wrap_property() {
+        // Seeded sweep: word-copy wrapping == pack(map_input(i8)), and
+        // the packed unmap inverts the placement (row q readout).
+        let mut rng = Rng::new(43);
+        for case in 0..150 {
+            let t_len = 1 + rng.below(30);
+            let d = 1 + rng.below(9);
+            let c = 1 + rng.below(96);
+            let zf = [0.0, 0.4, 0.8, 0.95][case % 4];
+            let x = TritTensor::random(&[t_len, c], &mut rng, zf);
+            let seq = PackedMap::from_trit(&TritTensor::from_vec(&[t_len, 1, c], x.data.clone()));
+            let zp = map_input_packed(&seq, d);
+            let zi = map_input(&x, d);
+            assert_eq!(
+                zp,
+                PackedMap::from_trit(&zi),
+                "wrap t={t_len} d={d} c={c} case={case}"
+            );
+            // unmap gathers row q — same addressing as unmap_output
+            let un = unmap_output_packed(&zp, t_len, d);
+            assert_eq!((un.h, un.w, un.c), (t_len, 1, c));
+            for n in 0..t_len {
+                let (q, m) = (n / d, n % d);
+                assert_eq!(*un.pixel(n, 0), *zp.pixel(q, m), "unmap n={n}");
+            }
         }
     }
 

@@ -142,6 +142,29 @@ impl PackedVec {
         acc
     }
 
+    /// Copy with every plane bit at positions ≥ `n` cleared — the packed
+    /// twin of slicing a channel vector down to its first `n` channels
+    /// (the RTL ties unused channels to zero). Used by the TCN memory's
+    /// read port to present a hardware-width word as a `feat_ch`-wide
+    /// one (perf pass iteration 9).
+    #[inline]
+    pub fn masked(&self, n: usize) -> PackedVec {
+        debug_assert!(n <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
+        let mut out = *self;
+        if n >= MAX_CHANNELS {
+            return out;
+        }
+        let (w, b) = (n / 64, n % 64);
+        let keep = (1u64 << b) - 1;
+        out.pos[w] &= keep;
+        out.mask[w] &= keep;
+        for i in (w + 1)..WORDS {
+            out.pos[i] = 0;
+            out.mask[i] = 0;
+        }
+        out
+    }
+
     /// Channel-wise ternary max — the packed pooling primitive (perf pass
     /// iteration 8). On the (pos, mask) planes `max(a, b)` is two bitwise
     /// ops per word: the result is +1 iff either operand is +1
@@ -510,6 +533,26 @@ mod tests {
             assert_eq!(got.unpack(n), want, "n {n} case {case}");
             for w in 0..2 {
                 assert_eq!(got.pos[w] & !got.mask[w], 0, "pos ⊆ mask violated");
+            }
+        }
+    }
+
+    #[test]
+    fn masked_equals_truncated_repack() {
+        // Property: masking to n channels == packing only the first n
+        // trits, across word-boundary widths (incl. 0, 64, 128).
+        let mut rng = Rng::new(16);
+        for case in 0..200 {
+            let len = 1 + rng.below(MAX_CHANNELS);
+            let trits: Vec<i8> = (0..len).map(|_| rng.trit(0.3)).collect();
+            let v = PackedVec::pack(&trits);
+            for &n in &[0, 1, 21, 63, 64, 65, 96, 127, 128] {
+                let m = v.masked(n);
+                let kept = &trits[..n.min(len)];
+                assert_eq!(m, PackedVec::pack(kept), "len {len} n {n} case {case}");
+                for w in 0..2 {
+                    assert_eq!(m.pos[w] & !m.mask[w], 0, "pos ⊆ mask violated");
+                }
             }
         }
     }

@@ -1,0 +1,199 @@
+//! Equivalence suite for the packed TCN tail (perf pass iteration 9):
+//! the (pos, mask) feature words now flow from the CNN's 1×1 feature
+//! map through the TCN memory ring, the §4 wrap images and the
+//! classifier's last-step read without ever round-tripping through i8.
+//! Every test here pins the packed path bit-exact against the retained
+//! i8 reference — `TcnMemory::window` + `mapping::map_input` +
+//! `Scheduler::run_tcn_i8` — the same retained-oracle methodology as
+//! the PR 2 packed-dataflow suite (`tests/packed.rs`):
+//!
+//! 1. a seeded property sweep over (depth, channels, feature width,
+//!    dilation, sparsity, occupancy) — cold-start, exactly-full and
+//!    post-eviction windows — asserting the packed window and the
+//!    port-built wrap image equal the i8 `window`/`map_input` chain
+//!    word for word, with identical read charges;
+//! 2. whole-net packed-vs-i8 serving equivalence on the EXPERIMENTS
+//!    §Anchors DVS workload (`report::dvs_workload`): logits, labels,
+//!    every per-layer activity counter (incl. `tcn_reads`), the TCN
+//!    memory's own `pushes`/`reads`/`shift_toggles` and the energy
+//!    model's f64 bits, per frame, through cold start and eviction;
+//! 3. the mapped-vs-direct strategy cross-check on the same workload.
+
+use tcn_cutie::cutie::{CutieConfig, LayerStats, Scheduler, SimMode, TcnMemory};
+use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::mapping;
+use tcn_cutie::report;
+use tcn_cutie::tensor::{PackedMap, TritTensor};
+use tcn_cutie::trit::PackedVec;
+use tcn_cutie::util::rng::Rng;
+
+/// Slice the (T, C_hw) i8 window down to `feat_ch` channels as a
+/// (T, 1, C_f) tensor — the reference the packed window must match.
+fn slice_window(w: &TritTensor, feat_ch: usize) -> TritTensor {
+    let (t_len, chw) = (w.dims[0], w.dims[1]);
+    let mut out = TritTensor::zeros(&[t_len, 1, feat_ch]);
+    for t in 0..t_len {
+        for c in 0..feat_ch {
+            out.data[t * feat_ch + c] = w.data[t * chw + c];
+        }
+    }
+    out
+}
+
+#[test]
+fn packed_window_and_wrap_image_match_i8_path_sweep() {
+    let mut rng = Rng::new(9001);
+    for case in 0..120 {
+        let depth = 1 + rng.below(24);
+        let channels = [4, 21, 64, 96, 128][rng.below(5)];
+        let feat_ch = 1 + rng.below(channels);
+        let zf = [0.0, 0.33, 0.66, 0.95][case % 4];
+        // occupancy grid: cold start (< depth), exactly full, and
+        // post-eviction (> depth pushes)
+        let pushes = [0, 1, depth.saturating_sub(1).max(1), depth, depth + 1 + rng.below(6)]
+            [case % 5];
+
+        let mut pm = TcnMemory::new(depth, channels);
+        let mut im = TcnMemory::new(depth, channels);
+        for p in 0..pushes {
+            // alternate realistic pushes (non-zero only below feat_ch,
+            // as the CNN produces) with adversarial full-width ones
+            // (junk above feat_ch that the port must mask off, matching
+            // the i8 path's channel slice)
+            let width = if p % 3 == 2 { channels } else { feat_ch };
+            let mut v = vec![0i8; channels];
+            for t in v.iter_mut().take(width) {
+                *t = rng.trit(zf);
+            }
+            im.push(&v);
+            pm.push_packed(PackedVec::pack(&v));
+        }
+        assert_eq!(pm.len(), im.len());
+        assert_eq!(pm.is_full(), pushes >= depth);
+        assert_eq!(pm.shift_toggles, im.shift_toggles, "case {case}: shift toggles");
+
+        // packed window == sliced i8 window, with identical read charges
+        let w = im.window();
+        let pw = pm.packed_window(feat_ch);
+        let ctx = format!("case {case} depth={depth} ch={channels} f={feat_ch} n={pushes}");
+        assert_eq!(pw, PackedMap::from_trit(&slice_window(&w, feat_ch)), "{ctx}: window");
+        assert_eq!(pm.reads, im.reads, "{ctx}: port reads");
+
+        // the port-built wrap image == pack(map_input(sliced window)),
+        // for every DVS dilation that fits, charging window-equal reads
+        for d in [1, 2, 4, 8] {
+            let reads_p = pm.reads;
+            let z = pm.wrap_image(d, feat_ch);
+            let seq = TritTensor::from_vec(
+                &[depth, feat_ch],
+                slice_window(&w, feat_ch).data.clone(),
+            );
+            let zi = mapping::map_input(&seq, d);
+            assert_eq!(z, PackedMap::from_trit(&zi), "{ctx}: wrap d={d}");
+            // the port charges one read per resident step, like window()
+            assert_eq!(pm.reads - reads_p, pm.len() as u64, "{ctx}: wrap reads d={d}");
+            // the packed wrapper over an explicit sequence agrees too
+            let pseq = PackedMap::from_trit(&TritTensor::from_vec(
+                &[depth, 1, feat_ch],
+                seq.data.clone(),
+            ));
+            assert_eq!(mapping::map_input_packed(&pseq, d), z, "{ctx}: map_input_packed d={d}");
+        }
+    }
+}
+
+/// Datapath + scheduler counters that must be representation-invariant
+/// between the packed tail and the retained i8 marshalling tail.
+fn assert_layer_counters_equal(p: &LayerStats, i: &LayerStats, ctx: &str) {
+    assert_eq!(p.name, i.name, "{ctx}: layer order");
+    assert_eq!(p.mac_toggles, i.mac_toggles, "{ctx}: mac_toggles");
+    assert_eq!(p.mac_idle, i.mac_idle, "{ctx}: mac_idle");
+    assert_eq!(p.compute_cycles, i.compute_cycles, "{ctx}: compute_cycles");
+    assert_eq!(p.lb_fill_cycles, i.lb_fill_cycles, "{ctx}: lb_fill_cycles");
+    assert_eq!(p.drain_cycles, i.drain_cycles, "{ctx}: drain_cycles");
+    assert_eq!(p.stall_cycles, i.stall_cycles, "{ctx}: stall_cycles");
+    assert_eq!(p.weight_load_cycles, i.weight_load_cycles, "{ctx}: weight_load_cycles");
+    assert_eq!(p.weight_words, i.weight_words, "{ctx}: weight_words");
+    assert_eq!(p.act_reads, i.act_reads, "{ctx}: act_reads");
+    assert_eq!(p.act_writes, i.act_writes, "{ctx}: act_writes");
+    assert_eq!(p.lb_pushes, i.lb_pushes, "{ctx}: lb_pushes");
+    assert_eq!(p.tcn_reads, i.tcn_reads, "{ctx}: tcn_reads");
+    assert_eq!(p.tcn_pushes, i.tcn_pushes, "{ctx}: tcn_pushes");
+    assert_eq!(p.hw_ops, i.hw_ops, "{ctx}: hw_ops");
+    assert_eq!(p.alg_macs, i.alg_macs, "{ctx}: alg_macs");
+    assert_eq!(p.active_ocus, i.active_ocus, "{ctx}: active_ocus");
+    assert_eq!(p.fanin, i.fanin, "{ctx}: fanin");
+}
+
+/// Whole-net serving equivalence pinned on the EXPERIMENTS §Anchors DVS
+/// workload: 30 frames (> the 24-step window: cold start, fill-up and
+/// post-eviction steady state) served by the packed tail vs the same
+/// CNN + the retained i8 marshalling tail. Logits, all per-layer
+/// counters, the TCN memory's own ledger and the energy model's f64
+/// bits must be identical frame by frame, in both sim modes.
+#[test]
+fn dvs_serving_packed_tail_bit_exact_vs_i8_reference() {
+    let (net, frames) = report::dvs_workload(30);
+    let params = EnergyParams::default();
+    for mode in [SimMode::Accurate, SimMode::Fast] {
+        let mut packed = Scheduler::new(CutieConfig::kraken(), mode);
+        let mut i8ref = Scheduler::new(CutieConfig::kraken(), mode);
+        packed.preload_weights(&net);
+        i8ref.preload_weights(&net);
+        for (i, f) in frames.iter().enumerate() {
+            let ctx = format!("mode={mode:?} frame={i}");
+            let (lp, rp) = packed.serve_frame(&net, f).unwrap();
+            // i8 reference: identical CNN front-end, then the retained
+            // marshalling tail (i8 push, window, map_input, i8 slice)
+            let (feat, mut ri) = i8ref.run_cnn(&net, f).unwrap();
+            let mut padded = feat.pixel(0, 0).unpack(feat.c);
+            padded.resize(96, 0);
+            i8ref.tcn_mem.push(&padded);
+            let (li, rt) = i8ref.run_tcn_i8(&net).unwrap();
+            ri.merge(rt);
+
+            assert_eq!(lp, li, "{ctx}: logits");
+            assert_eq!(lp.argmax(), li.argmax(), "{ctx}: label");
+            assert_eq!(rp.dma_cycles, ri.dma_cycles, "{ctx}: dma_cycles");
+            assert_eq!(rp.dma_bytes, ri.dma_bytes, "{ctx}: dma_bytes");
+            assert_eq!(rp.layers.len(), ri.layers.len(), "{ctx}: layer count");
+            for (p, w) in rp.layers.iter().zip(&ri.layers) {
+                assert_layer_counters_equal(p, w, &format!("{ctx} layer {}", p.name));
+            }
+            // the TCN memory's own activity ledger
+            assert_eq!(packed.tcn_mem.pushes, i8ref.tcn_mem.pushes, "{ctx}: tcn pushes");
+            assert_eq!(packed.tcn_mem.reads, i8ref.tcn_mem.reads, "{ctx}: tcn reads");
+            assert_eq!(
+                packed.tcn_mem.shift_toggles,
+                i8ref.tcn_mem.shift_toggles,
+                "{ctx}: tcn shift toggles"
+            );
+            // energy model consumes only the counters above — f64-bit equal
+            let ep = evaluate(&rp, 0.5, None, &params);
+            let ei = evaluate(&ri, 0.5, None, &params);
+            assert_eq!(ep.energy_j.to_bits(), ei.energy_j.to_bits(), "{ctx}: energy bits");
+            assert_eq!(ep.time_s.to_bits(), ei.time_s.to_bits(), "{ctx}: time bits");
+        }
+        assert!(packed.tcn_mem.is_full(), "30 frames must fill the 24-step window");
+    }
+}
+
+/// The A2 cross-check on the same workload: the direct-strided strategy
+/// (which routes through the i8 reference tail) must agree with the
+/// packed mapped tail on every label, while stalling.
+#[test]
+fn dvs_packed_mapped_agrees_with_direct_strategy() {
+    let (net, frames) = report::dvs_workload(8);
+    let mut mapped = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+    let mut direct = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate)
+        .with_tcn_strategy(tcn_cutie::cutie::TcnStrategy::Direct);
+    let mut stalls_d = 0;
+    for (i, f) in frames.iter().enumerate() {
+        let (lm, rm) = mapped.serve_frame(&net, f).unwrap();
+        let (ld, rd) = direct.serve_frame(&net, f).unwrap();
+        assert_eq!(lm, ld, "frame {i}: strategies must agree bitwise");
+        assert_eq!(rm.stall_cycles(), 0, "frame {i}: mapped must be stall-free");
+        stalls_d += rd.stall_cycles();
+    }
+    assert!(stalls_d > 0, "direct strided access must stall");
+}
