@@ -18,9 +18,9 @@ use tcn_cutie::coordinator::{
     DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig,
 };
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
-use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
-use tcn_cutie::network::{cifar9_random, dvs_hybrid_random};
-use tcn_cutie::tensor::{PackedMap, TritTensor};
+use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, loader};
+use tcn_cutie::tensor::{ttn, PackedMap, TritTensor};
 use tcn_cutie::trit::{dot_scalar, PackedVec};
 use tcn_cutie::util::bench::{bench, black_box, BenchSuite};
 use tcn_cutie::util::rng::Rng;
@@ -188,6 +188,43 @@ fn main() {
         suite.push(&r_inline);
         suite.push_speedup(&r_batch, &r_inline);
     }
+
+    // --- boot A/B: i8 `.ttn` re-pack vs packed-image word-copy load ---
+    // The shared-image pass measurement: the same full-width DVS network
+    // booted from TTN1 bytes (parse + per-OCU i8 gather/pack of every
+    // kernel) vs TTN2 bytes (parse + word-copy of the plane words).
+    let boot_net = dvs_hybrid_random(96, 21, 0.5);
+    let v1_bytes = ttn::write_bytes(&loader::network_bundle(&boot_net));
+    let boot_image = PreparedNet::new(&boot_net, &cfg).to_image();
+    let v2_bytes = ttn::upgrade_bytes(&v1_bytes, &boot_image).unwrap();
+    let r_boot_i8 = bench("boot: preload i8 .ttn (baseline)", 2, 10, || {
+        let (bundle, _) = ttn::read_bytes_full(black_box(&v1_bytes)).unwrap();
+        black_box(&bundle);
+        PreparedNet::new(&boot_net, &cfg)
+    });
+    let r_boot_packed = bench("boot: load packed image", 2, 10, || {
+        let (_, img) = ttn::read_bytes_full(black_box(&v2_bytes)).unwrap();
+        PreparedNet::from_image(&img.unwrap(), &boot_net, &cfg).unwrap()
+    });
+    println!(
+        "  speedup word-copy boot vs i8 re-pack: {:.2}x  ({} B v1, {} B v2)\n",
+        r_boot_i8.median_s / r_boot_packed.median_s,
+        v1_bytes.len(),
+        v2_bytes.len()
+    );
+    suite.push(&r_boot_i8);
+    suite.push_speedup(&r_boot_packed, &r_boot_i8);
+
+    // --- engine spawn: 8-worker pool over one shared Arc'd image ---
+    // Before the shared-image pass every worker re-packed its own copy;
+    // now spawn cost is one image build + K bank-adoptions.
+    let r_spawn = bench("engine: spawn 8-worker pool", 2, 10, || {
+        Engine::new(
+            &boot_net,
+            EngineConfig { mode: SimMode::Fast, workers: 8, ..Default::default() },
+        )
+    });
+    suite.push(&r_spawn);
 
     // --- multi-stream engine serving: 4 sessions interleaved ---
     // The serving-throughput ledger entry (api_redesign pass): the same

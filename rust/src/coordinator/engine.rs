@@ -18,23 +18,33 @@
 //!
 //! Determinism: every counter the energy model consumes is
 //! sharding-invariant (the datapath's counters are analytic in the
-//! geometry and toggle sums are order-independent), workers preload the
-//! network so weight accesses are the same steady-state bank switches
-//! the inline scheduler charges, and all cross-frame recurrent state is
-//! per-session (checked out into the tail scheduler per frame via
-//! [`Scheduler::swap_tcn`]). Interleaving K sessions through one engine
-//! is therefore byte-identical to serving each stream alone — asserted
-//! for K ∈ {1, 2, 5} and both [`SimMode`]s in `tests/engine.rs`.
+//! geometry and toggle sums are order-independent), workers adopt the
+//! tail's booted weight banks so their accesses are the same
+//! steady-state bank switches the inline scheduler charges, and all
+//! cross-frame recurrent state is per-session (checked out into the
+//! tail scheduler per frame via [`Scheduler::swap_tcn`]). Interleaving
+//! K sessions through one engine is therefore byte-identical to serving
+//! each stream alone — asserted for K ∈ {1, 2, 5} and both [`SimMode`]s
+//! in `tests/engine.rs`.
+//!
+//! Weight image (shared-image pass): the engine holds **exactly one**
+//! [`PreparedNet`] behind an [`Arc`] — built once from the network (or
+//! word-copy-loaded from a packed `.ttn` v2 via [`Engine::with_image`])
+//! and borrowed by the tail and every pool worker. Spawning a worker no
+//! longer re-packs or clones a single weight word, which is what makes
+//! wide pools (and, next, multi-engine sharding) cheap — the software
+//! twin of CUTIE's boot-once, stay-resident OCU weight buffers.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use super::metrics::{ServingMetrics, ServingReport};
 use super::session::Session;
 use super::source::FrameSource;
-use crate::cutie::{CutieConfig, RunStats, Scheduler, SimMode};
+use crate::cutie::{CutieConfig, PreparedNet, RunStats, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
 use crate::network::Network;
 use crate::tensor::PackedMap;
@@ -60,10 +70,14 @@ pub struct Engine<'n> {
     net: &'n Network,
     cfg: EngineConfig,
     params: EnergyParams,
+    /// The one prepared-weight image every scheduler in this engine
+    /// borrows (tail + all pool workers share this `Arc`).
+    image: Arc<PreparedNet>,
     /// Stateful tail executor: per-session TCN windows are swapped into
     /// it frame by frame; also runs the CNN when the pool is serial.
     tail: Scheduler,
-    /// Preloaded CNN workers (empty when `cfg.workers` resolves to 1).
+    /// CNN workers borrowing the shared image (empty when `cfg.workers`
+    /// resolves to 1).
     workers: Vec<Scheduler>,
     sessions: BTreeMap<usize, Session>,
     /// Submitted, not yet drained (session, frame) pairs in arrival order.
@@ -72,12 +86,37 @@ pub struct Engine<'n> {
 
 impl<'n> Engine<'n> {
     pub fn new(net: &'n Network, cfg: EngineConfig) -> Self {
+        let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
+        Self::with_image(net, cfg, image).expect("freshly built image matches its network")
+    }
+
+    /// Boot from a pre-built weight image — e.g. one word-copy-loaded
+    /// from a packed `.ttn` v2 file, or one shared with other engines.
+    /// The image is fully validated against `net` (coverage, geometry,
+    /// pooling flags, per-OCU thresholds) before any scheduler borrows
+    /// it; only the plane words themselves are taken on trust — see
+    /// [`PreparedNet::validate_against`] for that contract.
+    pub fn with_image(
+        net: &'n Network,
+        cfg: EngineConfig,
+        image: Arc<PreparedNet>,
+    ) -> Result<Self> {
+        image.validate_against(net)?;
+        ensure!(
+            image.matches(net),
+            "prepared image '{}' does not match network '{}'",
+            image.net_name(),
+            net.name
+        );
         let pool = if cfg.workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             cfg.workers
         };
+        // The tail boots the image into its weight banks (the one
+        // modeled weight-streaming charge)...
         let mut tail = Scheduler::new(CutieConfig::kraken(), cfg.mode);
+        tail.attach_image(Arc::clone(&image));
         tail.preload_weights(net);
         let workers = if pool <= 1 {
             Vec::new()
@@ -88,21 +127,38 @@ impl<'n> Engine<'n> {
             let wcfg = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
             (0..pool)
                 .map(|_| {
+                    // ...and every worker borrows that image and adopts
+                    // the already-filled banks: spawning a worker moves
+                    // no weight data, modeled or host-side.
                     let mut s = Scheduler::new(wcfg.clone(), cfg.mode);
-                    s.preload_weights(net);
+                    s.attach_image(Arc::clone(&image));
+                    s.adopt_weights(net);
                     s
                 })
                 .collect()
         };
-        Engine {
+        Ok(Engine {
             net,
             cfg,
             params: EnergyParams::default(),
+            image,
             tail,
             workers,
             sessions: BTreeMap::new(),
             pending: Vec::new(),
-        }
+        })
+    }
+
+    /// The engine's one shared prepared-weight image. `Arc::strong_count`
+    /// on it is 2 + pool width (engine + tail + workers) — asserted by
+    /// the pool-sharing tests.
+    pub fn image(&self) -> &Arc<PreparedNet> {
+        &self.image
+    }
+
+    /// Pool width (0 workers = serial: the tail runs the CNN too).
+    pub fn pool_size(&self) -> usize {
+        self.workers.len()
     }
 
     /// Register (or fetch) a stream's session. `submit` opens sessions

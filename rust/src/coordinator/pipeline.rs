@@ -20,15 +20,16 @@
 //! retained i8 window-stationary datapath loop.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 pub use super::metrics::ServingReport;
 use super::engine::{Engine, EngineConfig};
 use super::metrics::ServingMetrics;
 use super::source::{DvsSource, GestureClass};
-use crate::cutie::{dma_ingress_bytes, CutieConfig, Scheduler, SimMode};
+use crate::cutie::{dma_ingress_bytes, CutieConfig, PreparedNet, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
 use crate::network::Network;
 use crate::soc::{Irq, KrakenSoc};
@@ -65,16 +66,36 @@ impl Default for PipelineConfig {
 pub struct Pipeline {
     pub net: Network,
     pub cfg: PipelineConfig,
+    /// The one prepared-weight image every policy run's engine borrows
+    /// (shared-image pass) — built once per pipeline, not per policy.
+    image: Arc<PreparedNet>,
 }
 
 impl Pipeline {
     pub fn new(net: Network, cfg: PipelineConfig) -> Self {
-        Pipeline { net, cfg }
+        let image = Arc::new(PreparedNet::new(&net, &CutieConfig::kraken()));
+        Pipeline { net, cfg, image }
+    }
+
+    /// Construct over a pre-built weight image (e.g. word-copy-loaded
+    /// from a packed `.ttn` v2 file). The image is fully validated
+    /// against `net` (coverage, geometry, pooling flags, thresholds —
+    /// see [`PreparedNet::validate_against`] for what the check cannot
+    /// cover) before any policy serves from it.
+    pub fn with_image(net: Network, cfg: PipelineConfig, image: Arc<PreparedNet>) -> Result<Self> {
+        image.validate_against(&net)?;
+        ensure!(
+            image.matches(&net),
+            "prepared image '{}' does not match network '{}'",
+            image.net_name(),
+            net.name
+        );
+        Ok(Pipeline { net, cfg, image })
     }
 
     /// The engine this pipeline's policies are wrappers over.
     fn engine(&self, workers: usize) -> Engine<'_> {
-        Engine::new(
+        Engine::with_image(
             &self.net,
             EngineConfig {
                 voltage: self.cfg.voltage,
@@ -82,7 +103,9 @@ impl Pipeline {
                 mode: self.cfg.mode,
                 workers,
             },
+            Arc::clone(&self.image),
         )
+        .expect("pipeline image was validated against its own network")
     }
 
     /// This pipeline's deterministic synthetic gesture stream.
@@ -157,7 +180,9 @@ impl Pipeline {
     /// per-frame sequence written out long-hand. Kept verbatim as the
     /// equivalence oracle the engine path is asserted byte-identical
     /// against (`engine_path_matches_reference_loop`), not used for
-    /// serving.
+    /// serving. Deliberately builds its own private weight image instead
+    /// of borrowing the pipeline's shared one, so it also oracles the
+    /// shared-image path.
     pub fn run_reference(&self) -> Result<ServingReport> {
         let params = EnergyParams::default();
         let mut sched = Scheduler::new(CutieConfig::kraken(), self.cfg.mode);

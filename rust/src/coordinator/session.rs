@@ -4,10 +4,11 @@
 //! into the tail scheduler via `swap_tcn` and back in without ever
 //! leaving the 2-bit encoding), its own [`KrakenSoc`] energy/time
 //! ledger, label history and latency metrics. Sessions share the
-//! engine's stateless compute
-//! (scheduler pool, weight residency, prepared-layer caches) but never
-//! each other's recurrent state, so N streams can interleave through one
-//! engine with byte-identical results to serving each alone.
+//! engine's stateless compute — the scheduler pool, the weight-bank
+//! residency model, and the engine's one `Arc`'d prepared-weight image
+//! (shared-image pass) — but never each other's recurrent state, so N
+//! streams can interleave through one engine with byte-identical
+//! results to serving each alone.
 
 use crate::cutie::TcnMemory;
 use crate::soc::KrakenSoc;

@@ -47,7 +47,13 @@ pub struct LayerResultI8 {
 /// packed kernels + threshold arrays (perf pass iteration 5 — built once
 /// per layer and cached by the scheduler across frames instead of being
 /// re-packed on every inference), plus the column-major fused kernel
-/// vectors the column-stationary loop consumes (iteration 7).
+/// vectors the column-stationary loop consumes (iteration 7). Since the
+/// shared-image pass the prepared form is also the `.ttn` v2 on-disk
+/// weight currency: [`PreparedLayer::flat_words`] is exactly what the
+/// packed weight-image section stores, and
+/// [`PreparedLayer::from_packed`] rebuilds the layer from those words
+/// without ever touching i8.
+#[derive(Debug, PartialEq)]
 pub struct PreparedLayer {
     pub name: String,
     pub kind: LayerKind,
@@ -69,6 +75,27 @@ pub struct PreparedLayer {
     hi_flat: Vec<i32>,
 }
 
+/// Fuse position-major kernel words into the column-major [`TritCol`]
+/// operands of the fused column loop (`wcols[kc · active + co]` packs
+/// kernel rows kc, 3+kc, 6+kc of OCU co). Pure word-level ops — shared
+/// by the i8 build path ([`PreparedLayer::new`]) and the word-copy boot
+/// path ([`PreparedLayer::from_packed`]) so the two cannot diverge.
+fn fuse_wcols(weights_flat: &[PackedVec], active: usize, in_ch: usize) -> (Vec<TritCol>, usize) {
+    let col_words = TritCol::words(in_ch);
+    let mut wcols = vec![TritCol::ZERO; 3 * active];
+    for co in 0..active {
+        for kc in 0..3 {
+            let rows = [
+                weights_flat[kc * active + co],
+                weights_flat[(3 + kc) * active + co],
+                weights_flat[(6 + kc) * active + co],
+            ];
+            wcols[kc * active + co] = TritCol::pack_rows(&rows, in_ch);
+        }
+    }
+    (wcols, col_words)
+}
+
 impl PreparedLayer {
     pub fn new(layer: &Layer) -> Self {
         let ocus: Vec<Ocu> = build_ocus(&layer.weights, &layer.lo, &layer.hi);
@@ -81,18 +108,11 @@ impl PreparedLayer {
                 weights_flat[kk * active + co] = ocu.weights[kk];
             }
         }
-        let (mut wcols, mut col_words) = (Vec::new(), 0);
-        if k == 3 {
-            col_words = TritCol::words(layer.in_ch);
-            wcols = vec![TritCol::ZERO; 3 * active];
-            for (co, ocu) in ocus.iter().enumerate() {
-                for kc in 0..3 {
-                    let rows =
-                        [ocu.weights[kc], ocu.weights[3 + kc], ocu.weights[6 + kc]];
-                    wcols[kc * active + co] = TritCol::pack_rows(&rows, layer.in_ch);
-                }
-            }
-        }
+        let (wcols, col_words) = if k == 3 {
+            fuse_wcols(&weights_flat, active, layer.in_ch)
+        } else {
+            (Vec::new(), 0)
+        };
         PreparedLayer {
             name: layer.name.clone(),
             kind: layer.kind,
@@ -107,6 +127,84 @@ impl PreparedLayer {
             wcols,
             col_words,
         }
+    }
+
+    /// Rebuild a prepared layer straight from serialized (pos, mask)
+    /// plane words — the `.ttn` v2 word-copy boot path. `weights_flat`
+    /// must be position-major (`[kk · out_ch + co]`) with every word's
+    /// plane bits beyond `in_ch` clear; the column operands are re-fused
+    /// with the same word-level helper the i8 path uses, so the result
+    /// is identical to `PreparedLayer::new` on the unpacked weights.
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_packed(
+        name: String,
+        kind: LayerKind,
+        in_ch: usize,
+        out_ch: usize,
+        k: usize,
+        pool: bool,
+        global_pool: bool,
+        weights_flat: Vec<PackedVec>,
+        lo_flat: Vec<i32>,
+        hi_flat: Vec<i32>,
+    ) -> Result<Self> {
+        ensure!(kind != LayerKind::Dense, "{name}: dense layers use PreparedDense");
+        ensure!(
+            in_ch >= 1 && in_ch <= crate::trit::MAX_CHANNELS,
+            "{name}: {in_ch} input channels"
+        );
+        ensure!(
+            out_ch >= 1 && out_ch <= crate::trit::MAX_CHANNELS,
+            "{name}: {out_ch} output channels"
+        );
+        ensure!(
+            weights_flat.len() == k * k * out_ch,
+            "{name}: {} plane words for a {k}×{k}×{out_ch} kernel set",
+            weights_flat.len()
+        );
+        ensure!(
+            lo_flat.len() == out_ch && hi_flat.len() == out_ch,
+            "{name}: threshold length mismatch"
+        );
+        for co in 0..out_ch {
+            ensure!(
+                (lo_flat[co] as i64) <= (hi_flat[co] as i64) + 1,
+                "{name}: channel {co} violates lo <= hi + 1"
+            );
+        }
+        for w in &weights_flat {
+            ensure!(w.masked(in_ch) == *w, "{name}: stale plane bits beyond {in_ch} channels");
+        }
+        let (wcols, col_words) = if k == 3 {
+            fuse_wcols(&weights_flat, out_ch, in_ch)
+        } else {
+            (Vec::new(), 0)
+        };
+        Ok(PreparedLayer {
+            name,
+            kind,
+            in_ch,
+            out_ch,
+            k,
+            pool,
+            global_pool,
+            lo_flat,
+            hi_flat,
+            weights_flat,
+            wcols,
+            col_words,
+        })
+    }
+
+    /// The position-major plane words (`[kk · out_ch + co]`) — the
+    /// layer's serialized form in the packed `.ttn` v2 image section.
+    pub fn flat_words(&self) -> &[PackedVec] {
+        &self.weights_flat
+    }
+
+    /// Per-OCU ternarization thresholds `(lo, hi)`.
+    pub fn thresholds(&self) -> (&[i32], &[i32]) {
+        (&self.lo_flat, &self.hi_flat)
     }
 }
 
@@ -417,7 +515,10 @@ pub fn run_prepared_window(
 /// Classifier weights packed once and cached by the scheduler instead of
 /// being re-packed per chunk per output per frame (perf pass iteration 7
 /// satellite): `weights[chunk * classes + co]` holds the chunk's channel
-/// slice for output class co.
+/// slice for output class co. Like [`PreparedLayer`], the chunk words
+/// are the classifier's `.ttn` v2 on-disk form
+/// ([`PreparedDense::chunk_words`] / [`PreparedDense::from_packed`]).
+#[derive(Debug, PartialEq)]
 pub struct PreparedDense {
     pub name: String,
     pub in_ch: usize,
@@ -445,6 +546,55 @@ impl PreparedDense {
             }
         }
         PreparedDense { name: layer.name.clone(), in_ch: f, classes, chunk_channels, weights }
+    }
+
+    /// Rebuild a prepared classifier from serialized chunk words
+    /// (`[chunk · classes + co]`, chunk i spanning channels
+    /// [i·chunk_channels, min((i+1)·chunk_channels, in_ch))) — the
+    /// `.ttn` v2 word-copy boot path.
+    pub fn from_packed(
+        name: String,
+        in_ch: usize,
+        classes: usize,
+        chunk_channels: usize,
+        weights: Vec<PackedVec>,
+    ) -> Result<Self> {
+        ensure!(in_ch >= 1, "{name}: empty classifier fan-in");
+        ensure!(
+            classes >= 1 && classes <= crate::trit::MAX_CHANNELS,
+            "{name}: {classes} output classes"
+        );
+        ensure!(
+            chunk_channels >= 1 && chunk_channels <= crate::trit::MAX_CHANNELS,
+            "{name}: chunk width {chunk_channels}"
+        );
+        let chunks = in_ch.div_ceil(chunk_channels);
+        ensure!(
+            weights.len() == chunks * classes,
+            "{name}: {} chunk words for {chunks}×{classes}",
+            weights.len()
+        );
+        for (i, w) in weights.iter().enumerate() {
+            let chunk = i / classes;
+            let width = (in_ch - chunk * chunk_channels).min(chunk_channels);
+            ensure!(
+                w.masked(width) == *w,
+                "{name}: stale plane bits beyond chunk {chunk}'s {width} channels"
+            );
+        }
+        Ok(PreparedDense { name, in_ch, classes, chunk_channels, weights })
+    }
+
+    /// The chunk-major plane words — the classifier's serialized form in
+    /// the packed `.ttn` v2 image section.
+    pub fn chunk_words(&self) -> &[PackedVec] {
+        &self.weights
+    }
+
+    /// Chunk width the weights were packed for (the datapath's channel
+    /// count at preparation time).
+    pub fn chunk_channels(&self) -> usize {
+        self.chunk_channels
     }
 }
 

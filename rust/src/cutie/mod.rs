@@ -18,12 +18,14 @@ pub mod config;
 pub mod datapath;
 pub mod linebuffer;
 pub mod ocu;
+pub mod prepared;
 pub mod scheduler;
 pub mod stats;
 pub mod tcnmem;
 pub mod weightmem;
 
 pub use config::CutieConfig;
+pub use prepared::PreparedNet;
 pub use scheduler::Scheduler;
 pub use scheduler::TcnStrategy;
 pub use stats::{LayerStats, Phase, RunStats};

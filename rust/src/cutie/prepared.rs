@@ -1,0 +1,528 @@
+//! The shared prepared-weight image (ISSUE 5 tentpole): every kernel of
+//! a network pre-flattened into the packed (pos, mask) bitplane form the
+//! datapath consumes — conv layers as position-major [`PreparedLayer`]s,
+//! TCN layers already projected through the §4 mapping onto 3×3 kernel
+//! sets, classifiers as chunk-major [`PreparedDense`]s.
+//!
+//! A [`PreparedNet`] is **immutable and built once**: the software twin
+//! of CUTIE's OCU weight buffers, which are written at boot and stay
+//! resident (TCN-CUTIE §3; weight stationarity is the core energy
+//! argument of CUTIE itself). The serving [`crate::coordinator::Engine`]
+//! holds exactly one copy behind an [`std::sync::Arc`] and every worker
+//! scheduler in its pool borrows it — spawning a worker no longer
+//! re-packs (or even clones) a single weight word.
+//!
+//! Two constructors, one result: [`PreparedNet::new`] packs from i8
+//! network weights (the legacy boot), [`PreparedNet::from_image`]
+//! word-copies from the packed `.ttn` v2 weight-image section. The two
+//! are asserted equal (`PartialEq`, plus counter/energy-bit equivalence
+//! of everything they serve) in `tests/weight_image.rs`.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Context, Result};
+
+use super::config::CutieConfig;
+use super::datapath::{PreparedDense, PreparedLayer};
+use crate::mapping;
+use crate::network::{Layer, LayerKind, Network};
+use crate::tensor::ttn::{PackedLayerRecord, PackedLayerTag, WeightImage};
+use crate::trit::PackedVec;
+
+/// Per-layer geometry signature used for the cheap per-frame
+/// [`PreparedNet::matches`] check.
+type LayerSig = (String, LayerKind, usize, usize);
+
+#[derive(Debug, PartialEq)]
+pub struct PreparedNet {
+    net_name: String,
+    /// FNV-1a over the image content (names, geometry, thresholds,
+    /// plane words) — the identity `pack-weights` prints and the
+    /// from-image-vs-from-i8 tests compare.
+    fingerprint: u64,
+    /// Datapath channel width the classifiers were chunked for.
+    channels: usize,
+    /// Conv2d kernels, keyed by layer name.
+    conv: HashMap<String, PreparedLayer>,
+    /// §4-mapped TCN kernels (3×3 by construction), keyed by the
+    /// original layer name.
+    mapped: HashMap<String, PreparedLayer>,
+    /// Packed classifiers, keyed by layer name.
+    dense: HashMap<String, PreparedDense>,
+    /// Network-order geometry signature for `matches`/`to_image`.
+    signature: Vec<LayerSig>,
+}
+
+/// Build the §4-mapped 3×3 form of a TCN layer — taps projected into
+/// the middle kernel column, bottom-aligned (the offline half of the
+/// paper's mapping). This is the one place the mapped form is built, so
+/// the packed and i8 execution paths cannot diverge on it.
+fn mapped_form(layer: &Layer) -> PreparedLayer {
+    debug_assert_eq!(layer.kind, LayerKind::Tcn);
+    let mapped = Layer {
+        weights: mapping::map_weights(&layer.weights),
+        kernel: 3,
+        kind: LayerKind::Tcn,
+        pool: false,
+        global_pool: false,
+        ..layer.clone()
+    };
+    PreparedLayer::new(&mapped)
+}
+
+fn signature_of(net: &Network) -> Vec<LayerSig> {
+    net.layers
+        .iter()
+        .map(|l| (l.name.clone(), l.kind, l.in_ch, l.out_ch))
+        .collect()
+}
+
+fn fnv_mix(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+}
+
+fn fnv_words(h: &mut u64, words: &[PackedVec]) {
+    for w in words {
+        for word in w.to_words() {
+            fnv_mix(h, &word.to_le_bytes());
+        }
+    }
+}
+
+impl PreparedNet {
+    /// Build the full image from i8 network weights (the legacy boot
+    /// path): pack every conv kernel, project + pack every TCN layer,
+    /// chunk every classifier for the `cfg.channels`-wide datapath.
+    pub fn new(net: &Network, cfg: &CutieConfig) -> Self {
+        let mut conv = HashMap::new();
+        let mut mapped = HashMap::new();
+        let mut dense = HashMap::new();
+        for layer in &net.layers {
+            match layer.kind {
+                LayerKind::Conv2d => {
+                    conv.insert(layer.name.clone(), PreparedLayer::new(layer));
+                }
+                LayerKind::Tcn => {
+                    mapped.insert(layer.name.clone(), mapped_form(layer));
+                }
+                LayerKind::Dense => {
+                    dense.insert(layer.name.clone(), PreparedDense::new(layer, cfg.channels));
+                }
+            }
+        }
+        Self::assemble(net.name.clone(), cfg.channels, conv, mapped, dense, signature_of(net))
+    }
+
+    /// Word-copy boot from a packed `.ttn` v2 weight image: no i8
+    /// re-packing anywhere — plane words are copied as-is and the column
+    /// operands re-fused with pure word ops. The image is validated
+    /// against `net` (coverage, geometry, thresholds) and against `cfg`
+    /// (classifier chunk width), so a stale or mismatched image is a
+    /// proper boot error instead of silently-wrong labels.
+    pub fn from_image(image: &WeightImage, net: &Network, cfg: &CutieConfig) -> Result<Self> {
+        ensure!(
+            image.chunk_channels == cfg.channels,
+            "weight image packed for a {}-channel datapath, config has {}",
+            image.chunk_channels,
+            cfg.channels
+        );
+        let mut conv = HashMap::new();
+        let mut mapped = HashMap::new();
+        let mut dense = HashMap::new();
+        for r in &image.layers {
+            match r.tag {
+                PackedLayerTag::Conv => {
+                    conv.insert(r.name.clone(), prepared_from_record(r, LayerKind::Conv2d)?);
+                }
+                PackedLayerTag::MappedTcn => {
+                    mapped.insert(r.name.clone(), prepared_from_record(r, LayerKind::Tcn)?);
+                }
+                PackedLayerTag::Dense => {
+                    let d = PreparedDense::from_packed(
+                        r.name.clone(),
+                        r.in_ch,
+                        r.out_ch,
+                        image.chunk_channels,
+                        r.words.clone(),
+                    )?;
+                    dense.insert(r.name.clone(), d);
+                }
+            }
+        }
+        let img =
+            Self::assemble(net.name.clone(), cfg.channels, conv, mapped, dense, signature_of(net));
+        img.validate_against(net)?;
+        Ok(img)
+    }
+
+    /// Full content validation against a network: every layer covered,
+    /// geometry (channels, kernel, pooling flags) and per-OCU
+    /// thresholds equal. This is the boot-time gate behind
+    /// [`PreparedNet::from_image`] and the engine/pipeline `with_image`
+    /// constructors. The one thing it cannot check without re-packing
+    /// the i8 weights is the plane words themselves — two networks with
+    /// identical geometry *and* thresholds but different kernels (e.g.
+    /// reseeded random nets) pass; callers who construct images
+    /// independently of `net` own that last-mile identity (the supported
+    /// packed-boot path loads net and image from the same TTN2 file, so
+    /// it cannot diverge; compare [`PreparedNet::fingerprint`]s when in
+    /// doubt).
+    pub fn validate_against(&self, net: &Network) -> Result<()> {
+        ensure!(
+            self.net_name == net.name,
+            "weight image is for '{}', network is '{}'",
+            self.net_name,
+            net.name
+        );
+        for layer in &net.layers {
+            match layer.kind {
+                LayerKind::Conv2d => {
+                    let p = self.conv.get(&layer.name).with_context(|| {
+                        format!("weight image has no conv record for '{}'", layer.name)
+                    })?;
+                    ensure!(
+                        p.in_ch == layer.in_ch
+                            && p.out_ch == layer.out_ch
+                            && p.k == layer.kernel
+                            && p.pool == layer.pool
+                            && p.global_pool == layer.global_pool,
+                        "'{}': image geometry does not match the network",
+                        layer.name
+                    );
+                    ensure!(
+                        p.thresholds() == (layer.lo.as_slice(), layer.hi.as_slice()),
+                        "'{}': image thresholds differ from the network",
+                        layer.name
+                    );
+                }
+                LayerKind::Tcn => {
+                    let p = self.mapped.get(&layer.name).with_context(|| {
+                        format!("weight image has no mapped-TCN record for '{}'", layer.name)
+                    })?;
+                    ensure!(
+                        p.in_ch == layer.in_ch && p.out_ch == layer.out_ch && p.k == 3,
+                        "'{}': image geometry does not match the network",
+                        layer.name
+                    );
+                    ensure!(
+                        p.thresholds() == (layer.lo.as_slice(), layer.hi.as_slice()),
+                        "'{}': image thresholds differ from the network",
+                        layer.name
+                    );
+                }
+                LayerKind::Dense => {
+                    let p = self.dense.get(&layer.name).with_context(|| {
+                        format!("weight image has no classifier record for '{}'", layer.name)
+                    })?;
+                    ensure!(
+                        p.in_ch == layer.in_ch && p.classes == layer.out_ch,
+                        "'{}': image geometry does not match the network",
+                        layer.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn assemble(
+        net_name: String,
+        channels: usize,
+        conv: HashMap<String, PreparedLayer>,
+        mapped: HashMap<String, PreparedLayer>,
+        dense: HashMap<String, PreparedDense>,
+        signature: Vec<LayerSig>,
+    ) -> Self {
+        // One hashing shape for every record kind: tag, name, geometry
+        // (channels, kernel, pooling flags), thresholds, plane words —
+        // any content difference that can change served labels must
+        // change the fingerprint.
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        fnv_mix(&mut h, net_name.as_bytes());
+        fnv_mix(&mut h, &(channels as u64).to_le_bytes());
+        let hash_prepared = |h: &mut u64, tag: &[u8], n: &String, p: &PreparedLayer| {
+            fnv_mix(h, tag);
+            fnv_mix(h, n.as_bytes());
+            for g in [p.in_ch, p.out_ch, p.k, p.pool as usize, p.global_pool as usize] {
+                fnv_mix(h, &(g as u64).to_le_bytes());
+            }
+            let (lo, hi) = p.thresholds();
+            for v in lo.iter().chain(hi) {
+                fnv_mix(h, &v.to_le_bytes());
+            }
+            fnv_words(h, p.flat_words());
+        };
+        let mut names: Vec<&String> = conv.keys().collect();
+        names.sort();
+        for n in names {
+            hash_prepared(&mut h, b"conv", n, &conv[n]);
+        }
+        let mut names: Vec<&String> = mapped.keys().collect();
+        names.sort();
+        for n in names {
+            hash_prepared(&mut h, b"tcn", n, &mapped[n]);
+        }
+        let mut names: Vec<&String> = dense.keys().collect();
+        names.sort();
+        for n in names {
+            let p = &dense[n];
+            fnv_mix(&mut h, b"dense");
+            fnv_mix(&mut h, n.as_bytes());
+            for g in [p.in_ch, p.classes, p.chunk_channels()] {
+                fnv_mix(&mut h, &(g as u64).to_le_bytes());
+            }
+            fnv_words(&mut h, p.chunk_words());
+        }
+        PreparedNet { net_name, fingerprint: h, channels, conv, mapped, dense, signature }
+    }
+
+    /// Serialize as the `.ttn` v2 weight-image section, in network
+    /// order (deterministic bytes for a given image).
+    pub fn to_image(&self) -> WeightImage {
+        let mut layers = Vec::with_capacity(self.signature.len());
+        for (name, kind, _, _) in &self.signature {
+            let record = match kind {
+                LayerKind::Conv2d => {
+                    let p = &self.conv[name];
+                    let (lo, hi) = p.thresholds();
+                    PackedLayerRecord {
+                        name: name.clone(),
+                        tag: PackedLayerTag::Conv,
+                        in_ch: p.in_ch,
+                        out_ch: p.out_ch,
+                        k: p.k,
+                        pool: p.pool,
+                        global_pool: p.global_pool,
+                        lo: lo.to_vec(),
+                        hi: hi.to_vec(),
+                        words: p.flat_words().to_vec(),
+                    }
+                }
+                LayerKind::Tcn => {
+                    let p = &self.mapped[name];
+                    let (lo, hi) = p.thresholds();
+                    PackedLayerRecord {
+                        name: name.clone(),
+                        tag: PackedLayerTag::MappedTcn,
+                        in_ch: p.in_ch,
+                        out_ch: p.out_ch,
+                        k: p.k,
+                        pool: false,
+                        global_pool: false,
+                        lo: lo.to_vec(),
+                        hi: hi.to_vec(),
+                        words: p.flat_words().to_vec(),
+                    }
+                }
+                LayerKind::Dense => {
+                    let p = &self.dense[name];
+                    PackedLayerRecord {
+                        name: name.clone(),
+                        tag: PackedLayerTag::Dense,
+                        in_ch: p.in_ch,
+                        out_ch: p.classes,
+                        k: 0,
+                        pool: false,
+                        global_pool: false,
+                        lo: Vec::new(),
+                        hi: Vec::new(),
+                        words: p.chunk_words().to_vec(),
+                    }
+                }
+            };
+            layers.push(record);
+        }
+        WeightImage { chunk_channels: self.channels, layers }
+    }
+
+    /// Cheap per-frame identity check: does this image serve `net`?
+    /// Compares the network name and per-layer geometry (name, kind,
+    /// channel widths) — the same staleness contract the old per-name
+    /// lazy caches had, made explicit: weights stay resident until a new
+    /// image is attached, exactly like the OCU buffers.
+    pub fn matches(&self, net: &Network) -> bool {
+        self.net_name == net.name
+            && self.signature.len() == net.layers.len()
+            && self
+                .signature
+                .iter()
+                .zip(&net.layers)
+                .all(|(s, l)| s.0 == l.name && s.1 == l.kind && s.2 == l.in_ch && s.3 == l.out_ch)
+    }
+
+    /// (conv + mapped-TCN kernels, classifiers) in the image — the
+    /// observability hook behind `Scheduler::cached_layers`.
+    pub fn counts(&self) -> (usize, usize) {
+        (self.conv.len() + self.mapped.len(), self.dense.len())
+    }
+
+    pub fn net_name(&self) -> &str {
+        &self.net_name
+    }
+
+    /// Content fingerprint (FNV-1a over names, geometry, thresholds and
+    /// plane words).
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Datapath channel width the classifiers were chunked for.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// A conv2d layer's prepared kernels.
+    pub fn conv_layer(&self, name: &str) -> Result<&PreparedLayer> {
+        self.conv
+            .get(name)
+            .with_context(|| format!("conv layer '{name}' is not in the prepared image"))
+    }
+
+    /// A TCN layer's §4-mapped prepared kernels.
+    pub fn mapped_layer(&self, name: &str) -> Result<&PreparedLayer> {
+        self.mapped
+            .get(name)
+            .with_context(|| format!("TCN layer '{name}' is not in the prepared image"))
+    }
+
+    /// A classifier's packed chunk words. The one lookup every tail
+    /// (packed, i8 reference, cifar-style feed-forward) shares — the
+    /// previously triplicated `prepared_dense.entry(..).or_insert_with`
+    /// sites collapsed into it.
+    pub fn dense_layer(&self, name: &str) -> Result<&PreparedDense> {
+        self.dense
+            .get(name)
+            .with_context(|| format!("classifier '{name}' is not in the prepared image"))
+    }
+}
+
+fn prepared_from_record(r: &PackedLayerRecord, kind: LayerKind) -> Result<PreparedLayer> {
+    PreparedLayer::from_packed(
+        r.name.clone(),
+        kind,
+        r.in_ch,
+        r.out_ch,
+        r.k,
+        r.pool,
+        r.global_pool,
+        r.words.clone(),
+        r.lo.clone(),
+        r.hi.clone(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cutie::CutieConfig;
+    use crate::network::{cifar9_random, dvs_hybrid_random};
+
+    #[test]
+    fn image_roundtrip_equals_i8_build() {
+        let cfg = CutieConfig::kraken();
+        for net in [dvs_hybrid_random(16, 71, 0.5), cifar9_random(24, 72, 0.33)] {
+            let built = PreparedNet::new(&net, &cfg);
+            let image = built.to_image();
+            let reloaded = PreparedNet::from_image(&image, &net, &cfg).unwrap();
+            assert_eq!(reloaded, built, "{}: word-copy boot must equal i8 build", net.name);
+            assert_eq!(reloaded.fingerprint(), built.fingerprint());
+            assert!(built.matches(&net));
+            assert_eq!(image.layers.len(), net.layers.len());
+        }
+    }
+
+    #[test]
+    fn counts_match_network_shape() {
+        let cfg = CutieConfig::kraken();
+        let net = dvs_hybrid_random(16, 73, 0.5);
+        let img = PreparedNet::new(&net, &cfg);
+        assert_eq!(img.counts(), (9, 1)); // 5 conv + 4 mapped TCN, 1 classifier
+        assert!(img.conv_layer("l0").is_ok());
+        assert!(img.mapped_layer("l5").is_ok());
+        assert!(img.dense_layer("l9").is_ok());
+        assert!(img.conv_layer("nope").is_err());
+        assert!(img.mapped_layer("l0").is_err(), "conv layers are not mapped-TCN kernels");
+    }
+
+    #[test]
+    fn matches_rejects_other_geometry() {
+        let cfg = CutieConfig::kraken();
+        let net16 = dvs_hybrid_random(16, 74, 0.5);
+        let net32 = dvs_hybrid_random(32, 74, 0.5);
+        let img = PreparedNet::new(&net16, &cfg);
+        assert!(img.matches(&net16));
+        assert!(!img.matches(&net32), "different channel widths must not match");
+        assert!(!img.matches(&cifar9_random(16, 74, 0.3)));
+    }
+
+    #[test]
+    fn from_image_rejects_mismatches() {
+        let cfg = CutieConfig::kraken();
+        let net = dvs_hybrid_random(16, 75, 0.5);
+        let good = PreparedNet::new(&net, &cfg).to_image();
+
+        // chunk width mismatch
+        let mut img = good.clone();
+        img.chunk_channels = 48;
+        assert!(PreparedNet::from_image(&img, &net, &cfg).is_err());
+
+        // missing record
+        let mut img = good.clone();
+        img.layers.remove(0);
+        assert!(PreparedNet::from_image(&img, &net, &cfg).is_err());
+
+        // tampered thresholds
+        let mut img = good.clone();
+        img.layers[0].lo[0] -= 1;
+        assert!(PreparedNet::from_image(&img, &net, &cfg).is_err());
+
+        // image for a different network
+        let other = PreparedNet::new(&dvs_hybrid_random(32, 76, 0.5), &cfg).to_image();
+        assert!(PreparedNet::from_image(&other, &net, &cfg).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let cfg = CutieConfig::kraken();
+        let net = dvs_hybrid_random(16, 77, 0.5);
+        let a = PreparedNet::new(&net, &cfg);
+        let b = PreparedNet::new(&dvs_hybrid_random(16, 77, 0.5), &cfg);
+        let c = PreparedNet::new(&dvs_hybrid_random(16, 78, 0.5), &cfg);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same seed, same image");
+        assert_ne!(a.fingerprint(), c.fingerprint(), "different weights, different image");
+        // every label-affecting field must move the fingerprint: TCN
+        // thresholds and conv pooling flags included (not just conv
+        // thresholds and plane words)
+        let mut tcn_thresh = net.clone();
+        tcn_thresh.layers[5].lo[0] -= 1;
+        assert_ne!(
+            a.fingerprint(),
+            PreparedNet::new(&tcn_thresh, &cfg).fingerprint(),
+            "a TCN threshold change must change the fingerprint"
+        );
+        let mut pool_flip = net.clone();
+        pool_flip.layers[0].pool = false;
+        assert_ne!(
+            a.fingerprint(),
+            PreparedNet::new(&pool_flip, &cfg).fingerprint(),
+            "a pooling-flag change must change the fingerprint"
+        );
+    }
+
+    #[test]
+    fn validate_against_catches_same_shape_threshold_divergence() {
+        let cfg = CutieConfig::kraken();
+        let net = dvs_hybrid_random(16, 79, 0.5);
+        let img = PreparedNet::new(&net, &cfg);
+        img.validate_against(&net).unwrap();
+        let mut tampered = net.clone();
+        tampered.layers[6].hi[2] += 1;
+        assert!(
+            img.validate_against(&tampered).is_err(),
+            "same geometry, different thresholds must not validate"
+        );
+    }
+}

@@ -7,20 +7,27 @@
 //! * `direct` (the ablation A2 baseline): dilated taps are fetched with
 //!   stride D straight from memory, which breaks the linebuffer and
 //!   serializes one word access per tap.
+//!
+//! Since the shared-image pass the scheduler no longer owns any weight
+//! state: all prepared kernels live in an immutable [`PreparedNet`]
+//! behind an [`Arc`], either attached by the engine (one copy shared
+//! across a whole worker pool) or built lazily on first use for
+//! standalone schedulers. [`WeightMemory`] stays as the
+//! residency/cycle-charging model over that shared image.
 
-use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
 use super::actmem::ActivationMemory;
 use super::datapath::{
-    run_dense_packed, run_dense_prepared, run_prepared, PreparedDense, PreparedLayer,
+    run_dense_packed, run_dense_prepared, run_prepared, PreparedLayer,
 };
+use super::prepared::PreparedNet;
 use super::stats::{LayerStats, RunStats};
 use super::tcnmem::TcnMemory;
 use super::weightmem::{WeightAccess, WeightMemory};
 use super::{CutieConfig, SimMode};
-use crate::mapping;
 use crate::network::{Layer, LayerKind, Network};
 use crate::tensor::{IntTensor, PackedMap, TritTensor};
 use crate::trit::ternarize;
@@ -34,29 +41,6 @@ pub enum TcnStrategy {
     Direct,
 }
 
-/// Fetch-or-build the cached §4-mapped form of a TCN layer (taps
-/// projected into the middle column of a 3×3 kernel, cached under
-/// `{name}::mapped`). Shared by the packed and i8 mapped paths so the
-/// prepared-kernel cache cannot diverge between them. Free function
-/// over the cache field so callers keep disjoint borrows of the
-/// scheduler's other fields.
-fn prepared_mapped<'a>(
-    prepared: &'a mut HashMap<String, PreparedLayer>,
-    layer: &Layer,
-) -> &'a mut PreparedLayer {
-    prepared.entry(format!("{}::mapped", layer.name)).or_insert_with(|| {
-        let mapped = Layer {
-            weights: mapping::map_weights(&layer.weights),
-            kernel: 3,
-            kind: LayerKind::Tcn,
-            pool: false,
-            global_pool: false,
-            ..layer.clone()
-        };
-        PreparedLayer::new(&mapped)
-    })
-}
-
 pub struct Scheduler {
     pub cfg: CutieConfig,
     pub mode: SimMode,
@@ -64,13 +48,12 @@ pub struct Scheduler {
     weights: WeightMemory,
     pub tcn_mem: TcnMemory,
     actmem: ActivationMemory,
-    /// Prepared (flattened, bit-packed) layers, cached across inferences —
+    /// The immutable prepared-weight image this scheduler serves from —
     /// the software analogue of the weights staying resident in the OCU
-    /// buffers (perf pass iteration 5; see EXPERIMENTS.md §Perf).
-    prepared: HashMap<String, PreparedLayer>,
-    /// Packed classifier weights, cached the same way (iteration 7
-    /// satellite — previously re-packed per chunk per output per frame).
-    prepared_dense: HashMap<String, PreparedDense>,
+    /// buffers. Engine-attached schedulers share one `Arc`'d copy across
+    /// the whole pool (shared-image pass); standalone schedulers build
+    /// their own on first use.
+    image: Option<Arc<PreparedNet>>,
 }
 
 impl Scheduler {
@@ -85,8 +68,7 @@ impl Scheduler {
             weights,
             tcn_mem,
             actmem,
-            prepared: HashMap::new(),
-            prepared_dense: HashMap::new(),
+            image: None,
         }
     }
 
@@ -95,21 +77,54 @@ impl Scheduler {
         self
     }
 
+    /// Attach a shared prepared-weight image (the engine's one copy).
+    /// Subsequent inferences on a matching network serve straight from
+    /// it; a non-matching network rebuilds a private image (same
+    /// staleness contract as the OCU buffers: resident until rewritten).
+    /// The per-frame match is geometry-only — callers wanting the full
+    /// content gate (thresholds, pooling flags) should run
+    /// [`PreparedNet::validate_against`] first, as the engine and
+    /// pipeline `with_image` constructors do.
+    pub fn attach_image(&mut self, image: Arc<PreparedNet>) {
+        self.image = Some(image);
+    }
+
+    /// The currently attached/built image, if any.
+    pub fn image(&self) -> Option<&Arc<PreparedNet>> {
+        self.image.as_ref()
+    }
+
+    /// Fetch the image serving `net`, building (and keeping) one if none
+    /// is attached or the attached one is for a different network. The
+    /// match check is geometry-only and O(layers) — negligible per
+    /// frame.
+    fn image_for(&mut self, net: &Network) -> Arc<PreparedNet> {
+        if let Some(img) = &self.image {
+            if img.matches(net) {
+                return Arc::clone(img);
+            }
+        }
+        let img = Arc::new(PreparedNet::new(net, &self.cfg));
+        self.image = Some(Arc::clone(&img));
+        img
+    }
+
     /// Swap a per-session TCN window in or out (the serving engine's
     /// checkout). The window is the scheduler's only cross-frame
-    /// recurrent state — the weight memory and prepared-layer caches are
-    /// session-independent (steady-state bank switches and pure packed
-    /// forms of the network) — so swapping the window is all a
+    /// recurrent state — the weight memory and the shared prepared image
+    /// are session-independent (steady-state bank switches and pure
+    /// packed forms of the network) — so swapping the window is all a
     /// multi-stream engine needs to time-multiplex streams over one
     /// scheduler with byte-identical counters.
     pub fn swap_tcn(&mut self, mem: &mut TcnMemory) {
         std::mem::swap(&mut self.tcn_mem, mem);
     }
 
-    /// Number of cached prepared layers: (conv/TCN kernels, classifiers).
-    /// Observability hook for the caching tests.
+    /// Number of prepared layers in the image this scheduler serves
+    /// from: (conv/TCN kernels, classifiers). Observability hook for the
+    /// caching tests; (0, 0) until an image is attached or built.
     pub fn cached_layers(&self) -> (usize, usize) {
-        (self.prepared.len(), self.prepared_dense.len())
+        self.image.as_ref().map(|i| i.counts()).unwrap_or((0, 0))
     }
 
     /// Pre-load every layer's weights (boot). Returns boot cycles; after
@@ -128,6 +143,20 @@ impl Scheduler {
             }
         }
         cycles
+    }
+
+    /// Mark every layer's weights resident **without** charging boot
+    /// cycles — the pool-worker attach path: the engine boots the shared
+    /// image once (tail preload) and every other scheduler adopts the
+    /// already-filled banks, so spawning a worker costs no modeled (or
+    /// host) weight movement while steady-state accesses still report
+    /// the same 1-cycle bank switches.
+    pub fn adopt_weights(&mut self, net: &Network) {
+        for l in &net.layers {
+            if l.kind != LayerKind::Dense {
+                self.weights.adopt(&l.name);
+            }
+        }
     }
 
     fn charge_weights(&mut self, layer: &Layer, stats: &mut LayerStats) {
@@ -160,9 +189,10 @@ impl Scheduler {
     /// pre-classifier map (cifar9) or a per-step feature vector (hybrid).
     /// The frame lands in the activation memory once and every layer
     /// reads its input straight out of the ping-pong buffer — no i8
-    /// conversion and no per-layer map clone anywhere in the loop (perf
-    /// pass iteration 8).
+    /// conversion, no per-layer map clone, and (shared-image pass) no
+    /// per-scheduler weight copy anywhere in the loop.
     pub fn run_cnn(&mut self, net: &Network, frame: &PackedMap) -> Result<(PackedMap, RunStats)> {
+        let image = self.image_for(net);
         let mut run = RunStats::default();
         let (dc, db) = self.dma_in(frame.numel());
         run.dma_cycles = dc;
@@ -173,10 +203,7 @@ impl Scheduler {
         // datapath as feature vectors), so they are carried by value.
         let mut carried: Option<PackedMap> = None;
         for layer in net.layers.iter().filter(|l| l.kind == LayerKind::Conv2d) {
-            let prep = self
-                .prepared
-                .entry(layer.name.clone())
-                .or_insert_with(|| PreparedLayer::new(layer));
+            let prep = image.conv_layer(&layer.name)?;
             let mut result = {
                 let input = match carried.as_ref() {
                     Some(m) => m,
@@ -254,6 +281,7 @@ impl Scheduler {
     /// with the mapped strategy — asserted across the DVS serving
     /// workload by `tests/tcn_packed.rs`.
     fn run_tcn_packed(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
+        let image = self.image_for(net);
         let mut run = RunStats::default();
         let feat_ch = self.feat_width(net);
         // None until the first TCN layer runs: that layer reads its wrap
@@ -267,9 +295,10 @@ impl Scheduler {
                     let reads_before = self.tcn_mem.reads;
                     let z = match seq.as_ref() {
                         None => self.tcn_mem.wrap_image(layer.dilation, feat_ch),
-                        Some(s) => mapping::map_input_packed(s, layer.dilation),
+                        Some(s) => crate::mapping::map_input_packed(s, layer.dilation),
                     };
-                    let (out, mut stats) = self.run_tcn_mapped_packed(layer, &z)?;
+                    let prep = image.mapped_layer(&layer.name)?;
+                    let (out, mut stats) = self.run_tcn_mapped_packed(prep, layer, &z)?;
                     if first {
                         // first TCN layer reads straight out of the TCN
                         // memory's multiplexed port
@@ -306,11 +335,7 @@ impl Scheduler {
                             *w.pixel(w.h - 1, 0)
                         }
                     };
-                    let channels = self.cfg.channels;
-                    let prep = self
-                        .prepared_dense
-                        .entry(layer.name.clone())
-                        .or_insert_with(|| PreparedDense::new(layer, channels));
+                    let prep = image.dense_layer(&layer.name)?;
                     // one last-step word == one chunk (tail widths are
                     // ≤ the datapath's channel count by construction)
                     let (logits, stats) = run_dense_packed(prep, &[last], &self.cfg, self.mode)?;
@@ -327,7 +352,10 @@ impl Scheduler {
     /// wrap → i8 unwrap → i8 last-step slice). Serves as the A/B
     /// equivalence baseline for the packed tail (`tests/tcn_packed.rs`,
     /// the hotpath bench) and hosts the direct-strided A2 ablation.
+    /// Reads its mapped kernels from the same shared image as the packed
+    /// tail, so the two cannot diverge on prepared weights.
     pub fn run_tcn_i8(&mut self, net: &Network) -> Result<(IntTensor, RunStats)> {
+        let image = self.image_for(net);
         let mut run = RunStats::default();
         let reads_before = self.tcn_mem.reads;
         let window = self.tcn_mem.window();
@@ -347,7 +375,10 @@ impl Scheduler {
                 LayerKind::Conv2d => continue,
                 LayerKind::Tcn => {
                     let (out, mut stats) = match self.tcn_strategy {
-                        TcnStrategy::Mapped => self.run_tcn_mapped(layer, &seq)?,
+                        TcnStrategy::Mapped => {
+                            let prep = image.mapped_layer(&layer.name)?;
+                            self.run_tcn_mapped(prep, layer, &seq)?
+                        }
                         TcnStrategy::Direct => self.run_tcn_direct(layer, &seq)?,
                     };
                     if first {
@@ -364,11 +395,7 @@ impl Scheduler {
                     let t_len = seq.dims[0];
                     let c = seq.dims[1];
                     let last = TritTensor::from_vec(&[c], seq.data[(t_len - 1) * c..].to_vec());
-                    let channels = self.cfg.channels;
-                    let prep = self
-                        .prepared_dense
-                        .entry(layer.name.clone())
-                        .or_insert_with(|| PreparedDense::new(layer, channels));
+                    let prep = image.dense_layer(&layer.name)?;
                     let (logits, stats) = run_dense_prepared(prep, &last, &self.cfg, self.mode)?;
                     run.layers.push(stats);
                     return Ok((logits, run));
@@ -378,11 +405,16 @@ impl Scheduler {
         anyhow::bail!("network has no classifier layer")
     }
 
-    /// §4 mapping: wrap → plain 3×3 layer on the datapath → unwrap.
-    fn run_tcn_mapped(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
+    /// §4 mapping: wrap → plain 3×3 layer on the datapath → unwrap. The
+    /// mapped kernels arrive from the shared image.
+    fn run_tcn_mapped(
+        &self,
+        prep: &PreparedLayer,
+        layer: &Layer,
+        seq: &TritTensor,
+    ) -> Result<(TritTensor, LayerStats)> {
         let t_len = seq.dims[0];
-        let z = PackedMap::from_trit(&mapping::map_input(seq, layer.dilation));
-        let prep = prepared_mapped(&mut self.prepared, layer);
+        let z = PackedMap::from_trit(&crate::mapping::map_input(seq, layer.dilation));
         let result = run_prepared(prep, &z, &self.cfg, self.mode)?;
         let mut stats = result.stats;
         // unmap: address arithmetic only, no cycles, no data movement —
@@ -402,21 +434,22 @@ impl Scheduler {
 
     /// §4 mapping, packed-native (perf pass iteration 9): the wrap image
     /// arrives as a `PackedMap` (built by the TCN memory's multiplexed
-    /// read port or [`mapping::map_input_packed`]), runs the packed
-    /// column-stationary loop, and the un-mapping gathers whole
+    /// read port or [`crate::mapping::map_input_packed`]), runs the
+    /// packed column-stationary loop, and the un-mapping gathers whole
     /// (pos, mask) words — address arithmetic only, no cycles, no i8.
-    /// Shares the `{name}::mapped` prepared-kernel cache with the i8
-    /// twin ([`Self::run_tcn_mapped`]); only the marshalling differs.
+    /// Shares the image's mapped kernels with the i8 twin
+    /// ([`Self::run_tcn_mapped`]); only the marshalling differs.
     fn run_tcn_mapped_packed(
-        &mut self,
+        &self,
+        prep: &PreparedLayer,
         layer: &Layer,
         z: &PackedMap,
     ) -> Result<(PackedMap, LayerStats)> {
-        let prep = prepared_mapped(&mut self.prepared, layer);
         let result = run_prepared(prep, z, &self.cfg, self.mode)?;
         let mut stats = result.stats;
         stats.name = layer.name.clone();
-        let out = mapping::unmap_output_packed(&result.output, self.cfg.tcn_depth, layer.dilation);
+        let out =
+            crate::mapping::unmap_output_packed(&result.output, self.cfg.tcn_depth, layer.dilation);
         Ok((out, stats))
     }
 
@@ -425,7 +458,7 @@ impl Scheduler {
     /// activation reads that the linebuffer cannot coalesce — each is a
     /// stall cycle on top of the compute cycle (§4: "non-contiguous or
     /// strided accesses lead to stalling").
-    fn run_tcn_direct(&mut self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
+    fn run_tcn_direct(&self, layer: &Layer, seq: &TritTensor) -> Result<(TritTensor, LayerStats)> {
         let t_len = seq.dims[0];
         let cin = seq.dims[1];
         let n_taps = layer.weights.dims[0];
@@ -517,11 +550,8 @@ impl Scheduler {
             run.merge(r);
             let flat = TritTensor::from_vec(&[feat.numel()], feat.unpack_data());
             let dense = net.layers.last().unwrap();
-            let channels = self.cfg.channels;
-            let prep = self
-                .prepared_dense
-                .entry(dense.name.clone())
-                .or_insert_with(|| PreparedDense::new(dense, channels));
+            let image = self.image_for(net);
+            let prep = image.dense_layer(&dense.name)?;
             let (logits, stats) = run_dense_prepared(prep, &flat, &self.cfg, self.mode)?;
             run.layers.push(stats);
             Ok((logits, run))
@@ -687,8 +717,13 @@ mod tests {
         let (a, _) = sched.run_full(&net, &input).unwrap();
         // 8 conv kernels + 1 packed classifier now resident
         assert_eq!(sched.cached_layers(), (8, 1));
+        let image_before = Arc::clone(sched.image().expect("image built on first run"));
         let (b, _) = sched.run_full(&net, &input).unwrap();
         assert_eq!(sched.cached_layers(), (8, 1), "steady state must not re-prepare");
+        assert!(
+            Arc::ptr_eq(&image_before, sched.image().unwrap()),
+            "steady state must reuse the same image, not rebuild it"
+        );
         assert_eq!(a, b);
         assert_eq!(a, reference::forward(&net, &input).unwrap());
     }
@@ -707,6 +742,34 @@ mod tests {
     }
 
     #[test]
+    fn attached_image_is_served_from_not_rebuilt() {
+        // The shared-image contract: a scheduler with an attached image
+        // for the right network serves from it (no private rebuild), and
+        // produces the same results as one that built its own.
+        let net = dvs_hybrid_random(16, 99, 0.5);
+        let mut rng = Rng::new(100);
+        let shared = Arc::new(PreparedNet::new(&net, &CutieConfig::kraken()));
+
+        let mut with_img = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+        with_img.attach_image(Arc::clone(&shared));
+        let mut own = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+
+        for _ in 0..3 {
+            let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
+            let (la, ra) = with_img.serve_frame(&net, &f).unwrap();
+            let (lb, rb) = own.serve_frame(&net, &f).unwrap();
+            assert_eq!(la, lb);
+            assert_eq!(ra, rb, "shared and private images must serve identical counters");
+        }
+        assert!(
+            Arc::ptr_eq(with_img.image().unwrap(), &shared),
+            "attached image must still be the shared one"
+        );
+        // 1 (here) + 1 (scheduler) strong refs
+        assert_eq!(Arc::strong_count(&shared), 2);
+    }
+
+    #[test]
     fn preload_makes_first_inference_switch_only() {
         let net = cifar9_random(32, 91, 0.33);
         let mut rng = Rng::new(92);
@@ -717,5 +780,23 @@ mod tests {
         let (_, run) = sched.run_full(&net, &input).unwrap();
         let w: u64 = run.layers.iter().map(|l| l.weight_load_cycles).sum();
         assert_eq!(w, 8);
+    }
+
+    #[test]
+    fn adopted_weights_match_preloaded_counters() {
+        // An adopting scheduler (pool worker) must charge the same
+        // steady-state weight cycles as a preloaded one from the very
+        // first frame.
+        let net = dvs_hybrid_random(16, 101, 0.5);
+        let mut rng = Rng::new(102);
+        let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
+        let mut pre = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        pre.preload_weights(&net);
+        let mut adopt = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
+        adopt.adopt_weights(&net);
+        let (la, ra) = pre.serve_frame(&net, &f).unwrap();
+        let (lb, rb) = adopt.serve_frame(&net, &f).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(ra, rb, "adopt must be counter-identical to preload");
     }
 }

@@ -15,7 +15,7 @@ pub enum Phase {
     Drain,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LayerStats {
     pub name: String,
     /// Cycles per phase.
@@ -66,7 +66,7 @@ impl LayerStats {
 }
 
 /// Aggregated statistics of one inference (or a batch of layers).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct RunStats {
     pub layers: Vec<LayerStats>,
     /// µDMA input cycles/bytes (frame ingress into the activation memory).

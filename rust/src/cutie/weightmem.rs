@@ -59,6 +59,22 @@ impl WeightMemory {
         WeightAccess::Load { cycles, words }
     }
 
+    /// Mark `name` resident without charging a streaming load or a bank
+    /// switch — models attaching another read port to banks an earlier
+    /// boot already filled. The engine's pool workers adopt the shared
+    /// weight image this way instead of each re-charging a private boot
+    /// (shared-image pass): their steady-state accesses are then the
+    /// same 1-cycle bank switches a preloaded scheduler reports.
+    pub fn adopt(&mut self, name: &str) {
+        if self.resident.iter().any(|r| r == name) {
+            return;
+        }
+        while self.resident.len() >= self.banks {
+            self.resident.pop_front();
+        }
+        self.resident.push_back(name.to_string());
+    }
+
     pub fn is_resident(&self, name: &str) -> bool {
         self.resident.iter().any(|r| r == name)
     }
@@ -98,6 +114,30 @@ mod tests {
             WeightAccess::Load { .. } => {}
             _ => panic!("evicted layer must reload"),
         }
+    }
+
+    #[test]
+    fn adopt_marks_resident_without_charges() {
+        let mut wm = WeightMemory::new(9, 96);
+        wm.adopt("c1");
+        assert!(wm.is_resident("c1"));
+        assert_eq!(wm.bank_switches, 0, "adopt must not charge a switch");
+        assert_eq!(wm.streamed_words, 0, "adopt must not charge a load");
+        // the next prepare is the same steady-state switch a preloaded
+        // memory reports
+        match wm.prepare("c1", 9, 96, 96) {
+            WeightAccess::Switch => {}
+            _ => panic!("adopted layer must hit"),
+        }
+        // adopt still respects capacity (evicts LRU like a load would)
+        let mut small = WeightMemory::new(2, 96);
+        small.adopt("a");
+        small.adopt("b");
+        small.adopt("c");
+        assert!(!small.is_resident("a"));
+        assert!(small.is_resident("b") && small.is_resident("c"));
+        small.adopt("b"); // re-adopt is a no-op
+        assert!(small.is_resident("c"));
     }
 
     #[test]

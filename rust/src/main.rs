@@ -4,8 +4,11 @@
 //!   info                         accelerator + calibration summary
 //!   run    [--net M] [--voltage V] [--freq MHZ] run one inference + report
 //!   serve  [--frames N] [--voltage V] [--streams K] multi-stream serving
+//!   pack-weights [--net M|--synthetic DIR] convert `.ttn` v1 → packed v2
 //!   golden [--net STEM]          co-simulate simulator vs PJRT artifact
 //!   report table1|fig5|fig6|soa|sparsity|mapping|config|layers|all
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -14,12 +17,12 @@ use tcn_cutie::coordinator::{
     DvsSource, Engine, EngineConfig, FrameSource, GestureClass, PackedStream, Pipeline,
     PipelineConfig, ServingReport,
 };
-use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
+use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
 use tcn_cutie::network::{dvs_hybrid_random, loader, Network};
 use tcn_cutie::report;
 use tcn_cutie::runtime::{golden, Runtime};
-use tcn_cutie::tensor::TritTensor;
+use tcn_cutie::tensor::{ttn, TritTensor};
 use tcn_cutie::util::cli::Args;
 use tcn_cutie::util::rng::Rng;
 
@@ -30,10 +33,11 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: tcn-cutie <info|run|serve|golden|report> [options]
+const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report> [options]
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
   serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
          [--streams K] [--replay FILE|--record FILE] [--net synthetic]
+  pack-weights --net MANIFEST [--out FILE] | --synthetic DIR [--seed N]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
 
@@ -41,7 +45,13 @@ serve streams frames per session through the engine: session s uses
 gesture (gesture+s) mod 12 and seed seed+s, or replays FILE (a packed
 (pos, mask) word-stream; --record FILE captures one to replay).
 --net synthetic serves the random-weight DVS hybrid network (no
-artifacts needed).";
+artifacts needed).
+
+pack-weights upgrades a manifest's `.ttn` weights to the TTN2 container
+(same bundle + a packed (pos, mask) weight-image section) in place, or
+to --out FILE; --synthetic DIR first writes a random-weight DVS artifact
+pair into DIR and packs that. run/serve boot word-for-word from packed
+artifacts automatically.";
 
 fn run() -> Result<()> {
     let args = Args::from_env(&["threaded", "json", "fast"]);
@@ -50,6 +60,7 @@ fn run() -> Result<()> {
         "info" => info(),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "pack-weights" => cmd_pack_weights(&args),
         "golden" => cmd_golden(&args),
         "report" => cmd_report(&args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
@@ -84,6 +95,20 @@ fn default_net_path(file: &str) -> Result<String> {
         .to_string())
 }
 
+/// Load a manifest and, when its weights file is a packed TTN2
+/// container, the word-copy-deserialized prepared image.
+fn load_net_and_image(manifest: &str) -> Result<(Network, Option<Arc<PreparedNet>>)> {
+    let (net, image) =
+        loader::load_network_full(manifest).with_context(|| format!("loading {manifest}"))?;
+    let image = match image {
+        Some(img) => {
+            Some(Arc::new(PreparedNet::from_image(&img, &net, &CutieConfig::kraken())?))
+        }
+        None => None,
+    };
+    Ok((net, image))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let manifest = args.opt_or("net", &default_net_path("cifar9_96.json")?);
     let v = args.opt_f64("voltage", 0.5)?;
@@ -91,7 +116,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     let seed = args.opt_u64("seed", 2)?;
     let mode = if args.flag("fast") { SimMode::Fast } else { SimMode::Accurate };
 
-    let net = loader::load_network(&manifest).with_context(|| format!("loading {manifest}"))?;
+    let (net, image) = load_net_and_image(&manifest)?;
     let mut rng = Rng::new(seed);
     let input = if net.has_tcn() {
         TritTensor::random(&[net.tcn_steps, net.input_hw, net.input_hw, 2], &mut rng, 0.85)
@@ -99,6 +124,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         TritTensor::random(&[net.input_hw, net.input_hw, 3], &mut rng, 0.3)
     };
     let mut sched = Scheduler::new(CutieConfig::kraken(), mode);
+    if let Some(img) = image {
+        sched.attach_image(img);
+    }
     sched.preload_weights(&net);
     let (logits, stats) = sched.run_full(&net, &input)?;
     println!("net {}  predicted class {}", net.name, logits.argmax());
@@ -118,14 +146,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn serve_net(args: &Args, seed: u64) -> Result<Network> {
+fn serve_net(args: &Args, seed: u64) -> Result<(Network, Option<Arc<PreparedNet>>)> {
     let manifest = args.opt_or("net", &default_net_path("dvs_hybrid_96.json")?);
     if manifest == "synthetic" {
         // random-weight DVS hybrid geometry — lets serving (and the CI
         // smoke) run without compiled artifacts
-        return Ok(dvs_hybrid_random(96, seed, 0.5));
+        return Ok((dvs_hybrid_random(96, seed, 0.5), None));
     }
-    loader::load_network(&manifest).with_context(|| format!("loading {manifest}"))
+    load_net_and_image(&manifest)
 }
 
 fn print_report(tag: &str, r: &mut ServingReport) {
@@ -160,7 +188,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if threaded && (streams > 1 || replay.is_some()) {
         bail!("--threaded serves a single live stream; drop it or use --batch");
     }
-    let net = serve_net(args, seed)?;
+    // packed TTN2 artifacts boot word-for-word into the shared image
+    let (net, image) = serve_net(args, seed)?;
 
     // --record FILE: capture the stream-0 gesture source as a replayable
     // packed word-stream (the µDMA payload twin), then serve as usual.
@@ -187,7 +216,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             mode,
             ..Default::default()
         };
-        let pipe = Pipeline::new(net, cfg);
+        let pipe = match image {
+            Some(img) => Pipeline::with_image(net, cfg, img)?,
+            None => Pipeline::new(net, cfg),
+        };
         let (label, mut r) = if let Some(b) = batch {
             (format!("batched x{b}"), pipe.run_batched(b)?)
         } else if threaded {
@@ -231,7 +263,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) };
     let pool = ecfg.workers;
-    let mut engine = Engine::new(&net, ecfg);
+    let mut engine = match image {
+        Some(img) => Engine::with_image(&net, ecfg, img)?,
+        None => Engine::new(&net, ecfg),
+    };
     // deterministic round-robin interleave across sessions
     for sid in 0..streams {
         engine.open_session(sid);
@@ -258,6 +293,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_report(&format!("  [session {sid}]"), &mut r);
     }
     print_report("aggregate", &mut agg);
+    Ok(())
+}
+
+/// Convert a manifest's `.ttn` weights to the packed TTN2 container:
+/// the original bundle bytes verbatim plus the (pos, mask) weight-image
+/// section the word-copy boot path consumes. The conversion is verified
+/// in memory before anything touches disk: v2 → v1 must strip back
+/// bit-exactly, and the word-copy reload must equal the i8-built image.
+fn cmd_pack_weights(args: &Args) -> Result<()> {
+    let manifest = if let Some(dir) = args.opt("synthetic") {
+        // write a random-weight DVS artifact pair first, then pack it —
+        // the artifact-free path the CI smoke uses
+        let net = dvs_hybrid_random(96, args.opt_u64("seed", 7)?, 0.5);
+        let (manifest, weights) = loader::save_network(dir, "dvs_synth", &net)?;
+        println!("wrote synthetic artifact: {} + {}", manifest.display(), weights.display());
+        manifest
+            .to_str()
+            .with_context(|| format!("path {} is not valid UTF-8", manifest.display()))?
+            .to_string()
+    } else {
+        args.opt("net")
+            .map(str::to_string)
+            .context("pack-weights needs --net MANIFEST or --synthetic DIR")?
+    };
+
+    let (net, existing) = loader::load_network_full(&manifest)?;
+    if existing.is_some() {
+        println!("{manifest}: weights are already packed (TTN2)");
+        return Ok(());
+    }
+    let wpath = loader::weights_path(&manifest)?;
+    let v1 = std::fs::read(&wpath).with_context(|| format!("reading {}", wpath.display()))?;
+
+    let cfg = CutieConfig::kraken();
+    let prepared = PreparedNet::new(&net, &cfg);
+    let image = prepared.to_image();
+    let v2 = ttn::upgrade_bytes(&v1, &image)?;
+    ensure!(ttn::strip_bytes(&v2)? == v1, "v2 → v1 strip is not bit-exact");
+    let (_, img_back) = ttn::read_bytes_full(&v2)?;
+    let reloaded =
+        PreparedNet::from_image(&img_back.context("image section missing")?, &net, &cfg)?;
+    ensure!(reloaded == prepared, "word-copy reload differs from the i8-built image");
+
+    let out = match args.opt("out") {
+        Some(p) => p.to_string(),
+        None => wpath
+            .to_str()
+            .with_context(|| format!("path {} is not valid UTF-8", wpath.display()))?
+            .to_string(),
+    };
+    std::fs::write(&out, &v2).with_context(|| format!("writing {out}"))?;
+    println!(
+        "packed {} layer records for '{}' ({} B TTN1 -> {} B TTN2, image {:016x}) -> {}",
+        image.layers.len(),
+        net.name,
+        v1.len(),
+        v2.len(),
+        prepared.fingerprint(),
+        out
+    );
     Ok(())
 }
 

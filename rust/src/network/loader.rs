@@ -1,17 +1,48 @@
 //! Load a network from the JSON manifest + `.ttn` weights emitted by
-//! `python/compile/aot.py`.
+//! `python/compile/aot.py`, and write the manifest + weights pair back
+//! out ([`save_network`] — the synthetic-artifact path behind
+//! `pack-weights --synthetic` and the packed-boot tests).
+//!
+//! The weights file may be either container version:
+//! [`load_network_full`] additionally surfaces the TTN2 packed
+//! weight-image section when present, so boot can be a word-copy
+//! deserialization (`cutie::PreparedNet::from_image`) instead of i8
+//! re-packing.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use super::{Layer, LayerKind, Network};
-use crate::tensor::ttn;
+use crate::tensor::ttn::{self, Bundle, Tensor, WeightImage};
+use crate::tensor::IntTensor;
 use crate::util::json::Json;
+
+/// Resolve the manifest's `weights_file` relative to its directory.
+pub fn weights_path(manifest_path: impl AsRef<Path>) -> Result<PathBuf> {
+    let manifest_path = manifest_path.as_ref();
+    let text = std::fs::read_to_string(manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", manifest_path.display()))?;
+    let weights_file = j
+        .get("weights_file")
+        .and_then(|v| v.as_str())
+        .context("manifest missing weights_file")?;
+    let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
+    Ok(dir.join(weights_file))
+}
 
 /// Load `<stem>.json`, resolving the `.ttn` weights file relative to the
 /// manifest's directory.
 pub fn load_network(manifest_path: impl AsRef<Path>) -> Result<Network> {
+    Ok(load_network_full(manifest_path)?.0)
+}
+
+/// [`load_network`] plus the packed weight image, when the weights file
+/// is a TTN2 container (`None` for plain TTN1 artifacts).
+pub fn load_network_full(
+    manifest_path: impl AsRef<Path>,
+) -> Result<(Network, Option<WeightImage>)> {
     let manifest_path = manifest_path.as_ref();
     let text = std::fs::read_to_string(manifest_path)
         .with_context(|| format!("reading {}", manifest_path.display()))?;
@@ -22,8 +53,12 @@ pub fn load_network(manifest_path: impl AsRef<Path>) -> Result<Network> {
         .and_then(|v| v.as_str())
         .context("manifest missing weights_file")?;
     let dir = manifest_path.parent().unwrap_or_else(|| Path::new("."));
-    let bundle = ttn::read_file(dir.join(weights_file))?;
+    let (bundle, image) = ttn::read_file_full(dir.join(weights_file))?;
+    let net = build_network(&j, &bundle)?;
+    Ok((net, image))
+}
 
+fn build_network(j: &Json, bundle: &Bundle) -> Result<Network> {
     let str_field = |o: &Json, k: &str| -> Result<String> {
         Ok(o.get(k).and_then(|v| v.as_str()).with_context(|| format!("missing {k}"))?.to_string())
     };
@@ -73,14 +108,94 @@ pub fn load_network(manifest_path: impl AsRef<Path>) -> Result<Network> {
     }
 
     let net = Network {
-        name: str_field(&j, "name")?,
-        input_hw: int_field(&j, "input_hw")?,
-        tcn_steps: int_field(&j, "tcn_steps")?,
-        classes: int_field(&j, "classes")?,
+        name: str_field(j, "name")?,
+        input_hw: int_field(j, "input_hw")?,
+        tcn_steps: int_field(j, "tcn_steps")?,
+        classes: int_field(j, "classes")?,
         layers,
     };
     net.validate()?;
     Ok(net)
+}
+
+/// The canonical tensor bundle of a network: per layer `{name}_w` (trit
+/// weights) and, for non-dense layers, `{name}_lo` / `{name}_hi` (i32
+/// thresholds). The inverse of what [`load_network`] consumes.
+pub fn network_bundle(net: &Network) -> Bundle {
+    let mut bundle = Bundle::new();
+    for l in &net.layers {
+        bundle.insert(format!("{}_w", l.name), Tensor::Trit(l.weights.clone()));
+        if l.kind != LayerKind::Dense {
+            bundle.insert(
+                format!("{}_lo", l.name),
+                Tensor::Int(IntTensor::from_vec(&[l.lo.len()], l.lo.clone())),
+            );
+            bundle.insert(
+                format!("{}_hi", l.name),
+                Tensor::Int(IntTensor::from_vec(&[l.hi.len()], l.hi.clone())),
+            );
+        }
+    }
+    bundle
+}
+
+/// The JSON manifest describing `net`, referencing `weights_file` and
+/// the [`network_bundle`] tensor names.
+pub fn manifest_json(net: &Network, weights_file: &str) -> Json {
+    use std::collections::BTreeMap;
+    let layers: Vec<Json> = net
+        .layers
+        .iter()
+        .map(|l| {
+            let mut o = BTreeMap::new();
+            let kind = match l.kind {
+                LayerKind::Conv2d => "conv2d",
+                LayerKind::Tcn => "tcn",
+                LayerKind::Dense => "dense",
+            };
+            o.insert("kind".to_string(), Json::Str(kind.to_string()));
+            o.insert("name".to_string(), Json::Str(l.name.clone()));
+            o.insert("weights".to_string(), Json::Str(format!("{}_w", l.name)));
+            if l.kind != LayerKind::Dense {
+                o.insert("lo".to_string(), Json::Str(format!("{}_lo", l.name)));
+                o.insert("hi".to_string(), Json::Str(format!("{}_hi", l.name)));
+            }
+            o.insert("in_ch".to_string(), Json::Int(l.in_ch as i64));
+            o.insert("out_ch".to_string(), Json::Int(l.out_ch as i64));
+            o.insert("kernel".to_string(), Json::Int(l.kernel as i64));
+            o.insert("dilation".to_string(), Json::Int(l.dilation as i64));
+            o.insert("pool".to_string(), Json::Bool(l.pool));
+            o.insert("global_pool".to_string(), Json::Bool(l.global_pool));
+            Json::Object(o)
+        })
+        .collect();
+    let mut root = std::collections::BTreeMap::new();
+    root.insert("name".to_string(), Json::Str(net.name.clone()));
+    root.insert("input_hw".to_string(), Json::Int(net.input_hw as i64));
+    root.insert("tcn_steps".to_string(), Json::Int(net.tcn_steps as i64));
+    root.insert("classes".to_string(), Json::Int(net.classes as i64));
+    root.insert("weights_file".to_string(), Json::Str(weights_file.to_string()));
+    root.insert("layers".to_string(), Json::Array(layers));
+    Json::Object(root)
+}
+
+/// Write `net` as a `<stem>.json` manifest + `<stem>.ttn` (TTN1) weights
+/// pair under `dir` (created if needed). Returns (manifest, weights)
+/// paths. `load_network` round-trips it exactly.
+pub fn save_network(
+    dir: impl AsRef<Path>,
+    stem: &str,
+    net: &Network,
+) -> Result<(PathBuf, PathBuf)> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let weights_name = format!("{stem}.ttn");
+    let weights = dir.join(&weights_name);
+    ttn::write_file(&weights, &network_bundle(net))?;
+    let manifest = dir.join(format!("{stem}.json"));
+    let text = manifest_json(net, &weights_name).to_string_pretty(2);
+    std::fs::write(&manifest, text).with_context(|| format!("writing {}", manifest.display()))?;
+    Ok((manifest, weights))
 }
 
 /// Locate the artifacts directory: `$TCN_CUTIE_ARTIFACTS`, else
@@ -101,6 +216,19 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::network::dvs_hybrid_random;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let net = dvs_hybrid_random(16, 61, 0.5);
+        let dir = std::env::temp_dir().join("tcn_cutie_save_net_test");
+        let (manifest, weights) = save_network(&dir, "roundtrip", &net).unwrap();
+        assert_eq!(weights_path(&manifest).unwrap(), weights);
+        let (back, image) = load_network_full(&manifest).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(back, net, "save → load must be the identity");
+        assert!(image.is_none(), "TTN1 artifacts carry no weight image");
+    }
 
     fn have_artifacts() -> bool {
         artifacts_dir().join("cifar9_96.json").exists()

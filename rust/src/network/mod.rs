@@ -22,7 +22,7 @@ pub enum LayerKind {
     Dense,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Layer {
     pub name: String,
     pub kind: LayerKind,
@@ -90,7 +90,7 @@ impl Layer {
     }
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Network {
     pub name: String,
     pub input_hw: usize,

@@ -1,15 +1,45 @@
 //! `.ttn` binary interchange reader/writer — the Rust half of
-//! `python/compile/ttn.py`. Format documented there; all little-endian.
+//! `python/compile/ttn.py`. All little-endian.
+//!
+//! Two container versions coexist:
+//!
+//! * **TTN1** — the original tensor bundle (named i8-trit / i32
+//!   tensors); the format of `python/compile/aot.py` artifacts.
+//! * **TTN2** — the same bundle body byte-for-byte, followed by a
+//!   **packed weight-image section** (`WIMG`): per prepared layer the
+//!   (pos, mask) u64 plane words in the exact layout the OCU weight
+//!   buffers (and [`crate::cutie`]'s `PreparedLayer` / `PreparedDense`)
+//!   hold, plus dims/flags/thresholds. Boot from a TTN2 file is a
+//!   word-copy deserialization — no i8 re-packing (see
+//!   EXPERIMENTS.md §Weights for the format spec and the boot-cost
+//!   A/B). `tcn-cutie pack-weights` converts v1 → v2;
+//!   [`strip_bytes`] is the exact inverse, so v1 ⇄ v2 round-trips
+//!   bit-exactly.
+//!
+//! Parsing is hardened against hostile input (truncation, bit flips,
+//! forged length prefixes): every length is bounds-checked against the
+//! remaining buffer *before* any allocation, element counts use checked
+//! arithmetic, and the plane words are validated against the
+//! `pos ⊆ mask` and channel-width invariants the dot kernels rely on.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::trit::{PackedVec, MAX_CHANNELS};
 
 use super::{IntTensor, TritTensor};
 
 pub const MAGIC: u32 = 0x314E5454; // "TTN1"
+pub const MAGIC2: u32 = 0x324E5454; // "TTN2" = TTN1 bundle + packed weight image
+const IMG_MAGIC: u32 = 0x474D4957; // "WIMG"
+
+/// Caps applied while parsing the weight-image section so a forged
+/// count can never drive an oversized allocation or loop.
+const MAX_IMG_LAYERS: usize = 4096;
+const MAX_KERNEL: usize = 16;
+const MAX_DENSE_FANIN: usize = 1 << 20;
 
 #[derive(Debug, Clone)]
 pub enum Tensor {
@@ -42,32 +72,107 @@ impl Tensor {
 
 pub type Bundle = BTreeMap<String, Tensor>;
 
-pub fn read_file(path: impl AsRef<Path>) -> Result<Bundle> {
-    let path = path.as_ref();
-    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
-    read_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+/// One prepared layer's serialized form in the weight-image section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackedLayerTag {
+    /// A conv2d kernel set (`PreparedLayer`, position-major words).
+    Conv,
+    /// A TCN layer already projected through the §4 mapping onto a 3×3
+    /// kernel set (`PreparedLayer`, position-major words).
+    MappedTcn,
+    /// A classifier (`PreparedDense`, chunk-major words).
+    Dense,
 }
 
-pub fn read_bytes(mut b: &[u8]) -> Result<Bundle> {
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedLayerRecord {
+    pub name: String,
+    pub tag: PackedLayerTag,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    /// Kernel size (conv / mapped records; 0 for dense).
+    pub k: usize,
+    pub pool: bool,
+    pub global_pool: bool,
+    /// Per-OCU thresholds (empty for dense).
+    pub lo: Vec<i32>,
+    pub hi: Vec<i32>,
+    /// conv/mapped: position-major `[kk · out_ch + co]`; dense:
+    /// chunk-major `[chunk · out_ch + co]`.
+    pub words: Vec<PackedVec>,
+}
+
+/// The parsed weight-image section of a TTN2 file: one record per
+/// prepared layer, in network order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightImage {
+    /// Datapath channel width the dense chunks were packed for.
+    pub chunk_channels: usize,
+    pub layers: Vec<PackedLayerRecord>,
+}
+
+pub fn read_file(path: impl AsRef<Path>) -> Result<Bundle> {
+    Ok(read_file_full(path)?.0)
+}
+
+/// Read a `.ttn` file of either version, returning the tensor bundle
+/// and, for TTN2, the packed weight-image section.
+pub fn read_file_full(path: impl AsRef<Path>) -> Result<(Bundle, Option<WeightImage>)> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    read_bytes_full(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn read_bytes(b: &[u8]) -> Result<Bundle> {
+    Ok(read_bytes_full(b)?.0)
+}
+
+/// Parse bytes of either container version. TTN1 yields
+/// `(bundle, None)`; TTN2 additionally parses and validates the weight
+/// image.
+pub fn read_bytes_full(mut b: &[u8]) -> Result<(Bundle, Option<WeightImage>)> {
     let magic = read_u32(&mut b)?;
-    if magic != MAGIC {
-        bail!("bad magic {magic:#x}");
+    match magic {
+        MAGIC => {
+            let bundle = read_bundle(&mut b)?;
+            if !b.is_empty() {
+                bail!("{} trailing bytes", b.len());
+            }
+            Ok((bundle, None))
+        }
+        MAGIC2 => {
+            let bundle = read_bundle(&mut b)?;
+            let image = decode_image(&mut b)?;
+            if !b.is_empty() {
+                bail!("{} trailing bytes after the weight image", b.len());
+            }
+            Ok((bundle, Some(image)))
+        }
+        other => bail!("bad magic {other:#x} (expected TTN1 or TTN2)"),
     }
-    let n = read_u32(&mut b)? as usize;
+}
+
+fn read_bundle(b: &mut &[u8]) -> Result<Bundle> {
+    let n = read_u32(b)? as usize;
     let mut out = Bundle::new();
     for _ in 0..n {
-        let name_len = read_u16(&mut b)? as usize;
-        let name = String::from_utf8(take(&mut b, name_len)?.to_vec())?;
-        let dtype = read_u8(&mut b)?;
-        let ndim = read_u8(&mut b)? as usize;
+        let name_len = read_u16(b)? as usize;
+        let name = String::from_utf8(take(b, name_len)?.to_vec())?;
+        let dtype = read_u8(b)?;
+        let ndim = read_u8(b)? as usize;
         let mut dims = Vec::with_capacity(ndim);
         for _ in 0..ndim {
-            dims.push(read_u32(&mut b)? as usize);
+            dims.push(read_u32(b)? as usize);
         }
-        let count: usize = dims.iter().product();
+        // a forged dim list must not overflow into a tiny (or huge)
+        // element count — checked product, proper error
+        let count = dims
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .with_context(|| format!("tensor '{name}': element count overflows"))?;
         let tensor = match dtype {
             0 => {
-                let raw = take(&mut b, count)?;
+                let raw = take(b, count)?;
                 let data: Vec<i8> = raw.iter().map(|&x| x as i8).collect();
                 if let Some(bad) = data.iter().find(|t| !(-1..=1).contains(*t)) {
                     bail!("tensor '{name}': non-trit value {bad}");
@@ -75,7 +180,10 @@ pub fn read_bytes(mut b: &[u8]) -> Result<Bundle> {
                 Tensor::Trit(TritTensor::from_vec(&dims, data))
             }
             1 => {
-                let raw = take(&mut b, count * 4)?;
+                let bytes = count
+                    .checked_mul(4)
+                    .with_context(|| format!("tensor '{name}': byte count overflows"))?;
+                let raw = take(b, bytes)?;
                 let data: Vec<i32> =
                     raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect();
                 Tensor::Int(IntTensor::from_vec(&dims, data))
@@ -84,16 +192,158 @@ pub fn read_bytes(mut b: &[u8]) -> Result<Bundle> {
         };
         out.insert(name, tensor);
     }
-    if !b.is_empty() {
-        bail!("{} trailing bytes", b.len());
-    }
     Ok(out)
 }
 
-pub fn write_file(path: impl AsRef<Path>, tensors: &Bundle) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
+fn decode_image(b: &mut &[u8]) -> Result<WeightImage> {
+    let magic = read_u32(b).context("weight image: missing section")?;
+    ensure!(magic == IMG_MAGIC, "weight image: bad section magic {magic:#x}");
+    let chunk_channels = read_u32(b)? as usize;
+    ensure!(
+        (1..=MAX_CHANNELS).contains(&chunk_channels),
+        "weight image: chunk width {chunk_channels}"
+    );
+    let n = read_u32(b)? as usize;
+    ensure!(n <= MAX_IMG_LAYERS, "weight image: {n} layer records");
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u16(b)? as usize;
+        let name = String::from_utf8(take(b, name_len)?.to_vec())?;
+        let tag = match read_u8(b)? {
+            0 => PackedLayerTag::Conv,
+            1 => PackedLayerTag::MappedTcn,
+            2 => PackedLayerTag::Dense,
+            t => bail!("record '{name}': unknown layer tag {t}"),
+        };
+        let in_ch = read_u32(b)? as usize;
+        let out_ch = read_u32(b)? as usize;
+        ensure!(
+            out_ch >= 1 && out_ch <= MAX_CHANNELS,
+            "record '{name}': {out_ch} output channels"
+        );
+        let (k, pool, global_pool, lo, hi, nwords) = if tag == PackedLayerTag::Dense {
+            ensure!(
+                in_ch >= 1 && in_ch <= MAX_DENSE_FANIN,
+                "record '{name}': classifier fan-in {in_ch}"
+            );
+            let nwords = in_ch
+                .div_ceil(chunk_channels)
+                .checked_mul(out_ch)
+                .with_context(|| format!("record '{name}': word count overflows"))?;
+            (0usize, false, false, Vec::new(), Vec::new(), nwords)
+        } else {
+            ensure!(
+                in_ch >= 1 && in_ch <= MAX_CHANNELS,
+                "record '{name}': {in_ch} input channels"
+            );
+            let k = read_u32(b)? as usize;
+            ensure!(k >= 1 && k <= MAX_KERNEL, "record '{name}': kernel size {k}");
+            ensure!(
+                tag == PackedLayerTag::Conv || k == 3,
+                "record '{name}': mapped TCN kernels are 3×3, got {k}"
+            );
+            let flags = read_u8(b)?;
+            ensure!(flags & !0b11 == 0, "record '{name}': unknown flag bits {flags:#x}");
+            let lo = read_i32s(b, out_ch)?;
+            let hi = read_i32s(b, out_ch)?;
+            for co in 0..out_ch {
+                ensure!(
+                    (lo[co] as i64) <= (hi[co] as i64) + 1,
+                    "record '{name}': channel {co} violates lo <= hi + 1"
+                );
+            }
+            // k ≤ 16, out_ch ≤ 128: the word count cannot overflow
+            (k, flags & 0b01 != 0, flags & 0b10 != 0, lo, hi, k * k * out_ch)
+        };
+        // words are read through `take`, so a forged count is bounded by
+        // the actual buffer before any allocation happens
+        let raw = take(
+            b,
+            nwords.checked_mul(32).with_context(|| format!("record '{name}': byte count"))?,
+        )?;
+        let mut words = Vec::with_capacity(nwords);
+        for quad in raw.chunks_exact(32) {
+            let w = [
+                u64::from_le_bytes(quad[0..8].try_into().unwrap()),
+                u64::from_le_bytes(quad[8..16].try_into().unwrap()),
+                u64::from_le_bytes(quad[16..24].try_into().unwrap()),
+                u64::from_le_bytes(quad[24..32].try_into().unwrap()),
+            ];
+            let v = PackedVec::from_words(w)
+                .with_context(|| format!("record '{name}': pos plane escapes the mask plane"))?;
+            words.push(v);
+        }
+        // channel-width hygiene: stale bits beyond a word's channel span
+        // would poison whole-word dots downstream
+        if tag == PackedLayerTag::Dense {
+            for (i, w) in words.iter().enumerate() {
+                let chunk = i / out_ch;
+                let width = (in_ch - chunk * chunk_channels).min(chunk_channels);
+                ensure!(
+                    w.masked(width) == *w,
+                    "record '{name}': stale bits beyond chunk {chunk}'s {width} channels"
+                );
+            }
+        } else {
+            for w in &words {
+                ensure!(
+                    w.masked(in_ch) == *w,
+                    "record '{name}': stale bits beyond {in_ch} channels"
+                );
+            }
+        }
+        layers.push(PackedLayerRecord {
+            name,
+            tag,
+            in_ch,
+            out_ch,
+            k,
+            pool,
+            global_pool,
+            lo,
+            hi,
+            words,
+        });
+    }
+    Ok(WeightImage { chunk_channels, layers })
+}
+
+fn encode_image(img: &WeightImage) -> Vec<u8> {
     let mut out = Vec::new();
-    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&IMG_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(img.chunk_channels as u32).to_le_bytes());
+    out.extend_from_slice(&(img.layers.len() as u32).to_le_bytes());
+    for r in &img.layers {
+        out.extend_from_slice(&(r.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(r.name.as_bytes());
+        out.push(match r.tag {
+            PackedLayerTag::Conv => 0,
+            PackedLayerTag::MappedTcn => 1,
+            PackedLayerTag::Dense => 2,
+        });
+        out.extend_from_slice(&(r.in_ch as u32).to_le_bytes());
+        out.extend_from_slice(&(r.out_ch as u32).to_le_bytes());
+        if r.tag != PackedLayerTag::Dense {
+            out.extend_from_slice(&(r.k as u32).to_le_bytes());
+            out.push((r.pool as u8) | ((r.global_pool as u8) << 1));
+            for v in &r.lo {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in &r.hi {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for w in &r.words {
+            for word in w.to_words() {
+                out.extend_from_slice(&word.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn bundle_body(tensors: &Bundle) -> Vec<u8> {
+    let mut out = Vec::new();
     out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
     for (name, t) in tensors {
         out.extend_from_slice(&(name.len() as u16).to_le_bytes());
@@ -119,8 +369,72 @@ pub fn write_file(path: impl AsRef<Path>, tensors: &Bundle) -> Result<()> {
             }
         }
     }
-    f.write_all(&out)?;
-    Ok(())
+    out
+}
+
+/// Serialize a bundle as TTN1 bytes.
+pub fn write_bytes(tensors: &Bundle) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&bundle_body(tensors));
+    out
+}
+
+pub fn write_file(path: impl AsRef<Path>, tensors: &Bundle) -> Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, write_bytes(tensors))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Serialize a bundle plus its packed weight image as TTN2 bytes.
+pub fn write_bytes_v2(tensors: &Bundle, image: &WeightImage) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC2.to_le_bytes());
+    out.extend_from_slice(&bundle_body(tensors));
+    out.extend_from_slice(&encode_image(image));
+    out
+}
+
+pub fn write_file_v2(path: impl AsRef<Path>, tensors: &Bundle, image: &WeightImage) -> Result<()> {
+    let path = path.as_ref();
+    std::fs::write(path, write_bytes_v2(tensors, image))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+/// Upgrade raw TTN1 bytes to TTN2 by appending a weight-image section.
+/// The bundle body is carried over **verbatim** (not re-encoded), so
+/// [`strip_bytes`] inverts this bit-exactly for any valid v1 input —
+/// including files whose tensor order is not the canonical one this
+/// writer emits.
+pub fn upgrade_bytes(v1: &[u8], image: &WeightImage) -> Result<Vec<u8>> {
+    let mut b = v1;
+    let magic = read_u32(&mut b)?;
+    ensure!(magic != MAGIC2, "already a TTN2 file");
+    ensure!(magic == MAGIC, "bad magic {magic:#x} (expected TTN1)");
+    let _ = read_bundle(&mut b)?; // validate before stamping v2 on it
+    ensure!(b.is_empty(), "{} trailing bytes", b.len());
+    let mut out = Vec::with_capacity(v1.len() + 64);
+    out.extend_from_slice(&MAGIC2.to_le_bytes());
+    out.extend_from_slice(&v1[4..]);
+    out.extend_from_slice(&encode_image(image));
+    Ok(out)
+}
+
+/// Strip TTN2 bytes back to the original TTN1 bytes (the exact inverse
+/// of [`upgrade_bytes`]); the image section is validated on the way.
+pub fn strip_bytes(v2: &[u8]) -> Result<Vec<u8>> {
+    let mut b = v2;
+    let magic = read_u32(&mut b)?;
+    ensure!(magic == MAGIC2, "bad magic {magic:#x} (expected TTN2)");
+    let before = b.len();
+    let _ = read_bundle(&mut b)?;
+    let body_len = before - b.len();
+    let _ = decode_image(&mut b)?;
+    ensure!(b.is_empty(), "{} trailing bytes after the weight image", b.len());
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&v2[4..4 + body_len]);
+    Ok(out)
 }
 
 fn take<'a>(b: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
@@ -144,10 +458,9 @@ fn read_u32(b: &mut &[u8]) -> Result<u32> {
     Ok(u32::from_le_bytes(take(b, 4)?.try_into().unwrap()))
 }
 
-// Suppress unused-import warning for Read (used via trait in some builds).
-#[allow(unused)]
-fn _assert_read_usable(r: &mut dyn Read) {
-    let _ = r;
+fn read_i32s(b: &mut &[u8], n: usize) -> Result<Vec<i32>> {
+    let raw = take(b, n.checked_mul(4).context("i32 run length overflows")?)?;
+    Ok(raw.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 #[cfg(test)]
@@ -188,9 +501,187 @@ mod tests {
         }
     }
 
+    fn tiny_image() -> WeightImage {
+        // 1 conv record (2 in, 2 out, 3×3) + 1 dense record (5 in, 3 out)
+        let mut rng = Rng::new(33);
+        let conv_words: Vec<PackedVec> = (0..9 * 2)
+            .map(|_| PackedVec::pack(&[rng.trit(0.3), rng.trit(0.3)]))
+            .collect();
+        let dense_words: Vec<PackedVec> = (0..3)
+            .map(|_| PackedVec::pack(&(0..5).map(|_| rng.trit(0.3)).collect::<Vec<_>>()))
+            .collect();
+        WeightImage {
+            chunk_channels: 96,
+            layers: vec![
+                PackedLayerRecord {
+                    name: "c0".into(),
+                    tag: PackedLayerTag::Conv,
+                    in_ch: 2,
+                    out_ch: 2,
+                    k: 3,
+                    pool: true,
+                    global_pool: false,
+                    lo: vec![-1, 0],
+                    hi: vec![1, 2],
+                    words: conv_words,
+                },
+                PackedLayerRecord {
+                    name: "fc".into(),
+                    tag: PackedLayerTag::Dense,
+                    in_ch: 5,
+                    out_ch: 3,
+                    k: 0,
+                    pool: false,
+                    global_pool: false,
+                    lo: vec![],
+                    hi: vec![],
+                    words: dense_words,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn v2_roundtrip_and_strip_are_exact() {
+        let mut bundle = Bundle::new();
+        bundle.insert("x".into(), Tensor::Trit(TritTensor::from_vec(&[4], vec![1, 0, -1, 1])));
+        bundle.insert("y".into(), Tensor::Int(IntTensor::from_vec(&[2], vec![7, -9])));
+        let image = tiny_image();
+
+        let v1 = write_bytes(&bundle);
+        let v2 = upgrade_bytes(&v1, &image).unwrap();
+        assert_eq!(strip_bytes(&v2).unwrap(), v1, "strip must invert upgrade bit-exactly");
+        assert!(upgrade_bytes(&v2, &image).is_err(), "double upgrade is an error");
+
+        let (back, img) = read_bytes_full(&v2).unwrap();
+        assert_eq!(back.len(), bundle.len());
+        assert_eq!(img.as_ref(), Some(&image), "image section must round-trip");
+        // the dedicated writer agrees with the verbatim upgrade path on
+        // canonical (writer-ordered) bundles
+        assert_eq!(write_bytes_v2(&bundle, &image), v2);
+        // v1 read path still ignores nothing: plain read_bytes works on v2
+        assert_eq!(read_bytes(&v2).unwrap().len(), bundle.len());
+    }
+
     #[test]
     fn rejects_bad_magic() {
         assert!(read_bytes(&[0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+        // a plausible-looking future version is an error, not a guess
+        let mut v3 = write_bytes(&Bundle::new());
+        v3[3] = b'3';
+        assert!(read_bytes(&v3).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_v1_and_v2_at_every_boundary() {
+        let mut bundle = Bundle::new();
+        bundle.insert("x".into(), Tensor::Trit(TritTensor::from_vec(&[4], vec![1, 0, -1, 1])));
+        bundle.insert("y".into(), Tensor::Int(IntTensor::from_vec(&[2], vec![3, 4])));
+        let v1 = write_bytes(&bundle);
+        let v2 = upgrade_bytes(&v1, &tiny_image()).unwrap();
+        for bytes in [&v1, &v2] {
+            for cut in 0..bytes.len() {
+                assert!(
+                    read_bytes_full(&bytes[..cut]).is_err(),
+                    "truncation to {cut} of {} must error",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bit_flips_never_panic() {
+        // A flipped bit may still parse (e.g. inside an i32 payload or a
+        // weight word); it must never panic, OOM or violate the plane
+        // invariants of anything returned.
+        let mut bundle = Bundle::new();
+        let trits = TritTensor::from_vec(&[6], vec![1, 0, -1, 1, 0, 0]);
+        bundle.insert("x".into(), Tensor::Trit(trits));
+        bundle.insert("y".into(), Tensor::Int(IntTensor::from_vec(&[3], vec![5, -5, 0])));
+        let v2 = upgrade_bytes(&write_bytes(&bundle), &tiny_image()).unwrap();
+        let mut rng = Rng::new(55);
+        for _ in 0..400 {
+            let mut m = v2.clone();
+            let bit = rng.below(m.len() * 8);
+            m[bit / 8] ^= 1 << (bit % 8);
+            if let Ok((_, Some(img))) = read_bytes_full(&m) {
+                for r in &img.layers {
+                    for w in &r.words {
+                        assert_eq!(PackedVec::from_words(w.to_words()), Some(*w));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_length_prefixes_error_without_alloc() {
+        // tensor count far beyond the buffer
+        let mut b = MAGIC.to_le_bytes().to_vec();
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_bytes(&b).is_err());
+
+        // dim list whose product overflows usize
+        let mut b = MAGIC.to_le_bytes().to_vec();
+        b.extend_from_slice(&1u32.to_le_bytes()); // 1 tensor
+        b.extend_from_slice(&1u16.to_le_bytes()); // name "a"
+        b.push(b'a');
+        b.push(0); // dtype trit
+        b.push(4); // ndim
+        for _ in 0..4 {
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+        }
+        let e = read_bytes(&b).unwrap_err().to_string();
+        assert!(e.contains("overflow"), "got: {e}");
+
+        // name length prefix beyond the buffer
+        let mut b = MAGIC.to_le_bytes().to_vec();
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&u16::MAX.to_le_bytes());
+        b.push(b'a');
+        assert!(read_bytes(&b).is_err());
+
+        // image section with a forged OCU count
+        let mut img = tiny_image();
+        img.layers[0].out_ch = 100_000;
+        let v2 = write_bytes_v2(&Bundle::new(), &img);
+        assert!(read_bytes_full(&v2).is_err());
+    }
+
+    #[test]
+    fn image_section_invariants_are_enforced() {
+        let bundle = Bundle::new();
+        // pos bit outside mask in a weight word
+        let mut img = tiny_image();
+        img.layers[0].words[0].pos[0] |= 1 << 1;
+        img.layers[0].words[0].mask[0] &= !(1 << 1); // pos bit 1 now escapes mask
+        let v2 = write_bytes_v2(&bundle, &img);
+        let e = read_bytes_full(&v2).unwrap_err().to_string();
+        assert!(e.contains("pos plane"), "got: {e}");
+
+        // stale channel bits beyond in_ch
+        let mut img = tiny_image();
+        img.layers[0].words[0].mask[0] |= 1 << 7; // in_ch = 2
+        let v2 = write_bytes_v2(&bundle, &img);
+        let e = read_bytes_full(&v2).unwrap_err().to_string();
+        assert!(e.contains("stale bits"), "got: {e}");
+
+        // threshold contract violation
+        let mut img = tiny_image();
+        img.layers[0].lo[0] = 5;
+        img.layers[0].hi[0] = 3;
+        let v2 = write_bytes_v2(&bundle, &img);
+        let e = read_bytes_full(&v2).unwrap_err().to_string();
+        assert!(e.contains("lo <= hi + 1"), "got: {e}");
+
+        // mapped-TCN records are pinned to 3×3
+        let mut img = tiny_image();
+        img.layers[0].tag = PackedLayerTag::MappedTcn;
+        img.layers[0].k = 5;
+        img.layers[0].words = vec![PackedVec::ZERO; 25 * 2];
+        let v2 = write_bytes_v2(&bundle, &img);
+        assert!(read_bytes_full(&v2).is_err());
     }
 
     #[test]

@@ -165,6 +165,27 @@ impl PackedVec {
         out
     }
 
+    /// Serialize the planes as four u64s in `(pos0, pos1, mask0, mask1)`
+    /// order — the on-disk word layout of the packed `.ttn` v2
+    /// weight-image section (4 words ⇔ `MAX_CHANNELS` = 128 trits).
+    #[inline]
+    pub fn to_words(&self) -> [u64; 4] {
+        [self.pos[0], self.pos[1], self.mask[0], self.mask[1]]
+    }
+
+    /// Rebuild from `(pos0, pos1, mask0, mask1)` words, validating the
+    /// `pos ⊆ mask` invariant — a bit-flipped or hostile weight file
+    /// must surface as a load error, never as a silently-wrong dot
+    /// product. `None` when the invariant is violated.
+    #[inline]
+    pub fn from_words(w: [u64; 4]) -> Option<PackedVec> {
+        let v = PackedVec { pos: [w[0], w[1]], mask: [w[2], w[3]] };
+        if v.pos[0] & !v.mask[0] != 0 || v.pos[1] & !v.mask[1] != 0 {
+            return None;
+        }
+        Some(v)
+    }
+
     /// Channel-wise ternary max — the packed pooling primitive (perf pass
     /// iteration 8). On the (pos, mask) planes `max(a, b)` is two bitwise
     /// ops per word: the result is +1 iff either operand is +1
@@ -555,6 +576,21 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn word_serde_roundtrip_and_invariant() {
+        let mut rng = Rng::new(21);
+        for _ in 0..200 {
+            let n = 1 + rng.below(MAX_CHANNELS);
+            let trits: Vec<i8> = (0..n).map(|_| rng.trit(0.3)).collect();
+            let v = PackedVec::pack(&trits);
+            assert_eq!(PackedVec::from_words(v.to_words()), Some(v));
+        }
+        // pos bit outside mask must be rejected, not decoded
+        assert_eq!(PackedVec::from_words([1, 0, 0, 0]), None);
+        assert_eq!(PackedVec::from_words([0, 1 << 63, 0, 0]), None);
+        assert_eq!(PackedVec::from_words([0, 0, 1, 0]).map(|v| v.get(0)), Some(-1));
     }
 
     #[test]

@@ -1,14 +1,18 @@
 //! Integration tests of the multi-stream serving engine: interleaved vs
 //! isolated session determinism (the api_redesign acceptance gate), the
-//! packed word-stream replay path, and source plumbing.
+//! packed word-stream replay path, source plumbing, and the
+//! shared-weight-image guarantees (one `Arc<PreparedNet>` across the
+//! whole pool; packed-image boot byte-identical to i8 boot).
+
+use std::sync::Arc;
 
 use tcn_cutie::coordinator::{
     DvsSource, Engine, EngineConfig, FrameSource, GestureClass, MixedSource, PackedStream,
     ServingReport,
 };
-use tcn_cutie::cutie::{dma_ingress_bytes, SimMode};
-use tcn_cutie::network::{dvs_hybrid_random, Network};
-use tcn_cutie::tensor::PackedMap;
+use tcn_cutie::cutie::{dma_ingress_bytes, CutieConfig, PreparedNet, SimMode};
+use tcn_cutie::network::{dvs_hybrid_random, loader, Network};
+use tcn_cutie::tensor::{ttn, PackedMap};
 
 fn source_for(net: &Network, s: usize) -> DvsSource {
     DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12))
@@ -157,6 +161,113 @@ fn mixed_source_feeds_engine_deterministically() {
     let mut m40 = MixedSource::of_gestures(net.input_hw, 40, &[1, 7, 10]);
     let mut m41 = MixedSource::of_gestures(net.input_hw, 41, &[1, 7, 10]);
     assert_ne!(m40.next_frame(), m41.next_frame(), "mixer must honor its seed");
+}
+
+#[test]
+fn pool_shares_exactly_one_weight_image() {
+    // The shared-image acceptance gate: a K-worker engine holds exactly
+    // one Arc'd PreparedNet — engine + tail + K workers all borrow the
+    // same allocation, and serving never makes any of them rebuild a
+    // private copy.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let k = 4;
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: k, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg);
+    assert_eq!(engine.pool_size(), k);
+    assert_eq!(
+        Arc::strong_count(engine.image()),
+        k + 2,
+        "one image, borrowed by the engine, the tail and {k} workers"
+    );
+    assert_eq!(engine.image().counts(), (9, 1), "5 conv + 4 mapped TCN, 1 classifier");
+
+    let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
+    for _ in 0..3 {
+        for (s, src) in srcs.iter_mut().enumerate() {
+            engine.submit(s, src.next_frame());
+        }
+    }
+    engine.drain().unwrap();
+    assert_eq!(
+        Arc::strong_count(engine.image()),
+        k + 2,
+        "serving must not clone or rebuild the weight image"
+    );
+
+    // serial engines hold the same single image (no pool refs)
+    let serial = Engine::new(
+        &net,
+        EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+    );
+    assert_eq!(serial.pool_size(), 0);
+    assert_eq!(Arc::strong_count(serial.image()), 2);
+}
+
+#[test]
+fn packed_image_boot_serves_byte_identically() {
+    // Round-trip the weight image through actual TTN2 bytes, boot an
+    // engine from it, and serve the same streams as an i8-booted engine:
+    // labels, fc_wakeups, both energy ledgers' f64 bits and latency
+    // quantiles must match, in both sim modes, serial and pooled.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let kraken = CutieConfig::kraken();
+    let built = PreparedNet::new(&net, &kraken);
+    let v2 = ttn::write_bytes_v2(&loader::network_bundle(&net), &built.to_image());
+    let (_, img) = ttn::read_bytes_full(&v2).unwrap();
+    let loaded = Arc::new(PreparedNet::from_image(&img.unwrap(), &net, &kraken).unwrap());
+    assert_eq!(*loaded, built, "word-copy boot must equal the i8 build");
+
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1usize, 3] {
+            let cfg = EngineConfig { mode, workers, ..Default::default() };
+            let mut from_i8 = Engine::new(&net, cfg.clone());
+            let mut from_img = Engine::with_image(&net, cfg, Arc::clone(&loaded)).unwrap();
+            let k = 2;
+            let frames = 3;
+            let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(&net, s)).collect();
+            for _ in 0..frames {
+                for (s, src) in srcs.iter_mut().enumerate() {
+                    let f = src.next_frame();
+                    from_i8.submit(s, f.clone());
+                    from_img.submit(s, f);
+                }
+            }
+            from_i8.drain().unwrap();
+            from_img.drain().unwrap();
+            let a = from_i8.finish_all();
+            let b = from_img.finish_all();
+            for ((s, mut ra), (_, mut rb)) in a.into_iter().zip(b) {
+                assert_identical(
+                    &mut rb,
+                    &mut ra,
+                    &format!("{mode:?} workers={workers} session {s}: packed vs i8 boot"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mismatched_image_is_a_boot_error() {
+    let net16 = dvs_hybrid_random(16, 5, 0.5);
+    let net32 = dvs_hybrid_random(32, 5, 0.5);
+    let image = Arc::new(PreparedNet::new(&net32, &CutieConfig::kraken()));
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    assert!(
+        Engine::with_image(&net16, cfg.clone(), image).is_err(),
+        "serving a network from another network's weight image must fail at boot"
+    );
+
+    // same name + geometry but different thresholds: the boot-time
+    // content validation must catch it (an undetected mismatch would
+    // change every ternarization decision and serve wrong labels)
+    let mut tampered = net16.clone();
+    tampered.layers[5].lo[0] -= 1; // a TCN layer's threshold
+    let image = Arc::new(PreparedNet::new(&tampered, &CutieConfig::kraken()));
+    assert!(
+        Engine::with_image(&net16, cfg, image).is_err(),
+        "threshold-divergent image must fail boot validation"
+    );
 }
 
 #[test]

@@ -1,0 +1,147 @@
+//! Integration tests of the packed weight image (shared-image pass):
+//! `.ttn` v1 ⇄ v2 bit-exact round-trips through real artifacts on disk,
+//! word-copy boot equivalence down to every LayerStats counter and
+//! energy f64 bit in both sim modes, and hostile-input hardening of the
+//! full-file parse path.
+
+use std::sync::Arc;
+
+use tcn_cutie::coordinator::{DvsSource, GestureClass};
+use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
+use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, loader};
+use tcn_cutie::tensor::{ttn, TritTensor};
+use tcn_cutie::util::rng::Rng;
+
+#[test]
+fn v1_v2_roundtrip_is_bit_exact_for_real_artifacts() {
+    let dir = std::env::temp_dir().join("tcn_cutie_wimg_roundtrip");
+    let cfg = CutieConfig::kraken();
+    for (stem, net) in [
+        ("dvs", dvs_hybrid_random(16, 41, 0.5)),
+        ("cifar", cifar9_random(24, 42, 0.33)),
+    ] {
+        let (manifest, weights) = loader::save_network(&dir, stem, &net).unwrap();
+        let v1 = std::fs::read(&weights).unwrap();
+
+        // pack: v1 bytes verbatim + image section
+        let prepared = PreparedNet::new(&net, &cfg);
+        let v2 = ttn::upgrade_bytes(&v1, &prepared.to_image()).unwrap();
+        assert_eq!(ttn::strip_bytes(&v2).unwrap(), v1, "{stem}: strip must invert upgrade");
+
+        // the packed artifact loads transparently through the manifest
+        std::fs::write(&weights, &v2).unwrap();
+        let (net_back, image) = loader::load_network_full(&manifest).unwrap();
+        assert_eq!(net_back, net, "{stem}: the bundle half of v2 is the v1 content");
+        let image = image.expect("v2 artifact must surface its weight image");
+        let reloaded = PreparedNet::from_image(&image, &net, &cfg).unwrap();
+        assert_eq!(reloaded, prepared, "{stem}: word-copy boot must equal the i8 build");
+        assert_eq!(reloaded.fingerprint(), prepared.fingerprint());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn word_copy_boot_is_counter_and_energy_bit_identical() {
+    // Serve the same stream from an i8-built scheduler and an
+    // image-booted one: logits, every LayerStats counter (RunStats
+    // PartialEq) and the energy model's f64 bits must agree, both modes.
+    let net = dvs_hybrid_random(16, 43, 0.5);
+    let kraken = CutieConfig::kraken();
+    let built = PreparedNet::new(&net, &kraken);
+    let v2 = ttn::write_bytes_v2(&loader::network_bundle(&net), &built.to_image());
+    let (_, img) = ttn::read_bytes_full(&v2).unwrap();
+    let loaded = Arc::new(PreparedNet::from_image(&img.unwrap(), &net, &kraken).unwrap());
+    let params = EnergyParams::default();
+
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        let mut from_i8 = Scheduler::new(kraken.clone(), mode);
+        from_i8.preload_weights(&net);
+        let mut from_img = Scheduler::new(kraken.clone(), mode);
+        from_img.attach_image(Arc::clone(&loaded));
+        from_img.preload_weights(&net);
+
+        let mut src = DvsSource::new(net.input_hw, 90, GestureClass(2));
+        for frame in 0..5 {
+            let f = src.next_frame();
+            let (la, ra) = from_i8.serve_frame(&net, &f).unwrap();
+            let (lb, rb) = from_img.serve_frame(&net, &f).unwrap();
+            assert_eq!(la, lb, "{mode:?} frame {frame}: logits");
+            assert_eq!(ra, rb, "{mode:?} frame {frame}: all LayerStats counters");
+            let ea = evaluate(&ra, 0.5, None, &params);
+            let eb = evaluate(&rb, 0.5, None, &params);
+            assert_eq!(
+                ea.energy_j.to_bits(),
+                eb.energy_j.to_bits(),
+                "{mode:?} frame {frame}: energy bits"
+            );
+            assert_eq!(ea.time_s.to_bits(), eb.time_s.to_bits());
+        }
+        assert!(
+            Arc::ptr_eq(from_img.image().unwrap(), &loaded),
+            "image-booted scheduler must keep serving from the loaded image"
+        );
+    }
+}
+
+#[test]
+fn cifar_feedforward_boots_from_image_too() {
+    // The non-TCN path (run_full's classifier branch) through the image.
+    let net = cifar9_random(16, 44, 0.33);
+    let kraken = CutieConfig::kraken();
+    let built = PreparedNet::new(&net, &kraken);
+    let loaded = Arc::new(
+        PreparedNet::from_image(&built.to_image(), &net, &kraken).unwrap(),
+    );
+    let mut rng = Rng::new(45);
+    let input = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+    let mut a = Scheduler::new(kraken.clone(), SimMode::Accurate);
+    let mut b = Scheduler::new(kraken.clone(), SimMode::Accurate);
+    b.attach_image(loaded);
+    let (la, ra) = a.run_full(&net, &input).unwrap();
+    let (lb, rb) = b.run_full(&net, &input).unwrap();
+    assert_eq!(la, lb);
+    assert_eq!(ra, rb);
+}
+
+#[test]
+fn hostile_inputs_error_cleanly_on_real_sized_files() {
+    // The unit sweep in tensor/ttn.rs covers every truncation boundary
+    // of a tiny file; this covers a realistic multi-layer artifact:
+    // sampled truncations and random bit flips over both container
+    // versions must yield proper errors (or a still-valid parse), never
+    // a panic or an unbounded allocation.
+    let net = dvs_hybrid_random(16, 46, 0.5);
+    let v1 = ttn::write_bytes(&loader::network_bundle(&net));
+    let image = PreparedNet::new(&net, &CutieConfig::kraken()).to_image();
+    let v2 = ttn::upgrade_bytes(&v1, &image).unwrap();
+
+    let mut rng = Rng::new(47);
+    for bytes in [&v1, &v2] {
+        // every strict prefix of a valid file is invalid
+        for _ in 0..1500 {
+            let cut = rng.below(bytes.len());
+            assert!(ttn::read_bytes_full(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        for cut in (bytes.len().saturating_sub(40))..bytes.len() {
+            assert!(ttn::read_bytes_full(&bytes[..cut]).is_err(), "tail cut at {cut}");
+        }
+        // bit flips: error or valid parse, never a panic
+        for _ in 0..300 {
+            let mut m = (*bytes).clone();
+            let bit = rng.below(m.len() * 8);
+            m[bit / 8] ^= 1 << (bit % 8);
+            let _ = ttn::read_bytes_full(&m);
+        }
+    }
+
+    // a flipped byte inside the image section can never smuggle an
+    // invariant-violating word into a PreparedNet: from_image re-checks
+    // geometry and thresholds against the network
+    let mut tampered = image.clone();
+    tampered.layers[0].lo[0] += 1;
+    assert!(
+        PreparedNet::from_image(&tampered, &net, &CutieConfig::kraken()).is_err(),
+        "tampered thresholds must not boot"
+    );
+}
