@@ -19,10 +19,11 @@ use tcn_cutie::coordinator::{
 };
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
+use tcn_cutie::fault::{ber, FaultPlan, FaultSurface};
 use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, loader};
 use tcn_cutie::tensor::{ttn, PackedMap, TritTensor};
 use tcn_cutie::trit::{dot_scalar, PackedVec};
-use tcn_cutie::util::bench::{bench, black_box, BenchSuite};
+use tcn_cutie::util::bench::{bench, black_box, BenchResult, BenchSuite};
 use tcn_cutie::util::rng::Rng;
 
 fn main() {
@@ -254,6 +255,53 @@ fn main() {
     );
     suite.push(&r_eng1);
     suite.push_speedup(&r_engn, &r_eng1);
+
+    // --- resilience: label accuracy vs SRAM supply under bit upsets ---
+    // The fault-injection pass's ledger entry (EXPERIMENTS.md §Faults):
+    // the same 24 DVS frames served at each activation-SRAM supply
+    // point, injecting at the BER the voltage model predicts, scored as
+    // the fraction of labels disagreeing with the fault-free run. (The
+    // core's energy point stays at the nominal 0.5 V — only the SRAM
+    // macro is voltage-scaled here.) Encoded as `1.0 + disagreement` so
+    // the regression checker's ratio math stays well-defined: a clean
+    // sweep point is exactly 1.0, never 0.
+    let serve_at = |plan: Option<FaultPlan>| -> Vec<usize> {
+        let mut engine = Engine::new(
+            &dnet,
+            EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+        );
+        engine.open_session(0);
+        if let Some(p) = plan {
+            engine.set_fault_plan(0, p);
+        }
+        let mut src = DvsSource::new(64, 31, GestureClass(4));
+        for _ in 0..24 {
+            engine.submit(0, src.next_frame());
+        }
+        engine.drain().unwrap();
+        engine.finish_session(0).unwrap().labels
+    };
+    let clean_labels = serve_at(None);
+    println!("resilience: DVS label accuracy vs activation-SRAM supply (24 frames):");
+    for v in [0.60, 0.55, 0.50, 0.45, 0.40] {
+        let plan = FaultPlan::at_voltage(FaultSurface::ActMem, v, 17);
+        let labels = serve_at(Some(plan));
+        let wrong = labels.iter().zip(&clean_labels).filter(|(a, b)| a != b).count();
+        let dis = wrong as f64 / clean_labels.len() as f64;
+        println!(
+            "  {v:.2} V  ber {:>9.2e}  label disagreement {wrong}/{} ({:.1} %)",
+            ber(v),
+            clean_labels.len(),
+            dis * 100.0
+        );
+        suite.push(&BenchResult {
+            name: format!("resilience: DVS label disagreement @ {v:.2} V (1 = clean)"),
+            iters: clean_labels.len(),
+            median_s: 1.0 + dis,
+            mad_s: 0.0,
+        });
+    }
+    println!();
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {

@@ -42,12 +42,17 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use super::metrics::{ServingMetrics, ServingReport};
-use super::session::Session;
+use super::session::{FaultState, Session};
 use super::source::FrameSource;
 use crate::cutie::{CutieConfig, PreparedNet, RunStats, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
+use crate::fault::{FaultPlan, FaultSummary, FaultSurface, FrameFaults, Injector};
 use crate::network::Network;
 use crate::tensor::PackedMap;
+
+/// Attempts the stateful TCN tail gets per frame before the frame is
+/// declared a terminal failure (one retry).
+const TCN_ATTEMPTS: u32 = 2;
 
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
@@ -80,14 +85,16 @@ pub struct Engine<'n> {
     /// resolves to 1).
     workers: Vec<Scheduler>,
     sessions: BTreeMap<usize, Session>,
-    /// Submitted, not yet drained (session, frame) pairs in arrival order.
-    pending: Vec<(usize, PackedMap)>,
+    /// Submitted, not yet drained (session, frame, injection ledger)
+    /// triples in arrival order. Frame-surface faults (ActMem, µDMA) are
+    /// injected at submit time so the ledger rides with its frame.
+    pending: Vec<(usize, PackedMap, FrameFaults)>,
 }
 
 impl<'n> Engine<'n> {
     pub fn new(net: &'n Network, cfg: EngineConfig) -> Self {
         let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
-        Self::with_image(net, cfg, image).expect("freshly built image matches its network")
+        Self::with_image(net, cfg, image).expect("engine config and image valid for this network")
     }
 
     /// Boot from a pre-built weight image — e.g. one word-copy-loaded
@@ -108,6 +115,14 @@ impl<'n> Engine<'n> {
             image.net_name(),
             net.name
         );
+        // Boot-time clock validation: with no explicit clock the energy
+        // model derives f_max(V), which has no fit below the device
+        // threshold — reject the config here rather than erroring on the
+        // first drain. (Sub-0.5 V supplies themselves are legal: that is
+        // the fault-injection operating region.)
+        if cfg.freq_hz.is_none() {
+            crate::energy::fmax_hz(cfg.voltage)?;
+        }
         let pool = if cfg.workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
@@ -170,10 +185,52 @@ impl<'n> Engine<'n> {
         self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, depth, channels))
     }
 
+    /// Arm (or replace) a session's fault plan. The injector is seeded
+    /// by the plan's seed mixed with the session id, so one plan applied
+    /// to many sessions decorrelates their flip streams while every
+    /// stream stays individually deterministic. A BER-0 plan is armed
+    /// but structurally side-effect-free (no RNG draws, no scrubs).
+    pub fn set_fault_plan(&mut self, session_id: usize, plan: FaultPlan) {
+        let seed = plan.seed ^ (session_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        self.open_session(session_id).fault =
+            Some(FaultState { plan, inj: Injector::new(plan.ber, seed) });
+    }
+
+    /// The session's armed plan, if any.
+    pub fn fault_plan(&self, session_id: usize) -> Option<FaultPlan> {
+        self.sessions.get(&session_id).and_then(|s| s.fault.as_ref().map(|f| f.plan))
+    }
+
     /// Enqueue one frame on a stream. Work happens at the next `drain`.
+    ///
+    /// Frame-surface fault injection happens here, in submission order:
+    /// an armed ActMem plan corrupts the frame's words as stored in the
+    /// activation SRAM and charges a scrub scan over them (detected
+    /// orphans are clamped, silent mask flips ride through); an armed
+    /// µDMA plan corrupts the words in flight, where the ingress
+    /// decoder's plane-invariant check catches orphans for free (no
+    /// scrub charge) but silent flips still land.
     pub fn submit(&mut self, session_id: usize, frame: PackedMap) {
-        self.open_session(session_id);
-        self.pending.push((session_id, frame));
+        let sess = self.open_session(session_id);
+        let mut frame = frame;
+        let mut ff = FrameFaults::default();
+        if let Some(fs) = sess.fault.as_mut() {
+            if fs.plan.is_active() {
+                match fs.plan.surface {
+                    FaultSurface::ActMem => {
+                        ff.flips += fs.inj.corrupt_map(&mut frame);
+                        ff.scrub_words += frame.pixels.len() as u64;
+                        ff.detected += frame.scrub();
+                    }
+                    FaultSurface::DmaStream => {
+                        ff.flips += fs.inj.corrupt_map(&mut frame);
+                        ff.detected += frame.scrub();
+                    }
+                    FaultSurface::TcnMem | FaultSurface::WeightMem => {}
+                }
+            }
+        }
+        self.pending.push((session_id, frame, ff));
     }
 
     /// Pull up to `max_frames` frames from a source onto a stream;
@@ -209,12 +266,20 @@ impl<'n> Engine<'n> {
         self.sessions.get(&id)
     }
 
-    /// Serve every pending frame; returns how many were served.
+    /// Serve every pending frame; returns how many were served (dropped
+    /// or terminally failed frames don't count).
     ///
     /// Phase 1 (stateless, parallel): CNN front-ends across the worker
     /// pool. Phase 2 (stateful, sequential): per-frame TCN/SoC tail in
     /// submission order — per-session frame order is preserved because
     /// submission order is.
+    ///
+    /// Resilience contract: a frame that errors — or a pool worker that
+    /// panics — costs at most that frame (and, for a panic, a serial
+    /// recompute of the worker's shard on the tail); it never aborts the
+    /// drain or poisons other sessions. Failures land in the owning
+    /// session's [`FaultSummary`]; at [`super::session::FAILURE_LIMIT`]
+    /// the session is quarantined and its remaining frames are dropped.
     pub fn drain(&mut self) -> Result<usize> {
         if self.pending.is_empty() {
             return Ok(0);
@@ -222,54 +287,122 @@ impl<'n> Engine<'n> {
         let wall0 = Instant::now();
         let pending = std::mem::take(&mut self.pending);
 
-        // Phase 1: CNN front-end.
+        // Phase 1: CNN front-end. A frame whose CNN errors leaves its
+        // slot None (noted as a failure in phase 2).
         let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; pending.len()];
+        let net = self.net;
         if self.workers.is_empty() {
-            for (i, (_, frame)) in pending.iter().enumerate() {
-                cnn[i] = Some(self.tail.run_cnn(self.net, frame)?);
+            for (i, (_, frame, _)) in pending.iter().enumerate() {
+                cnn[i] = self.tail.run_cnn(net, frame).ok();
             }
         } else {
-            let net = self.net;
             let nw = self.workers.len();
-            let results: Vec<Vec<(usize, Result<(PackedMap, RunStats)>)>> =
-                std::thread::scope(|scope| {
-                    let mut handles = Vec::new();
-                    for (wi, sched) in self.workers.iter_mut().enumerate() {
-                        let pending = &pending;
-                        handles.push(scope.spawn(move || {
-                            let mut out = Vec::new();
-                            let mut i = wi;
-                            while i < pending.len() {
-                                out.push((i, sched.run_cnn(net, &pending[i].1)));
-                                i += nw;
-                            }
-                            out
-                        }));
+            let (results, poisoned) = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (wi, sched) in self.workers.iter_mut().enumerate() {
+                    let pending = &pending;
+                    handles.push(scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = wi;
+                        while i < pending.len() {
+                            out.push((i, sched.run_cnn(net, &pending[i].1)));
+                            i += nw;
+                        }
+                        out
+                    }));
+                }
+                // Join manually: a panicked worker must cost only its own
+                // shard, not (via scope's implicit re-panic) the process.
+                let mut results = Vec::new();
+                let mut poisoned = Vec::new();
+                for (wi, h) in handles.into_iter().enumerate() {
+                    match h.join() {
+                        Ok(out) => results.push(out),
+                        Err(_) => poisoned.push(wi),
                     }
-                    handles.into_iter().map(|h| h.join().expect("cnn worker")).collect()
-                });
+                }
+                (results, poisoned)
+            });
             for (i, r) in results.into_iter().flatten() {
-                cnn[i] = Some(r?);
+                cnn[i] = r.ok();
+            }
+            // Recompute a poisoned worker's shard serially on the tail —
+            // the frames, not the worker, are what sessions are owed.
+            for wi in poisoned {
+                let mut i = wi;
+                while i < pending.len() {
+                    cnn[i] = self.tail.run_cnn(net, &pending[i].1).ok();
+                    i += nw;
+                }
             }
         }
 
         // Phase 2: stateful per-session tail, in submission order.
         let mut served: Vec<(usize, f64, f64)> = Vec::with_capacity(pending.len());
-        for ((sid, frame), slot) in pending.into_iter().zip(cnn.into_iter()) {
-            let (feat, mut run) = slot.expect("all frames dispatched");
-            let sess = self.sessions.get_mut(&sid).expect("submit opened the session");
-            sess.ingest(&frame);
-            // check the stream's recurrent TCN window out into the tail;
-            // the packed feature word moves into it as-is (no unpack)
-            self.tail.swap_tcn(&mut sess.tcn);
-            let tcn_result = match self.tail.push_feature(&feat) {
-                Ok(()) => self.tail.run_tcn(self.net),
-                Err(e) => Err(e),
+        for ((sid, frame, mut ff), slot) in pending.into_iter().zip(cnn.into_iter()) {
+            let Some(sess) = self.sessions.get_mut(&sid) else { continue };
+            if sess.is_quarantined() {
+                sess.faults.dropped_frames += 1;
+                continue;
+            }
+            let Some((feat, mut run)) = slot else {
+                sess.faults.record(&ff, ff.flips > 0);
+                sess.note_failure();
+                continue;
             };
-            self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
-            let (logits, r) = tcn_result?;
+            // State-surface injection (TCN ring / weight banks), one
+            // exposure per frame.
+            let mut degraded = ff.flips > 0;
+            degraded |= inject_state_surfaces(&self.image, &mut self.tail, sess, &mut ff);
+            // Check the stream's recurrent TCN window out into the tail;
+            // the packed feature word moves into it as-is (no unpack).
+            // Bounded retry: the feature is pushed at most once (a push
+            // that landed is not replayed on retry).
+            let mut pushed = false;
+            let mut tcn_result = Err(anyhow::anyhow!("tcn tail not attempted"));
+            for attempt in 0..TCN_ATTEMPTS {
+                self.tail.swap_tcn(&mut sess.tcn);
+                let r = if pushed { Ok(()) } else { self.tail.push_feature(&feat) };
+                let r = match r {
+                    Ok(()) => {
+                        pushed = true;
+                        self.tail.run_tcn(net)
+                    }
+                    Err(e) => Err(e),
+                };
+                self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
+                match r {
+                    Ok(v) => {
+                        tcn_result = Ok(v);
+                        break;
+                    }
+                    Err(e) => {
+                        tcn_result = Err(e);
+                        if attempt + 1 < TCN_ATTEMPTS {
+                            sess.faults.retries += 1;
+                        }
+                    }
+                }
+            }
+            sess.faults.record(&ff, degraded);
+            let (logits, r) = match tcn_result {
+                Ok(v) => v,
+                Err(_) => {
+                    sess.note_failure();
+                    continue;
+                }
+            };
+            // A frame lands on the SoC ledger only once it is actually
+            // served: ingest + settle stay paired, so a failed frame
+            // leaves no dangling frame-ready IRQ behind.
+            sess.ingest(&frame);
             run.merge(r);
-            let report = evaluate(&run, self.cfg.voltage, self.cfg.freq_hz, &self.params);
+            // The synthetic fault layer rides only when it has content,
+            // so a clean frame's stats are byte-identical to fault-free.
+            if ff.any() {
+                run.layers.push(ff.to_layer_stats());
+            }
+            let report = evaluate(&run, self.cfg.voltage, self.cfg.freq_hz, &self.params)?;
             sess.settle(report.time_s, report.energy_j);
             sess.labels.push(logits.argmax());
             served.push((sid, report.time_s * 1e6, report.energy_j));
@@ -281,8 +414,9 @@ impl<'n> Engine<'n> {
         let n = served.len();
         let wall_us = wall0.elapsed().as_secs_f64() * 1e6 / n.max(1) as f64;
         for (sid, sim_us, core_j) in served {
-            let sess = self.sessions.get_mut(&sid).expect("session exists");
-            sess.metrics.record_frame(sim_us, wall_us, core_j);
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.metrics.record_frame(sim_us, wall_us, core_j);
+            }
         }
         Ok(n)
     }
@@ -295,20 +429,23 @@ impl<'n> Engine<'n> {
     /// Close every session, in session-id order.
     pub fn finish_all(&mut self) -> Vec<(usize, ServingReport)> {
         let ids = self.session_ids();
-        ids.into_iter().map(|id| (id, self.finish_session(id).expect("listed id"))).collect()
+        ids.into_iter().filter_map(|id| self.finish_session(id).map(|r| (id, r))).collect()
     }
 
-    /// Cross-session roll-up (latency samples concatenate, energies and
-    /// wakeups sum, labels concatenate in session-id order). Average SoC
-    /// power is total energy over total simulated SoC time.
+    /// Cross-session roll-up (latency samples concatenate, energies,
+    /// wakeups and fault counters sum, labels concatenate in session-id
+    /// order). Average SoC power is total energy over total simulated
+    /// SoC time.
     pub fn aggregate_report(&self) -> ServingReport {
         let mut metrics = ServingMetrics::default();
         let mut labels = Vec::new();
+        let mut faults = FaultSummary::default();
         let mut energy_j = 0.0;
         let mut fc_wakeups = 0u64;
         let mut now_ns = 0u64;
         for sess in self.sessions.values() {
             metrics.merge(&sess.metrics);
+            faults.merge(&sess.faults);
             energy_j += sess.soc.energy_j();
             fc_wakeups += sess.soc.fc_wakeups();
             now_ns += sess.soc.now_ns();
@@ -321,6 +458,74 @@ impl<'n> Engine<'n> {
             fc_wakeups,
             metrics,
             labels,
+            faults,
         }
+    }
+}
+
+/// One frame's exposure of an armed state-surface plan (TCN ring or
+/// weight banks). A free function so the `&mut Session` (borrowed out of
+/// the engine's session map) can coexist with the engine's `tail` and
+/// `image` fields. Returns true when the frame's data is degraded —
+/// silent corruption survived the scrub pass (repaired weight faults
+/// leave the frame clean).
+fn inject_state_surfaces(
+    image: &PreparedNet,
+    tail: &mut Scheduler,
+    sess: &mut Session,
+    ff: &mut FrameFaults,
+) -> bool {
+    let Some(fs) = sess.fault.as_mut() else { return false };
+    if !fs.plan.is_active() {
+        return false;
+    }
+    match fs.plan.surface {
+        FaultSurface::TcnMem => {
+            // Corrupt the resident ring words, then run the inter-frame
+            // scrub pass over the ring: orphans are clamped (detected),
+            // silent flips stay resident — the degraded-accuracy path.
+            let (len, channels) = (sess.tcn.len(), sess.tcn.channels);
+            ff.flips += fs.inj.corrupt_slots(sess.tcn.words_mut(), len, channels);
+            ff.detected += sess.tcn.words_mut().map(|w| u64::from(w.scrub())).sum::<u64>();
+            ff.scrub_words += len as u64;
+            ff.flips > 0
+        }
+        FaultSurface::WeightMem => {
+            // The shared image is immutable (and golden): model upsets in
+            // this engine's resident banks instead. Any hit raises the
+            // parity interrupt, which triggers a fingerprint scrub of the
+            // whole resident image; the affected layers then re-adopt
+            // their words from the `Arc`'d image. `adopt` early-returns
+            // for resident banks, so repair perturbs no LRU state and
+            // co-sessions stay byte-identical. Repaired → not degraded.
+            let inventory = image.scrub_inventory();
+            let total: u64 = inventory.iter().map(|(_, w)| *w).sum();
+            let faults = fs.inj.faulted_bits(total * 256);
+            if !faults.is_empty() {
+                ff.flips += faults.len() as u64;
+                ff.detected += faults.len() as u64;
+                ff.scrub_words += total;
+                // Map sorted flip addresses (256 plane bits per word) to
+                // their layers via the cumulative word inventory.
+                let mut affected: Vec<usize> = Vec::new();
+                for &a in &faults {
+                    let word = a / 256;
+                    let mut base = 0u64;
+                    for (li, (_, words)) in inventory.iter().enumerate() {
+                        if word < base + words {
+                            if affected.last() != Some(&li) {
+                                affected.push(li);
+                            }
+                            break;
+                        }
+                        base += words;
+                    }
+                }
+                ff.repair_words += affected.iter().map(|&li| inventory[li].1).sum::<u64>();
+                tail.scrub_weights(affected.iter().map(|&li| inventory[li].0.as_str()));
+            }
+            false
+        }
+        FaultSurface::ActMem | FaultSurface::DmaStream => false,
     }
 }

@@ -2,6 +2,7 @@
 //! host wallclock), throughput, the energy ledger summary, and the
 //! [`ServingReport`] every serving policy returns.
 
+use crate::fault::FaultSummary;
 use crate::soc::KrakenSoc;
 use crate::util::stats::Percentiles;
 
@@ -82,13 +83,21 @@ pub struct ServingReport {
     pub soc_avg_power_w: f64,
     pub fc_wakeups: u64,
     pub labels: Vec<usize>,
+    /// Fault-injection/resilience ledger: exactly `Default` for a run
+    /// with no armed fault plan (the zero-BER bit-exactness contract).
+    pub faults: FaultSummary,
 }
 
 impl ServingReport {
     /// The one place report fields are assembled from a finished SoC
     /// ledger (previously triplicated across the three `run_*` serve
     /// loops; any field drift now fails every path at once).
-    pub fn from_parts(mut metrics: ServingMetrics, soc: &KrakenSoc, labels: Vec<usize>) -> Self {
+    pub fn from_parts(
+        mut metrics: ServingMetrics,
+        soc: &KrakenSoc,
+        labels: Vec<usize>,
+        faults: FaultSummary,
+    ) -> Self {
         metrics.soc_energy_j = soc.energy_j();
         ServingReport {
             soc_energy_j: soc.energy_j(),
@@ -96,6 +105,7 @@ impl ServingReport {
             fc_wakeups: soc.fc_wakeups(),
             metrics,
             labels,
+            faults,
         }
     }
 }
@@ -115,8 +125,9 @@ mod tests {
         soc.fc_service_done();
         let mut m = ServingMetrics::default();
         m.record_frame(10.0, 5.0, 1e-6);
-        let r = ServingReport::from_parts(m, &soc, vec![3]);
+        let r = ServingReport::from_parts(m, &soc, vec![3], FaultSummary::default());
         assert_eq!(r.soc_energy_j.to_bits(), soc.energy_j().to_bits());
+        assert!(!r.faults.any(), "clean run carries an all-zero fault ledger");
         assert_eq!(r.metrics.soc_energy_j.to_bits(), soc.energy_j().to_bits());
         assert_eq!(r.soc_avg_power_w.to_bits(), soc.avg_power_w().to_bits());
         assert_eq!(r.fc_wakeups, 1);

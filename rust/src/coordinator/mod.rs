@@ -23,6 +23,6 @@ pub mod stream;
 pub use engine::{Engine, EngineConfig};
 pub use metrics::{ServingMetrics, ServingReport};
 pub use pipeline::{Pipeline, PipelineConfig};
-pub use session::Session;
+pub use session::{Session, FAILURE_LIMIT};
 pub use source::{DvsSource, FrameSource, GestureClass, MixedSource};
 pub use stream::PackedStream;

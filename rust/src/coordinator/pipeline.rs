@@ -200,7 +200,7 @@ impl Pipeline {
 
             // accelerator: CNN → TCN memory → TCN window → logits
             let (logits, stats) = sched.serve_frame(&self.net, &frame)?;
-            let report = evaluate(&stats, self.cfg.voltage, self.cfg.freq_hz, &params);
+            let report = evaluate(&stats, self.cfg.voltage, self.cfg.freq_hz, &params)?;
 
             // advance the SoC timeline by the accelerator's busy time and
             // add the core energy on top of the domain baseline
@@ -213,7 +213,7 @@ impl Pipeline {
             let wall_us = wall0.elapsed().as_secs_f64() * 1e6;
             metrics.record_frame(report.time_s * 1e6, wall_us, report.energy_j);
         }
-        Ok(ServingReport::from_parts(metrics, &soc, labels))
+        Ok(ServingReport::from_parts(metrics, &soc, labels, crate::fault::FaultSummary::default()))
     }
 }
 

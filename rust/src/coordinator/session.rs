@@ -11,10 +11,23 @@
 //! results to serving each alone.
 
 use crate::cutie::TcnMemory;
+use crate::fault::{FaultPlan, FaultSummary, Injector};
 use crate::soc::KrakenSoc;
 use crate::tensor::PackedMap;
 
 use super::metrics::{ServingMetrics, ServingReport};
+
+/// Terminal frame failures a session absorbs before it is quarantined
+/// (further frames are dropped instead of served).
+pub const FAILURE_LIMIT: u64 = 2;
+
+/// A session's armed fault plan plus its private injector stream. The
+/// injector lives with the session so its RNG consumption follows the
+/// per-session frame order, whatever the drain cadence.
+pub(crate) struct FaultState {
+    pub(crate) plan: FaultPlan,
+    pub(crate) inj: Injector,
+}
 
 pub struct Session {
     pub id: usize,
@@ -26,6 +39,10 @@ pub struct Session {
     pub soc: KrakenSoc,
     pub metrics: ServingMetrics,
     pub labels: Vec<usize>,
+    /// Armed fault-injection state (None = clean session).
+    pub(crate) fault: Option<FaultState>,
+    /// Fault/resilience ledger (exactly `Default` for a clean session).
+    pub faults: FaultSummary,
 }
 
 impl Session {
@@ -36,6 +53,8 @@ impl Session {
             soc: KrakenSoc::new(voltage),
             metrics: ServingMetrics::default(),
             labels: Vec::new(),
+            fault: None,
+            faults: FaultSummary::default(),
         }
     }
 
@@ -44,9 +63,24 @@ impl Session {
         self.metrics.frames
     }
 
+    /// True once the session tripped [`FAILURE_LIMIT`]: its pending
+    /// frames are dropped instead of served, so one misbehaving stream
+    /// cannot keep hitting the shared tail.
+    pub fn is_quarantined(&self) -> bool {
+        self.faults.quarantined > 0
+    }
+
+    /// Record one terminal frame failure; trips quarantine at the limit.
+    pub(crate) fn note_failure(&mut self) {
+        self.faults.failures += 1;
+        if self.faults.failures >= FAILURE_LIMIT {
+            self.faults.quarantined = 1;
+        }
+    }
+
     /// Close the session into its final report.
     pub fn into_report(self) -> ServingReport {
-        ServingReport::from_parts(self.metrics, &self.soc, self.labels)
+        ServingReport::from_parts(self.metrics, &self.soc, self.labels, self.faults)
     }
 
     /// The per-frame SoC preamble of the §5 autonomous flow: µDMA ingress

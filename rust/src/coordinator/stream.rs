@@ -199,9 +199,10 @@ struct Reader<'a> {
 impl Reader<'_> {
     fn u64(&mut self) -> Result<u64> {
         ensure!(self.at + 8 <= self.bytes.len(), "truncated stream at byte {}", self.at);
-        let v = u64::from_le_bytes(self.bytes[self.at..self.at + 8].try_into().unwrap());
+        let mut word = [0u8; 8];
+        word.copy_from_slice(&self.bytes[self.at..self.at + 8]);
         self.at += 8;
-        Ok(v)
+        Ok(u64::from_le_bytes(word))
     }
 
     fn done(&self) -> bool {

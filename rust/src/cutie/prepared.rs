@@ -374,6 +374,25 @@ impl PreparedNet {
         self.channels
     }
 
+    /// Per-layer scrub inventory, in network order: (layer name, resident
+    /// plane words), one "word" being one [`PackedVec`] — the granularity
+    /// the weight-scrub pass scans and re-adopts. The sum over all layers
+    /// is the entire boot-resident image, i.e. the weight-surface fault
+    /// exposure per frame.
+    pub fn scrub_inventory(&self) -> Vec<(String, u64)> {
+        self.signature
+            .iter()
+            .map(|(name, kind, _, _)| {
+                let words = match kind {
+                    LayerKind::Conv2d => self.conv[name].flat_words().len(),
+                    LayerKind::Tcn => self.mapped[name].flat_words().len(),
+                    LayerKind::Dense => self.dense[name].chunk_words().len(),
+                };
+                (name.clone(), words as u64)
+            })
+            .collect()
+    }
+
     /// A conv2d layer's prepared kernels.
     pub fn conv_layer(&self, name: &str) -> Result<&PreparedLayer> {
         self.conv
@@ -445,6 +464,26 @@ mod tests {
         assert!(img.dense_layer("l9").is_ok());
         assert!(img.conv_layer("nope").is_err());
         assert!(img.mapped_layer("l0").is_err(), "conv layers are not mapped-TCN kernels");
+    }
+
+    #[test]
+    fn scrub_inventory_covers_whole_image() {
+        let cfg = CutieConfig::kraken();
+        let net = dvs_hybrid_random(16, 70, 0.5);
+        let img = PreparedNet::new(&net, &cfg);
+        let inv = img.scrub_inventory();
+        assert_eq!(inv.len(), net.layers.len(), "one entry per layer, network order");
+        for ((name, words), layer) in inv.iter().zip(&net.layers) {
+            assert_eq!(name, &layer.name);
+            assert!(*words > 0, "'{name}' must expose resident words");
+        }
+        // entries agree with the served words, layer by layer
+        assert_eq!(inv[0].1, img.conv_layer("l0").unwrap().flat_words().len() as u64);
+        let (dense_name, dense_words) = inv.last().unwrap();
+        assert_eq!(
+            *dense_words,
+            img.dense_layer(dense_name).unwrap().chunk_words().len() as u64
+        );
     }
 
     #[test]

@@ -159,6 +159,19 @@ impl Scheduler {
         }
     }
 
+    /// Re-adopt the named layers' weight banks from the shared image —
+    /// the repair half of a weight-scrub pass (the software twin of a
+    /// scrubbing re-boot after a parity interrupt). Adoption is
+    /// idempotent: banks already resident stay resident with their LRU
+    /// order untouched, so sessions sharing this scheduler observe no
+    /// counter change; the scrub/repair cost is charged by the caller
+    /// through its frame's fault ledger.
+    pub fn scrub_weights<'a>(&mut self, layers: impl IntoIterator<Item = &'a str>) {
+        for name in layers {
+            self.weights.adopt(name);
+        }
+    }
+
     fn charge_weights(&mut self, layer: &Layer, stats: &mut LayerStats) {
         let access = self.weights.prepare(
             &layer.name,

@@ -53,6 +53,15 @@ pub struct LayerStats {
     /// TCN memory events.
     pub tcn_pushes: u64,
     pub tcn_reads: u64,
+
+    /// Fault-injection ledger (the synthetic `"fault_scrub"` layer; zero
+    /// on every real datapath layer): plane bits flipped, flips caught by
+    /// scrub/decoder checks, words scanned by scrub passes, and words
+    /// re-adopted from the shared weight image to repair corruption.
+    pub fault_flips: u64,
+    pub fault_detected: u64,
+    pub scrub_words: u64,
+    pub scrub_repair_words: u64,
 }
 
 impl LayerStats {
@@ -123,6 +132,21 @@ impl RunStats {
 
     pub fn stall_cycles(&self) -> u64 {
         self.layers.iter().map(|l| l.stall_cycles).sum()
+    }
+
+    pub fn fault_flips(&self) -> u64 {
+        self.layers.iter().map(|l| l.fault_flips).sum()
+    }
+
+    pub fn fault_detected(&self) -> u64 {
+        self.layers.iter().map(|l| l.fault_detected).sum()
+    }
+
+    pub fn scrub_words(&self) -> (u64, u64) {
+        (
+            self.layers.iter().map(|l| l.scrub_words).sum(),
+            self.layers.iter().map(|l| l.scrub_repair_words).sum(),
+        )
     }
 
     /// Merge another run (e.g. CNN front-end + TCN back-end).

@@ -136,6 +136,14 @@ impl TcnMemory {
         z
     }
 
+    /// Mutable access to the resident ring words, oldest first — the
+    /// fault-injection surface over the flip-flop ring (and the scrub
+    /// pass's scan path). Exposes exactly the `len()` occupied slots;
+    /// counters are untouched, the caller charges its own scrub costs.
+    pub fn words_mut(&mut self) -> impl Iterator<Item = &mut PackedVec> + '_ {
+        self.steps.iter_mut()
+    }
+
     /// Memory size in bytes (2-bit trits) — §5 sizes this at 576 B.
     /// Rounded up per step, so channel widths that are not a multiple of
     /// 4 don't under-report (e.g. depth=4, channels=3 is 4 B, not the

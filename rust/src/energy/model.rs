@@ -2,6 +2,8 @@
 //! see `calibration.rs` for how the constants were fitted to the paper's
 //! measured corners and for the locked-in regression tests.
 
+use anyhow::Result;
+
 use crate::cutie::{LayerStats, RunStats};
 
 use super::vf;
@@ -28,6 +30,10 @@ pub struct EnergyParams {
     pub e_dma_byte: f64,
     /// Control/clock-tree overhead per active cycle.
     pub e_cycle_ctrl: f64,
+    /// One word scanned or re-adopted by a fault-scrub pass (a read +
+    /// invariant/fingerprint compare — cheaper than a full datapath
+    /// access, charged only when a scrub actually fires).
+    pub e_scrub_word: f64,
     /// CUTIE-domain leakage power (W) at v_ref when powered.
     pub p_leak_ref: f64,
     /// Exponential leakage slope (per volt).
@@ -63,6 +69,8 @@ pub struct EnergyBreakdown {
     pub tcn_mem: f64,
     pub dma: f64,
     pub control: f64,
+    /// Fault-scrub traffic (detection scans + weight re-adoption).
+    pub scrub: f64,
     pub leakage: f64,
 }
 
@@ -76,6 +84,7 @@ impl EnergyBreakdown {
             + self.tcn_mem
             + self.dma
             + self.control
+            + self.scrub
             + self.leakage
     }
 }
@@ -110,13 +119,24 @@ fn layer_dyn_energy(l: &LayerStats, p: &EnergyParams, scale: f64) -> EnergyBreak
         tcn_mem: (l.tcn_pushes + l.tcn_reads) as f64 * p.e_tcn_trit * 96.0 * scale,
         dma: 0.0,
         control: l.total_cycles() as f64 * p.e_cycle_ctrl * scale,
+        scrub: (l.scrub_words + l.scrub_repair_words) as f64 * p.e_scrub_word * scale,
         leakage: 0.0,
     }
 }
 
 /// Evaluate a run at supply `v`, clock `freq_hz` (defaults to fmax(v)).
-pub fn evaluate(stats: &RunStats, v: f64, freq_hz: Option<f64>, p: &EnergyParams) -> EnergyReport {
-    let freq = freq_hz.unwrap_or_else(|| vf::fmax_hz(v));
+/// Errors only on a sub-threshold supply with no explicit clock — a
+/// corner where no frequency is defined at all.
+pub fn evaluate(
+    stats: &RunStats,
+    v: f64,
+    freq_hz: Option<f64>,
+    p: &EnergyParams,
+) -> Result<EnergyReport> {
+    let freq = match freq_hz {
+        Some(f) => f,
+        None => vf::fmax_hz(v)?,
+    };
     let scale = p.dyn_scale(v);
     let cycles = stats.total_cycles();
     let time_s = cycles as f64 / freq;
@@ -150,6 +170,7 @@ pub fn evaluate(stats: &RunStats, v: f64, freq_hz: Option<f64>, p: &EnergyParams
         bd.weights += lb.weights;
         bd.tcn_mem += lb.tcn_mem;
         bd.control += lb.control;
+        bd.scrub += lb.scrub;
     }
     bd.dma = stats.dma_bytes as f64 * p.e_dma_byte * scale
         + stats.dma_cycles as f64 * p.e_cycle_ctrl * scale * 0.25;
@@ -159,7 +180,7 @@ pub fn evaluate(stats: &RunStats, v: f64, freq_hz: Option<f64>, p: &EnergyParams
     let hw_ops = stats.hw_ops();
     let avg_tops = if time_s > 0.0 { hw_ops as f64 / time_s / 1e12 } else { 0.0 };
     let power = if time_s > 0.0 { energy / time_s } else { 0.0 };
-    EnergyReport {
+    Ok(EnergyReport {
         voltage: v,
         freq_hz: freq,
         cycles,
@@ -173,7 +194,7 @@ pub fn evaluate(stats: &RunStats, v: f64, freq_hz: Option<f64>, p: &EnergyParams
         peak_tops,
         peak_tops_per_watt: peak_eff,
         peak_layer,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -197,8 +218,8 @@ mod tests {
     fn energy_scales_with_voltage() {
         let stats = cifar_run();
         let p = EnergyParams::default();
-        let e05 = evaluate(&stats, 0.5, None, &p);
-        let e09 = evaluate(&stats, 0.9, None, &p);
+        let e05 = evaluate(&stats, 0.5, None, &p).unwrap();
+        let e09 = evaluate(&stats, 0.9, None, &p).unwrap();
         assert!(e09.energy_j > e05.energy_j * 2.0, "V² scaling");
         assert!(e09.avg_tops > e05.avg_tops * 3.0, "higher clock");
         assert!(e09.avg_tops_per_watt < e05.avg_tops_per_watt, "efficiency drops");
@@ -208,9 +229,40 @@ mod tests {
     fn breakdown_sums_to_total() {
         let stats = cifar_run();
         let p = EnergyParams::default();
-        let r = evaluate(&stats, 0.6, None, &p);
+        let r = evaluate(&stats, 0.6, None, &p).unwrap();
         assert!((r.breakdown.total() - r.energy_j).abs() < 1e-15);
         assert!(r.power_w > 0.0 && r.time_s > 0.0);
+    }
+
+    #[test]
+    fn subthreshold_without_explicit_clock_is_error() {
+        let stats = cifar_run();
+        let p = EnergyParams::default();
+        assert!(evaluate(&stats, 0.2, None, &p).is_err());
+        // with an explicit clock the sub-0.5 V point evaluates fine (the
+        // fault sweep's operating mode)
+        assert!(evaluate(&stats, 0.45, Some(54.0e6), &p).is_ok());
+    }
+
+    #[test]
+    fn scrub_words_charge_the_scrub_component() {
+        let mut stats = cifar_run();
+        let p = EnergyParams::default();
+        let clean = evaluate(&stats, 0.5, None, &p).unwrap();
+        assert_eq!(clean.breakdown.scrub, 0.0, "no scrub layer → no scrub energy");
+        stats.layers.push(LayerStats {
+            name: "fault_scrub".to_string(),
+            scrub_words: 1000,
+            scrub_repair_words: 24,
+            ..Default::default()
+        });
+        let scrubbed = evaluate(&stats, 0.5, None, &p).unwrap();
+        let want = 1024.0 * p.e_scrub_word * p.dyn_scale(0.5);
+        assert!((scrubbed.breakdown.scrub - want).abs() < 1e-18);
+        assert!((scrubbed.energy_j - clean.energy_j - want).abs() < 1e-15);
+        assert!((scrubbed.breakdown.total() - scrubbed.energy_j).abs() < 1e-15);
+        // the zero-cycle synthetic layer must not perturb peak metrics
+        assert_eq!(scrubbed.peak_layer, clean.peak_layer);
     }
 
     #[test]
@@ -218,7 +270,7 @@ mod tests {
         // C1 has 3/96 input channels toggling → lowest energy per hw-op.
         let stats = cifar_run();
         let p = EnergyParams::default();
-        let r = evaluate(&stats, 0.5, None, &p);
+        let r = evaluate(&stats, 0.5, None, &p).unwrap();
         assert_eq!(r.peak_layer, "l0");
         assert!(r.peak_tops_per_watt > r.avg_tops_per_watt);
     }

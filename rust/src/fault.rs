@@ -1,0 +1,467 @@
+//! Voltage-scaled SRAM fault injection and recovery accounting.
+//!
+//! The paper stops voltage scaling at 0.5 V because the integrated SRAM
+//! macros bit-error below it (§7) — a cliff `energy/vf.rs` records in a
+//! comment but, until this module, nothing in the simulator could
+//! express. Since the (pos, mask) bitplane passes (PR 2–5) every modeled
+//! SRAM surface stores exactly two plane bits per trit, which is the
+//! granularity real sub-nominal corruption hits: the two bitcells of a
+//! trit upset independently. This module provides
+//!
+//! * a deterministic bit-error-rate model [`ber`] extending the VF fit
+//!   below [`MIN_SRAM_VOLTAGE`],
+//! * seed-addressable injectors ([`Injector`]) that flip plane bits at a
+//!   configurable surface ([`FaultSurface`]) via geometric-gap sampling —
+//!   zero RNG draws at BER 0, so an armed-but-clean plan is bit-exact,
+//! * the detection currency: a `pos ⊄ mask` orphan (a +1 bit whose
+//!   non-zero flag is clear) is a state no legal write produces, so scrub
+//!   passes ([`PackedVec::scrub`]) can detect and clamp it; a mask-plane
+//!   flip is silent and becomes an accuracy loss instead — exactly the
+//!   split the accuracy-vs-voltage sweep measures,
+//! * per-frame ([`FrameFaults`]) and per-session ([`FaultSummary`])
+//!   ledgers the engine folds into `LayerStats` and the energy model.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::cutie::actmem::MIN_SRAM_VOLTAGE;
+use crate::cutie::LayerStats;
+use crate::tensor::PackedMap;
+use crate::trit::PackedVec;
+use crate::util::rng::Rng;
+
+/// Bit-error rate at the onset voltage (per bit per frame-exposure): the
+/// first observable error floor just under 0.5 V.
+pub const BER_ONSET: f64 = 1e-9;
+
+/// Exponential BER slope below onset, in decades per volt — roughly one
+/// decade per 17 mV of undervolting, a typical near-threshold SRAM
+/// retention cliff. Gives 1e-6 at 0.45 V and 1e-3 at 0.40 V.
+pub const DECADE_PER_V: f64 = 60.0;
+
+/// Bit-error rate of the modeled SRAM surfaces at supply `v`: exactly
+/// zero at and above [`MIN_SRAM_VOLTAGE`] (the silicon's validated
+/// range), exponential below it, clamped at 0.5 (a bit that flips with
+/// probability one-half carries no information — deep sub-threshold
+/// retention is simply lost).
+pub fn ber(v: f64) -> f64 {
+    if v >= MIN_SRAM_VOLTAGE {
+        return 0.0;
+    }
+    (BER_ONSET * 10f64.powf((MIN_SRAM_VOLTAGE - v) * DECADE_PER_V)).min(0.5)
+}
+
+/// Which modeled SRAM surface a [`FaultPlan`] corrupts. One plan targets
+/// exactly one surface; the engine keys its injection site off this, so
+/// the RNG consumption order is the per-session frame order regardless
+/// of drain cadence (the determinism contract).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSurface {
+    /// Activation ping-pong SRAM: the input frame words.
+    ActMem,
+    /// TCN flip-flop ring: the resident time-step feature words.
+    TcnMem,
+    /// Per-OCU weight buffers: the boot-resident prepared image.
+    WeightMem,
+    /// µDMA ingress: frame words in flight (decoder-validated on landing).
+    DmaStream,
+}
+
+impl FromStr for FaultSurface {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "actmem" | "act" => Ok(FaultSurface::ActMem),
+            "tcnmem" | "tcn" => Ok(FaultSurface::TcnMem),
+            "weightmem" | "weights" => Ok(FaultSurface::WeightMem),
+            "dma" | "dmastream" => Ok(FaultSurface::DmaStream),
+            other => anyhow::bail!(
+                "unknown fault surface {other:?} (expected actmem|tcnmem|weightmem|dma)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for FaultSurface {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultSurface::ActMem => "actmem",
+            FaultSurface::TcnMem => "tcnmem",
+            FaultSurface::WeightMem => "weightmem",
+            FaultSurface::DmaStream => "dma",
+        };
+        f.write_str(s)
+    }
+}
+
+/// A per-session fault-injection configuration: one surface, one BER
+/// (direct or derived from a supply voltage), one seed. Deterministic:
+/// the same plan over the same frame sequence injects the same flips.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub surface: FaultSurface,
+    /// Per-bit upset probability per frame exposure, in [0, 0.5].
+    pub ber: f64,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Plan at the BER the voltage model predicts for supply `v`.
+    pub fn at_voltage(surface: FaultSurface, v: f64, seed: u64) -> FaultPlan {
+        FaultPlan { surface, ber: ber(v), seed }
+    }
+
+    /// Plan with an explicit BER (clamped to the model's [0, 0.5] range).
+    pub fn with_ber(surface: FaultSurface, ber: f64, seed: u64) -> FaultPlan {
+        FaultPlan { surface, ber: ber.clamp(0.0, 0.5), seed }
+    }
+
+    /// False for BER 0 plans — armed but guaranteed side-effect-free.
+    pub fn is_active(&self) -> bool {
+        self.ber > 0.0
+    }
+
+    /// Build this plan's injector (forked per session by the engine).
+    pub fn injector(&self) -> Injector {
+        Injector::new(self.ber, self.seed)
+    }
+}
+
+/// Deterministic plane-bit flipper. Upsets are sampled with geometric
+/// gaps (`gap = ⌊ln(1−U)/ln(1−p)⌋`), so the cost — and crucially the RNG
+/// draw count — scales with the number of actual upsets, and a BER-0
+/// injector consumes no randomness at all: the zero-BER bit-exactness
+/// guarantee is structural, not probabilistic.
+#[derive(Debug, Clone)]
+pub struct Injector {
+    ber: f64,
+    rng: Rng,
+}
+
+impl Injector {
+    pub fn new(ber: f64, seed: u64) -> Injector {
+        Injector { ber: ber.clamp(0.0, 0.5), rng: Rng::new(seed) }
+    }
+
+    /// Geometric gap to the next upset (bits skipped before it).
+    fn next_gap(&mut self) -> u64 {
+        let u = self.rng.f64();
+        // u ∈ [0, 1) so 1−u ∈ (0, 1]; `as` saturates on overflow.
+        ((1.0 - u).ln() / (1.0 - self.ber).ln()).floor() as u64
+    }
+
+    /// Sorted upset addresses in `[0, total_bits)`. Empty (and free of
+    /// RNG draws) when the BER is zero or there is nothing to expose.
+    pub fn faulted_bits(&mut self, total_bits: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if self.ber <= 0.0 || total_bits == 0 {
+            return out;
+        }
+        let mut at = self.next_gap();
+        while at < total_bits {
+            out.push(at);
+            at = at.checked_add(1 + self.next_gap()).unwrap_or(u64::MAX);
+        }
+        out
+    }
+
+    /// Corrupt a sequence of packed words, each exposing `nbits` channels
+    /// over two planes (address space 2·nbits per word: `[0, nbits)` hits
+    /// the pos plane, `[nbits, 2·nbits)` the mask plane — the two
+    /// physical bitcells per trit upset independently). Returns the flip
+    /// count.
+    pub fn corrupt_slots<'a, I>(&mut self, slots: I, n_slots: usize, nbits: usize) -> u64
+    where
+        I: IntoIterator<Item = &'a mut PackedVec>,
+    {
+        let per_slot = 2 * nbits as u64;
+        let faults = self.faulted_bits(n_slots as u64 * per_slot);
+        let mut it = faults.iter().peekable();
+        let mut flips = 0;
+        for (i, slot) in slots.into_iter().enumerate() {
+            let base = i as u64 * per_slot;
+            while let Some(&&a) = it.peek() {
+                if a >= base + per_slot {
+                    break;
+                }
+                let within = (a - base) as usize;
+                if within < nbits {
+                    slot.flip_plane_bit(true, within);
+                } else {
+                    slot.flip_plane_bit(false, within - nbits);
+                }
+                flips += 1;
+                it.next();
+            }
+        }
+        flips
+    }
+
+    /// Corrupt one packed word over its first `nbits` channels.
+    pub fn corrupt_vec(&mut self, v: &mut PackedVec, nbits: usize) -> u64 {
+        self.corrupt_slots(std::iter::once(v), 1, nbits)
+    }
+
+    /// Corrupt a whole packed feature map (one SRAM word per pixel).
+    pub fn corrupt_map(&mut self, m: &mut PackedMap) -> u64 {
+        let (n, c) = (m.pixels.len(), m.c);
+        self.corrupt_slots(m.pixels.iter_mut(), n, c)
+    }
+}
+
+/// Per-frame fault ledger: what was injected, what the scrub passes
+/// caught, and what the detection/repair machinery cost. Folded into the
+/// frame's `RunStats` as a synthetic `"fault_scrub"` layer **only when
+/// non-zero**, so a clean frame's stats are byte-identical to a
+/// fault-free run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrameFaults {
+    /// Plane bits flipped by injection.
+    pub flips: u64,
+    /// Flips caught by invariant scrubs or decoder validation.
+    pub detected: u64,
+    /// Words scanned by scrub passes (charged to the energy ledger).
+    pub scrub_words: u64,
+    /// Words re-adopted from the shared image to repair weight banks.
+    pub repair_words: u64,
+}
+
+impl FrameFaults {
+    pub fn any(&self) -> bool {
+        *self != FrameFaults::default()
+    }
+
+    pub fn merge(&mut self, o: &FrameFaults) {
+        self.flips += o.flips;
+        self.detected += o.detected;
+        self.scrub_words += o.scrub_words;
+        self.repair_words += o.repair_words;
+    }
+
+    /// The synthetic stats layer carrying this frame's fault counters
+    /// into the energy ledger (zero cycles: scrubbing is modeled as
+    /// memory traffic, not datapath occupancy).
+    pub fn to_layer_stats(&self) -> LayerStats {
+        LayerStats {
+            name: "fault_scrub".to_string(),
+            fault_flips: self.flips,
+            fault_detected: self.detected,
+            scrub_words: self.scrub_words,
+            scrub_repair_words: self.repair_words,
+            ..Default::default()
+        }
+    }
+}
+
+/// Per-session (and, merged, per-report) fault and resilience summary.
+/// All counters are plain sums so session summaries aggregate by
+/// field-wise addition; a fault-free session is `Default` exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// Plane bits flipped by injection across the session.
+    pub injected_flips: u64,
+    /// Flips caught by scrub passes / decoder validation.
+    pub detected: u64,
+    /// Frames served with (possibly) corrupted data.
+    pub degraded_frames: u64,
+    /// Words scanned by scrub passes.
+    pub scrub_words: u64,
+    /// Words re-adopted from the shared image (weight repair).
+    pub repair_words: u64,
+    /// TCN-tail retries that subsequently succeeded.
+    pub retries: u64,
+    /// Frames that errored terminally (label not produced).
+    pub failures: u64,
+    /// 1 once the session tripped the failure limit (sums to a
+    /// quarantined-session count across a report).
+    pub quarantined: u64,
+    /// Frames dropped unserved because the session was quarantined.
+    pub dropped_frames: u64,
+}
+
+impl FaultSummary {
+    /// Fold one frame's injection ledger in. `degraded` marks frames
+    /// whose activation/TCN/DMA data was actually corrupted (repaired
+    /// weight faults leave the frame clean).
+    pub fn record(&mut self, f: &FrameFaults, degraded: bool) {
+        self.injected_flips += f.flips;
+        self.detected += f.detected;
+        self.scrub_words += f.scrub_words;
+        self.repair_words += f.repair_words;
+        if degraded {
+            self.degraded_frames += 1;
+        }
+    }
+
+    pub fn merge(&mut self, o: &FaultSummary) {
+        self.injected_flips += o.injected_flips;
+        self.detected += o.detected;
+        self.degraded_frames += o.degraded_frames;
+        self.scrub_words += o.scrub_words;
+        self.repair_words += o.repair_words;
+        self.retries += o.retries;
+        self.failures += o.failures;
+        self.quarantined += o.quarantined;
+        self.dropped_frames += o.dropped_frames;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != FaultSummary::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ber_model_anchors() {
+        // Validated range: exactly zero — the silicon's §7 contract.
+        assert_eq!(ber(0.9), 0.0);
+        assert_eq!(ber(0.5), 0.0);
+        // 3 decades per 50 mV: 1e-6 at 0.45 V, 1e-3 at 0.40 V.
+        assert!((ber(0.45) / 1e-6 - 1.0).abs() < 1e-9, "ber(0.45) = {}", ber(0.45));
+        assert!((ber(0.40) / 1e-3 - 1.0).abs() < 1e-9, "ber(0.40) = {}", ber(0.40));
+        // Deep sub-threshold clamps at the information-free 0.5.
+        assert_eq!(ber(0.30), 0.5);
+        assert_eq!(ber(0.0), 0.5);
+    }
+
+    #[test]
+    fn ber_monotone_nonincreasing_in_voltage() {
+        let mut last = f64::INFINITY;
+        for i in 0..=60 {
+            let v = 0.30 + 0.005 * i as f64;
+            let b = ber(v);
+            assert!(b <= last, "ber must fall as the supply rises (v = {v})");
+            assert!((0.0..=0.5).contains(&b));
+            last = b;
+        }
+    }
+
+    #[test]
+    fn surface_parses_and_prints() {
+        for (s, want) in [
+            ("actmem", FaultSurface::ActMem),
+            ("tcn", FaultSurface::TcnMem),
+            ("weightmem", FaultSurface::WeightMem),
+            ("dma", FaultSurface::DmaStream),
+        ] {
+            assert_eq!(s.parse::<FaultSurface>().unwrap(), want);
+        }
+        assert_eq!(FaultSurface::WeightMem.to_string(), "weightmem");
+        assert!("cache".parse::<FaultSurface>().is_err());
+        // round-trip through Display
+        for s in [
+            FaultSurface::ActMem,
+            FaultSurface::TcnMem,
+            FaultSurface::WeightMem,
+            FaultSurface::DmaStream,
+        ] {
+            assert_eq!(s.to_string().parse::<FaultSurface>().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn zero_ber_injector_is_inert() {
+        let plan = FaultPlan::with_ber(FaultSurface::ActMem, 0.0, 7);
+        assert!(!plan.is_active());
+        let mut inj = plan.injector();
+        assert!(inj.faulted_bits(u64::MAX).is_empty());
+        let mut v = PackedVec::pack(&[1, -1, 0, 1]);
+        let before = v;
+        assert_eq!(inj.corrupt_vec(&mut v, 4), 0);
+        assert_eq!(v, before, "BER-0 corruption must be a bit-exact no-op");
+    }
+
+    #[test]
+    fn injection_is_deterministic() {
+        let plan = FaultPlan::with_ber(FaultSurface::TcnMem, 0.01, 99);
+        let mut a = plan.injector();
+        let mut b = plan.injector();
+        for total in [10u64, 1000, 100_000] {
+            assert_eq!(a.faulted_bits(total), b.faulted_bits(total));
+        }
+    }
+
+    #[test]
+    fn flip_rate_tracks_ber() {
+        let mut inj = Injector::new(0.01, 3);
+        let total = 200_000u64;
+        let n = inj.faulted_bits(total).len() as f64;
+        let expect = 0.01 * total as f64;
+        assert!((n - expect).abs() < 0.15 * expect, "got {n}, expected ≈{expect}");
+    }
+
+    #[test]
+    fn faulted_bits_sorted_unique_in_range() {
+        let mut inj = Injector::new(0.05, 11);
+        let bits = inj.faulted_bits(10_000);
+        assert!(!bits.is_empty());
+        for w in bits.windows(2) {
+            assert!(w[0] < w[1], "addresses must be strictly increasing");
+        }
+        assert!(*bits.last().unwrap() < 10_000);
+    }
+
+    #[test]
+    fn corrupt_map_flips_only_live_channels() {
+        let mut m = PackedMap::zeros(8, 8, 17);
+        let mut inj = Injector::new(0.05, 5);
+        let flips = inj.corrupt_map(&mut m);
+        assert!(flips > 0, "5% BER over 2176 plane bits must flip something");
+        // Plane bits at positions ≥ c stay clear — the PackedMap invariant
+        // survives corruption (only live bitcells are modeled).
+        for px in &m.pixels {
+            assert_eq!(px.masked(17), *px, "no flips outside the live channels");
+        }
+        // Flips land as mask-plane −1s and pos-plane orphans; scrubbing
+        // detects exactly the orphans.
+        let detected: u32 = m.pixels.iter_mut().map(|p| p.scrub()).sum();
+        assert!(detected as u64 <= flips);
+    }
+
+    #[test]
+    fn corrupt_slots_matches_vec_by_vec() {
+        // One call over n slots must equal n sequential single-vec calls
+        // on a cloned injector (same address-space walk).
+        let mut words = vec![PackedVec::ZERO; 24];
+        let mut a = Injector::new(0.02, 42);
+        let mut b = a.clone();
+        let mut clone = words.clone();
+        let flips = a.corrupt_slots(words.iter_mut(), 24, 96);
+        let faults = b.faulted_bits(24 * 2 * 96);
+        assert_eq!(flips, faults.len() as u64);
+        for &addr in &faults {
+            let (slot, within) = ((addr / 192) as usize, (addr % 192) as usize);
+            if within < 96 {
+                clone[slot].flip_plane_bit(true, within);
+            } else {
+                clone[slot].flip_plane_bit(false, within - 96);
+            }
+        }
+        assert_eq!(words, clone);
+    }
+
+    #[test]
+    fn frame_faults_fold_into_summary() {
+        let mut sum = FaultSummary::default();
+        assert!(!sum.any());
+        let f = FrameFaults { flips: 3, detected: 1, scrub_words: 64, repair_words: 0 };
+        assert!(f.any());
+        sum.record(&f, true);
+        sum.record(&FrameFaults::default(), false);
+        assert_eq!(sum.injected_flips, 3);
+        assert_eq!(sum.degraded_frames, 1);
+        let mut total = FaultSummary::default();
+        total.merge(&sum);
+        total.merge(&sum);
+        assert_eq!(total.injected_flips, 6);
+        assert_eq!(total.scrub_words, 128);
+        let ls = f.to_layer_stats();
+        assert_eq!(ls.name, "fault_scrub");
+        assert_eq!(ls.fault_flips, 3);
+        assert_eq!(ls.compute_cycles, 0, "scrubbing occupies no datapath cycles");
+    }
+}

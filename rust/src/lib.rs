@@ -18,6 +18,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod cutie;
 pub mod energy;
+pub mod fault;
 pub mod mapping;
 pub mod network;
 pub mod report;

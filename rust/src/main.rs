@@ -19,6 +19,7 @@ use tcn_cutie::coordinator::{
 };
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::fault::{FaultPlan, FaultSurface};
 use tcn_cutie::network::{dvs_hybrid_random, loader, Network};
 use tcn_cutie::report;
 use tcn_cutie::runtime::{golden, Runtime};
@@ -37,6 +38,8 @@ const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
   serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
          [--streams K] [--replay FILE|--record FILE] [--net synthetic]
+         [--fault-surface actmem|tcnmem|weightmem|dma]
+         [--fault-ber P | --fault-voltage V] [--fault-seed N]
   pack-weights --net MANIFEST [--out FILE] | --synthetic DIR [--seed N]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
@@ -46,6 +49,11 @@ gesture (gesture+s) mod 12 and seed seed+s, or replays FILE (a packed
 (pos, mask) word-stream; --record FILE captures one to replay).
 --net synthetic serves the random-weight DVS hybrid network (no
 artifacts needed).
+
+--fault-ber P (explicit bit-error rate) or --fault-voltage V (rate the
+SRAM model predicts at supply V, zero at/above 0.5 V) arms a
+deterministic bit-flip plan on every session's chosen surface; the
+report gains a per-session fault/scrub/quarantine summary.
 
 pack-weights upgrades a manifest's `.ttn` weights to the TTN2 container
 (same bundle + a packed (pos, mask) weight-image section) in place, or
@@ -76,7 +84,7 @@ fn info() -> Result<()> {
     println!("  activation memory  : {} KiB x2 (double-buffered)", cfg.act_mem_bytes() / 1024);
     println!("  peak datapath      : {} Op/cycle", cfg.hw_ops_per_cycle(cfg.channels));
     for v in [0.5, 0.7, 0.9] {
-        let f = tcn_cutie::energy::fmax_hz(v);
+        let f = tcn_cutie::energy::fmax_hz(v)?;
         println!(
             "  fmax({v:.1} V)        : {:.0} MHz → {:.1} TOp/s peak",
             f / 1e6,
@@ -132,7 +140,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("net {}  predicted class {}", net.name, logits.argmax());
     println!("logits: {:?}", logits.data);
     let p = EnergyParams::default();
-    let r = evaluate(&stats, v, freq, &p);
+    let r = evaluate(&stats, v, freq, &p)?;
     report::print_energy_report("inference", &r);
     println!(
         "  cycles: {} total ({} compute, {} lb-fill, {} weights, {} dma)",
@@ -165,11 +173,32 @@ fn print_report(tag: &str, r: &mut ServingReport) {
         r.fc_wakeups
     );
     println!("  labels: {:?}", &r.labels[..r.labels.len().min(16)]);
+    if r.faults.any() {
+        let f = &r.faults;
+        println!(
+            "  faults: {} flips ({} detected), {} degraded frames, \
+             scrub {}+{} words, {} retries, {} failures, {} quarantined, {} dropped",
+            f.injected_flips,
+            f.detected,
+            f.degraded_frames,
+            f.scrub_words,
+            f.repair_words,
+            f.retries,
+            f.failures,
+            f.quarantined,
+            f.dropped_frames
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let voltage = args.opt_f64("voltage", 0.5)?;
     let freq_hz = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
+    if freq_hz.is_none() {
+        // a sub-threshold supply with no explicit clock is a CLI error,
+        // not a boot-time panic inside Engine::new
+        tcn_cutie::energy::fmax_hz(voltage)?;
+    }
     let frames = args.opt_usize("frames", 32)?;
     let seed = args.opt_u64("seed", 7)?;
     let gesture = args.opt_usize("gesture", 3)?;
@@ -182,10 +211,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // core); results are byte-identical to inline serving.
     let batch = args.opt_parsed::<usize>("batch")?;
     let replay = args.opt("replay");
+    // --fault-*: arm a deterministic per-session bit-flip plan.
+    let fault_surface =
+        args.opt_parsed::<FaultSurface>("fault-surface")?.unwrap_or(FaultSurface::ActMem);
+    let fault_seed = args.opt_u64("fault-seed", seed)?;
+    let fault_ber = args.opt_parsed::<f64>("fault-ber")?;
+    let fault_voltage = args.opt_parsed::<f64>("fault-voltage")?;
+    let fault_plan = match (fault_ber, fault_voltage) {
+        (Some(_), Some(_)) => bail!("--fault-ber and --fault-voltage are mutually exclusive"),
+        (Some(b), None) => Some(FaultPlan::with_ber(fault_surface, b, fault_seed)),
+        (None, Some(fv)) => Some(FaultPlan::at_voltage(fault_surface, fv, fault_seed)),
+        (None, None) => None,
+    };
     if threaded && batch.is_some() {
         bail!("--threaded and --batch are mutually exclusive");
     }
-    if threaded && (streams > 1 || replay.is_some()) {
+    if threaded && (streams > 1 || replay.is_some() || fault_plan.is_some()) {
         bail!("--threaded serves a single live stream; drop it or use --batch");
     }
     // packed TTN2 artifacts boot word-for-word into the shared image
@@ -204,9 +245,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
-    // Single gesture stream, no replay: the classic topology policies
-    // (all thin wrappers over the same engine path).
-    if streams == 1 && replay.is_none() {
+    // Single gesture stream, no replay, no fault plan: the classic
+    // topology policies (all thin wrappers over the same engine path).
+    // A fault plan always routes through the engine, which owns the
+    // per-session injectors.
+    if streams == 1 && replay.is_none() && fault_plan.is_none() {
         let cfg = PipelineConfig {
             voltage,
             freq_hz,
@@ -270,6 +313,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // deterministic round-robin interleave across sessions
     for sid in 0..streams {
         engine.open_session(sid);
+        if let Some(plan) = fault_plan {
+            engine.set_fault_plan(sid, plan);
+        }
     }
     // Drain each round-robin round: memory stays bounded to one frame
     // per stream and wall latency gets a sample per round (the engine's

@@ -57,12 +57,12 @@ pub struct Table1Row {
 }
 
 /// Our rows at the two corners, measured from the simulator.
-pub fn cutie_rows(stats: &RunStats, p: &EnergyParams) -> Vec<baselines::BaselineRow> {
+pub fn cutie_rows(stats: &RunStats, p: &EnergyParams) -> Result<Vec<baselines::BaselineRow>> {
     [0.5, 0.9]
         .iter()
         .map(|&v| {
-            let r = evaluate(stats, v, None, p);
-            baselines::BaselineRow {
+            let r = evaluate(stats, v, None, p)?;
+            Ok(baselines::BaselineRow {
                 name: if v == 0.5 { "This work @0.5V" } else { "This work @0.9V" },
                 computation: "digital",
                 weight_precision: "ternary",
@@ -75,7 +75,7 @@ pub fn cutie_rows(stats: &RunStats, p: &EnergyParams) -> Vec<baselines::Baseline
                 voltage_v: v,
                 throughput_tops: r.peak_tops,
                 peak_eff_tops_w: r.peak_tops_per_watt,
-            }
+            })
         })
         .collect()
 }
@@ -84,7 +84,7 @@ pub fn table1() -> Result<Table> {
     let stats = cifar_stats(SimMode::Accurate)?;
     let p = EnergyParams::default();
     let mut rows = vec![baselines::binareye(), baselines::knag_bnn(true), baselines::knag_bnn(false)];
-    rows.extend(cutie_rows(&stats, &p));
+    rows.extend(cutie_rows(&stats, &p)?);
 
     let mut t = Table::new(&[
         "Design", "Method", "W", "A", "Tech", "Acc%", "E/inf [µJ]", "Area [mm²]", "V", "TOp/s",
@@ -129,21 +129,21 @@ pub fn fig5() -> Result<Vec<Fig5Point>> {
     let dvs_all = dvs_stats(SimMode::Accurate, 6)?;
     let dvs = dvs_all.last().unwrap();
 
-    Ok(energy::vf::sweep_points()
+    energy::vf::sweep_points()
         .into_iter()
         .map(|v| {
-            let rc = evaluate(&cifar, v, None, &p);
-            let rd = evaluate(dvs, v, None, &p);
-            Fig5Point {
+            let rc = evaluate(&cifar, v, None, &p)?;
+            let rd = evaluate(dvs, v, None, &p)?;
+            Ok(Fig5Point {
                 voltage: v,
                 freq_mhz: rc.freq_hz / 1e6,
                 cifar_uj: rc.energy_j * 1e6,
                 cifar_inf_s: 1.0 / rc.time_s,
                 dvs_uj: rd.energy_j * 1e6,
                 dvs_inf_s: 1.0 / rd.time_s,
-            }
+            })
         })
-        .collect())
+        .collect()
 }
 
 pub fn fig5_table(points: &[Fig5Point]) -> Table {
@@ -177,13 +177,13 @@ pub struct Fig6Point {
 pub fn fig6() -> Result<Vec<Fig6Point>> {
     let p = EnergyParams::default();
     let stats = cifar_stats(SimMode::Accurate)?;
-    Ok(energy::vf::sweep_points()
+    energy::vf::sweep_points()
         .into_iter()
         .map(|v| {
-            let r = evaluate(&stats, v, None, &p);
-            Fig6Point { voltage: v, peak_tops: r.peak_tops, peak_tops_w: r.peak_tops_per_watt }
+            let r = evaluate(&stats, v, None, &p)?;
+            Ok(Fig6Point { voltage: v, peak_tops: r.peak_tops, peak_tops_w: r.peak_tops_per_watt })
         })
-        .collect())
+        .collect()
 }
 
 pub fn fig6_table(points: &[Fig6Point]) -> Table {
@@ -215,7 +215,7 @@ pub fn soa() -> Result<SoaComparison> {
     let p = EnergyParams::default();
     let dvs_all = dvs_stats(SimMode::Accurate, 6)?;
     let dvs = dvs_all.last().unwrap();
-    let r = evaluate(dvs, 0.5, None, &p);
+    let r = evaluate(dvs, 0.5, None, &p)?;
     let our_uj = r.energy_j * 1e6;
     // average energy per (algorithmic) op, the §8 TCN comparison metric
     let our_e_op = r.energy_j / (dvs.alg_macs() as f64 * 2.0);
@@ -252,7 +252,7 @@ pub fn sparsity_sweep(fracs: &[f64]) -> Result<Vec<SparsityPoint>> {
             let mut s = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
             s.preload_weights(&net);
             let (_, stats) = s.run_full(&net, &input)?;
-            let r = evaluate(&stats, 0.5, None, &p);
+            let r = evaluate(&stats, 0.5, None, &p)?;
             Ok(SparsityPoint {
                 zero_frac: zf,
                 energy_uj: r.energy_j * 1e6,
@@ -314,8 +314,8 @@ pub fn mapping_ablation() -> Result<MappingAblation> {
     };
     let m = filter(&mapped);
     let d = filter(&direct);
-    let rm = evaluate(&m, 0.5, None, &p);
-    let rd = evaluate(&d, 0.5, None, &p);
+    let rm = evaluate(&m, 0.5, None, &p)?;
+    let rd = evaluate(&d, 0.5, None, &p)?;
     let _ = tcn_only;
     Ok(MappingAblation {
         mapped_tcn_cycles: m.total_cycles(),
@@ -454,7 +454,7 @@ pub fn config_sweep(widths: &[usize]) -> Result<Vec<ConfigPoint>> {
             let mut s = Scheduler::new(cfg, SimMode::Accurate);
             s.preload_weights(&net);
             let (_, stats) = s.run_full(&net, &input)?;
-            let r = evaluate(&stats, 0.5, None, &p);
+            let r = evaluate(&stats, 0.5, None, &p)?;
             Ok(ConfigPoint {
                 channels: c,
                 energy_uj: r.energy_j * 1e6,
@@ -480,7 +480,7 @@ pub fn layer_breakdown() -> Result<Table> {
     ]);
     for l in &stats.layers {
         let one = RunStats { layers: vec![l.clone()], ..Default::default() };
-        let r = evaluate(&one, 0.5, None, &p);
+        let r = evaluate(&one, 0.5, None, &p)?;
         let clocked = l.mac_toggles + l.mac_idle;
         t.row(&[
             l.name.clone(),

@@ -44,10 +44,12 @@ pub fn check_hybrid(
 ) -> Result<GoldenCheck> {
     ensure!(frames.dims.len() == 4, "frames must be (T, H, W, C)");
     let (t_len, h, w, c) = (frames.dims[0], frames.dims[1], frames.dims[2], frames.dims[3]);
+    ensure!(t_len > 0, "hybrid co-simulation needs at least one frame");
     let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Fast);
 
     // XLA window accumulates CNN features exactly like the TCN memory.
-    let feat_ch = net.tcn_layers().next().unwrap().in_ch;
+    let tcn_head = net.tcn_layers().next();
+    let feat_ch = tcn_head.ok_or_else(|| anyhow::anyhow!("network has no TCN layers"))?.in_ch;
     let mut window = vec![0f32; net.tcn_steps * feat_ch];
     let mut sim_logits = None;
     for t in 0..t_len {
@@ -64,7 +66,7 @@ pub fn check_hybrid(
         window.extend_from_slice(&feat);
     }
     let xla_logits = to_i32(&tcn.run_f32(&window, &[net.tcn_steps, feat_ch])?);
-    let sim = sim_logits.unwrap().data;
+    let sim = sim_logits.expect("t_len > 0 checked above").data;
     let matched = sim == xla_logits;
     Ok(GoldenCheck { sim_logits: sim, xla_logits, matched })
 }

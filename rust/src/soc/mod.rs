@@ -147,7 +147,10 @@ impl KrakenSoc {
             states,
             power,
             soc_fll: Fll::new("soc", 100e6),
-            ehwpe_fll: Fll::new("ehwpe", crate::energy::fmax_hz(voltage)),
+            // The FLL's target is informational (it never drives timing:
+            // the core's busy time arrives via `advance_ns`); below the
+            // VF fit's threshold there is no defined fmax, so park at 0.
+            ehwpe_fll: Fll::new("ehwpe", crate::energy::fmax_hz(voltage).unwrap_or(0.0)),
             fc_state: FcState::Sleep,
             ledger: SocLedger::default(),
             dma_bits: 32,

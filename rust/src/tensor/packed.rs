@@ -105,6 +105,14 @@ impl PackedMap {
         1.0 - nz as f64 / self.numel() as f64
     }
 
+    /// Scrub every pixel word: detect and clamp `pos ⊄ mask` orphan bits
+    /// (see [`PackedVec::scrub`]) — the activation-SRAM half of the
+    /// fault-injection layer's detection pass. Returns the number of
+    /// orphans cleared; zero on any legally-constructed map.
+    pub fn scrub(&mut self) -> u64 {
+        self.pixels.iter_mut().map(|p| p.scrub() as u64).sum()
+    }
+
     /// 2×2/2 max-pool on packed planes: two bitwise ops per word per
     /// pairwise ternary max ([`PackedVec::max`]), no unpacking. Matches
     /// `reference::maxpool2x2` trit for trit.
@@ -214,5 +222,23 @@ mod tests {
     #[should_panic(expected = "odd pooling input")]
     fn maxpool_rejects_odd() {
         PackedMap::zeros(3, 4, 2).maxpool2x2();
+    }
+
+    #[test]
+    fn scrub_detects_orphans_only() {
+        let mut rng = Rng::new(44);
+        let t = TritTensor::random(&[4, 4, 20], &mut rng, 0.4);
+        let mut m = PackedMap::from_trit(&t);
+        assert_eq!(m.scrub(), 0, "legal map must scrub clean");
+        assert_eq!(m.to_trit(), t, "scrub must not disturb legal data");
+        // plant two orphans (pos plane bit on known-zero channels)
+        m.set_trit(0, 3, 2, 0);
+        m.set_trit(2, 1, 19, 0);
+        let clean = m.clone();
+        m.pixels[3].flip_plane_bit(true, 2);
+        m.pixels[9].flip_plane_bit(true, 19);
+        assert_ne!(m, clean);
+        assert_eq!(m.scrub(), 2);
+        assert_eq!(m, clean, "orphans clamp back to the clean value");
     }
 }

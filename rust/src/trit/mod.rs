@@ -186,6 +186,37 @@ impl PackedVec {
         Some(v)
     }
 
+    /// Flip one plane bit in place — the SRAM soft-error primitive of the
+    /// fault-injection layer ([`crate::fault`]). The two planes are the
+    /// two physical bitcells per trit and upset independently, so a flip
+    /// may violate the `pos ⊆ mask` invariant; [`Self::scrub`] is the
+    /// matching detector.
+    #[inline]
+    pub fn flip_plane_bit(&mut self, pos_plane: bool, bit: usize) {
+        debug_assert!(bit < MAX_CHANNELS);
+        let (w, b) = (bit / 64, bit % 64);
+        if pos_plane {
+            self.pos[w] ^= 1 << b;
+        } else {
+            self.mask[w] ^= 1 << b;
+        }
+    }
+
+    /// Scrub pass: detect and clamp `pos ⊄ mask` orphans (a +1 plane bit
+    /// whose non-zero flag is clear — a state no legal write produces, so
+    /// it is proof of corruption). Returns the number of orphan bits
+    /// cleared; zero on any legally-constructed word.
+    #[inline]
+    pub fn scrub(&mut self) -> u32 {
+        let mut fixed = 0;
+        for w in 0..WORDS {
+            let orphan = self.pos[w] & !self.mask[w];
+            fixed += orphan.count_ones();
+            self.pos[w] &= self.mask[w];
+        }
+        fixed
+    }
+
     /// Channel-wise ternary max — the packed pooling primitive (perf pass
     /// iteration 8). On the (pos, mask) planes `max(a, b)` is two bitwise
     /// ops per word: the result is +1 iff either operand is +1
@@ -591,6 +622,29 @@ mod tests {
         assert_eq!(PackedVec::from_words([1, 0, 0, 0]), None);
         assert_eq!(PackedVec::from_words([0, 1 << 63, 0, 0]), None);
         assert_eq!(PackedVec::from_words([0, 0, 1, 0]).map(|v| v.get(0)), Some(-1));
+    }
+
+    #[test]
+    fn flip_and_scrub() {
+        let mut v = PackedVec::pack(&[1, -1, 0, 0, 1]);
+        // mask flip on a zero channel: silent −1, no invariant violation
+        v.flip_plane_bit(false, 2);
+        assert_eq!(v.get(2), -1);
+        assert_eq!(v.scrub(), 0, "legal word must scrub clean");
+        // pos flip on a zero channel: orphan, detected and clamped
+        v.flip_plane_bit(true, 3);
+        assert_eq!(v.pos[0] & !v.mask[0], 1 << 3);
+        assert_eq!(v.scrub(), 1);
+        assert_eq!(v.get(3), 0, "orphan clamps back to zero");
+        // pos flip on a +1 channel: silent demotion to −1
+        v.flip_plane_bit(true, 0);
+        assert_eq!(v.get(0), -1);
+        assert_eq!(v.scrub(), 0);
+        // high-word orphan
+        let mut w = PackedVec::ZERO;
+        w.flip_plane_bit(true, 100);
+        assert_eq!(w.scrub(), 1);
+        assert!(w.is_zero());
     }
 
     #[test]

@@ -29,7 +29,7 @@ impl Percentiles {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples.sort_by(f64::total_cmp);
             self.sorted = true;
         }
     }
@@ -65,10 +65,10 @@ impl Percentiles {
 pub fn median_mad(samples: &[f64]) -> (f64, f64) {
     assert!(!samples.is_empty());
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let med = s[s.len() / 2];
     let mut devs: Vec<f64> = s.iter().map(|x| (x - med).abs()).collect();
-    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    devs.sort_by(f64::total_cmp);
     (med, devs[devs.len() / 2])
 }
 

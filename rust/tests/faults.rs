@@ -1,0 +1,286 @@
+//! Integration tests of the fault-injection and self-healing layer: the
+//! zero-BER bit-exactness gate (an armed-but-inert plan must not perturb
+//! a single bit of any report), per-surface injection behavior, weight
+//! repair transparency, session quarantine, and the interleaved-session
+//! isolation guarantee (an injected neighbor must not perturb clean
+//! co-sessions).
+
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, FrameSource, GestureClass, ServingReport, FAILURE_LIMIT,
+};
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::fault::{FaultPlan, FaultSurface};
+use tcn_cutie::network::{dvs_hybrid_random, Network};
+use tcn_cutie::tensor::PackedMap;
+
+const SURFACES: [FaultSurface; 4] = [
+    FaultSurface::ActMem,
+    FaultSurface::TcnMem,
+    FaultSurface::WeightMem,
+    FaultSurface::DmaStream,
+];
+
+fn source_for(net: &Network, s: usize) -> DvsSource {
+    DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12))
+}
+
+fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits(), "{ctx}: soc energy");
+    assert_eq!(
+        a.metrics.core_energy_j.to_bits(),
+        b.metrics.core_energy_j.to_bits(),
+        "{ctx}: core energy"
+    );
+    assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}: sim time");
+    assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}: frames");
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(
+            a.metrics.sim_latency_us.quantile(q).to_bits(),
+            b.metrics.sim_latency_us.quantile(q).to_bits(),
+            "{ctx}: sim latency q{q}"
+        );
+    }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault summary");
+}
+
+/// Serve `frames` frames of stream `s` alone; `plan` arms injection.
+fn serve_with_plan(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    s: usize,
+    frames: usize,
+    plan: Option<FaultPlan>,
+) -> ServingReport {
+    let cfg = EngineConfig { mode, workers, ..Default::default() };
+    let mut engine = Engine::new(net, cfg);
+    engine.open_session(s);
+    if let Some(p) = plan {
+        engine.set_fault_plan(s, p);
+    }
+    let mut src = source_for(net, s);
+    for _ in 0..frames {
+        engine.submit(s, src.next_frame());
+    }
+    engine.drain().unwrap();
+    engine.finish_session(s).unwrap()
+}
+
+#[test]
+fn zero_ber_plan_serves_bit_exactly() {
+    // The acceptance gate for the injection plumbing itself: a FaultPlan
+    // with BER = 0 must draw zero random numbers and serve byte-for-byte
+    // identically to a fault-free engine — labels, every metrics field's
+    // f64 bits, latency quantiles — on every surface, in both sim modes,
+    // serial and pooled.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 4;
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1usize, 3] {
+            let mut clean = serve_with_plan(&net, mode, workers, 0, frames, None);
+            assert!(!clean.faults.any(), "fault-free run must report Default faults");
+            for surface in SURFACES {
+                let plan = FaultPlan::with_ber(surface, 0.0, 99);
+                let mut armed = serve_with_plan(&net, mode, workers, 0, frames, Some(plan));
+                assert_identical(
+                    &mut armed,
+                    &mut clean,
+                    &format!("{mode:?} workers={workers} {surface}: zero-BER"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn injected_session_cannot_perturb_clean_neighbors() {
+    // The isolation gate: interleave three sessions through one engine,
+    // injecting only the middle one. The clean sessions must stay
+    // byte-identical to a fault-free solo run while their neighbor
+    // degrades — faults are a per-session property, not an engine one.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 6;
+    for workers in [1usize, 3] {
+        let mut solo: Vec<ServingReport> = (0..3)
+            .map(|s| serve_with_plan(&net, SimMode::Fast, 1, s, frames, None))
+            .collect();
+
+        let cfg = EngineConfig { mode: SimMode::Fast, workers, ..Default::default() };
+        let mut engine = Engine::new(&net, cfg);
+        for s in 0..3 {
+            engine.open_session(s);
+        }
+        engine.set_fault_plan(1, FaultPlan::with_ber(FaultSurface::ActMem, 1e-2, 7));
+        let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
+        for f in 0..frames {
+            for (s, src) in srcs.iter_mut().enumerate() {
+                engine.submit(s, src.next_frame());
+            }
+            if f % 2 == 0 {
+                engine.drain().unwrap();
+            }
+        }
+        engine.drain().unwrap();
+
+        let agg = engine.aggregate_report();
+        let reports = engine.finish_all();
+        for (s, mut rep) in reports {
+            if s == 1 {
+                assert!(rep.faults.injected_flips > 0, "injected session must see flips");
+                assert!(rep.faults.degraded_frames > 0, "hit frames are marked degraded");
+                assert!(rep.faults.degraded_frames <= frames as u64);
+                assert!(rep.faults.detected > 0, "scrub must catch orphaned pos bits");
+                assert_eq!(rep.labels.len(), frames, "degraded frames still serve labels");
+            } else {
+                assert_identical(
+                    &mut rep,
+                    &mut solo[s],
+                    &format!("workers={workers} clean session {s} next to injected neighbor"),
+                );
+            }
+        }
+        assert!(agg.faults.injected_flips > 0, "aggregate must carry the session summary");
+    }
+}
+
+#[test]
+fn weight_faults_are_repaired_transparently() {
+    // WeightMem faults model parity-caught SRAM corruption: the engine
+    // re-adopts the affected layers from the immutable shared image, so
+    // labels match the fault-free run exactly while the report shows the
+    // detection and the repair traffic (which costs scrub energy).
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 5;
+    let clean = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, None);
+    let plan = FaultPlan::with_ber(FaultSurface::WeightMem, 1e-3, 11);
+    let faulty = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, Some(plan));
+
+    assert_eq!(faulty.labels, clean.labels, "weight repair must be label-transparent");
+    assert!(faulty.faults.injected_flips > 0, "1e-3 over the whole image must hit");
+    assert_eq!(
+        faulty.faults.detected, faulty.faults.injected_flips,
+        "every weight flip is parity-detected"
+    );
+    assert!(faulty.faults.repair_words > 0, "repair re-adopts whole layers");
+    assert!(
+        faulty.faults.scrub_words >= faulty.faults.repair_words,
+        "a parity hit scans the whole resident image"
+    );
+    assert_eq!(faulty.faults.degraded_frames, 0, "repaired frames are not degraded");
+    assert!(
+        faulty.metrics.core_energy_j > clean.metrics.core_energy_j,
+        "scrub + repair traffic must cost energy"
+    );
+    // sanity: the clean comparison fields other than energy still line up
+    assert_eq!(faulty.metrics.frames, clean.metrics.frames);
+}
+
+#[test]
+fn tcn_and_dma_surfaces_detect_and_degrade() {
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 6;
+    for (surface, ber) in [(FaultSurface::TcnMem, 0.05), (FaultSurface::DmaStream, 1e-2)] {
+        let plan = FaultPlan::with_ber(surface, ber, 13);
+        let rep = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, Some(plan));
+        assert!(rep.faults.injected_flips > 0, "{surface}: flips at BER {ber}");
+        assert!(rep.faults.degraded_frames > 0, "{surface}: corrupted frames are degraded");
+        assert!(rep.faults.detected > 0, "{surface}: orphaned pos bits must be caught");
+        assert_eq!(rep.labels.len(), frames, "{surface}: degraded frames still serve");
+        assert_eq!(rep.faults.failures, 0, "{surface}: degradation is not failure");
+    }
+}
+
+#[test]
+fn failing_session_is_quarantined_not_fatal() {
+    // A session whose frames error terminally (here: frames too large for
+    // the activation SRAM) must trip the failure limit and be quarantined
+    // — later frames dropped unserved — while the engine keeps serving a
+    // healthy co-session and drain() never errors.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg);
+    engine.open_session(0);
+    engine.open_session(1);
+    let mut src = source_for(&net, 1);
+
+    // FAILURE_LIMIT bad frames trip the quarantine...
+    for _ in 0..FAILURE_LIMIT {
+        engine.submit(0, PackedMap::zeros(256, 256, 2));
+        engine.submit(1, src.next_frame());
+        engine.drain().unwrap();
+    }
+    assert!(engine.session(0).unwrap().is_quarantined());
+    // ...and everything submitted afterwards is dropped unserved.
+    for _ in 0..3 {
+        engine.submit(0, PackedMap::zeros(256, 256, 2));
+        engine.submit(1, src.next_frame());
+    }
+    engine.drain().unwrap();
+
+    let bad = engine.finish_session(0).unwrap();
+    assert_eq!(bad.faults.failures, FAILURE_LIMIT, "terminal errors counted");
+    assert_eq!(bad.faults.quarantined, 1);
+    assert_eq!(bad.faults.dropped_frames, 3, "post-quarantine frames dropped");
+    assert!(bad.labels.is_empty(), "no label was ever produced");
+    assert_eq!(bad.metrics.frames, 0, "failed frames never reach the metrics ledger");
+
+    let good = engine.finish_session(1).unwrap();
+    assert!(!good.faults.any(), "healthy co-session unaffected");
+    assert_eq!(good.labels.len(), FAILURE_LIMIT as usize + 3);
+}
+
+#[test]
+fn fault_plans_are_per_session_and_reseeded() {
+    // Two sessions armed with the SAME plan draw different per-session
+    // injection streams (the seed is mixed with the session id), and the
+    // plan is queryable back from the engine.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg);
+    let plan = FaultPlan::with_ber(FaultSurface::ActMem, 5e-3, 21);
+    engine.set_fault_plan(4, plan);
+    engine.set_fault_plan(9, plan);
+    assert_eq!(engine.fault_plan(4), Some(plan));
+    assert_eq!(engine.fault_plan(9), Some(plan));
+    assert_eq!(engine.fault_plan(5), None);
+
+    // identical frames, identical plan — only the session id differs
+    let mut src = source_for(&net, 0);
+    for _ in 0..8 {
+        let f = src.next_frame();
+        engine.submit(4, f.clone());
+        engine.submit(9, f);
+    }
+    engine.drain().unwrap();
+    let a = engine.finish_session(4).unwrap().faults;
+    let b = engine.finish_session(9).unwrap().faults;
+    assert!(a.injected_flips > 0 && b.injected_flips > 0);
+    assert_ne!(a, b, "per-session seed mixing must decorrelate the streams");
+}
+
+#[test]
+fn voltage_scaled_plan_follows_the_ber_model() {
+    // FaultPlan::at_voltage ties the injector to the BER curve: at the
+    // nominal 0.5 V the plan is structurally inert; down at 0.40 V it
+    // must inject, and the report's accuracy visibly degrades relative
+    // to fault-free (same frames, same seeds).
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 8;
+    let mut clean = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, None);
+
+    let nominal = FaultPlan::at_voltage(FaultSurface::ActMem, 0.5, 3);
+    assert!(!nominal.is_active(), "0.5 V is in the validated range");
+    let mut at_nominal = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, Some(nominal));
+    assert_identical(&mut at_nominal, &mut clean, "0.5 V plan");
+
+    let scaled = FaultPlan::at_voltage(FaultSurface::ActMem, 0.40, 3);
+    assert!(scaled.is_active() && scaled.ber >= 1e-4, "0.40 V sits on the steep BER slope");
+    let low = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, Some(scaled));
+    assert!(low.faults.injected_flips > 0);
+    assert_eq!(low.faults, {
+        let again = serve_with_plan(&net, SimMode::Fast, 1, 0, frames, Some(scaled));
+        again.faults
+    });
+}

@@ -169,8 +169,8 @@ fn dvs_serving_packed_tail_bit_exact_vs_i8_reference() {
                 "{ctx}: tcn shift toggles"
             );
             // energy model consumes only the counters above — f64-bit equal
-            let ep = evaluate(&rp, 0.5, None, &params);
-            let ei = evaluate(&ri, 0.5, None, &params);
+            let ep = evaluate(&rp, 0.5, None, &params).unwrap();
+            let ei = evaluate(&ri, 0.5, None, &params).unwrap();
             assert_eq!(ep.energy_j.to_bits(), ei.energy_j.to_bits(), "{ctx}: energy bits");
             assert_eq!(ep.time_s.to_bits(), ei.time_s.to_bits(), "{ctx}: time bits");
         }

@@ -68,8 +68,8 @@ fn word_copy_boot_is_counter_and_energy_bit_identical() {
             let (lb, rb) = from_img.serve_frame(&net, &f).unwrap();
             assert_eq!(la, lb, "{mode:?} frame {frame}: logits");
             assert_eq!(ra, rb, "{mode:?} frame {frame}: all LayerStats counters");
-            let ea = evaluate(&ra, 0.5, None, &params);
-            let eb = evaluate(&rb, 0.5, None, &params);
+            let ea = evaluate(&ra, 0.5, None, &params).unwrap();
+            let eb = evaluate(&rb, 0.5, None, &params).unwrap();
             assert_eq!(
                 ea.energy_j.to_bits(),
                 eb.energy_j.to_bits(),
