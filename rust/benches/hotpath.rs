@@ -15,7 +15,7 @@
 //!     cargo bench --bench hotpath
 
 use tcn_cutie::coordinator::{
-    DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig,
+    DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig, SessionSnapshot,
 };
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
@@ -224,6 +224,7 @@ fn main() {
             &boot_net,
             EngineConfig { mode: SimMode::Fast, workers: 8, ..Default::default() },
         )
+        .unwrap()
     });
     suite.push(&r_spawn);
 
@@ -234,7 +235,8 @@ fn main() {
     // engine determinism tests prove it); this measures wall throughput.
     let serve_streams = |workers: usize| {
         let mut engine =
-            Engine::new(&dnet, EngineConfig { mode: SimMode::Fast, workers, ..Default::default() });
+            Engine::new(&dnet, EngineConfig { mode: SimMode::Fast, workers, ..Default::default() })
+                .unwrap();
         let mut srcs: Vec<DvsSource> =
             (0..4).map(|s| DvsSource::new(64, 11 + s as u64, GestureClass(s % 12))).collect();
         for _ in 0..8 {
@@ -269,7 +271,8 @@ fn main() {
         let mut engine = Engine::new(
             &dnet,
             EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
-        );
+        )
+        .unwrap();
         engine.open_session(0);
         if let Some(p) = plan {
             engine.set_fault_plan(0, p);
@@ -302,6 +305,37 @@ fn main() {
         });
     }
     println!();
+
+    // --- hibernation: snapshot/restore a warm session ---
+    // The idle-tier cost entries (EXPERIMENTS.md §Hibernation): encode a
+    // served session into its checksummed snapshot payload, and rebuild
+    // a bit-identical session from those bytes.
+    let mut warm_engine = Engine::new(
+        &dnet,
+        EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    warm_engine.open_session(0);
+    let mut warm_src = DvsSource::new(64, 51, GestureClass(2));
+    for _ in 0..8 {
+        warm_engine.submit(0, warm_src.next_frame());
+    }
+    warm_engine.drain().unwrap();
+    let warm = warm_engine.session(0).unwrap();
+    let r_snap = bench("hibernate: snapshot session", 3, 30, || {
+        SessionSnapshot::capture(black_box(warm)).encode()
+    });
+    let payload = SessionSnapshot::capture(warm).encode();
+    let r_restore = bench("hibernate: restore session", 3, 30, || {
+        SessionSnapshot::decode(black_box(&payload), 0).unwrap().into_session().unwrap()
+    });
+    println!(
+        "  hibernation: {} B snapshot payload ({:.2}x the 576 B Kraken TCN state)\n",
+        payload.len(),
+        payload.len() as f64 / 576.0
+    );
+    suite.push(&r_snap);
+    suite.push(&r_restore);
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {

@@ -35,12 +35,13 @@
 //! wide pools (and, next, multi-engine sharding) cheap — the software
 //! twin of CUTIE's boot-once, stay-resident OCU weight buffers.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
+use super::hibernate::{HibernationStats, SessionSnapshot, SessionStore};
 use super::metrics::{ServingMetrics, ServingReport};
 use super::session::{FaultState, Session};
 use super::source::FrameSource;
@@ -89,12 +90,39 @@ pub struct Engine<'n> {
     /// triples in arrival order. Frame-surface faults (ActMem, µDMA) are
     /// injected at submit time so the ledger rides with its frame.
     pending: Vec<(usize, PackedMap, FrameFaults)>,
+    /// The state-retentive idle tier (None = always-resident serving).
+    hib: Option<HibernateTier>,
+}
+
+/// The engine's idle tier: the snapshot store plus the eviction policy.
+struct HibernateTier {
+    store: SessionStore,
+    /// Hibernate a session once it sits idle through this many
+    /// consecutive drains (None = explicit hibernation only).
+    after: Option<u64>,
+    /// Engine-side per-record accruals that cannot live inside the CRC'd
+    /// record itself (retention ticks, write volume, injected flips).
+    /// Merged into the session at resume. Lost across a process restart:
+    /// the hibernation *ledger* is at-least-once, the serving *state*
+    /// exactly-once.
+    pending: BTreeMap<usize, PendingHib>,
+}
+
+#[derive(Default)]
+struct PendingHib {
+    stats: HibernationStats,
+    /// Snapshot-surface plane bits flipped in the stored record.
+    flips: u64,
 }
 
 impl<'n> Engine<'n> {
-    pub fn new(net: &'n Network, cfg: EngineConfig) -> Self {
+    /// Boot an engine, building (and validating) the prepared-weight
+    /// image from the network. Errors instead of panicking on an invalid
+    /// config/image pairing — e.g. a sub-threshold supply with no
+    /// explicit clock — so serving callers surface a typed error.
+    pub fn new(net: &'n Network, cfg: EngineConfig) -> Result<Self> {
         let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
-        Self::with_image(net, cfg, image).expect("engine config and image valid for this network")
+        Self::with_image(net, cfg, image)
     }
 
     /// Boot from a pre-built weight image — e.g. one word-copy-loaded
@@ -161,7 +189,35 @@ impl<'n> Engine<'n> {
             workers,
             sessions: BTreeMap::new(),
             pending: Vec::new(),
+            hib: None,
         })
+    }
+
+    /// Switch on the state-retentive idle tier: snapshots go to `store`
+    /// (in-memory or file-backed), and — when `after` is set — a session
+    /// hibernates automatically once it sits idle through that many
+    /// consecutive drains, resuming transparently on its next `submit`.
+    pub fn enable_hibernation(&mut self, store: SessionStore, after: Option<u64>) {
+        self.hib = Some(HibernateTier { store, after, pending: BTreeMap::new() });
+    }
+
+    /// The idle tier's snapshot store, when hibernation is enabled.
+    pub fn store(&self) -> Option<&SessionStore> {
+        self.hib.as_ref().map(|t| &t.store)
+    }
+
+    /// Mutable store access (fault campaigns corrupt records through
+    /// this; serving code never needs it).
+    pub fn store_mut(&mut self) -> Option<&mut SessionStore> {
+        self.hib.as_mut().map(|t| &mut t.store)
+    }
+
+    /// Persist the snapshot store if it is file-backed and dirty.
+    pub fn sync_store(&mut self) -> Result<()> {
+        match self.hib.as_mut() {
+            Some(tier) => tier.store.sync(),
+            None => Ok(()),
+        }
     }
 
     /// The engine's one shared prepared-weight image. `Arc::strong_count`
@@ -178,11 +234,180 @@ impl<'n> Engine<'n> {
 
     /// Register (or fetch) a stream's session. `submit` opens sessions
     /// implicitly; opening one explicitly matters only for zero-frame
-    /// streams that still want a (empty) report.
+    /// streams that still want a (empty) report. A hibernated session
+    /// resumes transparently here (every serve-path entry point — submit,
+    /// fault arming, finish — funnels through this).
     pub fn open_session(&mut self, id: usize) -> &mut Session {
+        self.ensure_resident(id);
         let voltage = self.cfg.voltage;
         let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
         self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, depth, channels))
+    }
+
+    /// Snapshot a session into the idle tier and evict it from residency
+    /// (the explicit entry point; idle eviction calls the same path).
+    /// The store is synced before returning, so a crash after this call
+    /// cannot lose the record.
+    pub fn hibernate(&mut self, id: usize) -> Result<()> {
+        self.hibernate_one(id)?;
+        self.sync_store()
+    }
+
+    /// Wake a hibernated session explicitly. `Ok(false)` when it was
+    /// already resident; `Ok(true)` when a record was consumed (restored
+    /// bit-exactly, or refused-and-reinitialized if corrupt — see the
+    /// session's `faults.snapshot_corrupt` / `hib.corrupt_resumes`).
+    pub fn resume(&mut self, id: usize) -> Result<bool> {
+        ensure!(self.hib.is_some(), "hibernation is not enabled on this engine");
+        if self.sessions.contains_key(&id) {
+            return Ok(false);
+        }
+        self.ensure_resident(id);
+        ensure!(self.sessions.contains_key(&id), "session {id} has no hibernation record");
+        Ok(true)
+    }
+
+    /// Snapshot + evict, without syncing the store (batched by callers).
+    fn hibernate_one(&mut self, id: usize) -> Result<()> {
+        let Some(tier) = self.hib.as_mut() else {
+            bail!("hibernation is not enabled on this engine");
+        };
+        ensure!(
+            !self.pending.iter().any(|(sid, _, _)| *sid == id),
+            "session {id} has pending frames; drain before hibernating"
+        );
+        let Some(mut sess) = self.sessions.remove(&id) else {
+            bail!("session {id} is not resident (unknown, or already hibernated)");
+        };
+        sess.hib.hibernates += 1;
+        sess.idle_drains = 0;
+        // Snapshot-surface injection: one exposure of the record's bits
+        // per hibernation. The draws advance the injector BEFORE the
+        // final capture, so the consumed randomness rides inside the
+        // record and a resumed walk continues exactly where it left off.
+        // (The record's length does not depend on RNG state values, so
+        // the probe encode sizes the real record exactly.)
+        let armed_on_store = matches!(
+            &sess.fault,
+            Some(fs) if fs.plan.is_active() && fs.plan.surface == FaultSurface::Snapshot
+        );
+        let mut flip_addrs = Vec::new();
+        if armed_on_store {
+            let bits = SessionSnapshot::capture(&sess).encode().len() as u64 * 8;
+            if let Some(fs) = sess.fault.as_mut() {
+                flip_addrs = fs.inj.faulted_bits(bits);
+            }
+        }
+        let payload = SessionSnapshot::capture(&sess).encode();
+        let pend = tier.pending.entry(id).or_default();
+        pend.stats.snapshot_bytes += payload.len() as u64;
+        pend.flips += flip_addrs.len() as u64;
+        tier.store.insert(id as u64, payload);
+        tier.store.flip_bits(id as u64, &flip_addrs);
+        Ok(())
+    }
+
+    /// Restore a hibernated session into residency, if it has a record.
+    /// Infallible by design — the serve path (`submit`) must stay so: a
+    /// corrupt or mismatched record is refused with counters raised and
+    /// the session re-initialized, never a panic or silent wrong state.
+    fn ensure_resident(&mut self, id: usize) {
+        if self.sessions.contains_key(&id) {
+            return;
+        }
+        let Some(tier) = self.hib.as_mut() else { return };
+        let bytes = match tier.store.record_bytes(id as u64) {
+            Some(b) => b as u64,
+            None => return,
+        };
+        let outcome = match tier.store.take(id as u64) {
+            Some(o) => o,
+            None => return,
+        };
+        let pend = tier.pending.remove(&id).unwrap_or_default();
+        let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
+        let voltage = self.cfg.voltage;
+        let restored = match outcome {
+            Ok(snap) => {
+                // A structurally valid record from a different engine
+                // geometry or operating point is refused the same way as
+                // a corrupt one: restoring it would be silently wrong.
+                let fits = snap.tcn.depth as usize == depth
+                    && snap.tcn.channels as usize == channels
+                    && snap.voltage.to_bits() == voltage.to_bits();
+                if fits {
+                    snap.into_session().ok()
+                } else {
+                    None
+                }
+            }
+            Err(_) => None,
+        };
+        let sess = match restored {
+            Some(mut sess) => {
+                sess.hib.resumes += 1;
+                sess.hib.merge(&pend.stats);
+                sess.faults.injected_flips += pend.flips;
+                // Wake re-load: every stored word streams back into the
+                // engine at the operating supply. Charged to the
+                // hibernation ledger, never the SoC/core ledgers — the
+                // byte-identity oracle and the calibration anchors stay
+                // untouched by the idle tier.
+                let words = bytes.div_ceil(8);
+                sess.hib.wake_j +=
+                    words as f64 * self.params.e_wake * self.params.dyn_scale(voltage);
+                sess
+            }
+            None => {
+                // The CRC (or decode validation) refused the record: the
+                // session restarts from scratch, visibly. The record's
+                // in-flight history (labels, ledgers) is lost with it.
+                let mut sess = Session::new(id, voltage, depth, channels);
+                sess.faults.snapshot_corrupt += 1;
+                sess.faults.injected_flips += pend.flips;
+                sess.faults.detected += pend.flips;
+                sess.hib.corrupt_resumes += 1;
+                sess.hib.merge(&pend.stats);
+                sess
+            }
+        };
+        self.sessions.insert(id, sess);
+    }
+
+    /// End-of-drain idle-tier bookkeeping: every stored record pays its
+    /// per-word retention cost for this tick, then sessions that sat
+    /// idle through `after` consecutive drains are hibernated.
+    fn hibernate_idle(&mut self, active: &BTreeSet<usize>) -> Result<()> {
+        let Some(tier) = self.hib.as_mut() else { return Ok(()) };
+        // Retention is flat (the retentive rail is fixed, not the
+        // dynamic supply), accrued engine-side: the record's own bytes
+        // must stay exactly as written.
+        for id in tier.store.ids() {
+            let words = tier.store.record_bytes(id).unwrap_or(0).div_ceil(8) as u64;
+            let pend = tier.pending.entry(id as usize).or_default();
+            pend.stats.retention_word_ticks += words;
+            pend.stats.retention_j += words as f64 * self.params.e_retention;
+        }
+        let after = tier.after;
+        let mut evict = Vec::new();
+        if let Some(n) = after {
+            for (&sid, sess) in self.sessions.iter_mut() {
+                if active.contains(&sid) {
+                    sess.idle_drains = 0;
+                } else {
+                    sess.idle_drains += 1;
+                    // n = 0 behaves as 1: a session is never evicted on
+                    // the very drain that served it.
+                    if sess.idle_drains >= n.max(1) {
+                        evict.push(sid);
+                    }
+                }
+            }
+        }
+        for sid in evict {
+            self.hibernate_one(sid)?;
+        }
+        self.sync_store()
     }
 
     /// Arm (or replace) a session's fault plan. The injector is seeded
@@ -226,7 +451,7 @@ impl<'n> Engine<'n> {
                         ff.flips += fs.inj.corrupt_map(&mut frame);
                         ff.detected += frame.scrub();
                     }
-                    FaultSurface::TcnMem | FaultSurface::WeightMem => {}
+                    FaultSurface::TcnMem | FaultSurface::WeightMem | FaultSurface::Snapshot => {}
                 }
             }
         }
@@ -286,6 +511,9 @@ impl<'n> Engine<'n> {
         }
         let wall0 = Instant::now();
         let pending = std::mem::take(&mut self.pending);
+        // Sessions touched by this drain: their idle clocks reset; every
+        // other resident session ages toward idle eviction.
+        let active: BTreeSet<usize> = pending.iter().map(|(sid, _, _)| *sid).collect();
 
         // Phase 1: CNN front-end. A frame whose CNN errors leaves its
         // slot None (noted as a failure in phase 2).
@@ -418,38 +646,77 @@ impl<'n> Engine<'n> {
                 sess.metrics.record_frame(sim_us, wall_us, core_j);
             }
         }
+        self.hibernate_idle(&active)?;
         Ok(n)
     }
 
-    /// Close one session into its final report (removes it).
+    /// Close one session into its final report (removes it; a hibernated
+    /// session is resumed first so its report is complete).
     pub fn finish_session(&mut self, id: usize) -> Option<ServingReport> {
+        self.ensure_resident(id);
         self.sessions.remove(&id).map(Session::into_report)
     }
 
-    /// Close every session, in session-id order.
+    /// Close every session — resident or hibernated — in session-id
+    /// order.
     pub fn finish_all(&mut self) -> Vec<(usize, ServingReport)> {
-        let ids = self.session_ids();
+        let mut ids = self.session_ids();
+        if let Some(tier) = &self.hib {
+            ids.extend(tier.store.ids().into_iter().map(|id| id as usize));
+        }
+        ids.sort_unstable();
+        ids.dedup();
         ids.into_iter().filter_map(|id| self.finish_session(id).map(|r| (id, r))).collect()
     }
 
     /// Cross-session roll-up (latency samples concatenate, energies,
     /// wakeups and fault counters sum, labels concatenate in session-id
-    /// order). Average SoC power is total energy over total simulated
-    /// SoC time.
+    /// order). Hibernated sessions contribute through their stored
+    /// records without being resumed; a record the CRC refuses here
+    /// contributes nothing (the refusal itself surfaces at resume, when
+    /// counters have a session to land on). Average SoC power is total
+    /// energy over total simulated SoC time.
     pub fn aggregate_report(&self) -> ServingReport {
+        let mut ids: Vec<usize> = self.sessions.keys().copied().collect();
+        if let Some(tier) = &self.hib {
+            ids.extend(tier.store.ids().into_iter().map(|id| id as usize));
+            ids.extend(tier.pending.keys().copied());
+        }
+        ids.sort_unstable();
+        ids.dedup();
         let mut metrics = ServingMetrics::default();
         let mut labels = Vec::new();
         let mut faults = FaultSummary::default();
+        let mut hib = HibernationStats::default();
         let mut energy_j = 0.0;
         let mut fc_wakeups = 0u64;
         let mut now_ns = 0u64;
-        for sess in self.sessions.values() {
-            metrics.merge(&sess.metrics);
-            faults.merge(&sess.faults);
-            energy_j += sess.soc.energy_j();
-            fc_wakeups += sess.soc.fc_wakeups();
-            now_ns += sess.soc.now_ns();
-            labels.extend_from_slice(&sess.labels);
+        for id in ids {
+            if let Some(sess) = self.sessions.get(&id) {
+                metrics.merge(&sess.metrics);
+                faults.merge(&sess.faults);
+                hib.merge(&sess.hib);
+                energy_j += sess.soc.energy_j();
+                fc_wakeups += sess.soc.fc_wakeups();
+                now_ns += sess.soc.now_ns();
+                labels.extend_from_slice(&sess.labels);
+                continue;
+            }
+            let Some(tier) = &self.hib else { continue };
+            // Engine-side accruals exist even when the record is corrupt
+            // (retention was paid regardless of what the bits now say).
+            if let Some(pend) = tier.pending.get(&id) {
+                hib.merge(&pend.stats);
+            }
+            if let Some(Ok(snap)) = tier.store.peek(id as u64) {
+                metrics.merge(&snap.metrics);
+                faults.merge(&snap.faults);
+                hib.merge(&snap.hib);
+                energy_j += snap.soc.energy_j;
+                fc_wakeups += snap.soc.fc_wakeups;
+                now_ns += snap.soc.now_ns;
+                labels.extend_from_slice(&snap.labels);
+            }
         }
         metrics.soc_energy_j = energy_j;
         ServingReport {
@@ -459,6 +726,7 @@ impl<'n> Engine<'n> {
             metrics,
             labels,
             faults,
+            hib,
         }
     }
 }
@@ -526,6 +794,8 @@ fn inject_state_surfaces(
             }
             false
         }
-        FaultSurface::ActMem | FaultSurface::DmaStream => false,
+        // Frame surfaces inject at submit; the snapshot surface injects
+        // at hibernation (records at rest, not per-frame exposure).
+        FaultSurface::ActMem | FaultSurface::DmaStream | FaultSurface::Snapshot => false,
     }
 }

@@ -1,0 +1,1138 @@
+//! Crash-safe session hibernation — the state-retentive idle tier.
+//!
+//! A session's entire recurrent state is a few hundred bytes: the packed
+//! (pos, mask) TCN ring words (576 B at the Kraken anchor), the SoC
+//! ledger, metrics samples, label history and — when a fault plan is
+//! armed — the injector's exact RNG position. TinyVers (PAPERS.md) holds
+//! exactly this class of state in state-retentive eMRAM across deep
+//! sleep; this module is the software twin:
+//!
+//! * [`SessionSnapshot`] — a versioned snapshot of one [`Session`],
+//!   with a bit-exact binary codec built on the hardened TTN wire
+//!   readers (`tensor::ttn`): take-before-alloc, checked arithmetic,
+//!   every decoded invariant re-validated so a forged or rotted record
+//!   surfaces as a typed [`SnapshotError`], never a panic or a silently
+//!   wrong state.
+//! * [`SessionStore`] — the record store (in-memory or file-backed)
+//!   with per-record CRC-32 and atomic write-then-rename persistence.
+//!   Reopening after a crash keeps every intact record and skips a
+//!   half-written tail ([`SessionStore::recovered_torn`]).
+//! * [`HibernationStats`] — the hibernate/resume/retention ledger
+//!   surfaced in every [`super::ServingReport`].
+//!
+//! The engine-facing contract (asserted in `tests/hibernate.rs`): any
+//! hibernate/resume schedule serves **byte-identically** to an
+//! always-resident run — labels, FC wakeups, both energy ledgers' f64
+//! bits, latency quantiles — including a resume mid-fault-plan, because
+//! the snapshot carries the injector's geometric-gap walk position.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::cutie::TcnMemory;
+use crate::fault::{FaultPlan, FaultSummary, FaultSurface, Injector};
+use crate::soc::{Domain, FcState, KrakenSoc, PowerState, SocLedger};
+use crate::tensor::ttn;
+use crate::trit::{PackedVec, MAX_CHANNELS};
+use crate::util::crc::crc32;
+use crate::util::stats::Percentiles;
+
+use super::metrics::ServingMetrics;
+use super::session::{FaultState, Session};
+
+/// Snapshot record magic: "SSN1" little-endian.
+pub const SNAPSHOT_MAGIC: u32 = 0x314E_5353;
+/// Snapshot format version this build writes and reads.
+pub const SNAPSHOT_VERSION: u32 = 1;
+/// Store file magic ("TCNHIB1\0").
+pub const STORE_MAGIC: u64 = u64::from_le_bytes(*b"TCNHIB1\0");
+/// Decode guard: no modeled TCN memory is deeper than this.
+const MAX_SNAPSHOT_TCN_DEPTH: u32 = 4096;
+
+/// Canonical domain order of the SoC section (all four power domains,
+/// always present, in `Domain`'s `Ord` order).
+const DOMAINS: [Domain; 4] = [Domain::Soc, Domain::Cluster, Domain::Ehwpe, Domain::Accel2];
+
+/// Typed decode/verify failure for a snapshot record. Every corrupt,
+/// truncated or forged record lands on one of these — the store never
+/// panics on bad bytes and never hands back a silently wrong session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    BadMagic(u32),
+    BadVersion(u32),
+    /// The stored CRC does not match the record bytes (bit rot, torn
+    /// write inside a record, or injected snapshot-surface faults).
+    Crc { want: u32, got: u32 },
+    /// The record ended before a field it promised.
+    Truncated { wanted: usize, have: usize },
+    /// Structurally well-formed bytes encoding an invalid state.
+    Malformed(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::BadMagic(m) => {
+                write!(f, "bad snapshot magic {m:#010x} (expected SSN1)")
+            }
+            SnapshotError::BadVersion(v) => write!(f, "unsupported snapshot version {v}"),
+            SnapshotError::Crc { want, got } => {
+                write!(f, "snapshot CRC mismatch (stored {want:#010x}, computed {got:#010x})")
+            }
+            SnapshotError::Truncated { wanted, have } => {
+                write!(f, "snapshot truncated (wanted {wanted} more bytes, have {have})")
+            }
+            SnapshotError::Malformed(why) => write!(f, "malformed snapshot: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+type SnapResult<T> = Result<T, SnapshotError>;
+
+fn malformed(why: impl Into<String>) -> SnapshotError {
+    SnapshotError::Malformed(why.into())
+}
+
+// ---------------------------------------------------------------------
+// wire helpers (the TTN readers, mapped onto the typed error)
+// ---------------------------------------------------------------------
+
+fn take<'a>(b: &mut &'a [u8], n: usize) -> SnapResult<&'a [u8]> {
+    let have = b.len();
+    ttn::take(b, n).map_err(|_| SnapshotError::Truncated { wanted: n, have })
+}
+
+fn read_u8(b: &mut &[u8]) -> SnapResult<u8> {
+    let have = b.len();
+    ttn::read_u8(b).map_err(|_| SnapshotError::Truncated { wanted: 1, have })
+}
+
+fn read_u32(b: &mut &[u8]) -> SnapResult<u32> {
+    let have = b.len();
+    ttn::read_u32(b).map_err(|_| SnapshotError::Truncated { wanted: 4, have })
+}
+
+fn read_u64(b: &mut &[u8]) -> SnapResult<u64> {
+    let have = b.len();
+    ttn::read_u64(b).map_err(|_| SnapshotError::Truncated { wanted: 8, have })
+}
+
+fn read_f64_bits(b: &mut &[u8]) -> SnapResult<f64> {
+    Ok(f64::from_bits(read_u64(b)?))
+}
+
+/// Take-before-alloc read of `n` f64s stored as raw bit patterns.
+fn read_f64s(b: &mut &[u8], n: usize) -> SnapResult<Vec<f64>> {
+    let bytes = n.checked_mul(8).ok_or_else(|| malformed("f64 run length overflows"))?;
+    let raw = take(b, bytes)?;
+    Ok(raw
+        .chunks_exact(8)
+        .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+        .collect())
+}
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64_bits(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+// ---------------------------------------------------------------------
+// enum codecs
+// ---------------------------------------------------------------------
+
+fn domain_code(d: Domain) -> u8 {
+    match d {
+        Domain::Soc => 0,
+        Domain::Cluster => 1,
+        Domain::Ehwpe => 2,
+        Domain::Accel2 => 3,
+    }
+}
+
+fn domain_from(code: u8) -> SnapResult<Domain> {
+    DOMAINS
+        .get(code as usize)
+        .copied()
+        .ok_or_else(|| malformed(format!("unknown power domain code {code}")))
+}
+
+fn power_state_code(s: PowerState) -> u8 {
+    match s {
+        PowerState::Gated => 0,
+        PowerState::Idle => 1,
+        PowerState::Active => 2,
+    }
+}
+
+fn power_state_from(code: u8) -> SnapResult<PowerState> {
+    match code {
+        0 => Ok(PowerState::Gated),
+        1 => Ok(PowerState::Idle),
+        2 => Ok(PowerState::Active),
+        other => Err(malformed(format!("unknown power state code {other}"))),
+    }
+}
+
+fn fc_state_code(s: FcState) -> u8 {
+    match s {
+        FcState::Sleep => 0,
+        FcState::Readout => 1,
+        FcState::Arm => 2,
+    }
+}
+
+fn fc_state_from(code: u8) -> SnapResult<FcState> {
+    match code {
+        0 => Ok(FcState::Sleep),
+        1 => Ok(FcState::Readout),
+        2 => Ok(FcState::Arm),
+        other => Err(malformed(format!("unknown FC state code {other}"))),
+    }
+}
+
+fn surface_code(s: FaultSurface) -> u8 {
+    match s {
+        FaultSurface::ActMem => 0,
+        FaultSurface::TcnMem => 1,
+        FaultSurface::WeightMem => 2,
+        FaultSurface::DmaStream => 3,
+        FaultSurface::Snapshot => 4,
+    }
+}
+
+fn surface_from(code: u8) -> SnapResult<FaultSurface> {
+    match code {
+        0 => Ok(FaultSurface::ActMem),
+        1 => Ok(FaultSurface::TcnMem),
+        2 => Ok(FaultSurface::WeightMem),
+        3 => Ok(FaultSurface::DmaStream),
+        4 => Ok(FaultSurface::Snapshot),
+        other => Err(malformed(format!("unknown fault surface code {other}"))),
+    }
+}
+
+fn valid_ber(b: f64) -> bool {
+    (0.0..=0.5).contains(&b)
+}
+
+// ---------------------------------------------------------------------
+// snapshot sections
+// ---------------------------------------------------------------------
+
+/// Hibernate/resume/retention ledger. Per-session inside [`Session`]
+/// (and its snapshot), field-wise summed into the report aggregate.
+/// Deliberately **not** part of the byte-identity oracle: retention and
+/// wake energy live here, never in the SoC or core ledgers, so an
+/// eviction schedule cannot perturb the calibrated anchors.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HibernationStats {
+    /// Snapshots taken (idle eviction or explicit `hibernate`).
+    pub hibernates: u64,
+    /// Records restored bit-exactly.
+    pub resumes: u64,
+    /// Resume attempts that hit a corrupt/invalid record (the session
+    /// was re-initialized; the CRC refusal counts in `FaultSummary`).
+    pub corrupt_resumes: u64,
+    /// Snapshot-word × idle-drain-tick retention exposure.
+    pub retention_word_ticks: u64,
+    /// Total bytes written into the snapshot store.
+    pub snapshot_bytes: u64,
+    /// Retention energy (J), charged per word per idle tick.
+    pub retention_j: f64,
+    /// Wake re-load energy (J), charged per word at resume.
+    pub wake_j: f64,
+}
+
+impl HibernationStats {
+    pub fn merge(&mut self, o: &HibernationStats) {
+        self.hibernates += o.hibernates;
+        self.resumes += o.resumes;
+        self.corrupt_resumes += o.corrupt_resumes;
+        self.retention_word_ticks += o.retention_word_ticks;
+        self.snapshot_bytes += o.snapshot_bytes;
+        self.retention_j += o.retention_j;
+        self.wake_j += o.wake_j;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != HibernationStats::default()
+    }
+}
+
+/// The TCN ring section: geometry, counters, and the resident packed
+/// words oldest-first.
+#[derive(Debug, Clone)]
+pub struct TcnSnap {
+    pub depth: u32,
+    pub channels: u32,
+    pub pushes: u64,
+    pub reads: u64,
+    pub shift_toggles: u64,
+    pub words: Vec<PackedVec>,
+}
+
+/// One FLL's mutable state (the name is fixed by the SoC constructor).
+#[derive(Debug, Clone, Copy)]
+pub struct FllSnap {
+    pub freq_hz: f64,
+    pub lock_time_ns: u64,
+    pub retargets: u64,
+}
+
+/// The SoC section: everything `KrakenSoc::new(voltage)` does not
+/// re-derive from the supply (FSM states, FLL positions, the ledger).
+/// Kept field-accessible so `aggregate_report` can fold a hibernated
+/// session's energy/wakeups without materializing a `KrakenSoc`.
+#[derive(Debug, Clone)]
+pub struct SocSnap {
+    pub fc_state: FcState,
+    pub dma_bits: u32,
+    /// Power state per domain, in [`DOMAINS`] order.
+    pub states: [PowerState; 4],
+    pub soc_fll: FllSnap,
+    pub ehwpe_fll: FllSnap,
+    pub now_ns: u64,
+    pub energy_j: f64,
+    /// Per-domain energy entries, in domain order. Presence-preserving:
+    /// a `BTreeMap` entry exists only once its domain was touched, and a
+    /// restored ledger must match bit-for-bit including entry presence.
+    pub per_domain: Vec<(Domain, f64)>,
+    pub irq_count: u64,
+    pub fc_wakeups: u64,
+    pub frames_ingested: u64,
+}
+
+/// An armed fault plan plus its injector's exact position.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSnap {
+    pub surface: FaultSurface,
+    pub plan_ber: f64,
+    pub seed: u64,
+    pub inj_ber: f64,
+    pub rng: [u64; 4],
+}
+
+/// Full per-session state, capturable from and restorable into a live
+/// [`Session`] bit-exactly.
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    pub session_id: u64,
+    pub voltage: f64,
+    pub tcn: TcnSnap,
+    pub soc: SocSnap,
+    pub metrics: ServingMetrics,
+    pub labels: Vec<usize>,
+    pub faults: FaultSummary,
+    pub hib: HibernationStats,
+    pub fault: Option<FaultSnap>,
+}
+
+impl SessionSnapshot {
+    /// Snapshot a live session. Pure read: no counter on the session
+    /// moves (snapshotting is not a functional access of the memories).
+    pub fn capture(sess: &Session) -> SessionSnapshot {
+        let soc = &sess.soc;
+        SessionSnapshot {
+            session_id: sess.id as u64,
+            voltage: soc.voltage,
+            tcn: TcnSnap {
+                depth: sess.tcn.depth as u32,
+                channels: sess.tcn.channels as u32,
+                pushes: sess.tcn.pushes,
+                reads: sess.tcn.reads,
+                shift_toggles: sess.tcn.shift_toggles,
+                words: sess.tcn.words().copied().collect(),
+            },
+            soc: SocSnap {
+                fc_state: soc.fc_state,
+                dma_bits: soc.dma_bits as u32,
+                states: DOMAINS.map(|d| soc.states[&d]),
+                soc_fll: FllSnap {
+                    freq_hz: soc.soc_fll.freq_hz,
+                    lock_time_ns: soc.soc_fll.lock_time_ns,
+                    retargets: soc.soc_fll.retargets,
+                },
+                ehwpe_fll: FllSnap {
+                    freq_hz: soc.ehwpe_fll.freq_hz,
+                    lock_time_ns: soc.ehwpe_fll.lock_time_ns,
+                    retargets: soc.ehwpe_fll.retargets,
+                },
+                now_ns: soc.ledger.now_ns,
+                energy_j: soc.ledger.energy_j,
+                per_domain: soc.ledger.per_domain.iter().map(|(&d, &e)| (d, e)).collect(),
+                irq_count: soc.ledger.irq_count,
+                fc_wakeups: soc.ledger.fc_wakeups,
+                frames_ingested: soc.ledger.frames_ingested,
+            },
+            metrics: sess.metrics.clone(),
+            labels: sess.labels.clone(),
+            faults: sess.faults,
+            hib: sess.hib,
+            fault: sess.fault.as_ref().map(|fs| {
+                let (inj_ber, rng) = fs.inj.state();
+                FaultSnap {
+                    surface: fs.plan.surface,
+                    plan_ber: fs.plan.ber,
+                    seed: fs.plan.seed,
+                    inj_ber,
+                    rng,
+                }
+            }),
+        }
+    }
+
+    /// Serialize to the versioned record payload (the bytes the store
+    /// CRCs). Deterministic: a pure function of the snapshotted state,
+    /// and its length does not depend on RNG state values — the
+    /// snapshot fault surface relies on that to size its draw space
+    /// before the final capture.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            256 + self.tcn.words.len() * 32
+                + (self.metrics.sim_latency_us.len() + self.metrics.wall_latency_us.len()) * 8
+                + self.labels.len() * 4,
+        );
+        put_u32(&mut out, SNAPSHOT_MAGIC);
+        put_u32(&mut out, SNAPSHOT_VERSION);
+        put_u64(&mut out, self.session_id);
+        put_f64_bits(&mut out, self.voltage);
+
+        // TCN ring
+        put_u32(&mut out, self.tcn.depth);
+        put_u32(&mut out, self.tcn.channels);
+        put_u32(&mut out, self.tcn.words.len() as u32);
+        put_u64(&mut out, self.tcn.pushes);
+        put_u64(&mut out, self.tcn.reads);
+        put_u64(&mut out, self.tcn.shift_toggles);
+        for w in &self.tcn.words {
+            for word in w.to_words() {
+                put_u64(&mut out, word);
+            }
+        }
+
+        // SoC
+        put_u8(&mut out, fc_state_code(self.soc.fc_state));
+        put_u32(&mut out, self.soc.dma_bits);
+        for s in self.soc.states {
+            put_u8(&mut out, power_state_code(s));
+        }
+        for fll in [&self.soc.soc_fll, &self.soc.ehwpe_fll] {
+            put_f64_bits(&mut out, fll.freq_hz);
+            put_u64(&mut out, fll.lock_time_ns);
+            put_u64(&mut out, fll.retargets);
+        }
+        put_u64(&mut out, self.soc.now_ns);
+        put_f64_bits(&mut out, self.soc.energy_j);
+        put_u64(&mut out, self.soc.irq_count);
+        put_u64(&mut out, self.soc.fc_wakeups);
+        put_u64(&mut out, self.soc.frames_ingested);
+        put_u32(&mut out, self.soc.per_domain.len() as u32);
+        for &(d, e) in &self.soc.per_domain {
+            put_u8(&mut out, domain_code(d));
+            put_f64_bits(&mut out, e);
+        }
+
+        // metrics
+        put_u64(&mut out, self.metrics.frames);
+        put_u64(&mut out, self.metrics.labels_emitted);
+        put_f64_bits(&mut out, self.metrics.core_energy_j);
+        put_f64_bits(&mut out, self.metrics.soc_energy_j);
+        put_f64_bits(&mut out, self.metrics.sim_time_s);
+        for hist in [&self.metrics.sim_latency_us, &self.metrics.wall_latency_us] {
+            put_u32(&mut out, hist.len() as u32);
+            for &s in hist.samples() {
+                put_f64_bits(&mut out, s);
+            }
+        }
+
+        // labels
+        put_u32(&mut out, self.labels.len() as u32);
+        for &l in &self.labels {
+            put_u32(&mut out, l as u32);
+        }
+
+        // fault summary
+        let f = &self.faults;
+        for v in [
+            f.injected_flips,
+            f.detected,
+            f.degraded_frames,
+            f.scrub_words,
+            f.repair_words,
+            f.retries,
+            f.failures,
+            f.quarantined,
+            f.dropped_frames,
+            f.snapshot_corrupt,
+        ] {
+            put_u64(&mut out, v);
+        }
+
+        // hibernation ledger
+        let h = &self.hib;
+        for v in [
+            h.hibernates,
+            h.resumes,
+            h.corrupt_resumes,
+            h.retention_word_ticks,
+            h.snapshot_bytes,
+        ] {
+            put_u64(&mut out, v);
+        }
+        put_f64_bits(&mut out, h.retention_j);
+        put_f64_bits(&mut out, h.wake_j);
+
+        // armed fault plan
+        match &self.fault {
+            None => put_u8(&mut out, 0),
+            Some(fs) => {
+                put_u8(&mut out, 1);
+                put_u8(&mut out, surface_code(fs.surface));
+                put_f64_bits(&mut out, fs.plan_ber);
+                put_u64(&mut out, fs.seed);
+                put_f64_bits(&mut out, fs.inj_ber);
+                for w in fs.rng {
+                    put_u64(&mut out, w);
+                }
+            }
+        }
+        out
+    }
+
+    /// Decode a record payload, re-validating every invariant. `id` is
+    /// the store-level record id; a mismatch with the embedded session
+    /// id (e.g. a flipped id field) is refused as malformed.
+    pub fn decode(payload: &[u8], id: u64) -> SnapResult<SessionSnapshot> {
+        let mut b = payload;
+        let magic = read_u32(&mut b)?;
+        if magic != SNAPSHOT_MAGIC {
+            return Err(SnapshotError::BadMagic(magic));
+        }
+        let version = read_u32(&mut b)?;
+        if version != SNAPSHOT_VERSION {
+            return Err(SnapshotError::BadVersion(version));
+        }
+        let session_id = read_u64(&mut b)?;
+        if session_id != id {
+            return Err(malformed(format!(
+                "record {id} embeds session id {session_id}"
+            )));
+        }
+        let voltage = read_f64_bits(&mut b)?;
+        if !voltage.is_finite() || voltage <= 0.0 {
+            return Err(malformed(format!("non-physical supply voltage {voltage}")));
+        }
+
+        // TCN ring
+        let depth = read_u32(&mut b)?;
+        let channels = read_u32(&mut b)?;
+        let occupancy = read_u32(&mut b)?;
+        if depth == 0 || depth > MAX_SNAPSHOT_TCN_DEPTH {
+            return Err(malformed(format!("TCN depth {depth} out of range")));
+        }
+        if channels == 0 || channels as usize > MAX_CHANNELS {
+            return Err(malformed(format!("TCN channel count {channels} out of range")));
+        }
+        if occupancy > depth {
+            return Err(malformed(format!(
+                "TCN occupancy {occupancy} exceeds depth {depth}"
+            )));
+        }
+        let pushes = read_u64(&mut b)?;
+        let reads = read_u64(&mut b)?;
+        let shift_toggles = read_u64(&mut b)?;
+        let mut words = Vec::with_capacity(occupancy as usize);
+        for i in 0..occupancy {
+            let mut w = [0u64; 4];
+            for slot in &mut w {
+                *slot = read_u64(&mut b)?;
+            }
+            let v = PackedVec::from_words(w)
+                .ok_or_else(|| malformed(format!("TCN step {i} violates pos ⊆ mask")))?;
+            if v.masked(channels as usize) != v {
+                return Err(malformed(format!(
+                    "TCN step {i} has plane bits beyond {channels} channels"
+                )));
+            }
+            words.push(v);
+        }
+        let tcn = TcnSnap { depth, channels, pushes, reads, shift_toggles, words };
+
+        // SoC
+        let fc_state = fc_state_from(read_u8(&mut b)?)?;
+        let dma_bits = read_u32(&mut b)?;
+        if dma_bits == 0 || dma_bits % 8 != 0 || dma_bits > 1024 {
+            return Err(malformed(format!("implausible µDMA bus width {dma_bits}")));
+        }
+        let mut states = [PowerState::Gated; 4];
+        for s in &mut states {
+            *s = power_state_from(read_u8(&mut b)?)?;
+        }
+        if states[0] == PowerState::Gated {
+            return Err(malformed("the SoC domain is always-on, cannot be gated"));
+        }
+        let mut flls = [FllSnap { freq_hz: 0.0, lock_time_ns: 0, retargets: 0 }; 2];
+        for fll in &mut flls {
+            fll.freq_hz = read_f64_bits(&mut b)?;
+            fll.lock_time_ns = read_u64(&mut b)?;
+            fll.retargets = read_u64(&mut b)?;
+            if !fll.freq_hz.is_finite() || fll.freq_hz < 0.0 {
+                return Err(malformed(format!("non-physical FLL frequency {}", fll.freq_hz)));
+            }
+        }
+        let now_ns = read_u64(&mut b)?;
+        let energy_j = read_f64_bits(&mut b)?;
+        let irq_count = read_u64(&mut b)?;
+        let fc_wakeups = read_u64(&mut b)?;
+        let frames_ingested = read_u64(&mut b)?;
+        let n_domains = read_u32(&mut b)?;
+        if n_domains > 4 {
+            return Err(malformed(format!("{n_domains} per-domain energy entries")));
+        }
+        let mut per_domain = Vec::with_capacity(n_domains as usize);
+        for _ in 0..n_domains {
+            let d = domain_from(read_u8(&mut b)?)?;
+            let e = read_f64_bits(&mut b)?;
+            if let Some(&(last, _)) = per_domain.last() {
+                if domain_code(d) <= domain_code(last) {
+                    return Err(malformed("per-domain entries out of order"));
+                }
+            }
+            per_domain.push((d, e));
+        }
+        let soc = SocSnap {
+            fc_state,
+            dma_bits,
+            states,
+            soc_fll: flls[0],
+            ehwpe_fll: flls[1],
+            now_ns,
+            energy_j,
+            per_domain,
+            irq_count,
+            fc_wakeups,
+            frames_ingested,
+        };
+
+        // metrics
+        let frames = read_u64(&mut b)?;
+        let labels_emitted = read_u64(&mut b)?;
+        let core_energy_j = read_f64_bits(&mut b)?;
+        let soc_energy_j = read_f64_bits(&mut b)?;
+        let sim_time_s = read_f64_bits(&mut b)?;
+        let n_sim = read_u32(&mut b)?;
+        let sim = read_f64s(&mut b, n_sim as usize)?;
+        let n_wall = read_u32(&mut b)?;
+        let wall = read_f64s(&mut b, n_wall as usize)?;
+        let metrics = ServingMetrics {
+            sim_latency_us: Percentiles::from_samples(sim),
+            wall_latency_us: Percentiles::from_samples(wall),
+            frames,
+            labels_emitted,
+            core_energy_j,
+            soc_energy_j,
+            sim_time_s,
+        };
+
+        // labels
+        let n_labels = read_u32(&mut b)?;
+        let raw = take(
+            &mut b,
+            (n_labels as usize)
+                .checked_mul(4)
+                .ok_or_else(|| malformed("label run length overflows"))?,
+        )?;
+        let labels: Vec<usize> = raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+
+        // fault summary
+        let mut fsum = [0u64; 10];
+        for v in &mut fsum {
+            *v = read_u64(&mut b)?;
+        }
+        let faults = FaultSummary {
+            injected_flips: fsum[0],
+            detected: fsum[1],
+            degraded_frames: fsum[2],
+            scrub_words: fsum[3],
+            repair_words: fsum[4],
+            retries: fsum[5],
+            failures: fsum[6],
+            quarantined: fsum[7],
+            dropped_frames: fsum[8],
+            snapshot_corrupt: fsum[9],
+        };
+
+        // hibernation ledger
+        let mut hsum = [0u64; 5];
+        for v in &mut hsum {
+            *v = read_u64(&mut b)?;
+        }
+        let hib = HibernationStats {
+            hibernates: hsum[0],
+            resumes: hsum[1],
+            corrupt_resumes: hsum[2],
+            retention_word_ticks: hsum[3],
+            snapshot_bytes: hsum[4],
+            retention_j: read_f64_bits(&mut b)?,
+            wake_j: read_f64_bits(&mut b)?,
+        };
+
+        // armed fault plan
+        let fault = match read_u8(&mut b)? {
+            0 => None,
+            1 => {
+                let surface = surface_from(read_u8(&mut b)?)?;
+                let plan_ber = read_f64_bits(&mut b)?;
+                let seed = read_u64(&mut b)?;
+                let inj_ber = read_f64_bits(&mut b)?;
+                if !valid_ber(plan_ber) || !valid_ber(inj_ber) {
+                    return Err(malformed(format!(
+                        "BER out of range (plan {plan_ber}, injector {inj_ber})"
+                    )));
+                }
+                let mut rng = [0u64; 4];
+                for w in &mut rng {
+                    *w = read_u64(&mut b)?;
+                }
+                Some(FaultSnap { surface, plan_ber, seed, inj_ber, rng })
+            }
+            other => return Err(malformed(format!("bad fault-presence flag {other}"))),
+        };
+
+        if !b.is_empty() {
+            return Err(malformed(format!("{} trailing bytes", b.len())));
+        }
+        Ok(SessionSnapshot {
+            session_id,
+            voltage,
+            tcn,
+            soc,
+            metrics,
+            labels,
+            faults,
+            hib,
+            fault,
+        })
+    }
+
+    /// Materialize the live session. Re-runs the TCN push invariants on
+    /// the way (a snapshot cannot construct a state no push sequence
+    /// produces); the SoC is rebuilt from the voltage — its power table
+    /// is a pure function of the supply — then every mutable field is
+    /// overwritten bit-exactly from the snapshot.
+    pub fn into_session(self) -> SnapResult<Session> {
+        let tcn = TcnMemory::from_parts(
+            self.tcn.depth as usize,
+            self.tcn.channels as usize,
+            self.tcn.words,
+            self.tcn.pushes,
+            self.tcn.reads,
+            self.tcn.shift_toggles,
+        )
+        .map_err(|e| malformed(e.to_string()))?;
+        let mut soc = KrakenSoc::new(self.voltage);
+        soc.fc_state = self.soc.fc_state;
+        soc.dma_bits = self.soc.dma_bits as usize;
+        for (d, s) in DOMAINS.iter().zip(self.soc.states) {
+            soc.states.insert(*d, s);
+        }
+        soc.soc_fll.freq_hz = self.soc.soc_fll.freq_hz;
+        soc.soc_fll.lock_time_ns = self.soc.soc_fll.lock_time_ns;
+        soc.soc_fll.retargets = self.soc.soc_fll.retargets;
+        soc.ehwpe_fll.freq_hz = self.soc.ehwpe_fll.freq_hz;
+        soc.ehwpe_fll.lock_time_ns = self.soc.ehwpe_fll.lock_time_ns;
+        soc.ehwpe_fll.retargets = self.soc.ehwpe_fll.retargets;
+        soc.ledger = SocLedger {
+            now_ns: self.soc.now_ns,
+            energy_j: self.soc.energy_j,
+            per_domain: self.soc.per_domain.into_iter().collect(),
+            irq_count: self.soc.irq_count,
+            fc_wakeups: self.soc.fc_wakeups,
+            frames_ingested: self.soc.frames_ingested,
+        };
+        Ok(Session {
+            id: self.session_id as usize,
+            tcn,
+            soc,
+            metrics: self.metrics,
+            labels: self.labels,
+            fault: self.fault.map(|f| FaultState {
+                plan: FaultPlan { surface: f.surface, ber: f.plan_ber, seed: f.seed },
+                inj: Injector::from_state(f.inj_ber, f.rng),
+            }),
+            faults: self.faults,
+            hib: self.hib,
+            idle_drains: 0,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// the store
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct StoredRecord {
+    crc: u32,
+    payload: Vec<u8>,
+}
+
+/// The snapshot record store: a `BTreeMap` of CRC'd payloads, optionally
+/// mirrored to a file. Mutations touch only memory; [`SessionStore::sync`]
+/// is the sole writer and persists via write-then-rename, so the on-disk
+/// file is always either the previous complete image or the new one —
+/// a crash mid-sync can tear at most the throwaway `.tmp` sibling.
+#[derive(Debug)]
+pub struct SessionStore {
+    path: Option<PathBuf>,
+    records: BTreeMap<u64, StoredRecord>,
+    dirty: bool,
+    recovered_torn: bool,
+}
+
+impl SessionStore {
+    /// A store with no backing file (records die with the process).
+    pub fn in_memory() -> SessionStore {
+        SessionStore { path: None, records: BTreeMap::new(), dirty: false, recovered_torn: false }
+    }
+
+    /// Open (or create) a file-backed store. A missing or empty file is
+    /// an empty store; a half-written tail — the kill-mid-write case —
+    /// is skipped while every intact record before it is kept
+    /// ([`SessionStore::recovered_torn`] reports the skip); a file that
+    /// does not carry this store's magic is refused outright rather
+    /// than silently clobbered.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<SessionStore> {
+        let path = path.as_ref().to_path_buf();
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+            Err(e) => return Err(anyhow!("reading session store {}: {e}", path.display())),
+        };
+        let mut store = SessionStore {
+            path: Some(path.clone()),
+            records: BTreeMap::new(),
+            dirty: false,
+            recovered_torn: false,
+        };
+        if bytes.is_empty() {
+            return Ok(store);
+        }
+        anyhow::ensure!(
+            bytes.len() >= 8 && bytes[..8] == STORE_MAGIC.to_le_bytes(),
+            "{} is not a session store (bad magic)",
+            path.display()
+        );
+        let mut b = &bytes[8..];
+        while !b.is_empty() {
+            // record header: id u64, len u32, crc u32
+            if b.len() < 16 {
+                store.recovered_torn = true;
+                break;
+            }
+            let id = u64::from_le_bytes(b[..8].try_into().unwrap());
+            let len = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(b[12..16].try_into().unwrap());
+            b = &b[16..];
+            if b.len() < len {
+                store.recovered_torn = true;
+                break;
+            }
+            store.records.insert(id, StoredRecord { crc, payload: b[..len].to_vec() });
+            b = &b[len..];
+        }
+        Ok(store)
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// True when `open` skipped a half-written tail.
+    pub fn recovered_torn(&self) -> bool {
+        self.recovered_torn
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.records.contains_key(&id)
+    }
+
+    /// Record ids, ascending.
+    pub fn ids(&self) -> Vec<u64> {
+        self.records.keys().copied().collect()
+    }
+
+    /// Stored payload size of one record, in bytes.
+    pub fn record_bytes(&self, id: u64) -> Option<usize> {
+        self.records.get(&id).map(|r| r.payload.len())
+    }
+
+    /// Insert (or replace) a record. The CRC is computed over the clean
+    /// payload here — later bit rot (or injected snapshot-surface
+    /// faults) is exactly what the CRC check at read time catches.
+    pub fn insert(&mut self, id: u64, payload: Vec<u8>) {
+        let crc = crc32(&payload);
+        self.records.insert(id, StoredRecord { crc, payload });
+        self.dirty = true;
+    }
+
+    /// Flip stored plane bits of one record (the snapshot fault
+    /// surface). `bit_addrs` index the payload's bits little-endian;
+    /// addresses beyond the record are ignored. The stored CRC is left
+    /// at its write-time value — rot happens after a healthy write.
+    pub fn flip_bits(&mut self, id: u64, bit_addrs: &[u64]) {
+        let Some(rec) = self.records.get_mut(&id) else { return };
+        for &a in bit_addrs {
+            let (byte, bit) = ((a / 8) as usize, (a % 8) as u8);
+            if byte < rec.payload.len() {
+                rec.payload[byte] ^= 1 << bit;
+            }
+        }
+        self.dirty = true;
+    }
+
+    fn verify(id: u64, rec: &StoredRecord) -> SnapResult<SessionSnapshot> {
+        let got = crc32(&rec.payload);
+        if got != rec.crc {
+            return Err(SnapshotError::Crc { want: rec.crc, got });
+        }
+        SessionSnapshot::decode(&rec.payload, id)
+    }
+
+    /// Validate and decode a record without removing it.
+    pub fn peek(&self, id: u64) -> Option<SnapResult<SessionSnapshot>> {
+        self.records.get(&id).map(|rec| Self::verify(id, rec))
+    }
+
+    /// Remove a record and validate/decode it. The record leaves the
+    /// store either way: a corrupt record is consumed (and reported as
+    /// the typed error) rather than retried forever.
+    pub fn take(&mut self, id: u64) -> Option<SnapResult<SessionSnapshot>> {
+        let rec = self.records.remove(&id)?;
+        self.dirty = true;
+        Some(Self::verify(id, &rec))
+    }
+
+    /// Persist the current record set: serialize everything to a `.tmp`
+    /// sibling, then atomically rename over the store file. No-op when
+    /// nothing changed or the store is memory-only.
+    pub fn sync(&mut self) -> anyhow::Result<()> {
+        if !self.dirty {
+            return Ok(());
+        }
+        let Some(path) = &self.path else {
+            self.dirty = false;
+            return Ok(());
+        };
+        let mut out = Vec::with_capacity(
+            8 + self.records.values().map(|r| 16 + r.payload.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(&STORE_MAGIC.to_le_bytes());
+        for (&id, rec) in &self.records {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(rec.payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&rec.crc.to_le_bytes());
+            out.extend_from_slice(&rec.payload);
+        }
+        let mut tmp_os = path.as_os_str().to_os_string();
+        tmp_os.push(".tmp");
+        let tmp = PathBuf::from(tmp_os);
+        std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
+        self.dirty = false;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A session with every snapshotted field away from its default.
+    fn busy_session() -> Session {
+        let mut s = Session::new(3, 0.5, 8, 16);
+        for step in 0..5u8 {
+            let odd = if step % 2 == 0 { 1 } else { -1 };
+            s.tcn.push_packed(PackedVec::pack(&[1, -1, 0, 1, odd]));
+        }
+        s.soc.dma_ingest(256);
+        s.soc.raise_irq(crate::soc::Irq::FrameReady);
+        s.soc.advance_ns(10_000);
+        s.soc.add_core_energy(1.5e-6);
+        s.soc.raise_irq(crate::soc::Irq::CutieDone);
+        s.soc.fc_service_done();
+        // leave the FSM mid-flight so non-default states hit the codec
+        s.soc.raise_irq(crate::soc::Irq::FrameReady);
+        s.soc.advance_ns(7_500);
+        s.soc.raise_irq(crate::soc::Irq::CutieDone);
+        s.metrics.record_frame(12.5, 3.25, 1.5e-6);
+        s.labels.push(4);
+        s.labels.push(9);
+        s.faults.retries = 2;
+        s.hib.hibernates = 1;
+        s.fault = Some(FaultState {
+            plan: FaultPlan::with_ber(FaultSurface::TcnMem, 0.01, 42),
+            inj: Injector::new(0.01, 42),
+        });
+        s
+    }
+
+    fn assert_sessions_identical(a: &Session, b: &Session) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.faults, b.faults);
+        assert_eq!(a.hib, b.hib);
+        assert_eq!(a.tcn.pushes, b.tcn.pushes);
+        assert_eq!(a.tcn.shift_toggles, b.tcn.shift_toggles);
+        let wa: Vec<_> = a.tcn.words().copied().collect();
+        let wb: Vec<_> = b.tcn.words().copied().collect();
+        assert_eq!(wa, wb);
+        assert_eq!(a.soc.ledger.energy_j.to_bits(), b.soc.ledger.energy_j.to_bits());
+        assert_eq!(a.soc.ledger.now_ns, b.soc.ledger.now_ns);
+        assert_eq!(a.soc.ledger.fc_wakeups, b.soc.ledger.fc_wakeups);
+        assert_eq!(a.soc.ledger.per_domain, b.soc.ledger.per_domain);
+        assert_eq!(a.soc.fc_state, b.soc.fc_state);
+        assert_eq!(a.soc.states, b.soc.states);
+        assert_eq!(a.metrics.frames, b.metrics.frames);
+        assert_eq!(a.metrics.core_energy_j.to_bits(), b.metrics.core_energy_j.to_bits());
+        assert_eq!(a.metrics.sim_latency_us.samples(), b.metrics.sim_latency_us.samples());
+    }
+
+    #[test]
+    fn snapshot_round_trips_bit_exactly() {
+        let sess = busy_session();
+        let payload = SessionSnapshot::capture(&sess).encode();
+        let back = SessionSnapshot::decode(&payload, 3).unwrap().into_session().unwrap();
+        assert_sessions_identical(&sess, &back);
+        // the armed injector resumes at its exact position
+        let (mut ia, mut ib) = (sess.fault.unwrap().inj, back.fault.unwrap().inj);
+        assert_eq!(ia.faulted_bits(100_000), ib.faulted_bits(100_000));
+        // and a re-capture of the restored session is byte-identical
+        assert_eq!(payload, SessionSnapshot::capture(&busy_session()).encode());
+    }
+
+    #[test]
+    fn decode_refuses_wrong_id_magic_version() {
+        let payload = SessionSnapshot::capture(&busy_session()).encode();
+        assert!(matches!(
+            SessionSnapshot::decode(&payload, 99),
+            Err(SnapshotError::Malformed(_))
+        ));
+        let mut bad = payload.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(SessionSnapshot::decode(&bad, 3), Err(SnapshotError::BadMagic(_))));
+        let mut bad = payload;
+        bad[4] = 0x7F;
+        assert!(matches!(SessionSnapshot::decode(&bad, 3), Err(SnapshotError::BadVersion(_))));
+    }
+
+    #[test]
+    fn every_truncation_is_a_typed_error() {
+        let payload = SessionSnapshot::capture(&busy_session()).encode();
+        for cut in 0..payload.len() {
+            match SessionSnapshot::decode(&payload[..cut], 3) {
+                Err(_) => {}
+                Ok(_) => panic!("truncation at {cut}/{} decoded", payload.len()),
+            }
+        }
+    }
+
+    #[test]
+    fn store_crc_catches_bit_flips() {
+        let mut store = SessionStore::in_memory();
+        let payload = SessionSnapshot::capture(&busy_session()).encode();
+        store.insert(3, payload.clone());
+        assert!(store.peek(3).unwrap().is_ok());
+        store.flip_bits(3, &[137]);
+        assert!(matches!(store.peek(3), Some(Err(SnapshotError::Crc { .. }))));
+        // take consumes the record either way
+        assert!(matches!(store.take(3), Some(Err(SnapshotError::Crc { .. }))));
+        assert!(store.take(3).is_none());
+    }
+
+    #[test]
+    fn file_store_round_trips_and_recovers_torn_tail() {
+        let path = std::env::temp_dir().join("tcn_cutie_hib_store_unit.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut store = SessionStore::open(&path).unwrap();
+        let p1 = SessionSnapshot::capture(&busy_session()).encode();
+        let mut other = busy_session();
+        other.id = 7;
+        let p2 = SessionSnapshot::capture(&other).encode();
+        store.insert(3, p1);
+        store.insert(7, p2.clone());
+        store.sync().unwrap();
+
+        let reopened = SessionStore::open(&path).unwrap();
+        assert_eq!(reopened.ids(), vec![3, 7]);
+        assert!(!reopened.recovered_torn());
+        assert!(reopened.peek(3).unwrap().is_ok());
+
+        // kill mid-write: chop the file inside record 7's payload
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - p2.len() / 2]).unwrap();
+        let torn = SessionStore::open(&path).unwrap();
+        assert!(torn.recovered_torn(), "half-written tail must be reported");
+        assert_eq!(torn.ids(), vec![3], "intact records before the tear survive");
+        assert!(torn.peek(3).unwrap().is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn foreign_file_is_refused_not_clobbered() {
+        let path = std::env::temp_dir().join("tcn_cutie_hib_store_foreign.bin");
+        std::fs::write(&path, b"definitely not a session store").unwrap();
+        assert!(SessionStore::open(&path).is_err());
+        assert_eq!(std::fs::read(&path).unwrap(), b"definitely not a session store");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hibernation_stats_merge_and_any() {
+        let mut h = HibernationStats::default();
+        assert!(!h.any());
+        let one = HibernationStats {
+            hibernates: 2,
+            resumes: 1,
+            retention_word_ticks: 72,
+            snapshot_bytes: 640,
+            retention_j: 1e-12,
+            wake_j: 2e-12,
+            ..Default::default()
+        };
+        h.merge(&one);
+        h.merge(&one);
+        assert_eq!(h.hibernates, 4);
+        assert_eq!(h.retention_word_ticks, 144);
+        assert_eq!(h.retention_j.to_bits(), (2e-12f64).to_bits());
+        assert!(h.any());
+    }
+}

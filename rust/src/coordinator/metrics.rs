@@ -6,6 +6,8 @@ use crate::fault::FaultSummary;
 use crate::soc::KrakenSoc;
 use crate::util::stats::Percentiles;
 
+use super::hibernate::HibernationStats;
+
 #[derive(Debug, Default, Clone)]
 pub struct ServingMetrics {
     /// Simulated on-chip latency per served frame (µs).
@@ -86,6 +88,10 @@ pub struct ServingReport {
     /// Fault-injection/resilience ledger: exactly `Default` for a run
     /// with no armed fault plan (the zero-BER bit-exactness contract).
     pub faults: FaultSummary,
+    /// Hibernation ledger: exactly `Default` for an always-resident run.
+    /// Retention/wake energy lives here, never in `soc_energy_j` — the
+    /// idle tier must not perturb the calibrated serving ledgers.
+    pub hib: HibernationStats,
 }
 
 impl ServingReport {
@@ -97,6 +103,7 @@ impl ServingReport {
         soc: &KrakenSoc,
         labels: Vec<usize>,
         faults: FaultSummary,
+        hib: HibernationStats,
     ) -> Self {
         metrics.soc_energy_j = soc.energy_j();
         ServingReport {
@@ -106,6 +113,7 @@ impl ServingReport {
             metrics,
             labels,
             faults,
+            hib,
         }
     }
 }
@@ -125,9 +133,16 @@ mod tests {
         soc.fc_service_done();
         let mut m = ServingMetrics::default();
         m.record_frame(10.0, 5.0, 1e-6);
-        let r = ServingReport::from_parts(m, &soc, vec![3], FaultSummary::default());
+        let r = ServingReport::from_parts(
+            m,
+            &soc,
+            vec![3],
+            FaultSummary::default(),
+            HibernationStats::default(),
+        );
         assert_eq!(r.soc_energy_j.to_bits(), soc.energy_j().to_bits());
         assert!(!r.faults.any(), "clean run carries an all-zero fault ledger");
+        assert!(!r.hib.any(), "always-resident run carries an all-zero hibernation ledger");
         assert_eq!(r.metrics.soc_energy_j.to_bits(), soc.energy_j().to_bits());
         assert_eq!(r.soc_avg_power_w.to_bits(), soc.avg_power_w().to_bits());
         assert_eq!(r.fc_wakeups, 1);

@@ -14,6 +14,7 @@
 //! thin wrapper over.
 
 pub mod engine;
+pub mod hibernate;
 pub mod metrics;
 pub mod pipeline;
 pub mod session;
@@ -21,6 +22,7 @@ pub mod source;
 pub mod stream;
 
 pub use engine::{Engine, EngineConfig};
+pub use hibernate::{HibernationStats, SessionSnapshot, SessionStore, SnapshotError};
 pub use metrics::{ServingMetrics, ServingReport};
 pub use pipeline::{Pipeline, PipelineConfig};
 pub use session::{Session, FAILURE_LIMIT};

@@ -23,7 +23,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 pub use super::metrics::ServingReport;
 use super::engine::{Engine, EngineConfig};
@@ -93,8 +93,11 @@ impl Pipeline {
         Ok(Pipeline { net, cfg, image })
     }
 
-    /// The engine this pipeline's policies are wrappers over.
-    fn engine(&self, workers: usize) -> Engine<'_> {
+    /// The engine this pipeline's policies are wrappers over. The image
+    /// was validated at pipeline construction, but boot can still fail
+    /// legitimately (e.g. a sub-threshold supply with no explicit
+    /// clock) — surfaced as a typed error, not a serving-path panic.
+    fn engine(&self, workers: usize) -> Result<Engine<'_>> {
         Engine::with_image(
             &self.net,
             EngineConfig {
@@ -105,7 +108,7 @@ impl Pipeline {
             },
             Arc::clone(&self.image),
         )
-        .expect("pipeline image was validated against its own network")
+        .context("booting the serving engine")
     }
 
     /// This pipeline's deterministic synthetic gesture stream.
@@ -116,14 +119,14 @@ impl Pipeline {
     /// Deterministic single-threaded serving run: one session, one frame
     /// submitted and drained at a time.
     pub fn run_inline(&self) -> Result<ServingReport> {
-        let mut engine = self.engine(1);
+        let mut engine = self.engine(1)?;
         engine.open_session(0);
         let mut src = self.source();
         for _ in 0..self.cfg.frames {
             engine.submit(0, src.next_frame());
             engine.drain()?;
         }
-        Ok(engine.finish_session(0).expect("session opened"))
+        engine.finish_session(0).context("session 0 was never opened")
     }
 
     /// Producer/consumer topology with a bounded frame queue feeding the
@@ -142,14 +145,14 @@ impl Pipeline {
             }
         });
 
-        let mut engine = self.engine(1);
+        let mut engine = self.engine(1)?;
         engine.open_session(0);
         while let Ok(frame) = rx.recv() {
             engine.submit(0, frame);
             engine.drain()?;
         }
-        producer.join().expect("producer thread");
-        Ok(engine.finish_session(0).expect("session opened"))
+        producer.join().map_err(|_| anyhow!("frame producer thread panicked"))?;
+        engine.finish_session(0).context("session 0 was never opened")
     }
 
     /// Batched multi-frame serving: submit the whole stream, then one
@@ -166,14 +169,14 @@ impl Pipeline {
         if workers <= 1 {
             return self.run_inline();
         }
-        let mut engine = self.engine(workers);
+        let mut engine = self.engine(workers)?;
         engine.open_session(0);
         let mut src = self.source();
         for _ in 0..self.cfg.frames {
             engine.submit(0, src.next_frame());
         }
         engine.drain()?;
-        Ok(engine.finish_session(0).expect("session opened"))
+        engine.finish_session(0).context("session 0 was never opened")
     }
 
     /// The retained pre-engine serve loop: one scheduler, one SoC, the §5
@@ -213,7 +216,13 @@ impl Pipeline {
             let wall_us = wall0.elapsed().as_secs_f64() * 1e6;
             metrics.record_frame(report.time_s * 1e6, wall_us, report.energy_j);
         }
-        Ok(ServingReport::from_parts(metrics, &soc, labels, crate::fault::FaultSummary::default()))
+        Ok(ServingReport::from_parts(
+            metrics,
+            &soc,
+            labels,
+            crate::fault::FaultSummary::default(),
+            super::hibernate::HibernationStats::default(),
+        ))
     }
 }
 

@@ -15,6 +15,7 @@ use crate::fault::{FaultPlan, FaultSummary, Injector};
 use crate::soc::KrakenSoc;
 use crate::tensor::PackedMap;
 
+use super::hibernate::HibernationStats;
 use super::metrics::{ServingMetrics, ServingReport};
 
 /// Terminal frame failures a session absorbs before it is quarantined
@@ -43,6 +44,14 @@ pub struct Session {
     pub(crate) fault: Option<FaultState>,
     /// Fault/resilience ledger (exactly `Default` for a clean session).
     pub faults: FaultSummary,
+    /// Hibernate/resume/retention ledger (exactly `Default` for an
+    /// always-resident session). Rides through snapshots so a session's
+    /// full idle-tier history survives its own hibernation.
+    pub hib: HibernationStats,
+    /// Consecutive engine drains this session sat idle through (resets
+    /// on activity; drives idle eviction). Deliberately NOT snapshotted:
+    /// a freshly resumed session restarts its idle clock.
+    pub(crate) idle_drains: u64,
 }
 
 impl Session {
@@ -55,6 +64,8 @@ impl Session {
             labels: Vec::new(),
             fault: None,
             faults: FaultSummary::default(),
+            hib: HibernationStats::default(),
+            idle_drains: 0,
         }
     }
 
@@ -80,7 +91,7 @@ impl Session {
 
     /// Close the session into its final report.
     pub fn into_report(self) -> ServingReport {
-        ServingReport::from_parts(self.metrics, &self.soc, self.labels, self.faults)
+        ServingReport::from_parts(self.metrics, &self.soc, self.labels, self.faults, self.hib)
     }
 
     /// The per-frame SoC preamble of the §5 autonomous flow: µDMA ingress

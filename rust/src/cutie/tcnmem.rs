@@ -144,6 +144,39 @@ impl TcnMemory {
         self.steps.iter_mut()
     }
 
+    /// Read-only view of the resident ring words, oldest first — the
+    /// hibernation snapshot path. Counters are untouched: snapshotting is
+    /// not a functional read of the memory.
+    pub fn words(&self) -> impl Iterator<Item = &PackedVec> + '_ {
+        self.steps.iter()
+    }
+
+    /// Rebuild a memory from snapshotted parts, re-validating the push
+    /// invariants (occupancy ≤ depth, every word masked to the channel
+    /// width) so a forged or corrupted snapshot cannot materialize a
+    /// state no legal push sequence produces.
+    pub fn from_parts(
+        depth: usize,
+        channels: usize,
+        steps: Vec<PackedVec>,
+        pushes: u64,
+        reads: u64,
+        shift_toggles: u64,
+    ) -> anyhow::Result<TcnMemory> {
+        anyhow::ensure!(
+            steps.len() <= depth,
+            "snapshot holds {} steps but the memory is {depth} deep",
+            steps.len()
+        );
+        for (i, s) in steps.iter().enumerate() {
+            anyhow::ensure!(
+                s.masked(channels) == *s,
+                "snapshot step {i} has plane bits beyond the {channels}-channel width"
+            );
+        }
+        Ok(TcnMemory { depth, channels, steps: steps.into(), pushes, reads, shift_toggles })
+    }
+
     /// Memory size in bytes (2-bit trits) — §5 sizes this at 576 B.
     /// Rounded up per step, so channel widths that are not a multiple of
     /// 4 don't under-report (e.g. depth=4, channels=3 is 4 B, not the

@@ -36,6 +36,13 @@ pub fn calibrated() -> EnergyParams {
         // scrub activity). Sized just under an SRAM word access — a read
         // plus compare, no datapath movement.
         e_scrub_word: 9.0e-12,
+        // Hibernation retention/wake words (not part of the fit: the
+        // calibrated anchors never hibernate, so they see zero of either).
+        // TinyVers-style state-retentive figures — holding an eMRAM-class
+        // word across an idle tick is orders cheaper than touching it;
+        // the wake re-load is priced like a weight-word stream.
+        e_retention: 0.02e-12,
+        e_wake: 2.0e-12,
         p_leak_ref: 0.2e-3,
         leak_slope: 0.187,
     }

@@ -34,6 +34,14 @@ pub struct EnergyParams {
     /// invariant/fingerprint compare — cheaper than a full datapath
     /// access, charged only when a scrub actually fires).
     pub e_scrub_word: f64,
+    /// Retaining one hibernated snapshot word for one idle drain tick
+    /// (TinyVers-style state-retentive eMRAM holding cost). Flat — the
+    /// retention corner is a fixed low-voltage rail, not the dynamic
+    /// supply, so this does not V²-scale.
+    pub e_retention: f64,
+    /// Re-loading one snapshot word into the engine on wake (dyn-scaled:
+    /// the wake path runs at the operating supply).
+    pub e_wake: f64,
     /// CUTIE-domain leakage power (W) at v_ref when powered.
     pub p_leak_ref: f64,
     /// Exponential leakage slope (per volt).

@@ -65,6 +65,10 @@ pub enum FaultSurface {
     WeightMem,
     /// µDMA ingress: frame words in flight (decoder-validated on landing).
     DmaStream,
+    /// Hibernation snapshot store: plane bits of records at rest (the
+    /// state-retentive idle tier's eMRAM analogue). CRC-detected on
+    /// resume; a corrupt record re-initializes the session.
+    Snapshot,
 }
 
 impl FromStr for FaultSurface {
@@ -76,8 +80,9 @@ impl FromStr for FaultSurface {
             "tcnmem" | "tcn" => Ok(FaultSurface::TcnMem),
             "weightmem" | "weights" => Ok(FaultSurface::WeightMem),
             "dma" | "dmastream" => Ok(FaultSurface::DmaStream),
+            "snapshot" | "store" => Ok(FaultSurface::Snapshot),
             other => anyhow::bail!(
-                "unknown fault surface {other:?} (expected actmem|tcnmem|weightmem|dma)"
+                "unknown fault surface {other:?} (expected actmem|tcnmem|weightmem|dma|snapshot)"
             ),
         }
     }
@@ -90,6 +95,7 @@ impl fmt::Display for FaultSurface {
             FaultSurface::TcnMem => "tcnmem",
             FaultSurface::WeightMem => "weightmem",
             FaultSurface::DmaStream => "dma",
+            FaultSurface::Snapshot => "snapshot",
         };
         f.write_str(s)
     }
@@ -208,6 +214,18 @@ impl Injector {
         let (n, c) = (m.pixels.len(), m.c);
         self.corrupt_slots(m.pixels.iter_mut(), n, c)
     }
+
+    /// The injector's exact position: (BER, raw RNG state). Hibernation
+    /// snapshots this so a mid-fault-plan resume continues the geometric
+    /// gap walk where it left off — the byte-identity contract.
+    pub fn state(&self) -> (f64, [u64; 4]) {
+        (self.ber, self.rng.state())
+    }
+
+    /// Rebuild an injector at a saved position (see [`Injector::state`]).
+    pub fn from_state(ber: f64, rng: [u64; 4]) -> Injector {
+        Injector { ber: ber.clamp(0.0, 0.5), rng: Rng::from_state(rng) }
+    }
 }
 
 /// Per-frame fault ledger: what was injected, what the scrub passes
@@ -278,6 +296,9 @@ pub struct FaultSummary {
     pub quarantined: u64,
     /// Frames dropped unserved because the session was quarantined.
     pub dropped_frames: u64,
+    /// Hibernation snapshot records the CRC refused on resume (the
+    /// session was re-initialized rather than restored).
+    pub snapshot_corrupt: u64,
 }
 
 impl FaultSummary {
@@ -304,6 +325,7 @@ impl FaultSummary {
         self.failures += o.failures;
         self.quarantined += o.quarantined;
         self.dropped_frames += o.dropped_frames;
+        self.snapshot_corrupt += o.snapshot_corrupt;
     }
 
     pub fn any(&self) -> bool {
@@ -347,6 +369,8 @@ mod tests {
             ("tcn", FaultSurface::TcnMem),
             ("weightmem", FaultSurface::WeightMem),
             ("dma", FaultSurface::DmaStream),
+            ("snapshot", FaultSurface::Snapshot),
+            ("store", FaultSurface::Snapshot),
         ] {
             assert_eq!(s.parse::<FaultSurface>().unwrap(), want);
         }
@@ -358,6 +382,7 @@ mod tests {
             FaultSurface::TcnMem,
             FaultSurface::WeightMem,
             FaultSurface::DmaStream,
+            FaultSurface::Snapshot,
         ] {
             assert_eq!(s.to_string().parse::<FaultSurface>().unwrap(), s);
         }
@@ -442,6 +467,17 @@ mod tests {
             }
         }
         assert_eq!(words, clone);
+    }
+
+    #[test]
+    fn injector_state_round_trip_resumes_mid_walk() {
+        let mut a = Injector::new(0.01, 99);
+        a.faulted_bits(50_000); // advance partway through the gap walk
+        let (ber, rng) = a.state();
+        let mut b = Injector::from_state(ber, rng);
+        for total in [10u64, 1000, 100_000] {
+            assert_eq!(a.faulted_bits(total), b.faulted_bits(total));
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use anyhow::{bail, ensure, Context, Result};
 use tcn_cutie::coordinator::source::NUM_CLASSES;
 use tcn_cutie::coordinator::{
     DvsSource, Engine, EngineConfig, FrameSource, GestureClass, PackedStream, Pipeline,
-    PipelineConfig, ServingReport,
+    PipelineConfig, ServingReport, SessionStore,
 };
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
@@ -38,8 +38,9 @@ const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
   serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
          [--streams K] [--replay FILE|--record FILE] [--net synthetic]
-         [--fault-surface actmem|tcnmem|weightmem|dma]
+         [--fault-surface actmem|tcnmem|weightmem|dma|snapshot]
          [--fault-ber P | --fault-voltage V] [--fault-seed N]
+         [--hibernate-after N] [--session-store FILE]
   pack-weights --net MANIFEST [--out FILE] | --synthetic DIR [--seed N]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
@@ -54,6 +55,13 @@ artifacts needed).
 SRAM model predicts at supply V, zero at/above 0.5 V) arms a
 deterministic bit-flip plan on every session's chosen surface; the
 report gains a per-session fault/scrub/quarantine summary.
+
+--hibernate-after N snapshots a session into the state-retentive idle
+tier once it sits idle through N consecutive drains (serving then walks
+the streams one per round, so sessions actually idle); it resumes
+bit-exactly on its next frame. --session-store FILE persists the
+snapshots (CRC-guarded records, atomic rename) across serve
+invocations; without it the store is in-memory.
 
 pack-weights upgrades a manifest's `.ttn` weights to the TTN2 container
 (same bundle + a packed (pos, mask) weight-image section) in place, or
@@ -189,6 +197,20 @@ fn print_report(tag: &str, r: &mut ServingReport) {
             f.dropped_frames
         );
     }
+    if r.hib.any() {
+        let h = &r.hib;
+        println!(
+            "  hibernation: {} hibernates, {} resumes ({} corrupt), {} snapshot B, \
+             retention {:.3} nJ / {} word-ticks, wake {:.3} nJ",
+            h.hibernates,
+            h.resumes,
+            h.corrupt_resumes,
+            h.snapshot_bytes,
+            h.retention_j * 1e9,
+            h.retention_word_ticks,
+            h.wake_j * 1e9
+        );
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -223,10 +245,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (None, Some(fv)) => Some(FaultPlan::at_voltage(fault_surface, fv, fault_seed)),
         (None, None) => None,
     };
+    // --hibernate-after / --session-store: the state-retentive idle tier.
+    let hibernate_after = args.opt_parsed::<u64>("hibernate-after")?;
+    let session_store = args.opt("session-store");
+    let hibernate = hibernate_after.is_some() || session_store.is_some();
     if threaded && batch.is_some() {
         bail!("--threaded and --batch are mutually exclusive");
     }
-    if threaded && (streams > 1 || replay.is_some() || fault_plan.is_some()) {
+    if threaded && (streams > 1 || replay.is_some() || fault_plan.is_some() || hibernate) {
         bail!("--threaded serves a single live stream; drop it or use --batch");
     }
     // packed TTN2 artifacts boot word-for-word into the shared image
@@ -245,11 +271,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
-    // Single gesture stream, no replay, no fault plan: the classic
-    // topology policies (all thin wrappers over the same engine path).
-    // A fault plan always routes through the engine, which owns the
-    // per-session injectors.
-    if streams == 1 && replay.is_none() && fault_plan.is_none() {
+    // Single gesture stream, no replay, no fault plan, no idle tier:
+    // the classic topology policies (all thin wrappers over the same
+    // engine path). A fault plan or hibernation always routes through
+    // the engine, which owns the per-session injectors and the store.
+    if streams == 1 && replay.is_none() && fault_plan.is_none() && !hibernate {
         let cfg = PipelineConfig {
             voltage,
             freq_hz,
@@ -308,8 +334,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let pool = ecfg.workers;
     let mut engine = match image {
         Some(img) => Engine::with_image(&net, ecfg, img)?,
-        None => Engine::new(&net, ecfg),
+        None => Engine::new(&net, ecfg)?,
     };
+    if hibernate {
+        let store = match session_store {
+            Some(path) => SessionStore::open(path)?,
+            None => SessionStore::in_memory(),
+        };
+        if store.recovered_torn() {
+            println!("session store: recovered a torn tail (incomplete final record dropped)");
+        }
+        engine.enable_hibernation(store, hibernate_after);
+    }
     // deterministic round-robin interleave across sessions
     for sid in 0..streams {
         engine.open_session(sid);
@@ -320,11 +356,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Drain each round-robin round: memory stays bounded to one frame
     // per stream and wall latency gets a sample per round (the engine's
     // determinism tests prove reports are drain-cadence-invariant).
+    // With an idle tier armed, walk the streams one per round instead —
+    // round-robin keeps every session busy every drain and nothing
+    // would ever idle long enough to hibernate.
     let mut served = 0;
-    for _ in 0..frames {
-        for (sid, src) in sources.iter_mut().enumerate() {
-            if let Some(f) = src.next_frame() {
+    for round in 0..frames {
+        if hibernate_after.is_some() {
+            let sid = round % streams;
+            if let Some(f) = sources[sid].next_frame() {
                 engine.submit(sid, f);
+            }
+        } else {
+            for (sid, src) in sources.iter_mut().enumerate() {
+                if let Some(f) = src.next_frame() {
+                    engine.submit(sid, f);
+                }
             }
         }
         served += engine.drain()?;
@@ -339,6 +385,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_report(&format!("  [session {sid}]"), &mut r);
     }
     print_report("aggregate", &mut agg);
+    // finishing consumed every stored snapshot; persist the (now empty)
+    // store so a later invocation reopens a consistent file
+    engine.sync_store()?;
     Ok(())
 }
 

@@ -437,7 +437,10 @@ pub fn strip_bytes(v2: &[u8]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-fn take<'a>(b: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
+// The wire-format readers are shared with the hibernation snapshot codec
+// (`coordinator::hibernate`), which reuses this hardened take-before-alloc
+// machinery for its own sections.
+pub(crate) fn take<'a>(b: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
     if b.len() < n {
         bail!("unexpected eof (wanted {n}, have {})", b.len());
     }
@@ -446,7 +449,7 @@ fn take<'a>(b: &mut &'a [u8], n: usize) -> Result<&'a [u8]> {
     Ok(head)
 }
 
-fn read_u8(b: &mut &[u8]) -> Result<u8> {
+pub(crate) fn read_u8(b: &mut &[u8]) -> Result<u8> {
     Ok(take(b, 1)?[0])
 }
 
@@ -454,8 +457,12 @@ fn read_u16(b: &mut &[u8]) -> Result<u16> {
     Ok(u16::from_le_bytes(take(b, 2)?.try_into().unwrap()))
 }
 
-fn read_u32(b: &mut &[u8]) -> Result<u32> {
+pub(crate) fn read_u32(b: &mut &[u8]) -> Result<u32> {
     Ok(u32::from_le_bytes(take(b, 4)?.try_into().unwrap()))
+}
+
+pub(crate) fn read_u64(b: &mut &[u8]) -> Result<u64> {
+    Ok(u64::from_le_bytes(take(b, 8)?.try_into().unwrap()))
 }
 
 fn read_i32s(b: &mut &[u8], n: usize) -> Result<Vec<i32>> {

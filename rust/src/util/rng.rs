@@ -77,6 +77,18 @@ impl Rng {
     pub fn fork(&mut self, tag: u64) -> Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
+
+    /// The raw xoshiro state, for exact-position checkpointing (session
+    /// hibernation snapshots the armed fault injector mid-stream).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact saved position: the next draw
+    /// equals what the snapshotted generator would have drawn.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +135,18 @@ mod tests {
         let zeros = (0..n).filter(|_| r.trit(0.4) == 0).count();
         let frac = zeros as f64 / n as f64;
         assert!((frac - 0.4).abs() < 0.02, "zero fraction {frac}");
+    }
+
+    #[test]
+    fn state_round_trip_resumes_mid_stream() {
+        let mut a = Rng::new(77);
+        for _ in 0..13 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

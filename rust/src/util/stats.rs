@@ -59,6 +59,19 @@ impl Percentiles {
     pub fn max(&mut self) -> f64 {
         self.quantile(1.0)
     }
+
+    /// The raw sample set in insertion-or-sorted order (whichever the
+    /// histogram currently holds). Quantiles depend only on the multiset,
+    /// so round-tripping through [`Percentiles::from_samples`] preserves
+    /// every quantile bit-exactly.
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Rebuild a histogram from a saved sample set.
+    pub fn from_samples(samples: Vec<f64>) -> Percentiles {
+        Percentiles { samples, sorted: false }
+    }
 }
 
 /// Median and median-absolute-deviation of a sample set.

@@ -42,7 +42,7 @@ fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
 /// Serve `frames` frames of stream `s` alone on a fresh engine.
 fn serve_isolated(net: &Network, mode: SimMode, s: usize, frames: usize) -> ServingReport {
     let cfg = EngineConfig { mode, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(net, cfg);
+    let mut engine = Engine::new(net, cfg).unwrap();
     engine.open_session(s);
     let mut src = source_for(net, s);
     for _ in 0..frames {
@@ -65,7 +65,7 @@ fn interleaved_sessions_match_isolated() {
                 (0..k).map(|s| serve_isolated(&net, mode, s, frames)).collect();
 
             let cfg = EngineConfig { mode, workers: 1, ..Default::default() };
-            let mut engine = Engine::new(&net, cfg);
+            let mut engine = Engine::new(&net, cfg).unwrap();
             let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(&net, s)).collect();
             for f in 0..frames {
                 for (s, src) in srcs.iter_mut().enumerate() {
@@ -98,7 +98,7 @@ fn worker_pool_matches_serial_engine_across_sessions() {
         (0..k).map(|s| serve_isolated(&net, SimMode::Fast, s, frames)).collect();
 
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 3, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(&net, s)).collect();
     for _ in 0..frames {
         for (s, src) in srcs.iter_mut().enumerate() {
@@ -128,7 +128,7 @@ fn replayed_word_stream_serves_identically_to_live_source() {
     let mut replay = PackedStream::decode(&stream.encode()).unwrap();
 
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     engine.open_session(0);
     // submit_from pulls until the finite stream dries up
     assert_eq!(engine.submit_from(0, &mut replay, usize::MAX), frames);
@@ -146,7 +146,7 @@ fn mixed_source_feeds_engine_deterministically() {
     let serve = |seed: u64| -> ServingReport {
         let mut mixer = MixedSource::of_gestures(net.input_hw, seed, &[1, 7, 10]);
         let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-        let mut engine = Engine::new(&net, cfg);
+        let mut engine = Engine::new(&net, cfg).unwrap();
         engine.open_session(0);
         engine.submit_from(0, &mut mixer, 6);
         engine.drain().unwrap();
@@ -172,7 +172,7 @@ fn pool_shares_exactly_one_weight_image() {
     let net = dvs_hybrid_random(16, 5, 0.5);
     let k = 4;
     let cfg = EngineConfig { mode: SimMode::Fast, workers: k, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     assert_eq!(engine.pool_size(), k);
     assert_eq!(
         Arc::strong_count(engine.image()),
@@ -198,7 +198,8 @@ fn pool_shares_exactly_one_weight_image() {
     let serial = Engine::new(
         &net,
         EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
-    );
+    )
+    .unwrap();
     assert_eq!(serial.pool_size(), 0);
     assert_eq!(Arc::strong_count(serial.image()), 2);
 }
@@ -220,7 +221,7 @@ fn packed_image_boot_serves_byte_identically() {
     for mode in [SimMode::Fast, SimMode::Accurate] {
         for workers in [1usize, 3] {
             let cfg = EngineConfig { mode, workers, ..Default::default() };
-            let mut from_i8 = Engine::new(&net, cfg.clone());
+            let mut from_i8 = Engine::new(&net, cfg.clone()).unwrap();
             let mut from_img = Engine::with_image(&net, cfg, Arc::clone(&loaded)).unwrap();
             let k = 2;
             let frames = 3;
@@ -274,7 +275,7 @@ fn mismatched_image_is_a_boot_error() {
 fn empty_and_unknown_sessions_behave() {
     let net = dvs_hybrid_random(16, 5, 0.5);
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     assert_eq!(engine.drain().unwrap(), 0, "empty drain is a no-op");
     assert!(engine.finish_session(9).is_none(), "unknown session has no report");
     engine.open_session(2);
@@ -294,7 +295,7 @@ fn session_state_is_isolated_not_shared() {
     let frames: Vec<PackedMap> = (0..4).map(|_| src.next_frame()).collect();
 
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     for f in &frames {
         engine.submit(0, f.clone());
         engine.submit(1, f.clone());

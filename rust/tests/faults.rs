@@ -13,11 +13,12 @@ use tcn_cutie::fault::{FaultPlan, FaultSurface};
 use tcn_cutie::network::{dvs_hybrid_random, Network};
 use tcn_cutie::tensor::PackedMap;
 
-const SURFACES: [FaultSurface; 4] = [
+const SURFACES: [FaultSurface; 5] = [
     FaultSurface::ActMem,
     FaultSurface::TcnMem,
     FaultSurface::WeightMem,
     FaultSurface::DmaStream,
+    FaultSurface::Snapshot,
 ];
 
 fn source_for(net: &Network, s: usize) -> DvsSource {
@@ -55,7 +56,7 @@ fn serve_with_plan(
     plan: Option<FaultPlan>,
 ) -> ServingReport {
     let cfg = EngineConfig { mode, workers, ..Default::default() };
-    let mut engine = Engine::new(net, cfg);
+    let mut engine = Engine::new(net, cfg).unwrap();
     engine.open_session(s);
     if let Some(p) = plan {
         engine.set_fault_plan(s, p);
@@ -108,7 +109,7 @@ fn injected_session_cannot_perturb_clean_neighbors() {
             .collect();
 
         let cfg = EngineConfig { mode: SimMode::Fast, workers, ..Default::default() };
-        let mut engine = Engine::new(&net, cfg);
+        let mut engine = Engine::new(&net, cfg).unwrap();
         for s in 0..3 {
             engine.open_session(s);
         }
@@ -200,7 +201,7 @@ fn failing_session_is_quarantined_not_fatal() {
     // healthy co-session and drain() never errors.
     let net = dvs_hybrid_random(16, 5, 0.5);
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     engine.open_session(0);
     engine.open_session(1);
     let mut src = source_for(&net, 1);
@@ -238,7 +239,7 @@ fn fault_plans_are_per_session_and_reseeded() {
     // plan is queryable back from the engine.
     let net = dvs_hybrid_random(16, 5, 0.5);
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg);
+    let mut engine = Engine::new(&net, cfg).unwrap();
     let plan = FaultPlan::with_ber(FaultSurface::ActMem, 5e-3, 21);
     engine.set_fault_plan(4, plan);
     engine.set_fault_plan(9, plan);

@@ -1,0 +1,443 @@
+//! Integration tests of the crash-safe hibernation tier: hibernate →
+//! resume cycles must be byte-identical to always-resident serving
+//! (labels, fc_wakeups, every energy ledger's f64 bits, latency
+//! quantiles — in both sim modes, serial and pooled, clean and
+//! mid-fault-plan), idle eviction must be transparent to the serve
+//! path, and a corrupt, truncated or forged store record must surface
+//! as a typed refusal with visible counters — never a panic, never a
+//! silently wrong session.
+
+use std::fs;
+
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, GestureClass, ServingReport, Session, SessionSnapshot,
+    SessionStore,
+};
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::fault::{FaultPlan, FaultSurface};
+use tcn_cutie::network::{dvs_hybrid_random, Network};
+
+fn tmp_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tcn_cutie_hib_{name}"))
+}
+
+fn source_for(net: &Network, s: usize) -> DvsSource {
+    DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12))
+}
+
+fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits(), "{ctx}: soc energy");
+    assert_eq!(a.soc_avg_power_w.to_bits(), b.soc_avg_power_w.to_bits(), "{ctx}: soc power");
+    assert_eq!(
+        a.metrics.core_energy_j.to_bits(),
+        b.metrics.core_energy_j.to_bits(),
+        "{ctx}: core energy"
+    );
+    assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}: sim time");
+    assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}: frames");
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(
+            a.metrics.sim_latency_us.quantile(q).to_bits(),
+            b.metrics.sim_latency_us.quantile(q).to_bits(),
+            "{ctx}: sim latency q{q}"
+        );
+    }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault summary");
+}
+
+/// Serve `frames` frames of stream `s`, always resident, draining per
+/// frame; `plan` optionally arms fault injection.
+fn serve_resident(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    s: usize,
+    frames: usize,
+    plan: Option<FaultPlan>,
+) -> ServingReport {
+    let cfg = EngineConfig { mode, workers, ..Default::default() };
+    let mut engine = Engine::new(net, cfg).unwrap();
+    engine.open_session(s);
+    if let Some(p) = plan {
+        engine.set_fault_plan(s, p);
+    }
+    let mut src = source_for(net, s);
+    for _ in 0..frames {
+        engine.submit(s, src.next_frame());
+        engine.drain().unwrap();
+    }
+    engine.finish_session(s).unwrap()
+}
+
+/// The same schedule, but the session round-trips through the idle
+/// tier after every single frame: submit (transparent resume) → drain
+/// → explicit hibernate. The harshest possible cycling.
+fn serve_hibernating(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    s: usize,
+    frames: usize,
+    plan: Option<FaultPlan>,
+) -> ServingReport {
+    let cfg = EngineConfig { mode, workers, ..Default::default() };
+    let mut engine = Engine::new(net, cfg).unwrap();
+    engine.enable_hibernation(SessionStore::in_memory(), None);
+    engine.open_session(s);
+    if let Some(p) = plan {
+        engine.set_fault_plan(s, p);
+    }
+    let mut src = source_for(net, s);
+    for _ in 0..frames {
+        engine.submit(s, src.next_frame());
+        engine.drain().unwrap();
+        engine.hibernate(s).unwrap();
+    }
+    engine.finish_session(s).unwrap()
+}
+
+#[test]
+fn hibernate_resume_cycles_are_byte_identical() {
+    // The tentpole acceptance gate: a session that hibernates after
+    // EVERY frame must close with a report byte-identical to one that
+    // never left residency — clean and with an armed, actively drawing
+    // TcnMem fault plan (the injector's RNG position rides inside the
+    // snapshot, so a resumed walk continues mid-plan exactly).
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 4;
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1usize, 3] {
+            for plan in [None, Some(FaultPlan::with_ber(FaultSurface::TcnMem, 0.05, 13))] {
+                let armed = plan.is_some();
+                let mut resident = serve_resident(&net, mode, workers, 0, frames, plan);
+                let mut cycled = serve_hibernating(&net, mode, workers, 0, frames, plan);
+                if armed {
+                    assert!(resident.faults.injected_flips > 0, "plan must actually draw");
+                }
+                assert_identical(
+                    &mut cycled,
+                    &mut resident,
+                    &format!("{mode:?} workers={workers} armed={armed}"),
+                );
+                // ...while the hibernation ledger records the cycling
+                // without leaking into the compared fields above.
+                assert_eq!(cycled.hib.hibernates, frames as u64);
+                assert_eq!(cycled.hib.resumes, frames as u64);
+                assert_eq!(cycled.hib.corrupt_resumes, 0);
+                assert!(cycled.hib.snapshot_bytes > 0);
+                assert!(cycled.hib.wake_j > 0.0);
+                assert!(!resident.hib.any(), "resident run must not touch the idle tier");
+            }
+        }
+    }
+}
+
+#[test]
+fn idle_eviction_hibernates_and_resumes_transparently() {
+    // --hibernate-after semantics: a session idle through N consecutive
+    // drains is snapshotted out of residency; its next frame restores
+    // it without the caller doing anything.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg).unwrap();
+    engine.enable_hibernation(SessionStore::in_memory(), Some(2));
+    let mut src0 = source_for(&net, 0);
+    let mut src1 = source_for(&net, 1);
+
+    // round 0: both sessions serve
+    engine.submit(0, src0.next_frame());
+    engine.submit(1, src1.next_frame());
+    engine.drain().unwrap();
+    // rounds 1..=3: only session 0 — session 1 idles past the limit
+    for _ in 0..3 {
+        engine.submit(0, src0.next_frame());
+        engine.drain().unwrap();
+    }
+    assert!(engine.store().unwrap().contains(1), "idle session must be in the store");
+    assert!(!engine.store().unwrap().contains(0), "active session stays resident");
+    assert!(engine.session(1).is_none());
+
+    // explicit resume consumes the record; a second resume is a no-op
+    assert!(engine.resume(1).unwrap(), "record must be consumed");
+    assert!(!engine.resume(1).unwrap(), "already resident");
+    assert!(!engine.store().unwrap().contains(1));
+
+    // second frame serves as if the eviction never happened
+    engine.submit(1, src1.next_frame());
+    engine.drain().unwrap();
+    let mut rep = engine.finish_session(1).unwrap();
+    assert_eq!(rep.hib.hibernates, 1);
+    assert_eq!(rep.hib.resumes, 1);
+    assert!(rep.hib.retention_word_ticks > 0, "stored drains must pay retention");
+    assert!(rep.hib.retention_j > 0.0);
+
+    // byte-identity against a resident run of the same two frames
+    let mut resident = serve_resident(&net, SimMode::Fast, 1, 1, 2, None);
+    assert_identical(&mut rep, &mut resident, "evicted+resumed session");
+}
+
+#[test]
+fn zero_ber_snapshot_plan_stays_bit_exact() {
+    // The fifth fault surface honors the zero-BER contract under real
+    // hibernate/resume cycling: an armed-but-inert snapshot plan draws
+    // nothing and perturbs nothing.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let plan = FaultPlan::with_ber(FaultSurface::Snapshot, 0.0, 99);
+    let mut clean = serve_hibernating(&net, SimMode::Fast, 1, 0, 4, None);
+    let mut armed = serve_hibernating(&net, SimMode::Fast, 1, 0, 4, Some(plan));
+    assert_identical(&mut armed, &mut clean, "zero-BER snapshot plan");
+    assert_eq!(armed.faults.injected_flips, 0);
+    assert_eq!(armed.faults.snapshot_corrupt, 0);
+    assert_eq!(armed.hib.corrupt_resumes, 0);
+}
+
+#[test]
+fn snapshot_surface_corruption_reinitializes_visibly() {
+    // An actively drawing snapshot plan rots the stored record between
+    // hibernate and resume. The CRC refuses it; the session restarts
+    // from scratch with every counter raised — and the engine never
+    // errors, let alone panics, on the serve path.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg).unwrap();
+    engine.enable_hibernation(SessionStore::in_memory(), None);
+    engine.set_fault_plan(0, FaultPlan::with_ber(FaultSurface::Snapshot, 0.05, 9));
+    let mut src = source_for(&net, 0);
+    for _ in 0..3 {
+        engine.submit(0, src.next_frame());
+        engine.drain().unwrap();
+    }
+    engine.hibernate(0).unwrap();
+    // transparent (corrupt) resume on the next frame
+    engine.submit(0, src.next_frame());
+    engine.drain().unwrap();
+    let rep = engine.finish_session(0).unwrap();
+    assert_eq!(rep.faults.snapshot_corrupt, 1, "the refusal must be visible");
+    assert_eq!(rep.hib.corrupt_resumes, 1);
+    assert!(rep.faults.injected_flips > 0, "0.05 BER over the record must draw");
+    assert_eq!(rep.faults.detected, rep.faults.injected_flips, "every flip is CRC-caught");
+    assert!(rep.hib.snapshot_bytes > 0, "the write itself still happened");
+    // the record's in-flight history (3 frames) died with the record;
+    // only the post-corruption frame survives
+    assert_eq!(rep.metrics.frames, 1);
+    assert_eq!(rep.labels.len(), 1);
+}
+
+#[test]
+fn kill_and_reopen_resumes_from_disk() {
+    // The crash-safety claim end to end: hibernate two sessions into a
+    // file-backed store, drop the engine (the "kill"), reopen the store
+    // in a fresh engine and keep serving — the final reports must be
+    // byte-identical to never having restarted at all.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let path = tmp_path("kill_reopen.store");
+    let _ = fs::remove_file(&path);
+
+    // phase A: 4 frames each, then hibernate everything and "die"
+    {
+        let mut engine = Engine::new(&net, cfg.clone()).unwrap();
+        engine.enable_hibernation(SessionStore::open(&path).unwrap(), None);
+        let mut srcs: Vec<DvsSource> = (0..2).map(|s| source_for(&net, s)).collect();
+        for _ in 0..4 {
+            for (s, src) in srcs.iter_mut().enumerate() {
+                engine.submit(s, src.next_frame());
+            }
+            engine.drain().unwrap();
+        }
+        engine.hibernate(0).unwrap();
+        engine.hibernate(1).unwrap();
+        // no graceful shutdown from here: the engine is just dropped
+    }
+    let disk_image = fs::read(&path).unwrap();
+
+    // phase B: a new process reopens the store and continues serving
+    let store = SessionStore::open(&path).unwrap();
+    assert!(!store.recovered_torn());
+    assert_eq!(store.len(), 2, "both sessions must have survived the restart");
+    let mut engine = Engine::new(&net, cfg).unwrap();
+    engine.enable_hibernation(store, None);
+    let mut srcs: Vec<DvsSource> = (0..2)
+        .map(|s| {
+            let mut src = source_for(&net, s);
+            for _ in 0..4 {
+                src.next_frame(); // phase A already consumed these
+            }
+            src
+        })
+        .collect();
+    for _ in 0..4 {
+        for (s, src) in srcs.iter_mut().enumerate() {
+            engine.submit(s, src.next_frame());
+        }
+        engine.drain().unwrap();
+    }
+    for (s, mut rep) in engine.finish_all() {
+        assert_eq!(rep.hib.hibernates, 1, "session {s}");
+        assert_eq!(rep.hib.resumes, 1, "session {s}");
+        assert_eq!(rep.hib.corrupt_resumes, 0, "session {s}");
+        let mut resident = serve_resident(&net, SimMode::Fast, 1, s, 8, None);
+        assert_identical(&mut rep, &mut resident, &format!("session {s} across the restart"));
+    }
+
+    // phase C: the same disk image with its tail torn off (kill mid-
+    // write of the LAST record) keeps every intact record before it.
+    let torn = tmp_path("kill_reopen_torn.store");
+    fs::write(&torn, &disk_image[..disk_image.len() - 10]).unwrap();
+    let torn_store = SessionStore::open(&torn).unwrap();
+    assert!(torn_store.recovered_torn(), "the chopped tail must be reported");
+    assert_eq!(torn_store.len(), 1, "only the intact record survives");
+    assert!(torn_store.contains(0));
+    assert!(torn_store.peek(0).unwrap().is_ok(), "the survivor decodes cleanly");
+    let _ = fs::remove_file(&path);
+    let _ = fs::remove_file(&torn);
+}
+
+#[test]
+fn truncated_store_files_never_panic() {
+    // Chop a healthy 3-record store file at EVERY byte boundary and
+    // reopen: each cut yields either a typed error (unreadable prefix)
+    // or a store whose surviving records are exactly an intact prefix —
+    // decodable, CRC-clean, never a panic.
+    let path = tmp_path("trunc_sweep.store");
+    let cut_path = tmp_path("trunc_sweep_cut.store");
+    let _ = fs::remove_file(&path);
+    let mut store = SessionStore::open(&path).unwrap();
+    for id in [3u64, 7, 11] {
+        let sess = Session::new(id as usize, 0.5, 8, 16);
+        store.insert(id, SessionSnapshot::capture(&sess).encode());
+    }
+    store.sync().unwrap();
+    let bytes = fs::read(&path).unwrap();
+
+    for cut in 0..=bytes.len() {
+        fs::write(&cut_path, &bytes[..cut]).unwrap();
+        match SessionStore::open(&cut_path) {
+            Ok(s) => {
+                for id in s.ids() {
+                    assert!([3, 7, 11].contains(&id), "cut {cut}: alien record {id}");
+                    assert!(
+                        s.peek(id).unwrap().is_ok(),
+                        "cut {cut}: a kept record must be fully intact"
+                    );
+                }
+                if cut == bytes.len() {
+                    assert_eq!(s.len(), 3, "the untruncated file holds everything");
+                    assert!(!s.recovered_torn());
+                }
+            }
+            // an unreadable prefix (e.g. a chopped magic) is a typed
+            // refusal — also fine, as long as nothing panics
+            Err(_) => assert!(cut < bytes.len(), "the full file must open"),
+        }
+    }
+    let _ = fs::remove_file(&path);
+    let _ = fs::remove_file(&cut_path);
+}
+
+#[test]
+fn store_bit_rot_is_always_detected() {
+    // Single-bit rot anywhere in a stored record must be caught by the
+    // per-record CRC (a 1-bit error never aliases CRC-32), and flipping
+    // the same bit back must restore a cleanly decodable record.
+    let mut store = SessionStore::in_memory();
+    let mut sess = Session::new(1, 0.5, 8, 16);
+    sess.metrics.record_frame(12.5, 3.0, 1.5e-6);
+    sess.labels.push(4);
+    let payload = SessionSnapshot::capture(&sess).encode();
+    let bits = payload.len() as u64 * 8;
+    store.insert(1, payload);
+    assert!(store.peek(1).unwrap().is_ok());
+
+    let mut addr = 0u64;
+    while addr < bits {
+        store.flip_bits(1, &[addr]);
+        assert!(store.peek(1).unwrap().is_err(), "bit {addr}: rot must be detected");
+        store.flip_bits(1, &[addr]);
+        assert!(store.peek(1).unwrap().is_ok(), "bit {addr}: flip-back must heal");
+        addr += 97;
+    }
+}
+
+#[test]
+fn forged_records_are_refused() {
+    // CRC-clean but structurally wrong records — a snapshot filed under
+    // another session's id, a foreign magic, an unknown version — are
+    // refused by decode validation, not trusted because the checksum
+    // happens to match the forged bytes.
+    let mut store = SessionStore::in_memory();
+    let valid = SessionSnapshot::capture(&Session::new(1, 0.5, 8, 16)).encode();
+
+    // (a) filed under the wrong id
+    store.insert(2, valid.clone());
+    assert!(store.peek(2).unwrap().is_err(), "id 1 snapshot must not resume session 2");
+
+    // (b) forged magic
+    let mut forged = valid.clone();
+    forged[0] ^= 0xFF;
+    store.insert(1, forged);
+    assert!(store.peek(1).unwrap().is_err(), "foreign magic");
+
+    // (c) unknown version
+    let mut forged = valid.clone();
+    forged[4] = forged[4].wrapping_add(1);
+    store.insert(1, forged);
+    assert!(store.peek(1).unwrap().is_err(), "unknown version");
+
+    // (d) the untampered record still decodes
+    store.insert(1, valid);
+    assert!(store.peek(1).unwrap().is_ok());
+}
+
+#[test]
+fn hibernate_api_contracts() {
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+
+    // without the idle tier, both verbs are typed errors
+    let mut engine = Engine::new(&net, cfg.clone()).unwrap();
+    engine.open_session(0);
+    assert!(engine.hibernate(0).is_err(), "hibernation is not enabled");
+    assert!(engine.resume(0).is_err(), "hibernation is not enabled");
+
+    let mut engine = Engine::new(&net, cfg).unwrap();
+    engine.enable_hibernation(SessionStore::in_memory(), None);
+    assert!(engine.hibernate(5).is_err(), "unknown session cannot hibernate");
+    assert!(engine.resume(5).is_err(), "no record, no session");
+
+    // pending frames block hibernation (their state is still in flight)
+    let mut src = source_for(&net, 0);
+    engine.submit(0, src.next_frame());
+    assert!(engine.hibernate(0).is_err(), "must drain first");
+    engine.drain().unwrap();
+    engine.hibernate(0).unwrap();
+    assert!(engine.hibernate(0).is_err(), "already hibernated");
+}
+
+#[test]
+fn kraken_snapshot_size_vs_sram_anchor() {
+    // The §Hibernation size claim: at the paper's geometry (24-step,
+    // 96-channel TCN window — 576 B of SCM content) a full-ring session
+    // snapshot costs a small constant factor over the raw window: 4
+    // u64 plane words per step (768 B) plus the fixed SoC/metrics
+    // sections, bounded well under 2 KiB.
+    let mut sess = Session::new(0, 0.5, 24, 96);
+    let feat: Vec<i8> = (0..96).map(|c| [1i8, -1, 0][c % 3]).collect();
+    for _ in 0..24 {
+        sess.tcn.push(&feat);
+    }
+    let payload = SessionSnapshot::capture(&sess).encode();
+    assert!(payload.len() > 24 * 32, "a full ring dominates the record");
+    assert!(payload.len() < 2048, "snapshot stays within 2 KiB at the Kraken anchor");
+    // and it restores bit-exactly, ring content included
+    let snap = SessionSnapshot::decode(&payload, 0).unwrap();
+    let restored = snap.into_session().unwrap();
+    assert_eq!(restored.tcn.len(), 24);
+    assert_eq!(
+        SessionSnapshot::capture(&restored).encode(),
+        payload,
+        "re-capture of the restored session is byte-identical"
+    );
+}

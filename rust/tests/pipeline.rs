@@ -71,7 +71,7 @@ fn engine_reference_and_multi_stream_on_real_net() {
     let solo: Vec<_> = (0..2)
         .map(|s| {
             let ecfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-            let mut e = Engine::new(&net, ecfg);
+            let mut e = Engine::new(&net, ecfg).unwrap();
             let mut src = DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s));
             for _ in 0..3 {
                 e.submit(s, src.next_frame());
@@ -81,7 +81,7 @@ fn engine_reference_and_multi_stream_on_real_net() {
         })
         .collect();
     let ecfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut e = Engine::new(&net, ecfg);
+    let mut e = Engine::new(&net, ecfg).unwrap();
     let mut srcs: Vec<DvsSource> =
         (0..2).map(|s| DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s))).collect();
     for _ in 0..3 {
