@@ -15,7 +15,8 @@
 //!     cargo bench --bench hotpath
 
 use tcn_cutie::coordinator::{
-    DvsSource, Engine, EngineConfig, GestureClass, Pipeline, PipelineConfig, SessionSnapshot,
+    DvsSource, Engine, EngineConfig, Fleet, FleetConfig, GestureClass, Pipeline, PipelineConfig,
+    SessionSnapshot,
 };
 use tcn_cutie::cutie::datapath::{run_prepared, run_prepared_window, PreparedLayer};
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
@@ -336,6 +337,44 @@ fn main() {
     );
     suite.push(&r_snap);
     suite.push(&r_restore);
+
+    // --- fleet: routed submit round and live session migration ---
+    // The sharded-fleet entries (EXPERIMENTS.md §Fleet): one round of 8
+    // streams hash-routed and served through a 2-engine fleet, and one
+    // live migration (settle → snapshot export → import → reroute).
+    let mut fleet = Fleet::new(
+        &dnet,
+        FleetConfig {
+            engines: 2,
+            engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut fleet_srcs: Vec<DvsSource> =
+        (0..8).map(|s| DvsSource::new(64, 61 + s as u64, GestureClass(s % 12))).collect();
+    for (sid, src) in fleet_srcs.iter_mut().enumerate() {
+        fleet.submit(sid, src.next_frame()).unwrap();
+    }
+    fleet.drain().unwrap(); // warm: every session resident on its engine
+    let r_route = bench("fleet: route submit", 1, 5, || {
+        for (sid, src) in fleet_srcs.iter_mut().enumerate() {
+            fleet.submit(sid, src.next_frame()).unwrap();
+        }
+        fleet.drain().unwrap()
+    });
+    let mut target = fleet.route(0).map(|e| (e + 1) % 2).unwrap_or(1);
+    let r_migrate = bench("fleet: migrate session", 3, 30, || {
+        fleet.migrate(0, target).unwrap();
+        target = (target + 1) % 2;
+    });
+    println!(
+        "  fleet: 8-stream routed round in {:.1} µs wall, live migration {:.1} µs wall\n",
+        r_route.median_s * 1e6,
+        r_migrate.median_s * 1e6
+    );
+    suite.push(&r_route);
+    suite.push(&r_migrate);
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {

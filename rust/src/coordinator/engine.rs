@@ -39,15 +39,15 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::hibernate::{HibernationStats, SessionSnapshot, SessionStore};
-use super::metrics::{ServingMetrics, ServingReport};
+use super::metrics::{ReportAccumulator, ServingReport};
 use super::session::{FaultState, Session};
 use super::source::FrameSource;
 use crate::cutie::{CutieConfig, PreparedNet, RunStats, Scheduler, SimMode};
 use crate::energy::{evaluate, EnergyParams};
-use crate::fault::{FaultPlan, FaultSummary, FaultSurface, FrameFaults, Injector};
+use crate::fault::{FaultPlan, FaultSurface, FrameFaults, Injector};
 use crate::network::Network;
 use crate::tensor::PackedMap;
 
@@ -92,6 +92,9 @@ pub struct Engine<'n> {
     pending: Vec<(usize, PackedMap, FrameFaults)>,
     /// The state-retentive idle tier (None = always-resident serving).
     hib: Option<HibernateTier>,
+    /// Monotonic drain counter — the engine's coarse clock for
+    /// least-recently-active accounting (`Session::last_active`).
+    drains: u64,
 }
 
 /// The engine's idle tier: the snapshot store plus the eviction policy.
@@ -100,6 +103,10 @@ struct HibernateTier {
     /// Hibernate a session once it sits idle through this many
     /// consecutive drains (None = explicit hibernation only).
     after: Option<u64>,
+    /// Resident-session capacity: after each drain, least-recently-
+    /// active sessions above this count are hibernated even if they
+    /// were never idle (None = unbounded residency).
+    budget: Option<usize>,
     /// Engine-side per-record accruals that cannot live inside the CRC'd
     /// record itself (retention ticks, write volume, injected flips).
     /// Merged into the session at resume. Lost across a process restart:
@@ -190,6 +197,7 @@ impl<'n> Engine<'n> {
             sessions: BTreeMap::new(),
             pending: Vec::new(),
             hib: None,
+            drains: 0,
         })
     }
 
@@ -198,7 +206,21 @@ impl<'n> Engine<'n> {
     /// hibernates automatically once it sits idle through that many
     /// consecutive drains, resuming transparently on its next `submit`.
     pub fn enable_hibernation(&mut self, store: SessionStore, after: Option<u64>) {
-        self.hib = Some(HibernateTier { store, after, pending: BTreeMap::new() });
+        self.hib = Some(HibernateTier { store, after, budget: None, pending: BTreeMap::new() });
+    }
+
+    /// Cap resident sessions (capacity-driven hibernation): after each
+    /// drain, the least-recently-active sessions above `budget` are
+    /// snapshotted out through the idle-tier path — even when they are
+    /// never idle — and resume transparently on their next submit.
+    /// Requires [`Engine::enable_hibernation`] first (the snapshots need
+    /// a store). `None` removes the cap.
+    pub fn set_resident_budget(&mut self, budget: Option<usize>) -> Result<()> {
+        let Some(tier) = self.hib.as_mut() else {
+            bail!("a resident-session budget needs hibernation enabled first");
+        };
+        tier.budget = budget;
+        Ok(())
     }
 
     /// The idle tier's snapshot store, when hibernation is enabled.
@@ -265,6 +287,61 @@ impl<'n> Engine<'n> {
         self.ensure_resident(id);
         ensure!(self.sessions.contains_key(&id), "session {id} has no hibernation record");
         Ok(true)
+    }
+
+    /// Remove a session from this engine and hand back its complete
+    /// state — the live-migration egress. The capture is a pure read of
+    /// the (resumed-if-hibernated) session: no serving counter moves, so
+    /// a migrated schedule stays byte-identical to an unmigrated one.
+    /// The session must have no pending frames (drain first).
+    pub fn export_session(&mut self, id: usize) -> Result<SessionSnapshot> {
+        ensure!(
+            !self.pending.iter().any(|(sid, _, _)| *sid == id),
+            "session {id} has pending frames; drain before exporting"
+        );
+        self.ensure_resident(id);
+        let sess = self
+            .sessions
+            .remove(&id)
+            .with_context(|| format!("session {id} is not on this engine"))?;
+        Ok(SessionSnapshot::capture(&sess))
+    }
+
+    /// Adopt a migrated session — the live-migration ingress. Refused
+    /// (typed error, nothing half-adopted) when the id is already held
+    /// here, or the snapshot's geometry/operating point does not match
+    /// this engine; restoring either would be silently wrong.
+    pub fn import_session(&mut self, snap: SessionSnapshot) -> Result<()> {
+        let id = snap.session_id as usize;
+        ensure!(!self.sessions.contains_key(&id), "session {id} is already resident here");
+        if let Some(tier) = &self.hib {
+            ensure!(
+                !tier.store.contains(id as u64),
+                "session {id} already has a hibernation record here"
+            );
+        }
+        let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
+        ensure!(
+            snap.tcn.depth as usize == depth && snap.tcn.channels as usize == channels,
+            "snapshot TCN geometry {}x{} does not fit this engine's {}x{}",
+            snap.tcn.depth,
+            snap.tcn.channels,
+            depth,
+            channels
+        );
+        ensure!(
+            snap.voltage.to_bits() == self.cfg.voltage.to_bits(),
+            "snapshot supply {} V does not match this engine's {} V",
+            snap.voltage,
+            self.cfg.voltage
+        );
+        let mut sess = snap
+            .into_session()
+            .map_err(|e| anyhow::anyhow!("restoring migrated session {id}: {e}"))?;
+        // Arrival counts as activity on this engine's LRU clock.
+        sess.last_active = self.drains;
+        self.sessions.insert(id, sess);
+        Ok(())
     }
 
     /// Snapshot + evict, without syncing the store (batched by callers).
@@ -343,7 +420,7 @@ impl<'n> Engine<'n> {
             }
             Err(_) => None,
         };
-        let sess = match restored {
+        let mut sess = match restored {
             Some(mut sess) => {
                 sess.hib.resumes += 1;
                 sess.hib.merge(&pend.stats);
@@ -371,13 +448,26 @@ impl<'n> Engine<'n> {
                 sess
             }
         };
+        // A resume counts as activity on this engine's LRU clock — a
+        // just-woken session is not the next capacity-eviction victim.
+        sess.last_active = self.drains;
         self.sessions.insert(id, sess);
     }
 
-    /// End-of-drain idle-tier bookkeeping: every stored record pays its
-    /// per-word retention cost for this tick, then sessions that sat
-    /// idle through `after` consecutive drains are hibernated.
+    /// End-of-drain bookkeeping: the engine's drain clock ticks and the
+    /// sessions this drain served stamp it (least-recently-active
+    /// accounting); then every stored record pays its per-word retention
+    /// cost for this tick, sessions that sat idle through `after`
+    /// consecutive drains are hibernated, and — when a resident budget
+    /// is set — least-recently-active sessions above it are hibernated
+    /// even if never idle.
     fn hibernate_idle(&mut self, active: &BTreeSet<usize>) -> Result<()> {
+        self.drains += 1;
+        for &sid in active {
+            if let Some(sess) = self.sessions.get_mut(&sid) {
+                sess.last_active = self.drains;
+            }
+        }
         let Some(tier) = self.hib.as_mut() else { return Ok(()) };
         // Retention is flat (the retentive rail is fixed, not the
         // dynamic supply), accrued engine-side: the record's own bytes
@@ -389,6 +479,7 @@ impl<'n> Engine<'n> {
             pend.stats.retention_j += words as f64 * self.params.e_retention;
         }
         let after = tier.after;
+        let budget = tier.budget;
         let mut evict = Vec::new();
         if let Some(n) = after {
             for (&sid, sess) in self.sessions.iter_mut() {
@@ -406,6 +497,22 @@ impl<'n> Engine<'n> {
         }
         for sid in evict {
             self.hibernate_one(sid)?;
+        }
+        // Capacity budget: residency over the cap — not idleness — is
+        // the trigger, so sessions hot on every drain still spill once
+        // the engine is over-subscribed. Victims are least-recently-
+        // active first, ties broken by session id (deterministic, so
+        // budgeted schedules stay reproducible).
+        if let Some(b) = budget {
+            if self.sessions.len() > b {
+                let mut order: Vec<(u64, usize)> =
+                    self.sessions.iter().map(|(&sid, s)| (s.last_active, sid)).collect();
+                order.sort_unstable();
+                let excess = self.sessions.len() - b;
+                for &(_, sid) in order.iter().take(excess) {
+                    self.hibernate_one(sid)?;
+                }
+            }
         }
         self.sync_store()
     }
@@ -660,23 +767,18 @@ impl<'n> Engine<'n> {
     /// Close every session — resident or hibernated — in session-id
     /// order.
     pub fn finish_all(&mut self) -> Vec<(usize, ServingReport)> {
-        let mut ids = self.session_ids();
-        if let Some(tier) = &self.hib {
-            ids.extend(tier.store.ids().into_iter().map(|id| id as usize));
-        }
-        ids.sort_unstable();
-        ids.dedup();
-        ids.into_iter().filter_map(|id| self.finish_session(id).map(|r| (id, r))).collect()
+        self.all_session_ids()
+            .into_iter()
+            .filter_map(|id| self.finish_session(id).map(|r| (id, r)))
+            .collect()
     }
 
-    /// Cross-session roll-up (latency samples concatenate, energies,
-    /// wakeups and fault counters sum, labels concatenate in session-id
-    /// order). Hibernated sessions contribute through their stored
-    /// records without being resumed; a record the CRC refuses here
-    /// contributes nothing (the refusal itself surfaces at resume, when
-    /// counters have a session to land on). Average SoC power is total
-    /// energy over total simulated SoC time.
-    pub fn aggregate_report(&self) -> ServingReport {
+    /// Every session this engine holds anything for — resident, stored
+    /// in the idle tier, or with engine-side hibernation accruals
+    /// pending — ascending, deduplicated. The shared id enumeration
+    /// under [`Engine::finish_all`] / [`Engine::aggregate_report`] and
+    /// the fleet's cross-engine roll-up.
+    pub fn all_session_ids(&self) -> Vec<usize> {
         let mut ids: Vec<usize> = self.sessions.keys().copied().collect();
         if let Some(tier) = &self.hib {
             ids.extend(tier.store.ids().into_iter().map(|id| id as usize));
@@ -684,50 +786,67 @@ impl<'n> Engine<'n> {
         }
         ids.sort_unstable();
         ids.dedup();
-        let mut metrics = ServingMetrics::default();
-        let mut labels = Vec::new();
-        let mut faults = FaultSummary::default();
-        let mut hib = HibernationStats::default();
-        let mut energy_j = 0.0;
-        let mut fc_wakeups = 0u64;
-        let mut now_ns = 0u64;
-        for id in ids {
-            if let Some(sess) = self.sessions.get(&id) {
-                metrics.merge(&sess.metrics);
-                faults.merge(&sess.faults);
-                hib.merge(&sess.hib);
-                energy_j += sess.soc.energy_j();
-                fc_wakeups += sess.soc.fc_wakeups();
-                now_ns += sess.soc.now_ns();
-                labels.extend_from_slice(&sess.labels);
-                continue;
-            }
-            let Some(tier) = &self.hib else { continue };
-            // Engine-side accruals exist even when the record is corrupt
-            // (retention was paid regardless of what the bits now say).
-            if let Some(pend) = tier.pending.get(&id) {
-                hib.merge(&pend.stats);
-            }
+        ids
+    }
+
+    /// Fold one session's contribution into a cross-session (possibly
+    /// cross-engine) accumulator; returns whether this engine held
+    /// anything for `id`. Hibernated sessions contribute through their
+    /// stored records without being resumed; a record the CRC refuses
+    /// here contributes nothing beyond the engine-side accruals (the
+    /// refusal itself surfaces at resume, when counters have a session
+    /// to land on). The caller drives ids in global order — the f64
+    /// sums are order-sensitive, and one ordering rule everywhere is
+    /// what keeps a fleet aggregate bit-identical to a single engine's.
+    pub fn accumulate_session(&self, id: usize, acc: &mut ReportAccumulator) -> bool {
+        if let Some(sess) = self.sessions.get(&id) {
+            acc.add(
+                &sess.metrics,
+                &sess.labels,
+                &sess.faults,
+                &sess.hib,
+                sess.soc.energy_j(),
+                sess.soc.fc_wakeups(),
+                sess.soc.now_ns(),
+            );
+            return true;
+        }
+        let Some(tier) = &self.hib else { return false };
+        let mut held = false;
+        // Engine-side accruals exist even when the record is corrupt
+        // (retention was paid regardless of what the bits now say).
+        if let Some(pend) = tier.pending.get(&id) {
+            acc.add_hibernation(&pend.stats);
+            held = true;
+        }
+        if tier.store.contains(id as u64) {
+            held = true;
             if let Some(Ok(snap)) = tier.store.peek(id as u64) {
-                metrics.merge(&snap.metrics);
-                faults.merge(&snap.faults);
-                hib.merge(&snap.hib);
-                energy_j += snap.soc.energy_j;
-                fc_wakeups += snap.soc.fc_wakeups;
-                now_ns += snap.soc.now_ns;
-                labels.extend_from_slice(&snap.labels);
+                acc.add(
+                    &snap.metrics,
+                    &snap.labels,
+                    &snap.faults,
+                    &snap.hib,
+                    snap.soc.energy_j,
+                    snap.soc.fc_wakeups,
+                    snap.soc.now_ns,
+                );
             }
         }
-        metrics.soc_energy_j = energy_j;
-        ServingReport {
-            soc_energy_j: energy_j,
-            soc_avg_power_w: if now_ns == 0 { 0.0 } else { energy_j / (now_ns as f64 * 1e-9) },
-            fc_wakeups,
-            metrics,
-            labels,
-            faults,
-            hib,
+        held
+    }
+
+    /// Cross-session roll-up (latency samples concatenate, energies,
+    /// wakeups and fault counters sum, labels concatenate in session-id
+    /// order); see [`Engine::accumulate_session`] for how hibernated
+    /// sessions contribute. Average SoC power is total energy over
+    /// total simulated SoC time.
+    pub fn aggregate_report(&self) -> ServingReport {
+        let mut acc = ReportAccumulator::default();
+        for id in self.all_session_ids() {
+            self.accumulate_session(id, &mut acc);
         }
+        acc.finish()
     }
 }
 

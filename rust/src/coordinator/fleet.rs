@@ -1,0 +1,675 @@
+//! The sharded serving fleet — one front door over N engines.
+//!
+//! The paper's 8000 inf/s @ 12.2 mW corner is a *per-chip* number;
+//! scaling past it means replication, exactly how CUTIE itself scales
+//! (a fully-unrolled datapath replicated per output channel, not a
+//! bigger unit). A [`Fleet`] owns N [`Engine`]s — each one the software
+//! twin of an accelerator instance with its own worker pool — all
+//! adopting the **same** `Arc<PreparedNet>` weight image (the PR 5
+//! shared-image pass is what makes an engine cheap enough to stamp
+//! out), and routes `submit(session_id, frame)` by a pluggable
+//! [`ShardPolicy`].
+//!
+//! The pieces, and their contracts:
+//!
+//! * **Routing** is sticky: a session's first accepted work commits it
+//!   to an engine; every later frame follows, until [`Fleet::migrate`]
+//!   moves it. Policies only pick the *first* engine (hash of the id,
+//!   least-loaded at open, or an explicit [`Fleet::pin_session`]).
+//! * **Live migration** rides the hibernation snapshot path: drain the
+//!   source engine's in-flight frames, [`Engine::export_session`] (a
+//!   pure read — no serving counter moves), [`Engine::import_session`]
+//!   on the target, reroute. Because per-session state is total in the
+//!   snapshot and per-session frame order is preserved end-to-end, a
+//!   migrated session serves **byte-identically** to one that never
+//!   moved — labels, FC wakeups, both energy ledgers' f64 bits, latency
+//!   quantiles — including mid-fault-plan (the injector's RNG position
+//!   rides in the snapshot). Asserted in `tests/fleet.rs`.
+//! * **Back-pressure** is typed, not implicit: each engine has a
+//!   bounded submit queue; a full queue rejects with
+//!   [`FleetError::Backpressure`] wrapped in [`Rejected`], which hands
+//!   the frame back untouched. A rejected submit leaves **no partial
+//!   state** — no session opened, no route committed, no injector RNG
+//!   advanced — so reject-then-retry serves byte-identically to a run
+//!   that was never rejected.
+//! * **Drain ordering** ([`DrainOrder`]) may reorder *across* sessions
+//!   (tightest deadline first, or least-energy-spent first); per-session
+//!   frame order is the only hard constraint and is preserved by
+//!   construction (every ordering key is constant per session within a
+//!   flush, with submission sequence as the tiebreak).
+//! * **Reports** merge through the same [`ReportAccumulator`] in global
+//!   session-id order as a single engine's `aggregate_report`, so an
+//!   N-engine fleet's aggregate is bit-identical to the same sessions
+//!   served on one engine.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::engine::{Engine, EngineConfig};
+use super::metrics::{ReportAccumulator, ServingReport};
+use super::session::Session;
+use crate::cutie::{CutieConfig, PreparedNet};
+use crate::fault::FaultPlan;
+use crate::network::Network;
+use crate::tensor::PackedMap;
+
+/// Default per-engine submit-queue bound.
+pub const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// How a session's *first* engine is chosen (routing is sticky after).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Multiplicative hash of the session id — stateless, reproducible
+    /// across fleets, no coordination.
+    Hash,
+    /// The engine with the fewest routed sessions at first contact
+    /// (ties to the lowest index) — balances slowly-arriving sessions.
+    LeastLoaded,
+    /// Explicit placement only: a session must be
+    /// [`Fleet::pin_session`]ed before any work is accepted for it.
+    Pin,
+}
+
+impl FromStr for ShardPolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Ok(ShardPolicy::Hash),
+            "least-loaded" | "leastloaded" => Ok(ShardPolicy::LeastLoaded),
+            "pin" => Ok(ShardPolicy::Pin),
+            other => anyhow::bail!(
+                "unknown shard policy {other:?} (expected hash|least-loaded|pin)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for ShardPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ShardPolicy::Hash => "hash",
+            ShardPolicy::LeastLoaded => "least-loaded",
+            ShardPolicy::Pin => "pin",
+        })
+    }
+}
+
+/// Cross-session serve order within one engine's queue flush.
+/// Per-session frame order is preserved under every variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DrainOrder {
+    /// Global submission order (the single-engine behavior).
+    Fifo,
+    /// Tightest deadline first: a frame's deadline is its submission
+    /// sequence plus the session's slack ([`Fleet::set_deadline_slack`];
+    /// unset sessions are unconstrained and go last).
+    Deadline,
+    /// Least simulated energy spent first — starvation-resistant
+    /// energy-fairness: sessions that have consumed the least SoC
+    /// energy so far serve first.
+    Energy,
+}
+
+impl FromStr for DrainOrder {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "fifo" => Ok(DrainOrder::Fifo),
+            "deadline" => Ok(DrainOrder::Deadline),
+            "energy" => Ok(DrainOrder::Energy),
+            other => anyhow::bail!(
+                "unknown drain order {other:?} (expected fifo|deadline|energy)"
+            ),
+        }
+    }
+}
+
+impl fmt::Display for DrainOrder {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            DrainOrder::Fifo => "fifo",
+            DrainOrder::Deadline => "deadline",
+            DrainOrder::Energy => "energy",
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Number of engines (simulated accelerator instances). Must be ≥ 1.
+    pub engines: usize,
+    pub policy: ShardPolicy,
+    pub order: DrainOrder,
+    /// Per-engine submit-queue bound; a full queue rejects with
+    /// [`FleetError::Backpressure`]. Must be ≥ 1.
+    pub queue_cap: usize,
+    /// Per-engine configuration (every engine is identical — the fleet
+    /// shards homogeneous replicas, like CUTIE's replicated OCUs).
+    pub engine: EngineConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            engines: 1,
+            policy: ShardPolicy::Hash,
+            order: DrainOrder::Fifo,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// Typed routing/back-pressure refusals. None of these leaves partial
+/// state behind: a refused operation is a no-op on every ledger.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetError {
+    /// The target engine's submit queue is full. Drain (or wait) and
+    /// retry with the returned frame.
+    Backpressure { engine: usize, depth: usize, cap: usize },
+    UnknownEngine { engine: usize, engines: usize },
+    /// The pin policy routes nothing implicitly; pin the session first.
+    Unpinned { session: usize },
+    /// Repinning a routed session is refused — use [`Fleet::migrate`],
+    /// which moves the state along with the route.
+    AlreadyRouted { session: usize, engine: usize },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::Backpressure { engine, depth, cap } => write!(
+                f,
+                "engine {engine} queue is full ({depth}/{cap} frames): \
+                 back-pressure, drain and retry"
+            ),
+            FleetError::UnknownEngine { engine, engines } => {
+                write!(f, "engine {engine} out of range (fleet has {engines} engines)")
+            }
+            FleetError::Unpinned { session } => write!(
+                f,
+                "session {session} is not pinned (the pin policy routes nothing implicitly)"
+            ),
+            FleetError::AlreadyRouted { session, engine } => write!(
+                f,
+                "session {session} is already routed to engine {engine} (migrate instead)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// A refused submit: the typed reason plus the frame, handed back
+/// untouched so the caller can retry after draining.
+pub struct Rejected {
+    pub reason: FleetError,
+    pub frame: PackedMap,
+}
+
+impl fmt::Debug for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Rejected").field("reason", &self.reason).finish_non_exhaustive()
+    }
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} (the frame is returned to the caller)", self.reason)
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// One frame waiting in an engine's bounded submit queue.
+struct QueuedFrame {
+    session: usize,
+    frame: PackedMap,
+    /// Global submission sequence — the FIFO key and every ordering's
+    /// tiebreak (which is what preserves per-session frame order).
+    seq: u64,
+    /// `seq` + the session's deadline slack (saturating).
+    deadline: u64,
+}
+
+/// Per-engine lifetime counters (fleet-side observability; none of
+/// these feed the serving ledgers).
+#[derive(Debug, Default, Clone, Copy)]
+struct Counters {
+    submitted: u64,
+    served: u64,
+    rejected: u64,
+    migrations_in: u64,
+    migrations_out: u64,
+    peak_queue: usize,
+}
+
+/// One engine's load snapshot inside a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct EngineLoad {
+    pub engine: usize,
+    /// Sessions currently resident in the engine's session map.
+    pub resident_sessions: usize,
+    /// Sessions currently in the engine's snapshot store.
+    pub hibernated_sessions: usize,
+    /// Sessions the fleet routes to this engine.
+    pub routed_sessions: usize,
+    pub queue_depth: usize,
+    pub peak_queue_depth: usize,
+    pub submitted: u64,
+    pub served: u64,
+    pub rejected: u64,
+    pub migrations_in: u64,
+    pub migrations_out: u64,
+}
+
+/// The fleet-wide roll-up: the cross-engine aggregate serving report
+/// (bit-identical to a single-engine run of the same sessions) plus
+/// per-engine load and migration counters.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub aggregate: ServingReport,
+    pub engines: Vec<EngineLoad>,
+    pub migrations: u64,
+    pub rejected_submits: u64,
+}
+
+pub struct Fleet<'n> {
+    cfg: FleetConfig,
+    engines: Vec<Engine<'n>>,
+    /// Bounded per-engine submit queues, flushed (in [`DrainOrder`]) at
+    /// each drain.
+    queues: Vec<Vec<QueuedFrame>>,
+    /// Sticky session → engine routing table.
+    routes: BTreeMap<usize, usize>,
+    /// Per-session deadline slack, in submission-sequence units.
+    slack: BTreeMap<usize, u64>,
+    counters: Vec<Counters>,
+    seq: u64,
+    migrations: u64,
+    rejected: u64,
+}
+
+impl<'n> Fleet<'n> {
+    /// Boot a fleet, building the shared prepared-weight image once and
+    /// handing every engine the same `Arc`.
+    pub fn new(net: &'n Network, cfg: FleetConfig) -> Result<Self> {
+        let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
+        Self::with_image(net, cfg, image)
+    }
+
+    /// Boot from a pre-built weight image (e.g. word-copy-loaded from a
+    /// packed `.ttn` v2 file). All N engines adopt this one `Arc`; no
+    /// per-engine repack or clone of a single weight word.
+    pub fn with_image(
+        net: &'n Network,
+        cfg: FleetConfig,
+        image: Arc<PreparedNet>,
+    ) -> Result<Self> {
+        ensure!(cfg.engines >= 1, "a fleet needs at least one engine");
+        ensure!(cfg.queue_cap >= 1, "the submit-queue bound must be at least 1");
+        let mut engines = Vec::with_capacity(cfg.engines);
+        for _ in 0..cfg.engines {
+            engines.push(Engine::with_image(net, cfg.engine.clone(), Arc::clone(&image))?);
+        }
+        let queues = (0..cfg.engines).map(|_| Vec::new()).collect();
+        let counters = vec![Counters::default(); cfg.engines];
+        Ok(Fleet {
+            cfg,
+            engines,
+            queues,
+            routes: BTreeMap::new(),
+            slack: BTreeMap::new(),
+            counters,
+            seq: 0,
+            migrations: 0,
+            rejected: 0,
+        })
+    }
+
+    pub fn engine_count(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn engine(&self, e: usize) -> Option<&Engine<'n>> {
+        self.engines.get(e)
+    }
+
+    /// Direct engine access (per-engine hibernation setup, tests).
+    pub fn engine_mut(&mut self, e: usize) -> Option<&mut Engine<'n>> {
+        self.engines.get_mut(e)
+    }
+
+    /// The engine a session is (stickily) routed to, if any yet.
+    pub fn route(&self, session: usize) -> Option<usize> {
+        self.routes.get(&session).copied()
+    }
+
+    /// Where a not-yet-routed session would land (or did land). The
+    /// only fallible case is the pin policy with no pin.
+    fn choose_engine(&self, session: usize) -> Result<usize, FleetError> {
+        if let Some(&e) = self.routes.get(&session) {
+            return Ok(e);
+        }
+        match self.cfg.policy {
+            ShardPolicy::Hash => {
+                let h = (session as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 33;
+                Ok((h as usize) % self.engines.len())
+            }
+            ShardPolicy::LeastLoaded => {
+                let mut load = vec![0usize; self.engines.len()];
+                for &e in self.routes.values() {
+                    load[e] += 1;
+                }
+                let mut best = 0;
+                for (e, &l) in load.iter().enumerate() {
+                    if l < load[best] {
+                        best = e;
+                    }
+                }
+                Ok(best)
+            }
+            ShardPolicy::Pin => Err(FleetError::Unpinned { session }),
+        }
+    }
+
+    /// Pin a session to an engine (required under [`ShardPolicy::Pin`],
+    /// allowed as a pre-placement under any policy). Refused once the
+    /// session is routed elsewhere — migrate instead, pins do not move
+    /// state.
+    pub fn pin_session(&mut self, session: usize, engine: usize) -> Result<(), FleetError> {
+        if engine >= self.engines.len() {
+            return Err(FleetError::UnknownEngine { engine, engines: self.engines.len() });
+        }
+        if let Some(&cur) = self.routes.get(&session) {
+            if cur != engine {
+                return Err(FleetError::AlreadyRouted { session, engine: cur });
+            }
+            return Ok(());
+        }
+        self.routes.insert(session, engine);
+        Ok(())
+    }
+
+    /// Set a session's deadline slack (submission-sequence units) for
+    /// [`DrainOrder::Deadline`]: a queued frame's deadline is its
+    /// sequence number plus this slack. Unset sessions are
+    /// unconstrained (they sort last).
+    pub fn set_deadline_slack(&mut self, session: usize, slack: u64) {
+        self.slack.insert(session, slack);
+    }
+
+    /// Open (or fetch) a session on its routed engine, committing the
+    /// route on first contact.
+    pub fn open_session(&mut self, session: usize) -> Result<&mut Session, FleetError> {
+        let e = self.choose_engine(session)?;
+        self.routes.insert(session, e);
+        Ok(self.engines[e].open_session(session))
+    }
+
+    /// Arm a fault plan on the session's routed engine (committing the
+    /// route on first contact).
+    pub fn set_fault_plan(&mut self, session: usize, plan: FaultPlan) -> Result<(), FleetError> {
+        let e = self.choose_engine(session)?;
+        self.routes.insert(session, e);
+        self.engines[e].set_fault_plan(session, plan);
+        Ok(())
+    }
+
+    /// Enqueue one frame for the session's engine. On refusal the frame
+    /// comes back inside [`Rejected`], and **nothing** happened: no
+    /// session opened, no route committed, no injector RNG advanced —
+    /// the engine was not touched at all. Work reaches the engine at
+    /// the next [`Fleet::drain`].
+    pub fn submit(&mut self, session: usize, frame: PackedMap) -> Result<(), Rejected> {
+        let e = match self.choose_engine(session) {
+            Ok(e) => e,
+            Err(reason) => return Err(Rejected { reason, frame }),
+        };
+        let depth = self.queues[e].len();
+        if depth >= self.cfg.queue_cap {
+            self.counters[e].rejected += 1;
+            self.rejected += 1;
+            let reason = FleetError::Backpressure { engine: e, depth, cap: self.cfg.queue_cap };
+            return Err(Rejected { reason, frame });
+        }
+        self.routes.insert(session, e);
+        let seq = self.seq;
+        self.seq += 1;
+        let slack = self.slack.get(&session).copied().unwrap_or(u64::MAX);
+        let deadline = seq.saturating_add(slack);
+        self.queues[e].push(QueuedFrame { session, frame, seq, deadline });
+        self.counters[e].submitted += 1;
+        self.counters[e].peak_queue = self.counters[e].peak_queue.max(self.queues[e].len());
+        Ok(())
+    }
+
+    /// The order (session per queued frame) in which one engine's queue
+    /// would flush right now — [`DrainOrder`] made observable for tests
+    /// and debugging.
+    pub fn drain_plan(&self, engine: usize) -> Vec<usize> {
+        if engine >= self.queues.len() {
+            return Vec::new();
+        }
+        self.ordered_indices(engine)
+            .into_iter()
+            .map(|i| self.queues[engine][i].session)
+            .collect()
+    }
+
+    /// Queue indices in serve order. Every ordering key is constant per
+    /// session within one flush (deadline slack is per-session; the
+    /// energy key is snapshotted before any of this flush's frames
+    /// serve), and `seq` breaks ties — together that preserves
+    /// per-session frame order, the one hard constraint.
+    fn ordered_indices(&self, e: usize) -> Vec<usize> {
+        let q = &self.queues[e];
+        let mut idx: Vec<usize> = (0..q.len()).collect();
+        match self.cfg.order {
+            DrainOrder::Fifo => {}
+            DrainOrder::Deadline => idx.sort_by_key(|&i| (q[i].deadline, q[i].seq)),
+            DrainOrder::Energy => {
+                // Non-negative f64 → to_bits is order-preserving; a
+                // session with no resident state yet has spent nothing.
+                let key = |s: usize| {
+                    self.engines[e]
+                        .session(s)
+                        .map(|sess| sess.soc.energy_j().to_bits())
+                        .unwrap_or(0)
+                };
+                idx.sort_by_key(|&i| (key(q[i].session), q[i].seq));
+            }
+        }
+        idx
+    }
+
+    /// Hand one engine's queued frames to it, in [`DrainOrder`].
+    fn flush_queue(&mut self, e: usize) {
+        if self.queues[e].is_empty() {
+            return;
+        }
+        let idx = self.ordered_indices(e);
+        let mut slots: Vec<Option<QueuedFrame>> =
+            std::mem::take(&mut self.queues[e]).into_iter().map(Some).collect();
+        for i in idx {
+            if let Some(qf) = slots[i].take() {
+                self.engines[e].submit(qf.session, qf.frame);
+            }
+        }
+    }
+
+    /// Flush every queue and drain every engine; returns total frames
+    /// served across the fleet.
+    pub fn drain(&mut self) -> Result<usize> {
+        let mut served = 0;
+        for e in 0..self.engines.len() {
+            self.flush_queue(e);
+            let n = self.engines[e].drain()?;
+            self.counters[e].served += n as u64;
+            served += n;
+        }
+        Ok(served)
+    }
+
+    /// Live-migrate a session to another engine: drain the source's
+    /// in-flight frames, move the session's complete state over the
+    /// snapshot path (hibernated sessions migrate straight out of the
+    /// store), reroute. A migration is invisible in the session's
+    /// serving ledgers — the migrated schedule is byte-identical to an
+    /// unmigrated one. Migrating a session onto its own engine is a
+    /// no-op.
+    pub fn migrate(&mut self, session: usize, to: usize) -> Result<()> {
+        ensure!(
+            to < self.engines.len(),
+            "engine {to} out of range (fleet has {} engines)",
+            self.engines.len()
+        );
+        let from = *self
+            .routes
+            .get(&session)
+            .with_context(|| format!("session {session} is not routed to any engine"))?;
+        if from == to {
+            return Ok(());
+        }
+        // The snapshot must capture a settled session: serve whatever
+        // is in flight on the source first.
+        if !self.queues[from].is_empty() || self.engines[from].pending_frames() > 0 {
+            self.flush_queue(from);
+            let n = self.engines[from].drain()?;
+            self.counters[from].served += n as u64;
+        }
+        // A route the source never materialized (e.g. a pin with no
+        // work yet) moves as a pure reroute; otherwise the state rides
+        // the snapshot.
+        let holds = self.engines[from].session(session).is_some()
+            || self.engines[from].store().is_some_and(|s| s.contains(session as u64));
+        if holds {
+            let snap = self.engines[from].export_session(session)?;
+            self.engines[to].import_session(snap)?;
+        }
+        self.routes.insert(session, to);
+        self.counters[from].migrations_out += 1;
+        self.counters[to].migrations_in += 1;
+        self.migrations += 1;
+        Ok(())
+    }
+
+    /// Every session the fleet knows: routed, resident, hibernated, or
+    /// with engine-side accruals — ascending, deduplicated.
+    pub fn session_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.routes.keys().copied().collect();
+        for e in &self.engines {
+            ids.extend(e.all_session_ids());
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        ids
+    }
+
+    /// Close one session into its final report, wherever it lives (a
+    /// session is held by at most one engine — `import_session` refuses
+    /// duplicates).
+    pub fn finish_session(&mut self, session: usize) -> Option<ServingReport> {
+        self.engines.iter_mut().find_map(|e| e.finish_session(session))
+    }
+
+    /// Close every session, in global session-id order.
+    pub fn finish_all(&mut self) -> Vec<(usize, ServingReport)> {
+        self.session_ids()
+            .into_iter()
+            .filter_map(|id| self.finish_session(id).map(|r| (id, r)))
+            .collect()
+    }
+
+    /// The cross-engine aggregate: sessions fold in global id order
+    /// through the same [`ReportAccumulator`] a single engine uses, so
+    /// the result is bit-identical to serving the same sessions on one
+    /// engine — whatever the sharding or migration history.
+    pub fn aggregate_report(&self) -> ServingReport {
+        let mut acc = ReportAccumulator::default();
+        for id in self.session_ids() {
+            for e in &self.engines {
+                if e.accumulate_session(id, &mut acc) {
+                    break;
+                }
+            }
+        }
+        acc.finish()
+    }
+
+    /// The full fleet roll-up: aggregate serving report + per-engine
+    /// load/queue/migration counters.
+    pub fn report(&self) -> FleetReport {
+        let engines = (0..self.engines.len())
+            .map(|e| {
+                let c = &self.counters[e];
+                EngineLoad {
+                    engine: e,
+                    resident_sessions: self.engines[e].session_ids().len(),
+                    hibernated_sessions: self.engines[e].store().map(|s| s.len()).unwrap_or(0),
+                    routed_sessions: self.routes.values().filter(|&&r| r == e).count(),
+                    queue_depth: self.queues[e].len(),
+                    peak_queue_depth: c.peak_queue,
+                    submitted: c.submitted,
+                    served: c.served,
+                    rejected: c.rejected,
+                    migrations_in: c.migrations_in,
+                    migrations_out: c.migrations_out,
+                }
+            })
+            .collect();
+        FleetReport {
+            aggregate: self.aggregate_report(),
+            engines,
+            migrations: self.migrations,
+            rejected_submits: self.rejected,
+        }
+    }
+
+    /// Persist every engine's snapshot store (file-backed ones).
+    pub fn sync_stores(&mut self) -> Result<()> {
+        for e in &mut self.engines {
+            e.sync_store()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_and_order_parse_and_print() {
+        assert_eq!("hash".parse::<ShardPolicy>().unwrap(), ShardPolicy::Hash);
+        assert_eq!("least-loaded".parse::<ShardPolicy>().unwrap(), ShardPolicy::LeastLoaded);
+        assert_eq!("leastloaded".parse::<ShardPolicy>().unwrap(), ShardPolicy::LeastLoaded);
+        assert_eq!("PIN".parse::<ShardPolicy>().unwrap(), ShardPolicy::Pin);
+        assert!("round-robin".parse::<ShardPolicy>().is_err());
+        assert_eq!(ShardPolicy::LeastLoaded.to_string(), "least-loaded");
+        assert_eq!("fifo".parse::<DrainOrder>().unwrap(), DrainOrder::Fifo);
+        assert_eq!("deadline".parse::<DrainOrder>().unwrap(), DrainOrder::Deadline);
+        assert_eq!("energy".parse::<DrainOrder>().unwrap(), DrainOrder::Energy);
+        assert!("lifo".parse::<DrainOrder>().is_err());
+        assert_eq!(DrainOrder::Energy.to_string(), "energy");
+    }
+
+    #[test]
+    fn fleet_errors_name_the_contract() {
+        let e = FleetError::Backpressure { engine: 2, depth: 64, cap: 64 };
+        let msg = e.to_string();
+        assert!(msg.contains("engine 2") && msg.contains("64"), "got: {msg}");
+        assert!(FleetError::Unpinned { session: 7 }.to_string().contains('7'));
+        let msg = FleetError::UnknownEngine { engine: 9, engines: 3 }.to_string();
+        assert!(msg.contains('9') && msg.contains('3'), "got: {msg}");
+        assert!(FleetError::AlreadyRouted { session: 1, engine: 0 }
+            .to_string()
+            .contains("migrate"));
+    }
+}

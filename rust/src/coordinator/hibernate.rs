@@ -14,9 +14,12 @@
 //!   surfaces as a typed [`SnapshotError`], never a panic or a silently
 //!   wrong state.
 //! * [`SessionStore`] — the record store (in-memory or file-backed)
-//!   with per-record CRC-32 and atomic write-then-rename persistence.
-//!   Reopening after a crash keeps every intact record and skips a
-//!   half-written tail ([`SessionStore::recovered_torn`]).
+//!   with per-record CRC-32, incremental append-only syncs with
+//!   tombstoned removals, and automatic compaction (atomic
+//!   write-then-rename) once dead weight outgrows the live records, so
+//!   long-lived store files stay bounded. Reopening after a crash keeps
+//!   every intact record and skips a half-written tail
+//!   ([`SessionStore::recovered_torn`]).
 //! * [`HibernationStats`] — the hibernate/resume/retention ledger
 //!   surfaced in every [`super::ServingReport`].
 //!
@@ -26,7 +29,7 @@
 //! bits, latency quantiles — including a resume mid-fault-plan, because
 //! the snapshot carries the injector's geometric-gap walk position.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
@@ -782,6 +785,7 @@ impl SessionSnapshot {
             faults: self.faults,
             hib: self.hib,
             idle_drains: 0,
+            last_active: 0,
         })
     }
 }
@@ -796,23 +800,64 @@ struct StoredRecord {
     payload: Vec<u8>,
 }
 
+/// Tombstone record marker in the `len` header slot: a removal is
+/// persisted as a header-only record (id, `u32::MAX`, crc 0) appended to
+/// the log; replaying the file drops the id. A real payload can never be
+/// this long (snapshots are hundreds of bytes).
+const TOMBSTONE_LEN: u32 = u32::MAX;
+
 /// The snapshot record store: a `BTreeMap` of CRC'd payloads, optionally
 /// mirrored to a file. Mutations touch only memory; [`SessionStore::sync`]
-/// is the sole writer and persists via write-then-rename, so the on-disk
-/// file is always either the previous complete image or the new one —
-/// a crash mid-sync can tear at most the throwaway `.tmp` sibling.
+/// is the sole writer. Long-lived stores stay bounded by a two-mode
+/// writer: normally a sync **appends** only the records that changed
+/// (plus header-only tombstones for removals — replaying the log keeps
+/// the newest entry per id), and once the superseded dead weight
+/// outgrows the live set — or a torn tail was recovered, since
+/// appending after garbage would be unreadable — the sync degenerates
+/// to [`SessionStore::compact`]: the full live image serialized to a
+/// `.tmp` sibling and atomically renamed over the file, so the on-disk
+/// state is always either the previous complete log or the new image —
+/// a crash mid-compaction can tear at most the throwaway `.tmp`, and a
+/// crash mid-append tears at most the tail (which `open` recovers).
 #[derive(Debug)]
 pub struct SessionStore {
     path: Option<PathBuf>,
     records: BTreeMap<u64, StoredRecord>,
     dirty: bool,
     recovered_torn: bool,
+    /// Ids whose in-memory record changed since the last sync (inserted,
+    /// replaced, or bit-rotted) — the append set.
+    dirty_ids: BTreeSet<u64>,
+    /// Ids removed since the last sync — the tombstone set (disjoint
+    /// from `dirty_ids` by construction).
+    tombstones: BTreeSet<u64>,
+    /// Bytes of each id's newest on-disk image (header + payload).
+    on_disk: BTreeMap<u64, usize>,
+    /// Total bytes of the backing file.
+    file_bytes: usize,
+    /// File bytes held by superseded images and tombstones (reclaimed
+    /// by compaction).
+    dead_bytes: usize,
+    /// Force a full rewrite on the next sync (set after torn-tail
+    /// recovery: the garbage tail must not survive an append).
+    needs_compact: bool,
 }
 
 impl SessionStore {
     /// A store with no backing file (records die with the process).
     pub fn in_memory() -> SessionStore {
-        SessionStore { path: None, records: BTreeMap::new(), dirty: false, recovered_torn: false }
+        SessionStore {
+            path: None,
+            records: BTreeMap::new(),
+            dirty: false,
+            recovered_torn: false,
+            dirty_ids: BTreeSet::new(),
+            tombstones: BTreeSet::new(),
+            on_disk: BTreeMap::new(),
+            file_bytes: 0,
+            dead_bytes: 0,
+            needs_compact: false,
+        }
     }
 
     /// Open (or create) a file-backed store. A missing or empty file is
@@ -828,12 +873,8 @@ impl SessionStore {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
             Err(e) => return Err(anyhow!("reading session store {}: {e}", path.display())),
         };
-        let mut store = SessionStore {
-            path: Some(path.clone()),
-            records: BTreeMap::new(),
-            dirty: false,
-            recovered_torn: false,
-        };
+        let mut store = SessionStore::in_memory();
+        store.path = Some(path.clone());
         if bytes.is_empty() {
             return Ok(store);
         }
@@ -842,6 +883,7 @@ impl SessionStore {
             "{} is not a session store (bad magic)",
             path.display()
         );
+        store.file_bytes = bytes.len();
         let mut b = &bytes[8..];
         while !b.is_empty() {
             // record header: id u64, len u32, crc u32
@@ -850,16 +892,35 @@ impl SessionStore {
                 break;
             }
             let id = u64::from_le_bytes(b[..8].try_into().unwrap());
-            let len = u32::from_le_bytes(b[8..12].try_into().unwrap()) as usize;
+            let len_raw = u32::from_le_bytes(b[8..12].try_into().unwrap());
             let crc = u32::from_le_bytes(b[12..16].try_into().unwrap());
             b = &b[16..];
+            if len_raw == TOMBSTONE_LEN {
+                // header-only removal marker: the id's earlier image is
+                // dead, and so is the tombstone itself
+                store.dead_bytes += 16;
+                if let Some(prev) = store.on_disk.remove(&id) {
+                    store.dead_bytes += prev;
+                }
+                store.records.remove(&id);
+                continue;
+            }
+            let len = len_raw as usize;
             if b.len() < len {
                 store.recovered_torn = true;
                 break;
             }
+            // log replay: a later image for the same id supersedes the
+            // earlier one, which becomes dead weight
+            if let Some(prev) = store.on_disk.insert(id, 16 + len) {
+                store.dead_bytes += prev;
+            }
             store.records.insert(id, StoredRecord { crc, payload: b[..len].to_vec() });
             b = &b[len..];
         }
+        // appending after a garbage tail would bury the new records
+        // behind unparseable bytes — force a rewrite instead
+        store.needs_compact = store.recovered_torn;
         Ok(store)
     }
 
@@ -900,6 +961,8 @@ impl SessionStore {
     pub fn insert(&mut self, id: u64, payload: Vec<u8>) {
         let crc = crc32(&payload);
         self.records.insert(id, StoredRecord { crc, payload });
+        self.tombstones.remove(&id);
+        self.dirty_ids.insert(id);
         self.dirty = true;
     }
 
@@ -915,6 +978,7 @@ impl SessionStore {
                 rec.payload[byte] ^= 1 << bit;
             }
         }
+        self.dirty_ids.insert(id);
         self.dirty = true;
     }
 
@@ -936,19 +1000,99 @@ impl SessionStore {
     /// the typed error) rather than retried forever.
     pub fn take(&mut self, id: u64) -> Option<SnapResult<SessionSnapshot>> {
         let rec = self.records.remove(&id)?;
+        self.dirty_ids.remove(&id);
+        self.tombstones.insert(id);
         self.dirty = true;
         Some(Self::verify(id, &rec))
     }
 
-    /// Persist the current record set: serialize everything to a `.tmp`
-    /// sibling, then atomically rename over the store file. No-op when
-    /// nothing changed or the store is memory-only.
+    /// Bytes of the backing file holding superseded images/tombstones
+    /// (reclaimed by the next compaction). 0 for in-memory stores.
+    pub fn dead_bytes(&self) -> usize {
+        self.dead_bytes
+    }
+
+    /// Total size of the backing file as of the last open/sync (0 for
+    /// in-memory or never-synced stores).
+    pub fn file_bytes(&self) -> usize {
+        self.file_bytes
+    }
+
+    /// True when the accumulated dead weight outgrew the live records —
+    /// the auto-GC trigger checked on every sync. The small floor keeps
+    /// near-empty stores from compacting on every removal.
+    fn gc_due(&self) -> bool {
+        let live: usize = self.on_disk.values().sum();
+        self.dead_bytes > live.max(64)
+    }
+
+    /// Persist pending changes. Fast path: append only the changed
+    /// records (and header-only tombstones for removals) to the log.
+    /// Falls back to a full [`SessionStore::compact`] when the file does
+    /// not exist yet, a torn tail was recovered, or [`Self::gc_due`]
+    /// says the dead weight outgrew the live set. No-op when nothing
+    /// changed or the store is memory-only.
     pub fn sync(&mut self) -> anyhow::Result<()> {
         if !self.dirty {
             return Ok(());
         }
-        let Some(path) = &self.path else {
+        if self.path.is_none() {
             self.dirty = false;
+            self.dirty_ids.clear();
+            self.tombstones.clear();
+            return Ok(());
+        }
+        if self.file_bytes == 0 || self.needs_compact || self.gc_due() {
+            return self.compact();
+        }
+        let mut out = Vec::new();
+        let killed: Vec<u64> =
+            self.tombstones.iter().copied().filter(|id| self.on_disk.contains_key(id)).collect();
+        for id in killed {
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&TOMBSTONE_LEN.to_le_bytes());
+            out.extend_from_slice(&0u32.to_le_bytes());
+            self.dead_bytes += 16;
+            if let Some(prev) = self.on_disk.remove(&id) {
+                self.dead_bytes += prev;
+            }
+        }
+        let append_ids: Vec<u64> = self.dirty_ids.iter().copied().collect();
+        for id in append_ids {
+            let Some(rec) = self.records.get(&id) else { continue };
+            out.extend_from_slice(&id.to_le_bytes());
+            out.extend_from_slice(&(rec.payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&rec.crc.to_le_bytes());
+            out.extend_from_slice(&rec.payload);
+            if let Some(prev) = self.on_disk.insert(id, 16 + rec.payload.len()) {
+                self.dead_bytes += prev;
+            }
+        }
+        if !out.is_empty() {
+            use std::io::Write;
+            let path = self.path.as_ref().unwrap();
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(path)
+                .with_context(|| format!("appending to {}", path.display()))?;
+            f.write_all(&out).with_context(|| format!("appending to {}", path.display()))?;
+            self.file_bytes += out.len();
+        }
+        self.dirty = false;
+        self.dirty_ids.clear();
+        self.tombstones.clear();
+        Ok(())
+    }
+
+    /// Rewrite the backing file to exactly the live record set:
+    /// serialize everything to a `.tmp` sibling, then atomically rename
+    /// over the store file. Superseded images, tombstones and any
+    /// recovered torn tail are all dropped. No-op for in-memory stores.
+    pub fn compact(&mut self) -> anyhow::Result<()> {
+        self.dirty = false;
+        self.dirty_ids.clear();
+        self.tombstones.clear();
+        let Some(path) = &self.path else {
             return Ok(());
         };
         let mut out = Vec::with_capacity(
@@ -967,7 +1111,10 @@ impl SessionStore {
         std::fs::write(&tmp, &out).with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, path)
             .with_context(|| format!("renaming {} over {}", tmp.display(), path.display()))?;
-        self.dirty = false;
+        self.on_disk = self.records.iter().map(|(&id, r)| (id, 16 + r.payload.len())).collect();
+        self.file_bytes = out.len();
+        self.dead_bytes = 0;
+        self.needs_compact = false;
         Ok(())
     }
 }
@@ -1112,6 +1259,111 @@ mod tests {
         std::fs::write(&path, b"definitely not a session store").unwrap();
         assert!(SessionStore::open(&path).is_err());
         assert_eq!(std::fs::read(&path).unwrap(), b"definitely not a session store");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_only_sync_supersedes_and_tombstones() {
+        let path = std::env::temp_dir().join("tcn_cutie_hib_store_gc.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut store = SessionStore::open(&path).unwrap();
+        let p3 = SessionSnapshot::capture(&busy_session()).encode();
+        let mut other = busy_session();
+        other.id = 7;
+        let p7 = SessionSnapshot::capture(&other).encode();
+        store.insert(3, p3.clone());
+        store.insert(7, p7.clone());
+        store.sync().unwrap();
+        let full = std::fs::read(&path).unwrap().len();
+        assert_eq!(store.file_bytes(), full);
+        assert_eq!(store.dead_bytes(), 0);
+
+        // a removal appends a 16 B header-only tombstone...
+        let _ = store.take(3);
+        store.sync().unwrap();
+        assert_eq!(std::fs::read(&path).unwrap().len(), full + 16);
+        assert!(store.dead_bytes() > 16, "the tombstone kills the old image too");
+        // ...and replaying the log drops the id
+        let re = SessionStore::open(&path).unwrap();
+        assert_eq!(re.ids(), vec![7]);
+        assert!(re.peek(7).unwrap().is_ok());
+        assert!(re.dead_bytes() > 0);
+
+        // re-inserting the id lands it back (append or auto-GC,
+        // whichever the dead-weight trigger picks)
+        store.insert(3, p3.clone());
+        store.sync().unwrap();
+        let re = SessionStore::open(&path).unwrap();
+        assert_eq!(re.ids(), vec![3, 7]);
+
+        // explicit compaction rewrites to exactly the live set
+        store.compact().unwrap();
+        assert_eq!(store.dead_bytes(), 0);
+        assert_eq!(store.file_bytes(), 8 + 32 + p3.len() + p7.len());
+        assert_eq!(std::fs::read(&path).unwrap().len(), store.file_bytes());
+        let re = SessionStore::open(&path).unwrap();
+        assert_eq!(re.ids(), vec![3, 7]);
+        assert!(re.peek(3).unwrap().is_ok());
+        assert!(re.peek(7).unwrap().is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gc_keeps_long_lived_store_files_bounded() {
+        let path = std::env::temp_dir().join("tcn_cutie_hib_store_bounded.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut store = SessionStore::open(&path).unwrap();
+        let p = SessionSnapshot::capture(&busy_session()).encode();
+        store.insert(3, p.clone());
+        store.sync().unwrap();
+        let one = std::fs::read(&path).unwrap().len();
+        // a hibernate/resume churn cycle per sync: without GC the log
+        // would grow by one image every iteration
+        for round in 0..20 {
+            let _ = store.take(3);
+            store.insert(3, p.clone());
+            store.sync().unwrap();
+            let sz = std::fs::read(&path).unwrap().len();
+            assert!(
+                sz <= one * 4,
+                "round {round}: file must stay bounded ({sz} B vs 1 record = {one} B)"
+            );
+            let re = SessionStore::open(&path).unwrap();
+            assert_eq!(re.ids(), vec![3]);
+            assert!(re.peek(3).unwrap().is_ok(), "round {round}: live record must survive GC");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_after_torn_recovery_compacts_first() {
+        let path = std::env::temp_dir().join("tcn_cutie_hib_store_torn_append.bin");
+        let _ = std::fs::remove_file(&path);
+        let mut store = SessionStore::open(&path).unwrap();
+        let p3 = SessionSnapshot::capture(&busy_session()).encode();
+        let mut other = busy_session();
+        other.id = 7;
+        let p7 = SessionSnapshot::capture(&other).encode();
+        store.insert(3, p3);
+        store.insert(7, p7.clone());
+        store.sync().unwrap();
+        // kill mid-write inside record 7, then reopen and keep serving
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - p7.len() / 2]).unwrap();
+        let mut store = SessionStore::open(&path).unwrap();
+        assert!(store.recovered_torn());
+        assert_eq!(store.ids(), vec![3]);
+        // the next sync must NOT append after the garbage tail — it
+        // compacts first, so every record replays cleanly
+        let mut nine = busy_session();
+        nine.id = 9;
+        store.insert(9, SessionSnapshot::capture(&nine).encode());
+        store.sync().unwrap();
+        let re = SessionStore::open(&path).unwrap();
+        assert!(!re.recovered_torn(), "the garbage tail must be gone");
+        assert_eq!(re.ids(), vec![3, 9]);
+        assert!(re.peek(3).unwrap().is_ok());
+        assert!(re.peek(9).unwrap().is_ok());
         let _ = std::fs::remove_file(&path);
     }
 

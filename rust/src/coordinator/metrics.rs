@@ -118,6 +118,73 @@ impl ServingReport {
     }
 }
 
+/// Order-preserving builder for cross-session (and cross-engine)
+/// aggregate reports.
+///
+/// The f64 ledger sums are sensitive to accumulation order; every
+/// aggregation path — `Engine::aggregate_report`, the fleet's merged
+/// `FleetReport` — must fold sessions through this one type in global
+/// session-id order so a 3-engine fleet's aggregate is bit-identical to
+/// the same sessions served on one engine.
+#[derive(Debug, Default)]
+pub struct ReportAccumulator {
+    metrics: ServingMetrics,
+    labels: Vec<usize>,
+    faults: FaultSummary,
+    hib: HibernationStats,
+    energy_j: f64,
+    fc_wakeups: u64,
+    now_ns: u64,
+}
+
+impl ReportAccumulator {
+    /// Fold one session's full contribution. The merge order within a
+    /// session (metrics, faults, hib, energy, wakeups, time, labels) is
+    /// fixed — do not reorder, it is part of the bit-identity contract.
+    pub fn add(
+        &mut self,
+        metrics: &ServingMetrics,
+        labels: &[usize],
+        faults: &FaultSummary,
+        hib: &HibernationStats,
+        soc_energy_j: f64,
+        fc_wakeups: u64,
+        now_ns: u64,
+    ) {
+        self.metrics.merge(metrics);
+        self.faults.merge(faults);
+        self.hib.merge(hib);
+        self.energy_j += soc_energy_j;
+        self.fc_wakeups += fc_wakeups;
+        self.now_ns += now_ns;
+        self.labels.extend_from_slice(labels);
+    }
+
+    /// Fold a hibernation-ledger-only contribution: engine-side accruals
+    /// (retention ticks, wake charges) for a stored session whose
+    /// snapshot payload is not being decoded here.
+    pub fn add_hibernation(&mut self, hib: &HibernationStats) {
+        self.hib.merge(hib);
+    }
+
+    pub fn finish(mut self) -> ServingReport {
+        self.metrics.soc_energy_j = self.energy_j;
+        ServingReport {
+            soc_energy_j: self.energy_j,
+            soc_avg_power_w: if self.now_ns == 0 {
+                0.0
+            } else {
+                self.energy_j / (self.now_ns as f64 * 1e-9)
+            },
+            fc_wakeups: self.fc_wakeups,
+            metrics: self.metrics,
+            labels: self.labels,
+            faults: self.faults,
+            hib: self.hib,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +226,45 @@ mod tests {
         assert!((m.sim_inf_per_s() - 10_000.0).abs() < 1.0);
         assert!((m.core_energy_j - 1e-5).abs() < 1e-12);
         assert!(m.summary().contains("frames 10"));
+    }
+
+    #[test]
+    fn accumulator_matches_single_session_assembly() {
+        let mut soc = KrakenSoc::new(0.5);
+        soc.dma_ingest(256);
+        soc.raise_irq(crate::soc::Irq::FrameReady);
+        soc.advance_ns(10_000);
+        soc.add_core_energy(1e-6);
+        soc.raise_irq(crate::soc::Irq::CutieDone);
+        soc.fc_service_done();
+        let mut m = ServingMetrics::default();
+        m.record_frame(10.0, 5.0, 1e-6);
+        let direct = ServingReport::from_parts(
+            m.clone(),
+            &soc,
+            vec![3],
+            FaultSummary::default(),
+            HibernationStats::default(),
+        );
+        let mut acc = ReportAccumulator::default();
+        acc.add(
+            &m,
+            &[3],
+            &FaultSummary::default(),
+            &HibernationStats::default(),
+            soc.energy_j(),
+            soc.fc_wakeups(),
+            soc.now_ns(),
+        );
+        let folded = acc.finish();
+        assert_eq!(folded.soc_energy_j.to_bits(), direct.soc_energy_j.to_bits());
+        assert_eq!(folded.soc_avg_power_w.to_bits(), direct.soc_avg_power_w.to_bits());
+        assert_eq!(folded.fc_wakeups, direct.fc_wakeups);
+        assert_eq!(folded.labels, direct.labels);
+        assert_eq!(
+            folded.metrics.soc_energy_j.to_bits(),
+            direct.metrics.soc_energy_j.to_bits()
+        );
     }
 
     #[test]

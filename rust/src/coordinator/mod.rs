@@ -11,9 +11,13 @@
 //! submit/drain path every topology policy — inline, threaded
 //! producer/consumer (std threads over bounded channels; tokio is
 //! unavailable in this offline environment), batched worker-pool — is a
-//! thin wrapper over.
+//! thin wrapper over. Scaling past one simulated accelerator, the
+//! [`Fleet`] shards sessions across N engines (one shared weight image,
+//! pluggable routing, typed back-pressure) and live-migrates sessions
+//! between them over the hibernation snapshot path, byte-identically.
 
 pub mod engine;
+pub mod fleet;
 pub mod hibernate;
 pub mod metrics;
 pub mod pipeline;
@@ -22,8 +26,12 @@ pub mod source;
 pub mod stream;
 
 pub use engine::{Engine, EngineConfig};
+pub use fleet::{
+    DrainOrder, EngineLoad, Fleet, FleetConfig, FleetError, FleetReport, Rejected, ShardPolicy,
+    DEFAULT_QUEUE_CAP,
+};
 pub use hibernate::{HibernationStats, SessionSnapshot, SessionStore, SnapshotError};
-pub use metrics::{ServingMetrics, ServingReport};
+pub use metrics::{ReportAccumulator, ServingMetrics, ServingReport};
 pub use pipeline::{Pipeline, PipelineConfig};
 pub use session::{Session, FAILURE_LIMIT};
 pub use source::{DvsSource, FrameSource, GestureClass, MixedSource};

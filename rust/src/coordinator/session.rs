@@ -52,6 +52,12 @@ pub struct Session {
     /// on activity; drives idle eviction). Deliberately NOT snapshotted:
     /// a freshly resumed session restarts its idle clock.
     pub(crate) idle_drains: u64,
+    /// Engine drain-counter value when this session last served a frame
+    /// (0 = never). Drives least-recently-active eviction under a
+    /// resident-session budget. Like `idle_drains`, deliberately NOT
+    /// snapshotted — recency is a property of this engine's timeline,
+    /// not of the session's architectural state.
+    pub(crate) last_active: u64,
 }
 
 impl Session {
@@ -66,6 +72,7 @@ impl Session {
             faults: FaultSummary::default(),
             hib: HibernationStats::default(),
             idle_drains: 0,
+            last_active: 0,
         }
     }
 

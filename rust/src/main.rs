@@ -14,8 +14,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use tcn_cutie::coordinator::source::NUM_CLASSES;
 use tcn_cutie::coordinator::{
-    DvsSource, Engine, EngineConfig, FrameSource, GestureClass, PackedStream, Pipeline,
-    PipelineConfig, ServingReport, SessionStore,
+    DrainOrder, DvsSource, Engine, EngineConfig, Fleet, FleetConfig, FleetError, FrameSource,
+    GestureClass, PackedStream, Pipeline, PipelineConfig, ServingReport, SessionStore,
+    ShardPolicy, DEFAULT_QUEUE_CAP,
 };
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
@@ -41,6 +42,9 @@ const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report
          [--fault-surface actmem|tcnmem|weightmem|dma|snapshot]
          [--fault-ber P | --fault-voltage V] [--fault-seed N]
          [--hibernate-after N] [--session-store FILE]
+         [--engines N] [--shard-policy hash|least-loaded|pin]
+         [--drain-order fifo|deadline|energy] [--queue-cap N]
+         [--migrate-every K] [--resident-sessions B]
   pack-weights --net MANIFEST [--out FILE] | --synthetic DIR [--seed N]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
@@ -62,6 +66,18 @@ the streams one per round, so sessions actually idle); it resumes
 bit-exactly on its next frame. --session-store FILE persists the
 snapshots (CRC-guarded records, atomic rename) across serve
 invocations; without it the store is in-memory.
+--resident-sessions B caps how many sessions stay resident per engine:
+past the budget, the least-recently-active sessions snapshot out even
+if they were never idle.
+
+--engines N shards the sessions across a fleet of N engines (all
+adopting the one shared packed weight image), routed by --shard-policy;
+--migrate-every K live-migrates one session to the next engine every K
+rounds over the hibernation snapshot path — per-session and aggregate
+reports stay byte-identical to --engines 1. A full engine submit queue
+(--queue-cap, default 64) back-pressures: serve drains the fleet and
+retries the returned frame. --drain-order picks the cross-session serve
+order at each drain (per-session frame order always holds).
 
 pack-weights upgrades a manifest's `.ttn` weights to the TTN2 container
 (same bundle + a packed (pos, mask) weight-image section) in place, or
@@ -245,14 +261,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (None, Some(fv)) => Some(FaultPlan::at_voltage(fault_surface, fv, fault_seed)),
         (None, None) => None,
     };
-    // --hibernate-after / --session-store: the state-retentive idle tier.
+    // --hibernate-after / --session-store / --resident-sessions: the
+    // state-retentive idle tier (and its capacity budget).
     let hibernate_after = args.opt_parsed::<u64>("hibernate-after")?;
     let session_store = args.opt("session-store");
-    let hibernate = hibernate_after.is_some() || session_store.is_some();
+    let resident_sessions = args.opt_parsed::<usize>("resident-sessions")?;
+    if let Some(b) = resident_sessions {
+        ensure!(b >= 1, "--resident-sessions must be at least 1");
+    }
+    let hibernate =
+        hibernate_after.is_some() || session_store.is_some() || resident_sessions.is_some();
+    // --engines / --shard-policy / --drain-order / --queue-cap /
+    // --migrate-every: the sharded serving fleet.
+    let engines = args.opt_usize("engines", 1)?;
+    ensure!(engines >= 1, "--engines must be at least 1");
+    let shard_policy = args.opt_parsed::<ShardPolicy>("shard-policy")?.unwrap_or(ShardPolicy::Hash);
+    let drain_order = args.opt_parsed::<DrainOrder>("drain-order")?.unwrap_or(DrainOrder::Fifo);
+    let queue_cap = args.opt_usize("queue-cap", DEFAULT_QUEUE_CAP)?;
+    ensure!(queue_cap >= 1, "--queue-cap must be at least 1");
+    let migrate_every = args.opt_parsed::<usize>("migrate-every")?;
+    if let Some(k) = migrate_every {
+        ensure!(k >= 1, "--migrate-every must be at least 1");
+    }
+    let fleet_mode = engines > 1 || migrate_every.is_some();
     if threaded && batch.is_some() {
         bail!("--threaded and --batch are mutually exclusive");
     }
-    if threaded && (streams > 1 || replay.is_some() || fault_plan.is_some() || hibernate) {
+    let needs_engine =
+        streams > 1 || replay.is_some() || fault_plan.is_some() || hibernate || fleet_mode;
+    if threaded && needs_engine {
         bail!("--threaded serves a single live stream; drop it or use --batch");
     }
     // packed TTN2 artifacts boot word-for-word into the shared image
@@ -275,7 +312,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the classic topology policies (all thin wrappers over the same
     // engine path). A fault plan or hibernation always routes through
     // the engine, which owns the per-session injectors and the store.
-    if streams == 1 && replay.is_none() && fault_plan.is_none() && !hibernate {
+    if streams == 1 && replay.is_none() && fault_plan.is_none() && !hibernate && !fleet_mode {
         let cfg = PipelineConfig {
             voltage,
             freq_hz,
@@ -330,6 +367,98 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
 
+    // Sharded fleet serving: N engines behind one router, live
+    // migrations every K rounds, byte-identical to --engines 1.
+    if fleet_mode {
+        ensure!(
+            session_store.is_none(),
+            "--session-store is single-engine; fleet engines use per-engine in-memory stores"
+        );
+        let fcfg = FleetConfig {
+            engines,
+            policy: shard_policy,
+            order: drain_order,
+            queue_cap,
+            engine: EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) },
+        };
+        let mut fleet = match image {
+            Some(img) => Fleet::with_image(&net, fcfg, img)?,
+            None => Fleet::new(&net, fcfg)?,
+        };
+        if hibernate {
+            for e in 0..engines {
+                let eng = fleet.engine_mut(e).expect("engine index in range");
+                eng.enable_hibernation(SessionStore::in_memory(), hibernate_after);
+                eng.set_resident_budget(resident_sessions)?;
+            }
+        }
+        for sid in 0..streams {
+            if shard_policy == ShardPolicy::Pin {
+                // explicit placement: stripe the sessions across engines
+                fleet.pin_session(sid, sid % engines)?;
+            }
+            fleet.open_session(sid)?;
+            if let Some(plan) = fault_plan {
+                fleet.set_fault_plan(sid, plan)?;
+            }
+        }
+        let mut served = 0;
+        for round in 0..frames {
+            if hibernate_after.is_some() {
+                let sid = round % streams;
+                if let Some(f) = sources[sid].next_frame() {
+                    served += fleet_submit(&mut fleet, sid, f)?;
+                }
+            } else {
+                for (sid, src) in sources.iter_mut().enumerate() {
+                    if let Some(f) = src.next_frame() {
+                        served += fleet_submit(&mut fleet, sid, f)?;
+                    }
+                }
+            }
+            served += fleet.drain()?;
+            // deterministic live migrations: every K rounds, move one
+            // session to the next engine over the snapshot path
+            if let Some(k) = migrate_every {
+                if (round + 1) % k == 0 {
+                    let sid = (round / k) % streams;
+                    if let Some(from) = fleet.route(sid) {
+                        fleet.migrate(sid, (from + 1) % engines)?;
+                    }
+                }
+            }
+        }
+        let rep = fleet.report();
+        println!(
+            "serving (fleet: {engines} engines, {shard_policy} routing, {drain_order} drain, \
+             {streams} streams, {served} frames, {} migrations)",
+            rep.migrations
+        );
+        for l in &rep.engines {
+            println!(
+                "fleet engine[{}]: {} routed, {} resident, {} hibernated, peak queue {}, \
+                 {} submitted, {} served, {} rejected, migrations in/out {}/{}",
+                l.engine,
+                l.routed_sessions,
+                l.resident_sessions,
+                l.hibernated_sessions,
+                l.peak_queue_depth,
+                l.submitted,
+                l.served,
+                l.rejected,
+                l.migrations_in,
+                l.migrations_out
+            );
+        }
+        let mut agg = rep.aggregate;
+        for (sid, mut r) in fleet.finish_all() {
+            print_report(&format!("  [session {sid}]"), &mut r);
+        }
+        print_report("aggregate", &mut agg);
+        fleet.sync_stores()?;
+        return Ok(());
+    }
+
     let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) };
     let pool = ecfg.workers;
     let mut engine = match image {
@@ -345,6 +474,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("session store: recovered a torn tail (incomplete final record dropped)");
         }
         engine.enable_hibernation(store, hibernate_after);
+        engine.set_resident_budget(resident_sessions)?;
     }
     // deterministic round-robin interleave across sessions
     for sid in 0..streams {
@@ -389,6 +519,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // store so a later invocation reopens a consistent file
     engine.sync_store()?;
     Ok(())
+}
+
+/// Submit one frame to the fleet, absorbing back-pressure: a refused
+/// submit hands the frame back untouched, so drain the fleet and retry
+/// it. Returns the number of frames the forced drain served (0 on the
+/// happy path). Any non-back-pressure refusal is a real routing error.
+fn fleet_submit(
+    fleet: &mut Fleet<'_>,
+    sid: usize,
+    frame: tcn_cutie::tensor::PackedMap,
+) -> Result<usize> {
+    match fleet.submit(sid, frame) {
+        Ok(()) => Ok(0),
+        Err(rej) => match rej.reason {
+            FleetError::Backpressure { .. } => {
+                let served = fleet.drain()?;
+                fleet
+                    .submit(sid, rej.frame)
+                    .map_err(|r| anyhow::anyhow!("resubmit after forced drain refused: {r}"))?;
+                Ok(served)
+            }
+            other => bail!("routing session {sid}: {other}"),
+        },
+    }
 }
 
 /// Convert a manifest's `.ttn` weights to the packed TTN2 container:

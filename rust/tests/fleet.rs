@@ -1,0 +1,395 @@
+//! Integration tests of the sharded serving fleet: live migration over
+//! the snapshot path must be byte-identical to never migrating (labels,
+//! fc_wakeups, every energy ledger's f64 bits, latency quantiles — in
+//! both sim modes, serial and pooled, clean and mid-fault-plan),
+//! interleaving sessions across K engines must match serving each
+//! alone, back-pressure must be a typed refusal that leaves no partial
+//! state, and routing/drain policies must be deterministic while never
+//! bending per-session frame order.
+
+use tcn_cutie::coordinator::{
+    DrainOrder, DvsSource, Engine, EngineConfig, Fleet, FleetConfig, FleetError, GestureClass,
+    ServingReport, SessionStore, ShardPolicy,
+};
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::fault::{FaultPlan, FaultSurface};
+use tcn_cutie::network::{dvs_hybrid_random, Network};
+
+fn source_for(net: &Network, s: usize) -> DvsSource {
+    DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12))
+}
+
+fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits(), "{ctx}: soc energy");
+    assert_eq!(a.soc_avg_power_w.to_bits(), b.soc_avg_power_w.to_bits(), "{ctx}: soc power");
+    assert_eq!(
+        a.metrics.core_energy_j.to_bits(),
+        b.metrics.core_energy_j.to_bits(),
+        "{ctx}: core energy"
+    );
+    assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}: sim time");
+    assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}: frames");
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(
+            a.metrics.sim_latency_us.quantile(q).to_bits(),
+            b.metrics.sim_latency_us.quantile(q).to_bits(),
+            "{ctx}: sim latency q{q}"
+        );
+    }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault summary");
+}
+
+/// The single-engine oracle: serve `frames` frames of stream `s`,
+/// always resident, draining per frame.
+fn serve_resident(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    s: usize,
+    frames: usize,
+    plan: Option<FaultPlan>,
+) -> ServingReport {
+    let cfg = EngineConfig { mode, workers, ..Default::default() };
+    let mut engine = Engine::new(net, cfg).unwrap();
+    engine.open_session(s);
+    if let Some(p) = plan {
+        engine.set_fault_plan(s, p);
+    }
+    let mut src = source_for(net, s);
+    for _ in 0..frames {
+        engine.submit(s, src.next_frame());
+        engine.drain().unwrap();
+    }
+    engine.finish_session(s).unwrap()
+}
+
+/// Serve `sessions` interleaved streams through a fleet of `engines`,
+/// one frame per stream per round; every `migrate_every` rounds, every
+/// session live-migrates to the next engine. Returns the per-session
+/// reports plus the migration count.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    sessions: usize,
+    engines: usize,
+    frames: usize,
+    plan: Option<FaultPlan>,
+    migrate_every: Option<usize>,
+) -> (Vec<(usize, ServingReport)>, u64) {
+    let cfg = FleetConfig {
+        engines,
+        engine: EngineConfig { mode, workers, ..Default::default() },
+        ..Default::default()
+    };
+    let mut fleet = Fleet::new(net, cfg).unwrap();
+    for sid in 0..sessions {
+        fleet.open_session(sid).unwrap();
+        if let Some(p) = plan {
+            fleet.set_fault_plan(sid, p).unwrap();
+        }
+    }
+    let mut srcs: Vec<DvsSource> = (0..sessions).map(|s| source_for(net, s)).collect();
+    for round in 0..frames {
+        for (sid, src) in srcs.iter_mut().enumerate() {
+            fleet.submit(sid, src.next_frame()).unwrap();
+        }
+        fleet.drain().unwrap();
+        if let Some(k) = migrate_every {
+            if (round + 1) % k == 0 {
+                for sid in 0..sessions {
+                    let from = fleet.route(sid).unwrap();
+                    fleet.migrate(sid, (from + 1) % engines).unwrap();
+                }
+            }
+        }
+    }
+    let migrations = fleet.report().migrations;
+    (fleet.finish_all(), migrations)
+}
+
+#[test]
+fn migrated_sessions_serve_byte_identically() {
+    // The tentpole acceptance gate: a session that live-migrates
+    // mid-stream — including mid-fault-plan, the injector's RNG
+    // position rides in the snapshot — must close with a report
+    // byte-identical to one that never left its first engine.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let frames = 6;
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1usize, 3] {
+            for plan in [None, Some(FaultPlan::with_ber(FaultSurface::TcnMem, 0.05, 13))] {
+                let armed = plan.is_some();
+                let (reports, migrations) =
+                    serve_fleet(&net, mode, workers, 2, 2, frames, plan, Some(2));
+                assert!(migrations > 0, "the schedule must actually migrate");
+                assert_eq!(reports.len(), 2);
+                for (sid, mut rep) in reports {
+                    if armed {
+                        assert!(rep.faults.injected_flips > 0, "plan must actually draw");
+                    }
+                    let mut resident = serve_resident(&net, mode, workers, sid, frames, plan);
+                    assert_identical(
+                        &mut rep,
+                        &mut resident,
+                        &format!("session {sid} {mode:?} workers={workers} armed={armed}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_fleet_matches_isolated_per_session_on_k_engines() {
+    // Sharding is invisible per session: 5 streams interleaved across K
+    // engines close byte-identical to each stream served alone.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    for engines in [2usize, 4] {
+        let (reports, _) = serve_fleet(&net, SimMode::Fast, 1, 5, engines, 3, None, None);
+        assert_eq!(reports.len(), 5);
+        for (sid, mut rep) in reports {
+            let mut solo = serve_resident(&net, SimMode::Fast, 1, sid, 3, None);
+            assert_identical(&mut rep, &mut solo, &format!("{engines} engines, session {sid}"));
+        }
+    }
+}
+
+#[test]
+fn fleet_aggregate_is_engine_count_invariant() {
+    // The merged FleetReport folds sessions in global id order through
+    // the same accumulator a single engine uses, so the aggregate —
+    // f64 ledger bits included — does not depend on the engine count or
+    // the migration history.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let run = |engines: usize, migrate: Option<usize>| {
+        let cfg = FleetConfig {
+            engines,
+            engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let mut fleet = Fleet::new(&net, cfg).unwrap();
+        for sid in 0..4 {
+            fleet.open_session(sid).unwrap();
+        }
+        let mut srcs: Vec<DvsSource> = (0..4).map(|s| source_for(&net, s)).collect();
+        for round in 0..4 {
+            for (sid, src) in srcs.iter_mut().enumerate() {
+                fleet.submit(sid, src.next_frame()).unwrap();
+            }
+            fleet.drain().unwrap();
+            if let Some(k) = migrate {
+                if (round + 1) % k == 0 {
+                    let sid = round % 4;
+                    let from = fleet.route(sid).unwrap();
+                    fleet.migrate(sid, (from + 1) % engines).unwrap();
+                }
+            }
+        }
+        fleet.aggregate_report()
+    };
+    let mut one = run(1, None);
+    for engines in [2usize, 4] {
+        let mut many = run(engines, Some(2));
+        assert_identical(&mut many, &mut one, &format!("{engines}-engine aggregate"));
+        assert_eq!(many.labels, one.labels, "labels fold in global session-id order");
+    }
+}
+
+#[test]
+fn backpressure_is_typed_and_leaves_no_partial_state() {
+    // A full submit queue refuses with FleetError::Backpressure and
+    // hands the frame back untouched; drain-and-retry must then serve
+    // byte-identically to a run that never saw back-pressure — with an
+    // armed fault plan, so a leaked injector draw would be caught.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let plan = FaultPlan::with_ber(FaultSurface::ActMem, 0.05, 21);
+    let serve = |cap: usize| {
+        let cfg = FleetConfig {
+            engines: 2,
+            queue_cap: cap,
+            engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let mut fleet = Fleet::new(&net, cfg).unwrap();
+        for sid in 0..3 {
+            fleet.open_session(sid).unwrap();
+            fleet.set_fault_plan(sid, plan).unwrap();
+        }
+        let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
+        let mut rejections = 0u64;
+        for _ in 0..4 {
+            for (sid, src) in srcs.iter_mut().enumerate() {
+                let mut frame = src.next_frame();
+                loop {
+                    match fleet.submit(sid, frame) {
+                        Ok(()) => break,
+                        Err(rej) => {
+                            let FleetError::Backpressure { engine, depth, cap: c } = rej.reason
+                            else {
+                                panic!("unexpected refusal: {}", rej.reason);
+                            };
+                            assert!(engine < 2, "refusal names a real engine");
+                            assert_eq!(c, cap);
+                            assert_eq!(depth, cap, "refused exactly at the bound");
+                            rejections += 1;
+                            fleet.drain().unwrap();
+                            frame = rej.frame; // the frame came back untouched
+                        }
+                    }
+                }
+            }
+            fleet.drain().unwrap();
+        }
+        assert_eq!(fleet.report().rejected_submits, rejections);
+        (fleet.finish_all(), rejections)
+    };
+    let (squeezed, rejections) = serve(1);
+    let (roomy, zero) = serve(64);
+    assert!(rejections > 0, "cap 1 with 3 streams on 2 engines must back-pressure");
+    assert_eq!(zero, 0, "cap 64 never fills at 3 frames per round");
+    for ((sid_a, mut a), (sid_b, mut b)) in squeezed.into_iter().zip(roomy) {
+        assert_eq!(sid_a, sid_b);
+        assert!(a.faults.injected_flips > 0, "the plan must draw in both runs");
+        assert_identical(&mut a, &mut b, &format!("session {sid_a} across back-pressure"));
+    }
+}
+
+#[test]
+fn shard_policies_route_deterministically() {
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let mk = |policy: ShardPolicy, engines: usize| {
+        let cfg = FleetConfig {
+            engines,
+            policy,
+            engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+            ..Default::default()
+        };
+        Fleet::new(&net, cfg).unwrap()
+    };
+
+    // hash: pure in the session id — two fleets agree on every route
+    let mut a = mk(ShardPolicy::Hash, 3);
+    let mut b = mk(ShardPolicy::Hash, 3);
+    for sid in 0..12 {
+        a.open_session(sid).unwrap();
+        b.open_session(sid).unwrap();
+        assert_eq!(a.route(sid), b.route(sid), "hash routing is reproducible");
+        assert!(a.route(sid).unwrap() < 3);
+    }
+
+    // least-loaded: 12 sequential arrivals on 3 engines balance 4/4/4
+    let mut ll = mk(ShardPolicy::LeastLoaded, 3);
+    for sid in 0..12 {
+        ll.open_session(sid).unwrap();
+    }
+    let rep = ll.report();
+    let loads: Vec<usize> = rep.engines.iter().map(|e| e.routed_sessions).collect();
+    assert_eq!(loads, vec![4, 4, 4]);
+
+    // pin: nothing routes implicitly, and a committed route refuses a
+    // conflicting repin (migrate moves state; a pin would not)
+    let mut pinned = mk(ShardPolicy::Pin, 3);
+    match pinned.open_session(7) {
+        Err(FleetError::Unpinned { session: 7 }) => {}
+        other => panic!("expected Unpinned, got {:?}", other.map(|_| ())),
+    }
+    pinned.pin_session(7, 2).unwrap();
+    pinned.open_session(7).unwrap();
+    assert_eq!(pinned.route(7), Some(2));
+    match pinned.pin_session(7, 0) {
+        Err(FleetError::AlreadyRouted { session: 7, engine: 2 }) => {}
+        other => panic!("expected AlreadyRouted, got {other:?}"),
+    }
+    match pinned.pin_session(8, 9) {
+        Err(FleetError::UnknownEngine { engine: 9, engines: 3 }) => {}
+        other => panic!("expected UnknownEngine, got {other:?}"),
+    }
+}
+
+#[test]
+fn drain_orders_preserve_per_session_order_and_reports() {
+    // Deadline/energy ordering may reorder ACROSS sessions (observable
+    // via drain_plan) but every session's own frame sequence — and
+    // therefore its report, bit for bit — is untouched.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let serve = |order: DrainOrder, probe: bool| {
+        let cfg = FleetConfig {
+            engines: 1,
+            order,
+            engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let mut fleet = Fleet::new(&net, cfg).unwrap();
+        for sid in 0..3 {
+            fleet.open_session(sid).unwrap();
+        }
+        fleet.set_deadline_slack(2, 0);
+        fleet.set_deadline_slack(1, 10);
+        let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
+        let mut first_plan = None;
+        for _ in 0..3 {
+            for (sid, src) in srcs.iter_mut().enumerate() {
+                fleet.submit(sid, src.next_frame()).unwrap();
+            }
+            if probe && first_plan.is_none() {
+                first_plan = Some(fleet.drain_plan(0));
+            }
+            fleet.drain().unwrap();
+        }
+        (first_plan, fleet.finish_all())
+    };
+    let (dl_plan, dl) = serve(DrainOrder::Deadline, true);
+    assert_eq!(dl_plan.unwrap(), vec![2, 1, 0], "tightest deadline first, unset slack last");
+    let (fifo_plan, fifo) = serve(DrainOrder::Fifo, true);
+    assert_eq!(fifo_plan.unwrap(), vec![0, 1, 2], "fifo keeps submission order");
+    let (_, energy) = serve(DrainOrder::Energy, false);
+    for (((sid, mut f), (_, mut d)), (_, mut e)) in fifo.into_iter().zip(dl).zip(energy) {
+        assert_identical(&mut d, &mut f, &format!("deadline vs fifo, session {sid}"));
+        assert_identical(&mut e, &mut f, &format!("energy vs fifo, session {sid}"));
+    }
+}
+
+#[test]
+fn hibernated_sessions_migrate_and_finish_cleanly() {
+    // A session parked in its home engine's snapshot store migrates
+    // straight out of the store onto the target (resume → re-capture →
+    // import), keeps serving there, and still closes byte-identical to
+    // an unbroken resident run.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = FleetConfig {
+        engines: 2,
+        engine: EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let mut fleet = Fleet::new(&net, cfg).unwrap();
+    for e in 0..2 {
+        fleet.engine_mut(e).unwrap().enable_hibernation(SessionStore::in_memory(), None);
+    }
+    fleet.open_session(0).unwrap();
+    let home = fleet.route(0).unwrap();
+    let mut src = source_for(&net, 0);
+    for _ in 0..2 {
+        fleet.submit(0, src.next_frame()).unwrap();
+        fleet.drain().unwrap();
+    }
+    fleet.engine_mut(home).unwrap().hibernate(0).unwrap();
+    assert!(fleet.engine(home).unwrap().store().unwrap().contains(0));
+    let target = (home + 1) % 2;
+    fleet.migrate(0, target).unwrap();
+    assert!(fleet.engine(target).unwrap().session(0).is_some(), "resident on the target");
+    assert!(!fleet.engine(home).unwrap().store().unwrap().contains(0), "record moved out");
+    assert_eq!(fleet.route(0), Some(target));
+    for _ in 0..2 {
+        fleet.submit(0, src.next_frame()).unwrap();
+        fleet.drain().unwrap();
+    }
+    let mut rep = fleet.finish_session(0).unwrap();
+    assert_eq!(rep.hib.hibernates, 1);
+    assert_eq!(rep.hib.resumes, 1);
+    let mut resident = serve_resident(&net, SimMode::Fast, 1, 0, 4, None);
+    assert_identical(&mut rep, &mut resident, "hibernated then migrated session");
+}

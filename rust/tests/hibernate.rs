@@ -179,6 +179,47 @@ fn idle_eviction_hibernates_and_resumes_transparently() {
 }
 
 #[test]
+fn resident_budget_evicts_lru_even_when_never_idle() {
+    // --resident-sessions semantics: with 4 always-busy streams and a
+    // budget of 2, the least-recently-active pair snapshots out after
+    // every drain even though nothing ever idles — and every session
+    // still closes byte-identical to unbounded residency.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::new(&net, cfg.clone()).unwrap();
+    engine.enable_hibernation(SessionStore::in_memory(), None);
+    engine.set_resident_budget(Some(2)).unwrap();
+    let mut srcs: Vec<DvsSource> = (0..4).map(|s| source_for(&net, s)).collect();
+    let frames = 3;
+    for _ in 0..frames {
+        for (s, src) in srcs.iter_mut().enumerate() {
+            engine.submit(s, src.next_frame());
+        }
+        engine.drain().unwrap();
+        assert!(engine.session_ids().len() <= 2, "residency must respect the budget");
+        assert_eq!(engine.store().unwrap().len(), 2, "the excess pair is in the store");
+    }
+    let reports = engine.finish_all();
+    assert_eq!(reports.len(), 4);
+    for (s, mut rep) in reports {
+        if s < 2 {
+            // all four tie on recency every round; the id breaks the
+            // tie, so 0 and 1 are the deterministic victims
+            assert_eq!(rep.hib.hibernates, frames as u64, "session {s}");
+            assert!(rep.hib.resumes >= frames as u64 - 1, "session {s} kept being restored");
+        } else {
+            assert!(!rep.hib.any(), "session {s} stayed under the budget untouched");
+        }
+        let mut resident = serve_resident(&net, SimMode::Fast, 1, s, frames, None);
+        assert_identical(&mut rep, &mut resident, &format!("budgeted session {s}"));
+    }
+
+    // a resident budget without the idle tier is a typed error
+    let mut bare = Engine::new(&net, cfg).unwrap();
+    assert!(bare.set_resident_budget(Some(1)).is_err());
+}
+
+#[test]
 fn zero_ber_snapshot_plan_stays_bit_exact() {
     // The fifth fault surface honors the zero-BER contract under real
     // hibernate/resume cycling: an armed-but-inert snapshot plan draws
