@@ -5,14 +5,22 @@
 //! over the exported eval set, and the training loss curve, JAX-reported
 //! accuracy and simulator-measured accuracy are printed side by side.
 //!
+//! The eval set is served the way a deployment serves it: the network is
+//! booted once into a shared prepared image behind a [`NetRegistry`] and
+//! every eval frame goes through [`Engine::submit`] on one session — the
+//! same binding/serve path the multi-workload engine uses — instead of
+//! the legacy per-scheduler `preload_weights` loop.
+//!
 //!     cargo run --release --example cifar_e2e
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use tcn_cutie::cutie::{CutieConfig, Scheduler, SimMode};
-use tcn_cutie::energy::{evaluate, EnergyParams};
+use tcn_cutie::coordinator::{Engine, EngineConfig, NetRegistry};
+use tcn_cutie::cutie::{CutieConfig, PreparedNet, SimMode};
 use tcn_cutie::network::loader;
-use tcn_cutie::tensor::{ttn, TritTensor};
+use tcn_cutie::tensor::{ttn, PackedMap, TritTensor};
 use tcn_cutie::util::json::Json;
 
 fn main() -> Result<()> {
@@ -46,32 +54,34 @@ fn main() -> Result<()> {
     let n = images.dims[0];
     let (h, w, c) = (images.dims[1], images.dims[2], images.dims[3]);
 
-    let mut sched = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
-    sched.preload_weights(&net);
-    let mut correct = 0usize;
-    let mut total_energy = 0.0;
-    let mut total_cycles = 0u64;
-    let p = EnergyParams::default();
+    // Boot: one shared prepared image, registered once, served by an
+    // engine session bound to it.
+    let image = Arc::new(PreparedNet::new(&net, &CutieConfig::kraken()));
+    let registry = Arc::new(NetRegistry::single_with_image(net, image)?);
+    let mut engine = Engine::with_registry(
+        Arc::clone(&registry),
+        EngineConfig { mode: SimMode::Accurate, workers: 1, ..Default::default() },
+    )?;
+    engine.open_session(0)?;
     for i in 0..n {
-        let img = TritTensor::from_vec(
+        let frame = TritTensor::from_vec(
             &[h, w, c],
             images.data[i * h * w * c..(i + 1) * h * w * c].to_vec(),
         );
-        let (logits, stats) = sched.run_full(&net, &img)?;
-        if logits.argmax() as i32 == labels.data[i] {
-            correct += 1;
-        }
-        let r = evaluate(&stats, 0.5, None, &p);
-        total_energy += r.energy_j;
-        total_cycles += stats.total_cycles();
+        engine.submit(0, PackedMap::from_trit(&frame))?;
     }
+    engine.drain()?;
+    let report = engine.finish_session(0).context("eval session vanished")?;
+
+    let correct =
+        report.labels.iter().zip(&labels.data).filter(|(got, want)| **got as i32 == **want).count();
     let acc = correct as f64 / n as f64;
     println!("\n== simulator evaluation ({n} images, 48-channel cifar9_mini) ==");
     println!("simulator accuracy: {acc:.3}  (JAX: {jax_acc:.3})");
     println!(
-        "avg energy {:.3} µJ/inference, avg {} cycles @0.5 V",
-        total_energy / n as f64 * 1e6,
-        total_cycles / n as u64
+        "avg core energy {:.3} µJ/inference, median {:.1} µs simulated @0.5 V",
+        report.metrics.core_energy_j / n as f64 * 1e6,
+        report.metrics.sim_latency_us.quantile(0.5)
     );
     anyhow::ensure!(
         (acc - jax_acc).abs() < 1e-9,

@@ -27,6 +27,8 @@ use tcn_cutie::trit::{dot_scalar, PackedVec};
 use tcn_cutie::util::bench::{bench, black_box, BenchResult, BenchSuite};
 use tcn_cutie::util::rng::Rng;
 
+use std::sync::Arc;
+
 fn main() {
     let mut rng = Rng::new(99);
     let mut suite = BenchSuite::new();
@@ -242,7 +244,7 @@ fn main() {
             (0..4).map(|s| DvsSource::new(64, 11 + s as u64, GestureClass(s % 12))).collect();
         for _ in 0..8 {
             for (sid, src) in srcs.iter_mut().enumerate() {
-                engine.submit(sid, src.next_frame());
+                engine.submit(sid, src.next_frame()).unwrap();
             }
         }
         engine.drain().unwrap();
@@ -274,13 +276,13 @@ fn main() {
             EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
         )
         .unwrap();
-        engine.open_session(0);
+        engine.open_session(0).unwrap();
         if let Some(p) = plan {
-            engine.set_fault_plan(0, p);
+            engine.set_fault_plan(0, p).unwrap();
         }
         let mut src = DvsSource::new(64, 31, GestureClass(4));
         for _ in 0..24 {
-            engine.submit(0, src.next_frame());
+            engine.submit(0, src.next_frame()).unwrap();
         }
         engine.drain().unwrap();
         engine.finish_session(0).unwrap().labels
@@ -316,10 +318,10 @@ fn main() {
         EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() },
     )
     .unwrap();
-    warm_engine.open_session(0);
+    warm_engine.open_session(0).unwrap();
     let mut warm_src = DvsSource::new(64, 51, GestureClass(2));
     for _ in 0..8 {
-        warm_engine.submit(0, warm_src.next_frame());
+        warm_engine.submit(0, warm_src.next_frame()).unwrap();
     }
     warm_engine.drain().unwrap();
     let warm = warm_engine.session(0).unwrap();
@@ -375,6 +377,41 @@ fn main() {
     );
     suite.push(&r_route);
     suite.push(&r_migrate);
+
+    // --- multi-workload: cifar9 feed-forward frame + bound-image switch ---
+    // The workload-registry entries (EXPERIMENTS.md §Workloads): the
+    // second headline net's per-frame serve path (CNN front-end straight
+    // into the classifier — no TCN ring), and the cost of re-binding a
+    // scheduler between two registered prepared images (the per-frame
+    // tax an interleaved multi-net stream pays: park the outgoing net's
+    // weight banks, restore the incoming net's).
+    let cifar_frame = PackedMap::from_trit(&TritTensor::random(&[32, 32, 3], &mut rng, 0.4));
+    let mut cifar_sched = Scheduler::new(cfg.clone(), SimMode::Fast);
+    cifar_sched.preload_weights(&net);
+    let r_cifar = bench("workload: cifar9_96 frame", 2, 10, || {
+        let (feat, _) = cifar_sched.run_cnn(&net, &cifar_frame).unwrap();
+        cifar_sched.run_classifier(&net, &feat).unwrap()
+    });
+    suite.push(&r_cifar);
+
+    let img_dvs = Arc::new(PreparedNet::new(&dnet, &cfg));
+    let img_cifar = Arc::new(PreparedNet::new(&net, &cfg));
+    let mut switcher = Scheduler::new(cfg.clone(), SimMode::Fast);
+    switcher.swap_image(Arc::clone(&img_dvs));
+    switcher.preload_weights(&dnet);
+    switcher.swap_image(Arc::clone(&img_cifar));
+    switcher.preload_weights(&net);
+    // steady state: both nets' weight memories exist, one live one parked
+    let r_switch = bench("workload: image switch", 3, 30, || {
+        switcher.swap_image(Arc::clone(&img_dvs));
+        switcher.swap_image(Arc::clone(&img_cifar));
+    });
+    println!(
+        "  workload: cifar9 frame {:.1} µs, image switch pair {:.2} µs wall\n",
+        r_cifar.median_s * 1e6,
+        r_switch.median_s * 1e6
+    );
+    suite.push(&r_switch);
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {

@@ -27,13 +27,18 @@
 //! each stream alone — asserted for K ∈ {1, 2, 5} and both [`SimMode`]s
 //! in `tests/engine.rs`.
 //!
-//! Weight image (shared-image pass): the engine holds **exactly one**
-//! [`PreparedNet`] behind an [`Arc`] — built once from the network (or
-//! word-copy-loaded from a packed `.ttn` v2 via [`Engine::with_image`])
-//! and borrowed by the tail and every pool worker. Spawning a worker no
-//! longer re-packs or clones a single weight word, which is what makes
-//! wide pools (and, next, multi-engine sharding) cheap — the software
-//! twin of CUTIE's boot-once, stay-resident OCU weight buffers.
+//! Weight images (multi-workload pass): the engine routes every frame
+//! through a shared [`NetRegistry`] — the immutable fingerprint → (net,
+//! `Arc<PreparedNet>`) map built once at boot. Each session binds one
+//! registered net ([`super::registry::SessionGeometry`]); the tail and
+//! every pool worker check the bound image in per frame via
+//! [`Scheduler::swap_image`], which parks the displaced image's
+//! weight-bank residency so interleaving sessions of different nets
+//! stays byte-identical to serving each net alone. A single-net
+//! registry (the [`Engine::new`] / [`Engine::with_image`] boots)
+//! degenerates to PR 5's one-`Arc`'d-image engine exactly — the
+//! software twin of CUTIE's boot-once, stay-resident OCU weight
+//! buffers.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
@@ -43,6 +48,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use super::hibernate::{HibernationStats, SessionSnapshot, SessionStore};
 use super::metrics::{ReportAccumulator, ServingReport};
+use super::registry::{BindingError, NetRegistry};
 use super::session::{FaultState, Session};
 use super::source::FrameSource;
 use crate::cutie::{CutieConfig, PreparedNet, RunStats, Scheduler, SimMode};
@@ -72,29 +78,38 @@ impl Default for EngineConfig {
     }
 }
 
-pub struct Engine<'n> {
-    net: &'n Network,
+pub struct Engine {
+    /// The fingerprint → (net, image) map every frame routes through —
+    /// built once, shared (same `Arc`) by every engine of a fleet.
+    registry: Arc<NetRegistry>,
     cfg: EngineConfig,
     params: EnergyParams,
-    /// The one prepared-weight image every scheduler in this engine
-    /// borrows (tail + all pool workers share this `Arc`).
-    image: Arc<PreparedNet>,
     /// Stateful tail executor: per-session TCN windows are swapped into
     /// it frame by frame; also runs the CNN when the pool is serial.
     tail: Scheduler,
-    /// CNN workers borrowing the shared image (empty when `cfg.workers`
+    /// CNN workers borrowing the shared images (empty when `cfg.workers`
     /// resolves to 1).
     workers: Vec<Scheduler>,
     sessions: BTreeMap<usize, Session>,
-    /// Submitted, not yet drained (session, frame, injection ledger)
-    /// triples in arrival order. Frame-surface faults (ActMem, µDMA) are
-    /// injected at submit time so the ledger rides with its frame.
-    pending: Vec<(usize, PackedMap, FrameFaults)>,
+    /// Submitted, not yet drained, in arrival order. Frame-surface
+    /// faults (ActMem, µDMA) are injected at submit time so the ledger
+    /// rides with its frame.
+    pending: Vec<PendingFrame>,
     /// The state-retentive idle tier (None = always-resident serving).
     hib: Option<HibernateTier>,
     /// Monotonic drain counter — the engine's coarse clock for
     /// least-recently-active accounting (`Session::last_active`).
     drains: u64,
+}
+
+/// One submitted frame: its stream, the net it is bound to (stamped at
+/// submit from the session's binding, so a drain never consults the
+/// session map to route work), the payload, and its injection ledger.
+struct PendingFrame {
+    session: usize,
+    fingerprint: u64,
+    frame: PackedMap,
+    ff: FrameFaults,
 }
 
 /// The engine's idle tier: the snapshot store plus the eviction policy.
@@ -122,34 +137,35 @@ struct PendingHib {
     flips: u64,
 }
 
-impl<'n> Engine<'n> {
-    /// Boot an engine, building (and validating) the prepared-weight
-    /// image from the network. Errors instead of panicking on an invalid
-    /// config/image pairing — e.g. a sub-threshold supply with no
-    /// explicit clock — so serving callers surface a typed error.
-    pub fn new(net: &'n Network, cfg: EngineConfig) -> Result<Self> {
-        let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
-        Self::with_image(net, cfg, image)
+impl Engine {
+    /// Boot a single-workload engine, building (and validating) the
+    /// prepared-weight image from the network. Errors instead of
+    /// panicking on an invalid config/image pairing — e.g. a
+    /// sub-threshold supply with no explicit clock — so serving callers
+    /// surface a typed error.
+    pub fn new(net: &Network, cfg: EngineConfig) -> Result<Self> {
+        Self::with_registry(Arc::new(NetRegistry::single(net.clone())?), cfg)
     }
 
-    /// Boot from a pre-built weight image — e.g. one word-copy-loaded
-    /// from a packed `.ttn` v2 file, or one shared with other engines.
-    /// The image is fully validated against `net` (coverage, geometry,
-    /// pooling flags, per-OCU thresholds) before any scheduler borrows
-    /// it; only the plane words themselves are taken on trust — see
+    /// Boot a single-workload engine from a pre-built weight image —
+    /// e.g. one word-copy-loaded from a packed `.ttn` v2 file. The image
+    /// is fully validated against `net` (coverage, geometry, pooling
+    /// flags, per-OCU thresholds) before any scheduler borrows it; only
+    /// the plane words themselves are taken on trust — see
     /// [`PreparedNet::validate_against`] for that contract.
-    pub fn with_image(
-        net: &'n Network,
-        cfg: EngineConfig,
-        image: Arc<PreparedNet>,
-    ) -> Result<Self> {
-        image.validate_against(net)?;
-        ensure!(
-            image.matches(net),
-            "prepared image '{}' does not match network '{}'",
-            image.net_name(),
-            net.name
-        );
+    pub fn with_image(net: &Network, cfg: EngineConfig, image: Arc<PreparedNet>) -> Result<Self> {
+        Self::with_registry(Arc::new(NetRegistry::single_with_image(net.clone(), image)?), cfg)
+    }
+
+    /// Boot a multi-workload engine over a shared net registry. The tail
+    /// boots every registered image into its own weight banks (the one
+    /// modeled weight-streaming charge per net — each net's residency
+    /// model is per image, parked across switches), every pool worker
+    /// adopts the already-filled banks (spawning a worker moves no
+    /// weight data, modeled or host-side), and all schedulers park at
+    /// the registry's default net.
+    pub fn with_registry(registry: Arc<NetRegistry>, cfg: EngineConfig) -> Result<Self> {
+        ensure!(!registry.is_empty(), "serving needs at least one registered net");
         // Boot-time clock validation: with no explicit clock the energy
         // model derives f_max(V), which has no fit below the device
         // threshold — reject the config here rather than erroring on the
@@ -163,11 +179,12 @@ impl<'n> Engine<'n> {
         } else {
             cfg.workers
         };
-        // The tail boots the image into its weight banks (the one
-        // modeled weight-streaming charge)...
         let mut tail = Scheduler::new(CutieConfig::kraken(), cfg.mode);
-        tail.attach_image(Arc::clone(&image));
-        tail.preload_weights(net);
+        for entry in registry.entries() {
+            tail.swap_image(Arc::clone(entry.image()));
+            tail.preload_weights(entry.net());
+        }
+        tail.swap_image(Arc::clone(registry.default_entry().image()));
         let workers = if pool <= 1 {
             Vec::new()
         } else {
@@ -177,21 +194,20 @@ impl<'n> Engine<'n> {
             let wcfg = CutieConfig { max_threads: 1, ..CutieConfig::kraken() };
             (0..pool)
                 .map(|_| {
-                    // ...and every worker borrows that image and adopts
-                    // the already-filled banks: spawning a worker moves
-                    // no weight data, modeled or host-side.
                     let mut s = Scheduler::new(wcfg.clone(), cfg.mode);
-                    s.attach_image(Arc::clone(&image));
-                    s.adopt_weights(net);
+                    for entry in registry.entries() {
+                        s.swap_image(Arc::clone(entry.image()));
+                        s.adopt_weights(entry.net());
+                    }
+                    s.swap_image(Arc::clone(registry.default_entry().image()));
                     s
                 })
                 .collect()
         };
         Ok(Engine {
-            net,
+            registry,
             cfg,
             params: EnergyParams::default(),
-            image,
             tail,
             workers,
             sessions: BTreeMap::new(),
@@ -242,11 +258,17 @@ impl<'n> Engine<'n> {
         }
     }
 
-    /// The engine's one shared prepared-weight image. `Arc::strong_count`
-    /// on it is 2 + pool width (engine + tail + workers) — asserted by
-    /// the pool-sharing tests.
+    /// The default net's shared prepared-weight image. With every
+    /// scheduler parked on the default net, `Arc::strong_count` on it is
+    /// 2 + pool width (registry + tail + workers) — asserted by the
+    /// pool-sharing tests.
     pub fn image(&self) -> &Arc<PreparedNet> {
-        &self.image
+        self.registry.default_entry().image()
+    }
+
+    /// The net registry this engine serves from.
+    pub fn registry(&self) -> &Arc<NetRegistry> {
+        &self.registry
     }
 
     /// Pool width (0 workers = serial: the tail runs the CNN too).
@@ -254,16 +276,42 @@ impl<'n> Engine<'n> {
         self.workers.len()
     }
 
-    /// Register (or fetch) a stream's session. `submit` opens sessions
-    /// implicitly; opening one explicitly matters only for zero-frame
-    /// streams that still want a (empty) report. A hibernated session
-    /// resumes transparently here (every serve-path entry point — submit,
-    /// fault arming, finish — funnels through this).
-    pub fn open_session(&mut self, id: usize) -> &mut Session {
-        self.ensure_resident(id);
+    /// Register (or fetch) a stream's session, bound to the registry's
+    /// default net. `submit` opens sessions implicitly; opening one
+    /// explicitly matters only for zero-frame streams that still want a
+    /// (empty) report, or to bind a non-default net via
+    /// [`Engine::open_session_on`]. A hibernated session resumes
+    /// transparently here (every serve-path entry point — submit, fault
+    /// arming, finish — funnels through this); an existing session is
+    /// returned with whatever binding it has.
+    pub fn open_session(&mut self, id: usize) -> Result<&mut Session, BindingError> {
+        self.ensure_resident(id)?;
         let voltage = self.cfg.voltage;
-        let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
-        self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, depth, channels))
+        let geometry = self.registry.default_entry().geometry();
+        Ok(self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, geometry)))
+    }
+
+    /// Register (or fetch) a stream's session bound to the registered
+    /// net `fingerprint`. Typed errors: an unknown fingerprint, or an
+    /// existing session bound to a *different* net (bindings are fixed
+    /// for a session's lifetime — re-opening on the same net is fine).
+    pub fn open_session_on(
+        &mut self,
+        id: usize,
+        fingerprint: u64,
+    ) -> Result<&mut Session, BindingError> {
+        let geometry = self.registry.entry(fingerprint)?.geometry();
+        self.ensure_resident(id)?;
+        let voltage = self.cfg.voltage;
+        let sess = self.sessions.entry(id).or_insert_with(|| Session::new(id, voltage, geometry));
+        if sess.geometry.fingerprint != fingerprint {
+            return Err(BindingError::Rebind {
+                session: id,
+                bound: sess.geometry.fingerprint,
+                requested: fingerprint,
+            });
+        }
+        Ok(sess)
     }
 
     /// Snapshot a session into the idle tier and evict it from residency
@@ -284,7 +332,7 @@ impl<'n> Engine<'n> {
         if self.sessions.contains_key(&id) {
             return Ok(false);
         }
-        self.ensure_resident(id);
+        self.ensure_resident(id)?;
         ensure!(self.sessions.contains_key(&id), "session {id} has no hibernation record");
         Ok(true)
     }
@@ -296,10 +344,10 @@ impl<'n> Engine<'n> {
     /// The session must have no pending frames (drain first).
     pub fn export_session(&mut self, id: usize) -> Result<SessionSnapshot> {
         ensure!(
-            !self.pending.iter().any(|(sid, _, _)| *sid == id),
+            !self.pending.iter().any(|pf| pf.session == id),
             "session {id} has pending frames; drain before exporting"
         );
-        self.ensure_resident(id);
+        self.ensure_resident(id)?;
         let sess = self
             .sessions
             .remove(&id)
@@ -309,11 +357,17 @@ impl<'n> Engine<'n> {
 
     /// Adopt a migrated session — the live-migration ingress. Refused
     /// (typed error, nothing half-adopted) when the id is already held
-    /// here, or the snapshot's geometry/operating point does not match
-    /// this engine; restoring either would be silently wrong.
+    /// here, the snapshot is bound to a net this engine's registry does
+    /// not hold, or the snapshot's geometry/operating point does not
+    /// match this engine; restoring any of these would be silently wrong.
     pub fn import_session(&mut self, snap: SessionSnapshot) -> Result<()> {
         let id = snap.session_id as usize;
         ensure!(!self.sessions.contains_key(&id), "session {id} is already resident here");
+        if !self.registry.contains(snap.fingerprint) {
+            return Err(
+                BindingError::SnapshotNet { session: id, fingerprint: snap.fingerprint }.into()
+            );
+        }
         if let Some(tier) = &self.hib {
             ensure!(
                 !tier.store.contains(id as u64),
@@ -350,7 +404,7 @@ impl<'n> Engine<'n> {
             bail!("hibernation is not enabled on this engine");
         };
         ensure!(
-            !self.pending.iter().any(|(sid, _, _)| *sid == id),
+            !self.pending.iter().any(|pf| pf.session == id),
             "session {id} has pending frames; drain before hibernating"
         );
         let Some(mut sess) = self.sessions.remove(&id) else {
@@ -385,21 +439,40 @@ impl<'n> Engine<'n> {
     }
 
     /// Restore a hibernated session into residency, if it has a record.
-    /// Infallible by design — the serve path (`submit`) must stay so: a
-    /// corrupt or mismatched record is refused with counters raised and
-    /// the session re-initialized, never a panic or silent wrong state.
-    fn ensure_resident(&mut self, id: usize) {
+    /// A corrupt or geometry-mismatched record is refused with counters
+    /// raised and the session re-initialized (the serve path must not
+    /// lose the stream), but a *valid* record bound to a net this
+    /// registry does not hold is a typed [`BindingError::SnapshotNet`]:
+    /// the record stays in the store untouched — a session can never
+    /// silently resume onto the wrong weights, and migrating the store
+    /// to an engine that does hold the net still works.
+    fn ensure_resident(&mut self, id: usize) -> Result<(), BindingError> {
         if self.sessions.contains_key(&id) {
-            return;
+            return Ok(());
         }
-        let Some(tier) = self.hib.as_mut() else { return };
+        let Some(tier) = self.hib.as_mut() else { return Ok(()) };
         let bytes = match tier.store.record_bytes(id as u64) {
             Some(b) => b as u64,
-            None => return,
+            None => return Ok(()),
         };
+        // Peek before consuming: the net-binding refusal must leave the
+        // record in the store, unlike the corrupt-record path (where the
+        // bits are already worthless).
+        let mut reinit_geom = self.registry.default_entry().geometry();
+        if let Some(Ok(snap)) = tier.store.peek(id as u64) {
+            match self.registry.get(snap.fingerprint) {
+                Some(entry) => reinit_geom = entry.geometry(),
+                None => {
+                    return Err(BindingError::SnapshotNet {
+                        session: id,
+                        fingerprint: snap.fingerprint,
+                    });
+                }
+            }
+        }
         let outcome = match tier.store.take(id as u64) {
             Some(o) => o,
-            None => return,
+            None => return Ok(()),
         };
         let pend = tier.pending.remove(&id).unwrap_or_default();
         let (depth, channels) = (self.tail.cfg.tcn_depth, self.tail.cfg.channels);
@@ -439,7 +512,9 @@ impl<'n> Engine<'n> {
                 // The CRC (or decode validation) refused the record: the
                 // session restarts from scratch, visibly. The record's
                 // in-flight history (labels, ledgers) is lost with it.
-                let mut sess = Session::new(id, voltage, depth, channels);
+                // It restarts on the binding the record named when that
+                // was readable, else on the default net.
+                let mut sess = Session::new(id, voltage, reinit_geom);
                 sess.faults.snapshot_corrupt += 1;
                 sess.faults.injected_flips += pend.flips;
                 sess.faults.detected += pend.flips;
@@ -452,6 +527,7 @@ impl<'n> Engine<'n> {
         // just-woken session is not the next capacity-eviction victim.
         sess.last_active = self.drains;
         self.sessions.insert(id, sess);
+        Ok(())
     }
 
     /// End-of-drain bookkeeping: the engine's drain clock ticks and the
@@ -522,10 +598,15 @@ impl<'n> Engine<'n> {
     /// to many sessions decorrelates their flip streams while every
     /// stream stays individually deterministic. A BER-0 plan is armed
     /// but structurally side-effect-free (no RNG draws, no scrubs).
-    pub fn set_fault_plan(&mut self, session_id: usize, plan: FaultPlan) {
+    pub fn set_fault_plan(
+        &mut self,
+        session_id: usize,
+        plan: FaultPlan,
+    ) -> Result<(), BindingError> {
         let seed = plan.seed ^ (session_id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        self.open_session(session_id).fault =
+        self.open_session(session_id)?.fault =
             Some(FaultState { plan, inj: Injector::new(plan.ber, seed) });
+        Ok(())
     }
 
     /// The session's armed plan, if any.
@@ -535,6 +616,10 @@ impl<'n> Engine<'n> {
 
     /// Enqueue one frame on a stream. Work happens at the next `drain`.
     ///
+    /// The frame's dims are checked against the session's net binding
+    /// first — a mismatch is a typed [`BindingError::FrameShape`] that
+    /// advances no injector RNG and enqueues nothing.
+    ///
     /// Frame-surface fault injection happens here, in submission order:
     /// an armed ActMem plan corrupts the frame's words as stored in the
     /// activation SRAM and charges a scrub scan over them (detected
@@ -542,8 +627,14 @@ impl<'n> Engine<'n> {
     /// µDMA plan corrupts the words in flight, where the ingress
     /// decoder's plane-invariant check catches orphans for free (no
     /// scrub charge) but silent flips still land.
-    pub fn submit(&mut self, session_id: usize, frame: PackedMap) {
-        let sess = self.open_session(session_id);
+    pub fn submit(&mut self, session_id: usize, frame: PackedMap) -> Result<(), BindingError> {
+        let sess = self.open_session(session_id)?;
+        let geom = sess.geometry;
+        let got = (frame.h, frame.w, frame.c);
+        let want = (geom.input_hw, geom.input_hw, geom.input_ch);
+        if got != want {
+            return Err(BindingError::FrameShape { session: session_id, got, want });
+        }
         let mut frame = frame;
         let mut ff = FrameFaults::default();
         if let Some(fs) = sess.fault.as_mut() {
@@ -562,7 +653,13 @@ impl<'n> Engine<'n> {
                 }
             }
         }
-        self.pending.push((session_id, frame, ff));
+        self.pending.push(PendingFrame {
+            session: session_id,
+            fingerprint: geom.fingerprint,
+            frame,
+            ff,
+        });
+        Ok(())
     }
 
     /// Pull up to `max_frames` frames from a source onto a stream;
@@ -572,18 +669,18 @@ impl<'n> Engine<'n> {
         session_id: usize,
         src: &mut dyn FrameSource,
         max_frames: usize,
-    ) -> usize {
+    ) -> Result<usize, BindingError> {
         let mut n = 0;
         while n < max_frames {
             match src.next_frame() {
                 Some(f) => {
-                    self.submit(session_id, f);
+                    self.submit(session_id, f)?;
                     n += 1;
                 }
                 None => break,
             }
         }
-        n
+        Ok(n)
     }
 
     pub fn pending_frames(&self) -> usize {
@@ -620,15 +717,19 @@ impl<'n> Engine<'n> {
         let pending = std::mem::take(&mut self.pending);
         // Sessions touched by this drain: their idle clocks reset; every
         // other resident session ages toward idle eviction.
-        let active: BTreeSet<usize> = pending.iter().map(|(sid, _, _)| *sid).collect();
+        let active: BTreeSet<usize> = pending.iter().map(|pf| pf.session).collect();
 
-        // Phase 1: CNN front-end. A frame whose CNN errors leaves its
-        // slot None (noted as a failure in phase 2).
+        // Phase 1: CNN front-end. Each scheduler checks the frame's
+        // bound image in (`swap_image` — a no-op while consecutive
+        // frames share a net) before running it. A frame whose CNN
+        // errors leaves its slot None (noted as a failure in phase 2).
         let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; pending.len()];
-        let net = self.net;
+        let registry = &self.registry;
         if self.workers.is_empty() {
-            for (i, (_, frame, _)) in pending.iter().enumerate() {
-                cnn[i] = self.tail.run_cnn(net, frame).ok();
+            for (i, pf) in pending.iter().enumerate() {
+                let Ok(entry) = registry.entry(pf.fingerprint) else { continue };
+                self.tail.swap_image(Arc::clone(entry.image()));
+                cnn[i] = self.tail.run_cnn(entry.net(), &pf.frame).ok();
             }
         } else {
             let nw = self.workers.len();
@@ -640,7 +741,15 @@ impl<'n> Engine<'n> {
                         let mut out = Vec::new();
                         let mut i = wi;
                         while i < pending.len() {
-                            out.push((i, sched.run_cnn(net, &pending[i].1)));
+                            let pf = &pending[i];
+                            let r = match registry.entry(pf.fingerprint) {
+                                Ok(entry) => {
+                                    sched.swap_image(Arc::clone(entry.image()));
+                                    sched.run_cnn(entry.net(), &pf.frame)
+                                }
+                                Err(e) => Err(e.into()),
+                            };
+                            out.push((i, r));
                             i += nw;
                         }
                         out
@@ -666,7 +775,11 @@ impl<'n> Engine<'n> {
             for wi in poisoned {
                 let mut i = wi;
                 while i < pending.len() {
-                    cnn[i] = self.tail.run_cnn(net, &pending[i].1).ok();
+                    let pf = &pending[i];
+                    if let Ok(entry) = registry.entry(pf.fingerprint) {
+                        self.tail.swap_image(Arc::clone(entry.image()));
+                        cnn[i] = self.tail.run_cnn(entry.net(), &pf.frame).ok();
+                    }
                     i += nw;
                 }
             }
@@ -674,45 +787,62 @@ impl<'n> Engine<'n> {
 
         // Phase 2: stateful per-session tail, in submission order.
         let mut served: Vec<(usize, f64, f64)> = Vec::with_capacity(pending.len());
-        for ((sid, frame, mut ff), slot) in pending.into_iter().zip(cnn.into_iter()) {
+        for (pf, slot) in pending.into_iter().zip(cnn.into_iter()) {
+            let PendingFrame { session: sid, fingerprint, frame, mut ff } = pf;
             let Some(sess) = self.sessions.get_mut(&sid) else { continue };
             if sess.is_quarantined() {
                 sess.faults.dropped_frames += 1;
                 continue;
             }
+            let Ok(entry) = registry.entry(fingerprint) else {
+                sess.faults.record(&ff, ff.flips > 0);
+                sess.note_failure();
+                continue;
+            };
             let Some((feat, mut run)) = slot else {
                 sess.faults.record(&ff, ff.flips > 0);
                 sess.note_failure();
                 continue;
             };
+            // The tail serves this frame on its session's bound image
+            // (no-op between frames of the same net).
+            self.tail.swap_image(Arc::clone(entry.image()));
             // State-surface injection (TCN ring / weight banks), one
-            // exposure per frame.
+            // exposure per frame; weight scrub/self-heal is keyed to the
+            // bound image via the swap above.
             let mut degraded = ff.flips > 0;
-            degraded |= inject_state_surfaces(&self.image, &mut self.tail, sess, &mut ff);
-            // Check the stream's recurrent TCN window out into the tail;
-            // the packed feature word moves into it as-is (no unpack).
-            // Bounded retry: the feature is pushed at most once (a push
-            // that landed is not replayed on retry).
+            degraded |= inject_state_surfaces(entry.image(), &mut self.tail, sess, &mut ff);
+            // Bounded retry around the stateful tail: for a recurrent
+            // net, check the stream's TCN window out into the tail (the
+            // packed feature word moves into it as-is, no unpack; a push
+            // that landed is not replayed on retry); for a feed-forward
+            // net, the classifier reads the CNN feature map directly —
+            // nothing is pushed into any ring.
             let mut pushed = false;
-            let mut tcn_result = Err(anyhow::anyhow!("tcn tail not attempted"));
+            let mut tail_result = Err(anyhow::anyhow!("stateful tail not attempted"));
             for attempt in 0..TCN_ATTEMPTS {
-                self.tail.swap_tcn(&mut sess.tcn);
-                let r = if pushed { Ok(()) } else { self.tail.push_feature(&feat) };
-                let r = match r {
-                    Ok(()) => {
-                        pushed = true;
-                        self.tail.run_tcn(net)
-                    }
-                    Err(e) => Err(e),
+                let r = if sess.geometry.has_tcn {
+                    self.tail.swap_tcn(&mut sess.tcn);
+                    let r = if pushed { Ok(()) } else { self.tail.push_feature(&feat) };
+                    let r = match r {
+                        Ok(()) => {
+                            pushed = true;
+                            self.tail.run_tcn(entry.net())
+                        }
+                        Err(e) => Err(e),
+                    };
+                    self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
+                    r
+                } else {
+                    self.tail.run_classifier(entry.net(), &feat)
                 };
-                self.tail.swap_tcn(&mut sess.tcn); // check back in, even on error
                 match r {
                     Ok(v) => {
-                        tcn_result = Ok(v);
+                        tail_result = Ok(v);
                         break;
                     }
                     Err(e) => {
-                        tcn_result = Err(e);
+                        tail_result = Err(e);
                         if attempt + 1 < TCN_ATTEMPTS {
                             sess.faults.retries += 1;
                         }
@@ -720,7 +850,7 @@ impl<'n> Engine<'n> {
                 }
             }
             sess.faults.record(&ff, degraded);
-            let (logits, r) = match tcn_result {
+            let (logits, r) = match tail_result {
                 Ok(v) => v,
                 Err(_) => {
                     sess.note_failure();
@@ -758,9 +888,11 @@ impl<'n> Engine<'n> {
     }
 
     /// Close one session into its final report (removes it; a hibernated
-    /// session is resumed first so its report is complete).
+    /// session is resumed first so its report is complete). A stored
+    /// record bound to a net this registry does not hold yields `None` —
+    /// the record stays in the store for an engine that can serve it.
     pub fn finish_session(&mut self, id: usize) -> Option<ServingReport> {
-        self.ensure_resident(id);
+        let _ = self.ensure_resident(id);
         self.sessions.remove(&id).map(Session::into_report)
     }
 
@@ -800,7 +932,8 @@ impl<'n> Engine<'n> {
     /// what keeps a fleet aggregate bit-identical to a single engine's.
     pub fn accumulate_session(&self, id: usize, acc: &mut ReportAccumulator) -> bool {
         if let Some(sess) = self.sessions.get(&id) {
-            acc.add(
+            acc.add_for_net(
+                self.net_tag(sess.geometry.fingerprint),
                 &sess.metrics,
                 &sess.labels,
                 &sess.faults,
@@ -822,7 +955,8 @@ impl<'n> Engine<'n> {
         if tier.store.contains(id as u64) {
             held = true;
             if let Some(Ok(snap)) = tier.store.peek(id as u64) {
-                acc.add(
+                acc.add_for_net(
+                    self.net_tag(snap.fingerprint),
                     &snap.metrics,
                     &snap.labels,
                     &snap.faults,
@@ -834,6 +968,16 @@ impl<'n> Engine<'n> {
             }
         }
         held
+    }
+
+    /// Per-net aggregation tag for a bound fingerprint: its registered
+    /// name, or "unknown" for a fingerprint this registry does not hold
+    /// (a foreign stored record still counts toward the shared ledgers).
+    fn net_tag(&self, fingerprint: u64) -> Option<(u64, &str)> {
+        Some((
+            fingerprint,
+            self.registry.get(fingerprint).map_or("unknown", |e| e.net().name.as_str()),
+        ))
     }
 
     /// Cross-session roll-up (latency samples concatenate, energies,

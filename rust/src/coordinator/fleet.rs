@@ -5,10 +5,10 @@
 //! (a fully-unrolled datapath replicated per output channel, not a
 //! bigger unit). A [`Fleet`] owns N [`Engine`]s — each one the software
 //! twin of an accelerator instance with its own worker pool — all
-//! adopting the **same** `Arc<PreparedNet>` weight image (the PR 5
-//! shared-image pass is what makes an engine cheap enough to stamp
-//! out), and routes `submit(session_id, frame)` by a pluggable
-//! [`ShardPolicy`].
+//! serving from the **same** `Arc<NetRegistry>` (the multi-workload
+//! generalization of PR 5's shared image: one prepared image per
+//! registered net, shared by every engine), and routes
+//! `submit(session_id, frame)` by a pluggable [`ShardPolicy`].
 //!
 //! The pieces, and their contracts:
 //!
@@ -51,8 +51,9 @@ use anyhow::{ensure, Context, Result};
 
 use super::engine::{Engine, EngineConfig};
 use super::metrics::{ReportAccumulator, ServingReport};
+use super::registry::{BindingError, NetRegistry};
 use super::session::Session;
-use crate::cutie::{CutieConfig, PreparedNet};
+use crate::cutie::PreparedNet;
 use crate::fault::FaultPlan;
 use crate::network::Network;
 use crate::tensor::PackedMap;
@@ -179,6 +180,9 @@ pub enum FleetError {
     /// Repinning a routed session is refused — use [`Fleet::migrate`],
     /// which moves the state along with the route.
     AlreadyRouted { session: usize, engine: usize },
+    /// A net-binding refusal from the routed engine (unknown net,
+    /// fixed-binding conflict, frame-shape mismatch, foreign snapshot).
+    Binding(BindingError),
 }
 
 impl fmt::Display for FleetError {
@@ -200,7 +204,14 @@ impl fmt::Display for FleetError {
                 f,
                 "session {session} is already routed to engine {engine} (migrate instead)"
             ),
+            FleetError::Binding(e) => e.fmt(f),
         }
+    }
+}
+
+impl From<BindingError> for FleetError {
+    fn from(e: BindingError) -> Self {
+        FleetError::Binding(e)
     }
 }
 
@@ -280,9 +291,9 @@ pub struct FleetReport {
     pub rejected_submits: u64,
 }
 
-pub struct Fleet<'n> {
+pub struct Fleet {
     cfg: FleetConfig,
-    engines: Vec<Engine<'n>>,
+    engines: Vec<Engine>,
     /// Bounded per-engine submit queues, flushed (in [`DrainOrder`]) at
     /// each drain.
     queues: Vec<Vec<QueuedFrame>>,
@@ -296,27 +307,31 @@ pub struct Fleet<'n> {
     rejected: u64,
 }
 
-impl<'n> Fleet<'n> {
-    /// Boot a fleet, building the shared prepared-weight image once and
-    /// handing every engine the same `Arc`.
-    pub fn new(net: &'n Network, cfg: FleetConfig) -> Result<Self> {
-        let image = Arc::new(PreparedNet::new(net, &CutieConfig::kraken()));
-        Self::with_image(net, cfg, image)
+impl Fleet {
+    /// Boot a single-workload fleet, building the net's registry (one
+    /// prepared image) once and handing every engine the same `Arc`.
+    pub fn new(net: &Network, cfg: FleetConfig) -> Result<Self> {
+        Self::with_registry(Arc::new(NetRegistry::single(net.clone())?), cfg)
     }
 
-    /// Boot from a pre-built weight image (e.g. word-copy-loaded from a
-    /// packed `.ttn` v2 file). All N engines adopt this one `Arc`; no
-    /// per-engine repack or clone of a single weight word.
-    pub fn with_image(
-        net: &'n Network,
-        cfg: FleetConfig,
-        image: Arc<PreparedNet>,
-    ) -> Result<Self> {
+    /// Boot a single-workload fleet from a pre-built weight image (e.g.
+    /// word-copy-loaded from a packed `.ttn` v2 file). All N engines
+    /// adopt this one `Arc`; no per-engine repack or clone of a single
+    /// weight word.
+    pub fn with_image(net: &Network, cfg: FleetConfig, image: Arc<PreparedNet>) -> Result<Self> {
+        Self::with_registry(Arc::new(NetRegistry::single_with_image(net.clone(), image)?), cfg)
+    }
+
+    /// Boot a multi-workload fleet over a shared net registry: every
+    /// engine serves the same fingerprint → (net, image) map, which is
+    /// also what makes [`Fleet::migrate`] net-safe — a session's bound
+    /// net exists wherever it lands.
+    pub fn with_registry(registry: Arc<NetRegistry>, cfg: FleetConfig) -> Result<Self> {
         ensure!(cfg.engines >= 1, "a fleet needs at least one engine");
         ensure!(cfg.queue_cap >= 1, "the submit-queue bound must be at least 1");
         let mut engines = Vec::with_capacity(cfg.engines);
         for _ in 0..cfg.engines {
-            engines.push(Engine::with_image(net, cfg.engine.clone(), Arc::clone(&image))?);
+            engines.push(Engine::with_registry(Arc::clone(&registry), cfg.engine.clone())?);
         }
         let queues = (0..cfg.engines).map(|_| Vec::new()).collect();
         let counters = vec![Counters::default(); cfg.engines];
@@ -337,12 +352,12 @@ impl<'n> Fleet<'n> {
         self.engines.len()
     }
 
-    pub fn engine(&self, e: usize) -> Option<&Engine<'n>> {
+    pub fn engine(&self, e: usize) -> Option<&Engine> {
         self.engines.get(e)
     }
 
     /// Direct engine access (per-engine hibernation setup, tests).
-    pub fn engine_mut(&mut self, e: usize) -> Option<&mut Engine<'n>> {
+    pub fn engine_mut(&mut self, e: usize) -> Option<&mut Engine> {
         self.engines.get_mut(e)
     }
 
@@ -406,11 +421,25 @@ impl<'n> Fleet<'n> {
     }
 
     /// Open (or fetch) a session on its routed engine, committing the
-    /// route on first contact.
+    /// route on first contact. The session binds the registry's default
+    /// net; use [`Fleet::open_session_on`] for a non-default binding.
     pub fn open_session(&mut self, session: usize) -> Result<&mut Session, FleetError> {
         let e = self.choose_engine(session)?;
         self.routes.insert(session, e);
-        Ok(self.engines[e].open_session(session))
+        Ok(self.engines[e].open_session(session)?)
+    }
+
+    /// Open (or fetch) a session bound to the registered net
+    /// `fingerprint`, on its routed engine (route committed on first
+    /// contact). Typed refusals ride in [`FleetError::Binding`].
+    pub fn open_session_on(
+        &mut self,
+        session: usize,
+        fingerprint: u64,
+    ) -> Result<&mut Session, FleetError> {
+        let e = self.choose_engine(session)?;
+        self.routes.insert(session, e);
+        Ok(self.engines[e].open_session_on(session, fingerprint)?)
     }
 
     /// Arm a fault plan on the session's routed engine (committing the
@@ -418,7 +447,7 @@ impl<'n> Fleet<'n> {
     pub fn set_fault_plan(&mut self, session: usize, plan: FaultPlan) -> Result<(), FleetError> {
         let e = self.choose_engine(session)?;
         self.routes.insert(session, e);
-        self.engines[e].set_fault_plan(session, plan);
+        self.engines[e].set_fault_plan(session, plan)?;
         Ok(())
     }
 
@@ -489,19 +518,25 @@ impl<'n> Fleet<'n> {
         idx
     }
 
-    /// Hand one engine's queued frames to it, in [`DrainOrder`].
-    fn flush_queue(&mut self, e: usize) {
+    /// Hand one engine's queued frames to it, in [`DrainOrder`]. A
+    /// binding refusal (e.g. a queued frame whose dims don't match its
+    /// session's net) surfaces as a typed error; already-handed frames
+    /// stay with the engine.
+    fn flush_queue(&mut self, e: usize) -> Result<()> {
         if self.queues[e].is_empty() {
-            return;
+            return Ok(());
         }
         let idx = self.ordered_indices(e);
         let mut slots: Vec<Option<QueuedFrame>> =
             std::mem::take(&mut self.queues[e]).into_iter().map(Some).collect();
         for i in idx {
             if let Some(qf) = slots[i].take() {
-                self.engines[e].submit(qf.session, qf.frame);
+                self.engines[e]
+                    .submit(qf.session, qf.frame)
+                    .with_context(|| format!("flushing engine {e} queue"))?;
             }
         }
+        Ok(())
     }
 
     /// Flush every queue and drain every engine; returns total frames
@@ -509,7 +544,7 @@ impl<'n> Fleet<'n> {
     pub fn drain(&mut self) -> Result<usize> {
         let mut served = 0;
         for e in 0..self.engines.len() {
-            self.flush_queue(e);
+            self.flush_queue(e)?;
             let n = self.engines[e].drain()?;
             self.counters[e].served += n as u64;
             served += n;
@@ -540,7 +575,7 @@ impl<'n> Fleet<'n> {
         // The snapshot must capture a settled session: serve whatever
         // is in flight on the source first.
         if !self.queues[from].is_empty() || self.engines[from].pending_frames() > 0 {
-            self.flush_queue(from);
+            self.flush_queue(from)?;
             let n = self.engines[from].drain()?;
             self.counters[from].served += n as u64;
         }
@@ -671,5 +706,7 @@ mod tests {
         assert!(FleetError::AlreadyRouted { session: 1, engine: 0 }
             .to_string()
             .contains("migrate"));
+        let msg = FleetError::Binding(BindingError::UnknownNet { fingerprint: 5 }).to_string();
+        assert!(msg.contains("registry"), "got: {msg}");
     }
 }

@@ -44,16 +44,22 @@ use crate::util::crc::crc32;
 use crate::util::stats::Percentiles;
 
 use super::metrics::ServingMetrics;
+use super::registry::SessionGeometry;
 use super::session::{FaultState, Session};
 
 /// Snapshot record magic: "SSN1" little-endian.
 pub const SNAPSHOT_MAGIC: u32 = 0x314E_5353;
-/// Snapshot format version this build writes and reads.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Snapshot format version this build writes and reads. v2 added the
+/// net-binding block (image fingerprint + typed input dims) right after
+/// the supply voltage, so resume/migration re-binds the exact net the
+/// session was serving.
+pub const SNAPSHOT_VERSION: u32 = 2;
 /// Store file magic ("TCNHIB1\0").
 pub const STORE_MAGIC: u64 = u64::from_le_bytes(*b"TCNHIB1\0");
 /// Decode guard: no modeled TCN memory is deeper than this.
 const MAX_SNAPSHOT_TCN_DEPTH: u32 = 4096;
+/// Decode guard: no modeled input frame is wider than this.
+const MAX_SNAPSHOT_INPUT_HW: u32 = 4096;
 
 /// Canonical domain order of the SoC section (all four power domains,
 /// always present, in `Domain`'s `Ord` order).
@@ -337,6 +343,16 @@ pub struct FaultSnap {
 pub struct SessionSnapshot {
     pub session_id: u64,
     pub voltage: f64,
+    /// Fingerprint of the prepared image the session was bound to (v2).
+    /// Resume/migration refuses a fingerprint the target registry does
+    /// not hold — a session can never silently land on other weights.
+    pub fingerprint: u64,
+    /// Bound input frame side length (v2).
+    pub input_hw: u32,
+    /// Bound input frame channel count (v2).
+    pub input_ch: u32,
+    /// Whether the bound net has a recurrent TCN tail (v2).
+    pub has_tcn: bool,
     pub tcn: TcnSnap,
     pub soc: SocSnap,
     pub metrics: ServingMetrics,
@@ -354,6 +370,10 @@ impl SessionSnapshot {
         SessionSnapshot {
             session_id: sess.id as u64,
             voltage: soc.voltage,
+            fingerprint: sess.geometry.fingerprint,
+            input_hw: sess.geometry.input_hw as u32,
+            input_ch: sess.geometry.input_ch as u32,
+            has_tcn: sess.geometry.has_tcn,
             tcn: TcnSnap {
                 depth: sess.tcn.depth as u32,
                 channels: sess.tcn.channels as u32,
@@ -415,6 +435,12 @@ impl SessionSnapshot {
         put_u32(&mut out, SNAPSHOT_VERSION);
         put_u64(&mut out, self.session_id);
         put_f64_bits(&mut out, self.voltage);
+
+        // net binding (v2)
+        put_u64(&mut out, self.fingerprint);
+        put_u32(&mut out, self.input_hw);
+        put_u32(&mut out, self.input_ch);
+        put_u8(&mut out, self.has_tcn as u8);
 
         // TCN ring
         put_u32(&mut out, self.tcn.depth);
@@ -541,6 +567,22 @@ impl SessionSnapshot {
         if !voltage.is_finite() || voltage <= 0.0 {
             return Err(malformed(format!("non-physical supply voltage {voltage}")));
         }
+
+        // net binding (v2)
+        let fingerprint = read_u64(&mut b)?;
+        let input_hw = read_u32(&mut b)?;
+        let input_ch = read_u32(&mut b)?;
+        if input_hw == 0 || input_hw > MAX_SNAPSHOT_INPUT_HW {
+            return Err(malformed(format!("input side length {input_hw} out of range")));
+        }
+        if input_ch == 0 || input_ch as usize > MAX_CHANNELS {
+            return Err(malformed(format!("input channel count {input_ch} out of range")));
+        }
+        let has_tcn = match read_u8(&mut b)? {
+            0 => false,
+            1 => true,
+            other => return Err(malformed(format!("bad has-tcn flag {other}"))),
+        };
 
         // TCN ring
         let depth = read_u32(&mut b)?;
@@ -727,6 +769,10 @@ impl SessionSnapshot {
         Ok(SessionSnapshot {
             session_id,
             voltage,
+            fingerprint,
+            input_hw,
+            input_ch,
+            has_tcn,
             tcn,
             soc,
             metrics,
@@ -774,6 +820,14 @@ impl SessionSnapshot {
         };
         Ok(Session {
             id: self.session_id as usize,
+            geometry: SessionGeometry {
+                fingerprint: self.fingerprint,
+                input_hw: self.input_hw as usize,
+                input_ch: self.input_ch as usize,
+                tcn_depth: self.tcn.depth as usize,
+                channels: self.tcn.channels as usize,
+                has_tcn: self.has_tcn,
+            },
             tcn,
             soc,
             metrics: self.metrics,
@@ -1125,7 +1179,15 @@ mod tests {
 
     /// A session with every snapshotted field away from its default.
     fn busy_session() -> Session {
-        let mut s = Session::new(3, 0.5, 8, 16);
+        let geom = SessionGeometry {
+            fingerprint: 0xFEED_0000_0000_0009,
+            input_hw: 64,
+            input_ch: 2,
+            tcn_depth: 8,
+            channels: 16,
+            has_tcn: true,
+        };
+        let mut s = Session::new(3, 0.5, geom);
         for step in 0..5u8 {
             let odd = if step % 2 == 0 { 1 } else { -1 };
             s.tcn.push_packed(PackedVec::pack(&[1, -1, 0, 1, odd]));
@@ -1154,6 +1216,7 @@ mod tests {
 
     fn assert_sessions_identical(a: &Session, b: &Session) {
         assert_eq!(a.id, b.id);
+        assert_eq!(a.geometry, b.geometry);
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.faults, b.faults);
         assert_eq!(a.hib, b.hib);

@@ -2,11 +2,31 @@
 //! host wallclock), throughput, the energy ledger summary, and the
 //! [`ServingReport`] every serving policy returns.
 
+use std::collections::BTreeMap;
+
 use crate::fault::FaultSummary;
 use crate::soc::KrakenSoc;
 use crate::util::stats::Percentiles;
 
 use super::hibernate::HibernationStats;
+
+/// Per-net aggregate of a serving run (multi-workload pass): how much of
+/// the fleet's work each registered net carried. Sums only — the f64
+/// fields fold in global session-id order like every other ledger, so a
+/// sharded fleet's per-net rows are bit-identical to one engine's.
+#[derive(Debug, Default, Clone)]
+pub struct NetUsage {
+    /// Content fingerprint of the net's prepared image.
+    pub fingerprint: u64,
+    /// The net's name as registered.
+    pub name: String,
+    pub sessions: u64,
+    pub frames: u64,
+    pub labels: u64,
+    pub core_energy_j: f64,
+    pub soc_energy_j: f64,
+    pub sim_time_s: f64,
+}
 
 #[derive(Debug, Default, Clone)]
 pub struct ServingMetrics {
@@ -92,6 +112,11 @@ pub struct ServingReport {
     /// Retention/wake energy lives here, never in `soc_energy_j` — the
     /// idle tier must not perturb the calibrated serving ledgers.
     pub hib: HibernationStats,
+    /// Per-net usage rows, fingerprint-sorted. Empty for single-session
+    /// reports assembled via [`ServingReport::from_parts`]; aggregate
+    /// reports folded through [`ReportAccumulator::add_for_net`] carry
+    /// one row per net that served at least one session.
+    pub nets: Vec<NetUsage>,
 }
 
 impl ServingReport {
@@ -114,6 +139,7 @@ impl ServingReport {
             labels,
             faults,
             hib,
+            nets: Vec::new(),
         }
     }
 }
@@ -135,6 +161,7 @@ pub struct ReportAccumulator {
     energy_j: f64,
     fc_wakeups: u64,
     now_ns: u64,
+    nets: BTreeMap<u64, NetUsage>,
 }
 
 impl ReportAccumulator {
@@ -160,6 +187,39 @@ impl ReportAccumulator {
         self.labels.extend_from_slice(labels);
     }
 
+    /// [`ReportAccumulator::add`], plus fold the session's totals into
+    /// its net's usage row. `net` is the session's binding (fingerprint +
+    /// registered name); `None` folds the session with no per-net row —
+    /// the pre-registry aggregation, byte-identical because the shared
+    /// ledgers never see the row map.
+    #[allow(clippy::too_many_arguments)]
+    pub fn add_for_net(
+        &mut self,
+        net: Option<(u64, &str)>,
+        metrics: &ServingMetrics,
+        labels: &[usize],
+        faults: &FaultSummary,
+        hib: &HibernationStats,
+        soc_energy_j: f64,
+        fc_wakeups: u64,
+        now_ns: u64,
+    ) {
+        self.add(metrics, labels, faults, hib, soc_energy_j, fc_wakeups, now_ns);
+        if let Some((fingerprint, name)) = net {
+            let row = self.nets.entry(fingerprint).or_insert_with(|| NetUsage {
+                fingerprint,
+                name: name.to_string(),
+                ..NetUsage::default()
+            });
+            row.sessions += 1;
+            row.frames += metrics.frames;
+            row.labels += metrics.labels_emitted;
+            row.core_energy_j += metrics.core_energy_j;
+            row.soc_energy_j += soc_energy_j;
+            row.sim_time_s += metrics.sim_time_s;
+        }
+    }
+
     /// Fold a hibernation-ledger-only contribution: engine-side accruals
     /// (retention ticks, wake charges) for a stored session whose
     /// snapshot payload is not being decoded here.
@@ -181,6 +241,7 @@ impl ReportAccumulator {
             labels: self.labels,
             faults: self.faults,
             hib: self.hib,
+            nets: self.nets.into_values().collect(),
         }
     }
 }
@@ -265,6 +326,56 @@ mod tests {
             folded.metrics.soc_energy_j.to_bits(),
             direct.metrics.soc_energy_j.to_bits()
         );
+    }
+
+    #[test]
+    fn per_net_rows_ride_alongside_the_shared_ledgers() {
+        let mut m_dvs = ServingMetrics::default();
+        m_dvs.record_frame(10.0, 5.0, 1e-6);
+        m_dvs.record_frame(12.0, 5.0, 1e-6);
+        let mut m_cif = ServingMetrics::default();
+        m_cif.record_frame(20.0, 5.0, 3e-6);
+
+        let mut plain = ReportAccumulator::default();
+        let mut tagged = ReportAccumulator::default();
+        for (net, m, e) in [
+            (Some((7u64, "dvs")), &m_dvs, 4e-6),
+            (Some((3u64, "cifar9")), &m_cif, 5e-6),
+            (Some((7u64, "dvs")), &m_dvs, 4e-6),
+        ] {
+            plain.add(
+                m,
+                &[1],
+                &FaultSummary::default(),
+                &HibernationStats::default(),
+                e,
+                1,
+                10_000,
+            );
+            tagged.add_for_net(
+                net,
+                m,
+                &[1],
+                &FaultSummary::default(),
+                &HibernationStats::default(),
+                e,
+                1,
+                10_000,
+            );
+        }
+        let (plain, tagged) = (plain.finish(), tagged.finish());
+        // the shared ledgers never see the row map
+        assert_eq!(plain.soc_energy_j.to_bits(), tagged.soc_energy_j.to_bits());
+        assert_eq!(plain.soc_avg_power_w.to_bits(), tagged.soc_avg_power_w.to_bits());
+        assert_eq!(plain.metrics.frames, tagged.metrics.frames);
+        assert!(plain.nets.is_empty());
+        // rows are fingerprint-sorted with summed usage
+        assert_eq!(tagged.nets.len(), 2);
+        assert_eq!(tagged.nets[0].name, "cifar9");
+        assert_eq!((tagged.nets[0].sessions, tagged.nets[0].frames), (1, 1));
+        assert_eq!(tagged.nets[1].name, "dvs");
+        assert_eq!((tagged.nets[1].sessions, tagged.nets[1].frames), (2, 4));
+        assert!((tagged.nets[1].soc_energy_j - 8e-6).abs() < 1e-18);
     }
 
     #[test]

@@ -12,15 +12,20 @@
 //! producer/consumer (std threads over bounded channels; tokio is
 //! unavailable in this offline environment), batched worker-pool — is a
 //! thin wrapper over. Scaling past one simulated accelerator, the
-//! [`Fleet`] shards sessions across N engines (one shared weight image,
+//! [`Fleet`] shards sessions across N engines (one shared net registry,
 //! pluggable routing, typed back-pressure) and live-migrates sessions
 //! between them over the hibernation snapshot path, byte-identically.
+//! Multi-workload serving routes every frame through the [`NetRegistry`]
+//! (fingerprint → net + prepared image): each session binds one
+//! registered net, and heterogeneous streams — the paper's DVS-gesture
+//! TCN next to its cifar9 CNN — interleave through the same engines.
 
 pub mod engine;
 pub mod fleet;
 pub mod hibernate;
 pub mod metrics;
 pub mod pipeline;
+pub mod registry;
 pub mod session;
 pub mod source;
 pub mod stream;
@@ -31,8 +36,9 @@ pub use fleet::{
     DEFAULT_QUEUE_CAP,
 };
 pub use hibernate::{HibernationStats, SessionSnapshot, SessionStore, SnapshotError};
-pub use metrics::{ReportAccumulator, ServingMetrics, ServingReport};
+pub use metrics::{NetUsage, ReportAccumulator, ServingMetrics, ServingReport};
 pub use pipeline::{Pipeline, PipelineConfig};
+pub use registry::{BindingError, NetEntry, NetRegistry, SessionGeometry};
 pub use session::{Session, FAILURE_LIMIT};
-pub use source::{DvsSource, FrameSource, GestureClass, MixedSource};
+pub use source::{DvsSource, FrameSource, GestureClass, MixedSource, SyntheticSource};
 pub use stream::PackedStream;

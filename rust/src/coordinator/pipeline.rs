@@ -97,7 +97,7 @@ impl Pipeline {
     /// was validated at pipeline construction, but boot can still fail
     /// legitimately (e.g. a sub-threshold supply with no explicit
     /// clock) — surfaced as a typed error, not a serving-path panic.
-    fn engine(&self, workers: usize) -> Result<Engine<'_>> {
+    fn engine(&self, workers: usize) -> Result<Engine> {
         Engine::with_image(
             &self.net,
             EngineConfig {
@@ -120,10 +120,10 @@ impl Pipeline {
     /// submitted and drained at a time.
     pub fn run_inline(&self) -> Result<ServingReport> {
         let mut engine = self.engine(1)?;
-        engine.open_session(0);
+        engine.open_session(0)?;
         let mut src = self.source();
         for _ in 0..self.cfg.frames {
-            engine.submit(0, src.next_frame());
+            engine.submit(0, src.next_frame())?;
             engine.drain()?;
         }
         engine.finish_session(0).context("session 0 was never opened")
@@ -146,9 +146,9 @@ impl Pipeline {
         });
 
         let mut engine = self.engine(1)?;
-        engine.open_session(0);
+        engine.open_session(0)?;
         while let Ok(frame) = rx.recv() {
-            engine.submit(0, frame);
+            engine.submit(0, frame)?;
             engine.drain()?;
         }
         producer.join().map_err(|_| anyhow!("frame producer thread panicked"))?;
@@ -170,10 +170,10 @@ impl Pipeline {
             return self.run_inline();
         }
         let mut engine = self.engine(workers)?;
-        engine.open_session(0);
+        engine.open_session(0)?;
         let mut src = self.source();
         for _ in 0..self.cfg.frames {
-            engine.submit(0, src.next_frame());
+            engine.submit(0, src.next_frame())?;
         }
         engine.drain()?;
         engine.finish_session(0).context("session 0 was never opened")

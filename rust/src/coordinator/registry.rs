@@ -1,0 +1,312 @@
+//! Multi-workload net registry (ISSUE 9 tentpole): the immutable map
+//! from prepared-image fingerprint → (network geometry, shared
+//! [`Arc<PreparedNet>`] image) that every serving layer routes through.
+//!
+//! A [`NetRegistry`] is built once at boot and shared by all engines of
+//! a fleet — the multi-net generalization of PR 5's "one Arc'd image per
+//! engine". Each [`crate::coordinator::Session`] carries a
+//! [`SessionGeometry`] binding (fingerprint + the input/window dims
+//! every frame is checked against), hibernation snapshots record the
+//! bound fingerprint, and resume/migration re-binds through this map —
+//! a fingerprint absent from the registry is a typed [`BindingError`],
+//! never a silent resume onto the wrong weights.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::cutie::{CutieConfig, PreparedNet};
+use crate::network::Network;
+
+/// Typed serving-binding failures: every way a session, frame or
+/// snapshot can disagree with the registry about which net it runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BindingError {
+    /// The fingerprint names no registered net.
+    UnknownNet { fingerprint: u64 },
+    /// A submitted frame's dims don't match the session's bound net.
+    FrameShape {
+        session: usize,
+        got: (usize, usize, usize),
+        want: (usize, usize, usize),
+    },
+    /// The session is already bound to a different net.
+    Rebind { session: usize, bound: u64, requested: u64 },
+    /// A hibernated snapshot is bound to a net this registry does not
+    /// hold — the record is refused (and left in the store), not
+    /// resumed onto the wrong weights.
+    SnapshotNet { session: usize, fingerprint: u64 },
+}
+
+impl fmt::Display for BindingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BindingError::UnknownNet { fingerprint } => {
+                write!(f, "net {fingerprint:#018x} is not in the serving registry")
+            }
+            BindingError::FrameShape { session, got, want } => write!(
+                f,
+                "session {session}: frame is {}x{}x{}, bound net wants {}x{}x{}",
+                got.0, got.1, got.2, want.0, want.1, want.2
+            ),
+            BindingError::Rebind { session, bound, requested } => write!(
+                f,
+                "session {session} is bound to net {bound:#018x}, \
+                 cannot rebind to {requested:#018x}"
+            ),
+            BindingError::SnapshotNet { session, fingerprint } => write!(
+                f,
+                "session {session}: snapshot is bound to net {fingerprint:#018x}, \
+                 which is not in the serving registry"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for BindingError {}
+
+/// Per-session geometry derived from the bound net + hardware config —
+/// the typed replacement for the loose `(tcn_depth, channels)` scalars
+/// `Session::new` used to take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionGeometry {
+    /// Content fingerprint of the bound prepared image.
+    pub fingerprint: u64,
+    /// Input frame side length (frames are square).
+    pub input_hw: usize,
+    /// Input frame channel count.
+    pub input_ch: usize,
+    /// Hardware TCN ring depth (time steps) backing the session window.
+    pub tcn_depth: usize,
+    /// Hardware datapath channel width backing the session window.
+    pub channels: usize,
+    /// Whether the bound net has a recurrent TCN tail (DVS-style) or is
+    /// pure feed-forward (cifar9-style — the classifier reads the CNN
+    /// feature map directly, nothing is pushed into the ring).
+    pub has_tcn: bool,
+}
+
+impl SessionGeometry {
+    /// Derive a session binding from `net` served on `cfg` hardware.
+    /// The TCN window dims are the *hardware* ring (depth × datapath
+    /// channels), not the net's — exactly what the engine always
+    /// allocated per session.
+    pub fn of(net: &Network, cfg: &CutieConfig, fingerprint: u64) -> Self {
+        SessionGeometry {
+            fingerprint,
+            input_hw: net.input_hw,
+            input_ch: net.layers.first().map_or(0, |l| l.in_ch),
+            tcn_depth: cfg.tcn_depth,
+            channels: cfg.channels,
+            has_tcn: net.has_tcn(),
+        }
+    }
+}
+
+/// One registered workload: the network (geometry + i8 weights for the
+/// oracle paths) and its shared prepared image.
+#[derive(Debug)]
+pub struct NetEntry {
+    net: Network,
+    image: Arc<PreparedNet>,
+    geometry: SessionGeometry,
+}
+
+impl NetEntry {
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    pub fn image(&self) -> &Arc<PreparedNet> {
+        &self.image
+    }
+
+    pub fn geometry(&self) -> SessionGeometry {
+        self.geometry
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.geometry.fingerprint
+    }
+}
+
+/// Immutable fingerprint → net map, built once and shared (behind an
+/// `Arc`) by every engine of a fleet. The first registered net is the
+/// default binding for sessions that don't name one, which is how every
+/// pre-registry single-net path keeps its exact behavior.
+#[derive(Debug, Default)]
+pub struct NetRegistry {
+    entries: Vec<NetEntry>,
+    by_fp: BTreeMap<u64, usize>,
+}
+
+impl NetRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-net registry — the single-workload serving setup.
+    pub fn single(net: Network) -> Result<Self> {
+        let mut reg = Self::new();
+        reg.add(net)?;
+        Ok(reg)
+    }
+
+    /// One-net registry behind an existing image (packed `.ttn` boot).
+    pub fn single_with_image(net: Network, image: Arc<PreparedNet>) -> Result<Self> {
+        let mut reg = Self::new();
+        reg.add_with_image(net, image)?;
+        Ok(reg)
+    }
+
+    /// Register a net, packing its prepared image from the i8 weights.
+    pub fn add(&mut self, net: Network) -> Result<u64> {
+        let image = Arc::new(PreparedNet::new(&net, &CutieConfig::kraken()));
+        self.add_with_image(net, image)
+    }
+
+    /// Register a net behind an existing prepared image. The image is
+    /// fully validated against the network (coverage, geometry,
+    /// thresholds) — a stale or foreign image is a boot error.
+    pub fn add_with_image(&mut self, net: Network, image: Arc<PreparedNet>) -> Result<u64> {
+        image
+            .validate_against(&net)
+            .with_context(|| format!("registering net '{}'", net.name))?;
+        ensure!(
+            image.matches(&net),
+            "prepared image '{}' does not match network '{}'",
+            image.net_name(),
+            net.name
+        );
+        let fp = image.fingerprint();
+        ensure!(
+            !self.by_fp.contains_key(&fp),
+            "net '{}' ({fp:#018x}) is already registered",
+            net.name
+        );
+        ensure!(
+            self.by_name(&net.name).is_none(),
+            "a different net named '{}' is already registered",
+            net.name
+        );
+        let geometry = SessionGeometry::of(&net, &CutieConfig::kraken(), fp);
+        self.by_fp.insert(fp, self.entries.len());
+        self.entries.push(NetEntry { net, image, geometry });
+        Ok(fp)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The net sessions bind to when none is named: first registered.
+    pub fn default_fingerprint(&self) -> u64 {
+        self.default_entry().fingerprint()
+    }
+
+    pub fn default_entry(&self) -> &NetEntry {
+        &self.entries[0]
+    }
+
+    pub fn get(&self, fingerprint: u64) -> Option<&NetEntry> {
+        self.by_fp.get(&fingerprint).map(|&i| &self.entries[i])
+    }
+
+    pub fn contains(&self, fingerprint: u64) -> bool {
+        self.by_fp.contains_key(&fingerprint)
+    }
+
+    /// Typed lookup for the serving path.
+    pub fn entry(&self, fingerprint: u64) -> Result<&NetEntry, BindingError> {
+        self.get(fingerprint).ok_or(BindingError::UnknownNet { fingerprint })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&NetEntry> {
+        self.entries.iter().find(|e| e.net.name == name)
+    }
+
+    /// Entries in registration order (the boot/preload order).
+    pub fn entries(&self) -> impl Iterator<Item = &NetEntry> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{cifar9_random, dvs_hybrid_random};
+
+    #[test]
+    fn registry_holds_nets_in_registration_order() {
+        let dvs = dvs_hybrid_random(16, 40, 0.5);
+        let cifar = cifar9_random(16, 41, 0.33);
+        let mut reg = NetRegistry::new();
+        assert!(reg.is_empty());
+        let fp_dvs = reg.add(dvs.clone()).unwrap();
+        let fp_cifar = reg.add(cifar.clone()).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_ne!(fp_dvs, fp_cifar);
+        assert_eq!(reg.default_fingerprint(), fp_dvs, "first registered is the default");
+        let order: Vec<&str> = reg.entries().map(|e| e.net().name.as_str()).collect();
+        assert_eq!(order, [dvs.name.as_str(), cifar.name.as_str()]);
+        assert!(reg.contains(fp_cifar));
+        assert_eq!(reg.entry(fp_cifar).unwrap().net().name, cifar.name);
+        assert_eq!(reg.by_name(&dvs.name).unwrap().fingerprint(), fp_dvs);
+        assert_eq!(reg.entry(7).unwrap_err(), BindingError::UnknownNet { fingerprint: 7 });
+    }
+
+    #[test]
+    fn duplicate_and_mismatched_registrations_are_errors() {
+        let net = dvs_hybrid_random(16, 42, 0.5);
+        let mut reg = NetRegistry::single(net.clone()).unwrap();
+        assert!(reg.add(net.clone()).is_err(), "same image twice must be refused");
+        // an image packed for a different net must not register
+        let other = Arc::new(PreparedNet::new(
+            &dvs_hybrid_random(32, 43, 0.5),
+            &CutieConfig::kraken(),
+        ));
+        assert!(reg.add_with_image(net, other).is_err());
+    }
+
+    #[test]
+    fn session_geometry_derives_from_the_bound_net() {
+        let cfg = CutieConfig::kraken();
+        let dvs = dvs_hybrid_random(16, 44, 0.5);
+        let g = SessionGeometry::of(&dvs, &cfg, 9);
+        assert_eq!(
+            g,
+            SessionGeometry {
+                fingerprint: 9,
+                input_hw: 64,
+                input_ch: 2,
+                tcn_depth: cfg.tcn_depth,
+                channels: cfg.channels,
+                has_tcn: true,
+            }
+        );
+        let cifar = cifar9_random(16, 45, 0.33);
+        let g = SessionGeometry::of(&cifar, &cfg, 3);
+        assert_eq!((g.input_hw, g.input_ch, g.has_tcn), (32, 3, false));
+    }
+
+    #[test]
+    fn binding_errors_name_the_contract() {
+        let e = BindingError::UnknownNet { fingerprint: 0xAB };
+        assert!(e.to_string().contains("0x00000000000000ab"));
+        let e = BindingError::FrameShape { session: 3, got: (64, 64, 2), want: (32, 32, 3) };
+        assert!(e.to_string().contains("64x64x2") && e.to_string().contains("32x32x3"));
+        let e = BindingError::Rebind { session: 1, bound: 1, requested: 2 };
+        assert!(e.to_string().contains("cannot rebind"));
+        let e = BindingError::SnapshotNet { session: 5, fingerprint: 1 };
+        assert!(e.to_string().contains("snapshot"));
+        // BindingError is a std error, so `?` lifts it into anyhow.
+        let as_any: anyhow::Error = e.into();
+        assert!(as_any.downcast_ref::<BindingError>().is_some());
+    }
+}

@@ -17,6 +17,7 @@ use crate::tensor::PackedMap;
 
 use super::hibernate::HibernationStats;
 use super::metrics::{ServingMetrics, ServingReport};
+use super::registry::SessionGeometry;
 
 /// Terminal frame failures a session absorbs before it is quarantined
 /// (further frames are dropped instead of served).
@@ -32,6 +33,12 @@ pub(crate) struct FaultState {
 
 pub struct Session {
     pub id: usize,
+    /// The session's net binding (multi-workload pass): the fingerprint
+    /// of the prepared image every frame routes through, plus the typed
+    /// input/window dims submitted frames are checked against. Fixed for
+    /// the session's lifetime and recorded in hibernation snapshots so
+    /// resume/migration re-binds the same net.
+    pub geometry: SessionGeometry,
     /// The stream's recurrent TCN window (a packed-word ring); checked
     /// out into the tail scheduler for the duration of each of this
     /// session's frames.
@@ -61,10 +68,11 @@ pub struct Session {
 }
 
 impl Session {
-    pub fn new(id: usize, voltage: f64, tcn_depth: usize, channels: usize) -> Self {
+    pub fn new(id: usize, voltage: f64, geometry: SessionGeometry) -> Self {
         Session {
             id,
-            tcn: TcnMemory::new(tcn_depth, channels),
+            geometry,
+            tcn: TcnMemory::new(geometry.tcn_depth, geometry.channels),
             soc: KrakenSoc::new(voltage),
             metrics: ServingMetrics::default(),
             labels: Vec::new(),

@@ -15,6 +15,7 @@
 //! standalone schedulers. [`WeightMemory`] stays as the
 //! residency/cycle-charging model over that shared image.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{ensure, Result};
@@ -54,6 +55,15 @@ pub struct Scheduler {
     /// the whole pool (shared-image pass); standalone schedulers build
     /// their own on first use.
     image: Option<Arc<PreparedNet>>,
+    /// Weight-bank residency states parked per image fingerprint
+    /// (multi-workload pass): when [`Scheduler::swap_image`] checks a
+    /// different net's image in, the current `weights` model is parked
+    /// here and the incoming image's model is restored (or started
+    /// fresh). Each net's residency therefore evolves exactly as it
+    /// would serving alone — interleaving workloads cannot thrash the
+    /// modeled banks of either — while the host-side switch cost stays
+    /// a couple of map moves.
+    parked_weights: BTreeMap<u64, WeightMemory>,
 }
 
 impl Scheduler {
@@ -69,6 +79,7 @@ impl Scheduler {
             tcn_mem,
             actmem,
             image: None,
+            parked_weights: BTreeMap::new(),
         }
     }
 
@@ -94,6 +105,30 @@ impl Scheduler {
         self.image.as_ref()
     }
 
+    /// Check a different prepared image in (the multi-workload analogue
+    /// of [`Scheduler::swap_tcn`]): the current image's weight-bank
+    /// residency model is parked under its fingerprint and the incoming
+    /// image's model is restored — or started cold if this scheduler has
+    /// never served that image. Re-attaching the image already being
+    /// served (same `Arc` or same fingerprint) is a no-op, so every
+    /// single-net path is byte-identical to the pre-registry code.
+    pub fn swap_image(&mut self, image: Arc<PreparedNet>) {
+        if let Some(cur) = &self.image {
+            if Arc::ptr_eq(cur, &image) || cur.fingerprint() == image.fingerprint() {
+                self.image = Some(image);
+                return;
+            }
+            let old_fp = cur.fingerprint();
+            let fresh = self
+                .parked_weights
+                .remove(&image.fingerprint())
+                .unwrap_or_else(|| WeightMemory::new(self.cfg.weight_banks, self.cfg.channels));
+            let old = std::mem::replace(&mut self.weights, fresh);
+            self.parked_weights.insert(old_fp, old);
+        }
+        self.image = Some(image);
+    }
+
     /// Fetch the image serving `net`, building (and keeping) one if none
     /// is attached or the attached one is for a different network. The
     /// match check is geometry-only and O(layers) — negligible per
@@ -105,7 +140,9 @@ impl Scheduler {
             }
         }
         let img = Arc::new(PreparedNet::new(net, &self.cfg));
-        self.image = Some(Arc::clone(&img));
+        // route through the checkout so the displaced image's residency
+        // model is parked, not clobbered
+        self.swap_image(Arc::clone(&img));
         img
     }
 
@@ -561,14 +598,29 @@ impl Scheduler {
             let mut run = RunStats::default();
             let (feat, r) = self.run_cnn(net, &PackedMap::from_trit(input))?;
             run.merge(r);
-            let flat = TritTensor::from_vec(&[feat.numel()], feat.unpack_data());
-            let dense = net.layers.last().unwrap();
-            let image = self.image_for(net);
-            let prep = image.dense_layer(&dense.name)?;
-            let (logits, stats) = run_dense_prepared(prep, &flat, &self.cfg, self.mode)?;
-            run.layers.push(stats);
+            let (logits, r) = self.run_classifier(net, &feat)?;
+            run.merge(r);
             Ok((logits, run))
         }
+    }
+
+    /// Feed-forward classifier tail (cifar9-style nets, no TCN): flatten
+    /// the CNN's final feature map and run the packed classifier. This
+    /// is the per-frame serving tail the engine uses for sessions bound
+    /// to a TCN-less net — nothing touches the TCN memory.
+    pub fn run_classifier(
+        &mut self,
+        net: &Network,
+        feat: &PackedMap,
+    ) -> Result<(IntTensor, RunStats)> {
+        let mut run = RunStats::default();
+        let flat = TritTensor::from_vec(&[feat.numel()], feat.unpack_data());
+        let dense = net.layers.last().unwrap();
+        let image = self.image_for(net);
+        let prep = image.dense_layer(&dense.name)?;
+        let (logits, stats) = run_dense_prepared(prep, &flat, &self.cfg, self.mode)?;
+        run.layers.push(stats);
+        Ok((logits, run))
     }
 
     /// One serving step of the hybrid pipeline: packed frame in → CNN →
@@ -811,5 +863,73 @@ mod tests {
         let (lb, rb) = adopt.serve_frame(&net, &f).unwrap();
         assert_eq!(la, lb);
         assert_eq!(ra, rb, "adopt must be counter-identical to preload");
+    }
+
+    #[test]
+    fn swap_image_parks_and_restores_per_net_residency() {
+        // Serving two workloads through one scheduler must charge each
+        // net exactly the weight cycles it would see serving alone:
+        // residency is parked per image, not thrashed through one LRU.
+        let dvs = dvs_hybrid_random(16, 103, 0.5);
+        let cifar = cifar9_random(16, 104, 0.33);
+        let cfg = CutieConfig::kraken();
+        let img_d = Arc::new(PreparedNet::new(&dvs, &cfg));
+        let img_c = Arc::new(PreparedNet::new(&cifar, &cfg));
+        let mut rng = Rng::new(105);
+        let fd = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
+        let fc = TritTensor::random(&[32, 32, 3], &mut rng, 0.3);
+
+        // isolated oracles, preloaded like the engine tail
+        let mut alone_d = Scheduler::new(cfg.clone(), SimMode::Fast);
+        alone_d.swap_image(Arc::clone(&img_d));
+        alone_d.preload_weights(&dvs);
+        let mut alone_c = Scheduler::new(cfg.clone(), SimMode::Fast);
+        alone_c.swap_image(Arc::clone(&img_c));
+        alone_c.preload_weights(&cifar);
+
+        let mut shared = Scheduler::new(cfg.clone(), SimMode::Fast);
+        shared.swap_image(Arc::clone(&img_d));
+        shared.preload_weights(&dvs);
+        shared.swap_image(Arc::clone(&img_c));
+        shared.preload_weights(&cifar);
+        shared.swap_image(Arc::clone(&img_d));
+
+        for round in 0..3 {
+            let (la, ra) = alone_d.serve_frame(&dvs, &fd).unwrap();
+            shared.swap_image(Arc::clone(&img_d));
+            let (lb, rb) = shared.serve_frame(&dvs, &fd).unwrap();
+            assert_eq!(la, lb, "round {round}: DVS labels");
+            assert_eq!(ra, rb, "round {round}: DVS counters");
+
+            let (la, ra) = alone_c.run_full(&cifar, &fc).unwrap();
+            shared.swap_image(Arc::clone(&img_c));
+            let (lb, rb) = shared.run_full(&cifar, &fc).unwrap();
+            assert_eq!(la, lb, "round {round}: cifar labels");
+            assert_eq!(ra, rb, "round {round}: cifar counters");
+        }
+    }
+
+    #[test]
+    fn swap_image_same_fingerprint_is_a_noop() {
+        let net = dvs_hybrid_random(16, 106, 0.5);
+        let cfg = CutieConfig::kraken();
+        let img = Arc::new(PreparedNet::new(&net, &cfg));
+        let twin = Arc::new(PreparedNet::new(&net, &cfg));
+        let mut rng = Rng::new(107);
+        let f = PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85));
+
+        let mut sched = Scheduler::new(cfg.clone(), SimMode::Fast);
+        sched.swap_image(Arc::clone(&img));
+        sched.preload_weights(&net);
+        let (_, warm) = sched.serve_frame(&net, &f).unwrap();
+        // same Arc and same-fingerprint twin both keep the residency
+        sched.swap_image(Arc::clone(&img));
+        let (_, a) = sched.serve_frame(&net, &f).unwrap();
+        sched.swap_image(Arc::clone(&twin));
+        let (_, b) = sched.serve_frame(&net, &f).unwrap();
+        let loads = |r: &RunStats| r.layers.iter().map(|l| l.weight_load_cycles).sum::<u64>();
+        assert_eq!(loads(&a), loads(&warm), "same-Arc swap must keep banks resident");
+        assert_eq!(loads(&b), loads(&warm), "same-fingerprint swap must keep banks resident");
+        assert!(Arc::ptr_eq(sched.image().unwrap(), &twin));
     }
 }

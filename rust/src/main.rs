@@ -10,18 +10,18 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use tcn_cutie::coordinator::source::NUM_CLASSES;
 use tcn_cutie::coordinator::{
     DrainOrder, DvsSource, Engine, EngineConfig, Fleet, FleetConfig, FleetError, FrameSource,
-    GestureClass, PackedStream, Pipeline, PipelineConfig, ServingReport, SessionStore,
-    ShardPolicy, DEFAULT_QUEUE_CAP,
+    GestureClass, NetRegistry, PackedStream, Pipeline, PipelineConfig, ServingReport,
+    SessionStore, ShardPolicy, SyntheticSource, DEFAULT_QUEUE_CAP,
 };
 use tcn_cutie::cutie::{CutieConfig, PreparedNet, Scheduler, SimMode};
 use tcn_cutie::energy::{evaluate, EnergyParams};
 use tcn_cutie::fault::{FaultPlan, FaultSurface};
-use tcn_cutie::network::{dvs_hybrid_random, loader, Network};
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, loader, Network};
 use tcn_cutie::report;
 use tcn_cutie::runtime::{golden, Runtime};
 use tcn_cutie::tensor::{ttn, TritTensor};
@@ -45,6 +45,7 @@ const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report
          [--engines N] [--shard-policy hash|least-loaded|pin]
          [--drain-order fifo|deadline|energy] [--queue-cap N]
          [--migrate-every K] [--resident-sessions B]
+         [--workload NAME=MANIFEST ...] [--session-net round-robin|NAME]
   pack-weights --net MANIFEST [--out FILE] | --synthetic DIR [--seed N]
   golden --net cifar9_96
   report <table1|fig5|fig6|soa|sparsity|mapping|config|layers|all>
@@ -54,6 +55,17 @@ gesture (gesture+s) mod 12 and seed seed+s, or replays FILE (a packed
 (pos, mask) word-stream; --record FILE captures one to replay).
 --net synthetic serves the random-weight DVS hybrid network (no
 artifacts needed).
+
+--workload NAME=MANIFEST (repeatable) serves several networks from one
+shared registry: each session binds exactly one net. --session-net
+round-robin (the default) stripes sessions across the workloads in
+registration order; --session-net NAME binds every session to that
+workload. MANIFEST is a net manifest path, or `synthetic` /
+`synthetic-cifar` for the random-weight DVS hybrid / cifar9 CNN.
+Recurrent (TCN) workloads stream gesture frames; feed-forward ones get
+dense synthetic frames matching their input geometry. The report gains
+per-net rows when more than one net actually serves. --replay and
+--record stay single-net.
 
 --fault-ber P (explicit bit-error rate) or --fault-voltage V (rate the
 SRAM model predicts at supply V, zero at/above 0.5 V) arms a
@@ -188,6 +200,92 @@ fn serve_net(args: &Args, seed: u64) -> Result<(Network, Option<Arc<PreparedNet>
     load_net_and_image(&manifest)
 }
 
+/// One `--workload NAME=MANIFEST` binding: the CLI alias and the
+/// fingerprint its net registered under.
+struct Workload {
+    alias: String,
+    fingerprint: u64,
+}
+
+/// Build the serving registry from every `--workload NAME=MANIFEST`
+/// occurrence (in argv order — registration order is the round-robin
+/// order). `Ok(None)` when no `--workload` was given (single-net
+/// serving). Manifests `synthetic` / `synthetic-cifar` register the
+/// artifact-free random-weight nets; anything else is a manifest path.
+fn parse_workloads(args: &Args, seed: u64) -> Result<Option<(Arc<NetRegistry>, Vec<Workload>)>> {
+    let specs = args.opt_all("workload");
+    if specs.is_empty() {
+        return Ok(None);
+    }
+    ensure!(args.opt("net").is_none(), "--workload and --net are mutually exclusive");
+    let mut reg = NetRegistry::new();
+    let mut workloads: Vec<Workload> = Vec::new();
+    for s in specs {
+        let (name, manifest) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow!("invalid --workload value {s:?}: expected NAME=MANIFEST"))?;
+        ensure!(!name.is_empty(), "invalid --workload value {s:?}: empty NAME");
+        ensure!(!manifest.is_empty(), "invalid --workload value {s:?}: empty MANIFEST");
+        ensure!(
+            workloads.iter().all(|w| w.alias != name),
+            "duplicate --workload name {name:?}"
+        );
+        let fingerprint = match manifest {
+            "synthetic" => reg.add(dvs_hybrid_random(96, seed, 0.5))?,
+            "synthetic-cifar" => reg.add(cifar9_random(96, seed, 0.33))?,
+            path => {
+                let (net, image) = load_net_and_image(path)?;
+                match image {
+                    Some(img) => reg.add_with_image(net, img)?,
+                    None => reg.add(net)?,
+                }
+            }
+        };
+        workloads.push(Workload { alias: name.to_string(), fingerprint });
+    }
+    Ok(Some((Arc::new(reg), workloads)))
+}
+
+/// Resolve `--session-net` into one bound fingerprint per session:
+/// `round-robin` (default) stripes sessions across the workloads in
+/// registration order, a workload NAME binds every session to it.
+fn session_bindings(args: &Args, workloads: &[Workload], streams: usize) -> Result<Vec<u64>> {
+    match args.opt("session-net").unwrap_or("round-robin") {
+        "round-robin" => {
+            Ok((0..streams).map(|s| workloads[s % workloads.len()].fingerprint).collect())
+        }
+        name => {
+            let w = workloads
+                .iter()
+                .find(|w| w.alias == name)
+                .with_context(|| format!("--session-net {name:?} names no --workload"))?;
+            Ok(vec![w.fingerprint; streams])
+        }
+    }
+}
+
+/// Per-net aggregate rows — only when more than one net actually
+/// served, so single-workload output stays byte-identical.
+fn print_net_rows(r: &ServingReport) {
+    if r.nets.len() < 2 {
+        return;
+    }
+    for n in &r.nets {
+        println!(
+            "  [net {} {:#018x}] {} sessions, {} frames, {} labels, core {:.2} µJ, \
+             SoC {:.2} µJ, sim {:.3} ms",
+            n.name,
+            n.fingerprint,
+            n.sessions,
+            n.frames,
+            n.labels,
+            n.core_energy_j * 1e6,
+            n.soc_energy_j * 1e6,
+            n.sim_time_s * 1e3
+        );
+    }
+}
+
 fn print_report(tag: &str, r: &mut ServingReport) {
     println!("{tag}: {}", r.metrics.summary());
     println!(
@@ -287,17 +385,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if threaded && batch.is_some() {
         bail!("--threaded and --batch are mutually exclusive");
     }
-    let needs_engine =
-        streams > 1 || replay.is_some() || fault_plan.is_some() || hibernate || fleet_mode;
+    // --workload NAME=MANIFEST (repeatable): multi-net serving through
+    // one shared registry. Always engine-path; replay/record stay
+    // single-net (one recorded geometry can't feed every binding).
+    let workloads = parse_workloads(args, seed)?;
+    if workloads.is_none() && args.opt("session-net").is_some() {
+        bail!("--session-net requires at least one --workload");
+    }
+    if workloads.is_some() {
+        ensure!(replay.is_none(), "--replay is single-net; drop --workload to replay");
+        ensure!(args.opt("record").is_none(), "--record is single-net; drop --workload");
+    }
+    let needs_engine = streams > 1
+        || replay.is_some()
+        || fault_plan.is_some()
+        || hibernate
+        || fleet_mode
+        || workloads.is_some();
     if threaded && needs_engine {
         bail!("--threaded serves a single live stream; drop it or use --batch");
     }
-    // packed TTN2 artifacts boot word-for-word into the shared image
-    let (net, image) = serve_net(args, seed)?;
+    // Single-net serving resolves --net (or the default artifact path)
+    // exactly as before; multi-workload boots from the registry alone
+    // and never touches the default artifact path.
+    let single = match &workloads {
+        None => Some(serve_net(args, seed)?),
+        Some(_) => None,
+    };
 
     // --record FILE: capture the stream-0 gesture source as a replayable
     // packed word-stream (the µDMA payload twin), then serve as usual.
     if let Some(path) = args.opt("record") {
+        let (net, _) = single.as_ref().expect("--record is single-net");
         let mut src = DvsSource::new(net.input_hw, seed, GestureClass(gesture));
         let stream = PackedStream::capture(&mut src, frames)?;
         stream.save(path)?;
@@ -312,7 +431,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // the classic topology policies (all thin wrappers over the same
     // engine path). A fault plan or hibernation always routes through
     // the engine, which owns the per-session injectors and the store.
-    if streams == 1 && replay.is_none() && fault_plan.is_none() && !hibernate && !fleet_mode {
+    if workloads.is_none()
+        && streams == 1
+        && replay.is_none()
+        && fault_plan.is_none()
+        && !hibernate
+        && !fleet_mode
+    {
+        let (net, image) = single.expect("single-net serving has a resolved net");
         let cfg = PipelineConfig {
             voltage,
             freq_hz,
@@ -337,10 +463,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    // Everything below drives the engine; fold single-net serving into
+    // a one-entry registry so multi-stream serving has exactly one path.
+    let (registry, session_fp): (Arc<NetRegistry>, Vec<u64>) = match workloads {
+        Some((registry, aliases)) => {
+            let fps = session_bindings(args, &aliases, streams)?;
+            (registry, fps)
+        }
+        None => {
+            let (net, image) = single.expect("single-net serving has a resolved net");
+            let reg = match image {
+                Some(img) => NetRegistry::single_with_image(net, img)?,
+                None => NetRegistry::single(net)?,
+            };
+            let fp = reg.default_fingerprint();
+            (Arc::new(reg), vec![fp; streams])
+        }
+    };
+
     // Multi-stream (or replayed) serving: drive the engine directly.
     let replay_stream = match replay {
         Some(path) => {
             let ps = PackedStream::load(path)?;
+            let net = registry.default_entry().net();
             ensure!(
                 (ps.h, ps.w, ps.c) == (net.input_hw, net.input_hw, 2),
                 "replay stream is {}x{}x{} but {} expects {}x{}x2 frames",
@@ -355,17 +500,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let mut sources: Vec<Box<dyn FrameSource>> = (0..streams)
-        .map(|s| match &replay_stream {
+    // Per-session sources follow the binding: recurrent (TCN) nets get
+    // the gesture camera, feed-forward nets the dense synthetic
+    // generator matching their input geometry.
+    let mut sources: Vec<Box<dyn FrameSource>> = Vec::with_capacity(streams);
+    for s in 0..streams {
+        sources.push(match &replay_stream {
             // every session replays the same recorded payload
             Some(ps) => Box::new(ps.clone()) as Box<dyn FrameSource>,
-            None => Box::new(DvsSource::new(
-                net.input_hw,
-                seed + s as u64,
-                GestureClass((gesture + s) % NUM_CLASSES),
-            )) as Box<dyn FrameSource>,
-        })
-        .collect();
+            None => {
+                let geom = registry.entry(session_fp[s])?.geometry();
+                if geom.has_tcn {
+                    Box::new(DvsSource::new(
+                        geom.input_hw,
+                        seed + s as u64,
+                        GestureClass((gesture + s) % NUM_CLASSES),
+                    )) as Box<dyn FrameSource>
+                } else {
+                    Box::new(SyntheticSource::new(geom.input_hw, geom.input_ch, seed + s as u64))
+                }
+            }
+        });
+    }
 
     // Sharded fleet serving: N engines behind one router, live
     // migrations every K rounds, byte-identical to --engines 1.
@@ -381,10 +537,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_cap,
             engine: EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) },
         };
-        let mut fleet = match image {
-            Some(img) => Fleet::with_image(&net, fcfg, img)?,
-            None => Fleet::new(&net, fcfg)?,
-        };
+        let mut fleet = Fleet::with_registry(Arc::clone(&registry), fcfg)?;
         if hibernate {
             for e in 0..engines {
                 let eng = fleet.engine_mut(e).expect("engine index in range");
@@ -397,7 +550,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 // explicit placement: stripe the sessions across engines
                 fleet.pin_session(sid, sid % engines)?;
             }
-            fleet.open_session(sid)?;
+            fleet.open_session_on(sid, session_fp[sid])?;
             if let Some(plan) = fault_plan {
                 fleet.set_fault_plan(sid, plan)?;
             }
@@ -455,16 +608,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             print_report(&format!("  [session {sid}]"), &mut r);
         }
         print_report("aggregate", &mut agg);
+        print_net_rows(&agg);
         fleet.sync_stores()?;
         return Ok(());
     }
 
     let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) };
     let pool = ecfg.workers;
-    let mut engine = match image {
-        Some(img) => Engine::with_image(&net, ecfg, img)?,
-        None => Engine::new(&net, ecfg)?,
-    };
+    let mut engine = Engine::with_registry(Arc::clone(&registry), ecfg)?;
     if hibernate {
         let store = match session_store {
             Some(path) => SessionStore::open(path)?,
@@ -478,9 +629,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     // deterministic round-robin interleave across sessions
     for sid in 0..streams {
-        engine.open_session(sid);
+        engine.open_session_on(sid, session_fp[sid])?;
         if let Some(plan) = fault_plan {
-            engine.set_fault_plan(sid, plan);
+            engine.set_fault_plan(sid, plan)?;
         }
     }
     // Drain each round-robin round: memory stays bounded to one frame
@@ -494,12 +645,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if hibernate_after.is_some() {
             let sid = round % streams;
             if let Some(f) = sources[sid].next_frame() {
-                engine.submit(sid, f);
+                engine.submit(sid, f)?;
             }
         } else {
             for (sid, src) in sources.iter_mut().enumerate() {
                 if let Some(f) = src.next_frame() {
-                    engine.submit(sid, f);
+                    engine.submit(sid, f)?;
                 }
             }
         }
@@ -515,6 +666,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         print_report(&format!("  [session {sid}]"), &mut r);
     }
     print_report("aggregate", &mut agg);
+    print_net_rows(&agg);
     // finishing consumed every stored snapshot; persist the (now empty)
     // store so a later invocation reopens a consistent file
     engine.sync_store()?;
@@ -526,7 +678,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// it. Returns the number of frames the forced drain served (0 on the
 /// happy path). Any non-back-pressure refusal is a real routing error.
 fn fleet_submit(
-    fleet: &mut Fleet<'_>,
+    fleet: &mut Fleet,
     sid: usize,
     frame: tcn_cutie::tensor::PackedMap,
 ) -> Result<usize> {

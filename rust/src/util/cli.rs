@@ -11,6 +11,10 @@ use anyhow::{anyhow, Result};
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in argv order. `options` keeps only
+    /// the last value per key; repeatable options (`--workload A=.. --workload
+    /// B=..`) read all of them via [`Args::opt_all`].
+    pub pairs: Vec<(String, String)>,
     pub flags: Vec<String>,
 }
 
@@ -23,13 +27,16 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                    out.pairs.push((k.to_string(), v.to_string()));
                 } else if flag_names.contains(&name) {
                     out.flags.push(name.to_string());
                 } else if let Some(v) = it.peek() {
                     if v.starts_with("--") {
                         out.flags.push(name.to_string());
                     } else {
-                        out.options.insert(name.to_string(), it.next().unwrap());
+                        let v = it.next().unwrap();
+                        out.options.insert(name.to_string(), v.clone());
+                        out.pairs.push((name.to_string(), v));
                     }
                 } else {
                     out.flags.push(name.to_string());
@@ -82,6 +89,24 @@ impl Args {
         Ok(self.opt_parsed(key)?.unwrap_or(default))
     }
 
+    /// Every value given for a repeatable `--key`, in argv order.
+    pub fn opt_all(&self, key: &str) -> Vec<&str> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
+    }
+
+    /// Parse every occurrence of a repeatable `--key value` into a
+    /// `FromStr` type; the first malformed value is the error.
+    pub fn opt_all_parsed<T>(&self, key: &str) -> Result<Vec<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        self.opt_all(key)
+            .into_iter()
+            .map(|s| s.parse::<T>().map_err(|e| anyhow!("invalid --{key} value {s:?}: {e}")))
+            .collect()
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -119,6 +144,27 @@ mod tests {
         let a = Args::parse(argv(&[]), &[]);
         assert_eq!(a.opt_f64("voltage", 0.5).unwrap(), 0.5);
         assert_eq!(a.opt_usize("n", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_in_order() {
+        let a = Args::parse(
+            argv(&["serve", "--workload", "dvs=synthetic", "--workload=cif=synthetic-cifar"]),
+            &[],
+        );
+        // BTreeMap keeps only the last value; pairs keep them all, ordered.
+        assert_eq!(a.opt("workload"), Some("cif=synthetic-cifar"));
+        assert_eq!(a.opt_all("workload"), ["dvs=synthetic", "cif=synthetic-cifar"]);
+        assert!(a.opt_all("net").is_empty());
+        let n: Vec<u64> = Args::parse(argv(&["x", "--n", "3", "--n", "5"]), &[])
+            .opt_all_parsed("n")
+            .unwrap();
+        assert_eq!(n, [3, 5]);
+        let e = Args::parse(argv(&["x", "--n", "3", "--n", "zap"]), &[])
+            .opt_all_parsed::<u64>("n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--n") && e.contains("zap"), "got: {e}");
     }
 
     #[test]

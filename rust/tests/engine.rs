@@ -43,10 +43,10 @@ fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
 fn serve_isolated(net: &Network, mode: SimMode, s: usize, frames: usize) -> ServingReport {
     let cfg = EngineConfig { mode, workers: 1, ..Default::default() };
     let mut engine = Engine::new(net, cfg).unwrap();
-    engine.open_session(s);
+    engine.open_session(s).unwrap();
     let mut src = source_for(net, s);
     for _ in 0..frames {
-        engine.submit(s, src.next_frame());
+        engine.submit(s, src.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     engine.finish_session(s).unwrap()
@@ -69,7 +69,7 @@ fn interleaved_sessions_match_isolated() {
             let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(&net, s)).collect();
             for f in 0..frames {
                 for (s, src) in srcs.iter_mut().enumerate() {
-                    engine.submit(s, src.next_frame());
+                    engine.submit(s, src.next_frame()).unwrap();
                 }
                 // drain on a ragged cadence so batches mix sessions
                 if f % 2 == 0 {
@@ -102,7 +102,7 @@ fn worker_pool_matches_serial_engine_across_sessions() {
     let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(&net, s)).collect();
     for _ in 0..frames {
         for (s, src) in srcs.iter_mut().enumerate() {
-            engine.submit(s, src.next_frame());
+            engine.submit(s, src.next_frame()).unwrap();
         }
     }
     assert_eq!(engine.pending_frames(), k * frames);
@@ -129,9 +129,9 @@ fn replayed_word_stream_serves_identically_to_live_source() {
 
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
     let mut engine = Engine::new(&net, cfg).unwrap();
-    engine.open_session(0);
+    engine.open_session(0).unwrap();
     // submit_from pulls until the finite stream dries up
-    assert_eq!(engine.submit_from(0, &mut replay, usize::MAX), frames);
+    assert_eq!(engine.submit_from(0, &mut replay, usize::MAX).unwrap(), frames);
     assert_eq!(replay.next_frame(), None, "stream must be exhausted");
     engine.drain().unwrap();
     let mut rep = engine.finish_session(0).unwrap();
@@ -147,8 +147,8 @@ fn mixed_source_feeds_engine_deterministically() {
         let mut mixer = MixedSource::of_gestures(net.input_hw, seed, &[1, 7, 10]);
         let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
         let mut engine = Engine::new(&net, cfg).unwrap();
-        engine.open_session(0);
-        engine.submit_from(0, &mut mixer, 6);
+        engine.open_session(0).unwrap();
+        engine.submit_from(0, &mut mixer, 6).unwrap();
         engine.drain().unwrap();
         engine.finish_session(0).unwrap()
     };
@@ -184,7 +184,7 @@ fn pool_shares_exactly_one_weight_image() {
     let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
     for _ in 0..3 {
         for (s, src) in srcs.iter_mut().enumerate() {
-            engine.submit(s, src.next_frame());
+            engine.submit(s, src.next_frame()).unwrap();
         }
     }
     engine.drain().unwrap();
@@ -229,8 +229,8 @@ fn packed_image_boot_serves_byte_identically() {
             for _ in 0..frames {
                 for (s, src) in srcs.iter_mut().enumerate() {
                     let f = src.next_frame();
-                    from_i8.submit(s, f.clone());
-                    from_img.submit(s, f);
+                    from_i8.submit(s, f.clone()).unwrap();
+                    from_img.submit(s, f).unwrap();
                 }
             }
             from_i8.drain().unwrap();
@@ -278,7 +278,7 @@ fn empty_and_unknown_sessions_behave() {
     let mut engine = Engine::new(&net, cfg).unwrap();
     assert_eq!(engine.drain().unwrap(), 0, "empty drain is a no-op");
     assert!(engine.finish_session(9).is_none(), "unknown session has no report");
-    engine.open_session(2);
+    engine.open_session(2).unwrap();
     let rep = engine.finish_session(2).unwrap();
     assert_eq!(rep.metrics.frames, 0);
     assert!(rep.labels.is_empty());
@@ -297,8 +297,8 @@ fn session_state_is_isolated_not_shared() {
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
     let mut engine = Engine::new(&net, cfg).unwrap();
     for f in &frames {
-        engine.submit(0, f.clone());
-        engine.submit(1, f.clone());
+        engine.submit(0, f.clone()).unwrap();
+        engine.submit(1, f.clone()).unwrap();
     }
     engine.drain().unwrap();
     assert_eq!(engine.session(0).unwrap().tcn.len(), 4);

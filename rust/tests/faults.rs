@@ -5,8 +5,11 @@
 //! isolation guarantee (an injected neighbor must not perturb clean
 //! co-sessions).
 
+use std::sync::Arc;
+
 use tcn_cutie::coordinator::{
-    DvsSource, Engine, EngineConfig, FrameSource, GestureClass, ServingReport, FAILURE_LIMIT,
+    BindingError, DvsSource, Engine, EngineConfig, FrameSource, GestureClass, NetRegistry,
+    ServingReport, FAILURE_LIMIT,
 };
 use tcn_cutie::cutie::SimMode;
 use tcn_cutie::fault::{FaultPlan, FaultSurface};
@@ -57,13 +60,13 @@ fn serve_with_plan(
 ) -> ServingReport {
     let cfg = EngineConfig { mode, workers, ..Default::default() };
     let mut engine = Engine::new(net, cfg).unwrap();
-    engine.open_session(s);
+    engine.open_session(s).unwrap();
     if let Some(p) = plan {
-        engine.set_fault_plan(s, p);
+        engine.set_fault_plan(s, p).unwrap();
     }
     let mut src = source_for(net, s);
     for _ in 0..frames {
-        engine.submit(s, src.next_frame());
+        engine.submit(s, src.next_frame()).unwrap();
     }
     engine.drain().unwrap();
     engine.finish_session(s).unwrap()
@@ -111,13 +114,13 @@ fn injected_session_cannot_perturb_clean_neighbors() {
         let cfg = EngineConfig { mode: SimMode::Fast, workers, ..Default::default() };
         let mut engine = Engine::new(&net, cfg).unwrap();
         for s in 0..3 {
-            engine.open_session(s);
+            engine.open_session(s).unwrap();
         }
-        engine.set_fault_plan(1, FaultPlan::with_ber(FaultSurface::ActMem, 1e-2, 7));
+        engine.set_fault_plan(1, FaultPlan::with_ber(FaultSurface::ActMem, 1e-2, 7)).unwrap();
         let mut srcs: Vec<DvsSource> = (0..3).map(|s| source_for(&net, s)).collect();
         for f in 0..frames {
             for (s, src) in srcs.iter_mut().enumerate() {
-                engine.submit(s, src.next_frame());
+                engine.submit(s, src.next_frame()).unwrap();
             }
             if f % 2 == 0 {
                 engine.drain().unwrap();
@@ -195,28 +198,40 @@ fn tcn_and_dma_surfaces_detect_and_degrade() {
 
 #[test]
 fn failing_session_is_quarantined_not_fatal() {
-    // A session whose frames error terminally (here: frames too large for
-    // the activation SRAM) must trip the failure limit and be quarantined
-    // — later frames dropped unserved — while the engine keeps serving a
-    // healthy co-session and drain() never errors.
+    // A session whose frames error terminally (here: bound to a net
+    // whose declared input overflows the activation SRAM, so every
+    // shape-valid frame dies in the CNN) must trip the failure limit
+    // and be quarantined — later frames dropped unserved — while the
+    // engine keeps serving a healthy co-session and drain() never
+    // errors. Shape-INVALID frames never get that far: submit refuses
+    // them with a typed error and enqueues nothing.
     let net = dvs_hybrid_random(16, 5, 0.5);
+    let mut big = net.clone();
+    big.name = "dvs_big".to_string();
+    big.input_hw = 256;
+    let mut reg = NetRegistry::single(net.clone()).unwrap();
+    let fp_big = reg.add(big).unwrap();
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
-    let mut engine = Engine::new(&net, cfg).unwrap();
-    engine.open_session(0);
-    engine.open_session(1);
+    let mut engine = Engine::with_registry(Arc::new(reg), cfg).unwrap();
+    engine.open_session_on(0, fp_big).unwrap();
+    engine.open_session(1).unwrap();
     let mut src = source_for(&net, 1);
+
+    // a frame that disagrees with the binding is refused untouched
+    let err = engine.submit(0, PackedMap::zeros(16, 16, 2)).unwrap_err();
+    assert!(matches!(err, BindingError::FrameShape { session: 0, .. }), "got {err}");
 
     // FAILURE_LIMIT bad frames trip the quarantine...
     for _ in 0..FAILURE_LIMIT {
-        engine.submit(0, PackedMap::zeros(256, 256, 2));
-        engine.submit(1, src.next_frame());
+        engine.submit(0, PackedMap::zeros(256, 256, 2)).unwrap();
+        engine.submit(1, src.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     assert!(engine.session(0).unwrap().is_quarantined());
     // ...and everything submitted afterwards is dropped unserved.
     for _ in 0..3 {
-        engine.submit(0, PackedMap::zeros(256, 256, 2));
-        engine.submit(1, src.next_frame());
+        engine.submit(0, PackedMap::zeros(256, 256, 2)).unwrap();
+        engine.submit(1, src.next_frame()).unwrap();
     }
     engine.drain().unwrap();
 
@@ -241,8 +256,8 @@ fn fault_plans_are_per_session_and_reseeded() {
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
     let mut engine = Engine::new(&net, cfg).unwrap();
     let plan = FaultPlan::with_ber(FaultSurface::ActMem, 5e-3, 21);
-    engine.set_fault_plan(4, plan);
-    engine.set_fault_plan(9, plan);
+    engine.set_fault_plan(4, plan).unwrap();
+    engine.set_fault_plan(9, plan).unwrap();
     assert_eq!(engine.fault_plan(4), Some(plan));
     assert_eq!(engine.fault_plan(9), Some(plan));
     assert_eq!(engine.fault_plan(5), None);
@@ -251,8 +266,8 @@ fn fault_plans_are_per_session_and_reseeded() {
     let mut src = source_for(&net, 0);
     for _ in 0..8 {
         let f = src.next_frame();
-        engine.submit(4, f.clone());
-        engine.submit(9, f);
+        engine.submit(4, f.clone()).unwrap();
+        engine.submit(9, f).unwrap();
     }
     engine.drain().unwrap();
     let a = engine.finish_session(4).unwrap().faults;

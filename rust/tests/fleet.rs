@@ -53,13 +53,13 @@ fn serve_resident(
 ) -> ServingReport {
     let cfg = EngineConfig { mode, workers, ..Default::default() };
     let mut engine = Engine::new(net, cfg).unwrap();
-    engine.open_session(s);
+    engine.open_session(s).unwrap();
     if let Some(p) = plan {
-        engine.set_fault_plan(s, p);
+        engine.set_fault_plan(s, p).unwrap();
     }
     let mut src = source_for(net, s);
     for _ in 0..frames {
-        engine.submit(s, src.next_frame());
+        engine.submit(s, src.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     engine.finish_session(s).unwrap()

@@ -10,8 +10,8 @@
 use std::fs;
 
 use tcn_cutie::coordinator::{
-    DvsSource, Engine, EngineConfig, GestureClass, ServingReport, Session, SessionSnapshot,
-    SessionStore,
+    DvsSource, Engine, EngineConfig, GestureClass, ServingReport, Session, SessionGeometry,
+    SessionSnapshot, SessionStore,
 };
 use tcn_cutie::cutie::SimMode;
 use tcn_cutie::fault::{FaultPlan, FaultSurface};
@@ -23,6 +23,19 @@ fn tmp_path(name: &str) -> std::path::PathBuf {
 
 fn source_for(net: &Network, s: usize) -> DvsSource {
     DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12))
+}
+
+/// A DVS-shaped session binding for store-level tests that never touch
+/// an engine (the fingerprint is arbitrary but round-trips verbatim).
+fn dvs_geometry(tcn_depth: usize, channels: usize) -> SessionGeometry {
+    SessionGeometry {
+        fingerprint: 0xFEED_0000_0000_0009,
+        input_hw: 64,
+        input_ch: 2,
+        tcn_depth,
+        channels,
+        has_tcn: true,
+    }
 }
 
 fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
@@ -59,13 +72,13 @@ fn serve_resident(
 ) -> ServingReport {
     let cfg = EngineConfig { mode, workers, ..Default::default() };
     let mut engine = Engine::new(net, cfg).unwrap();
-    engine.open_session(s);
+    engine.open_session(s).unwrap();
     if let Some(p) = plan {
-        engine.set_fault_plan(s, p);
+        engine.set_fault_plan(s, p).unwrap();
     }
     let mut src = source_for(net, s);
     for _ in 0..frames {
-        engine.submit(s, src.next_frame());
+        engine.submit(s, src.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     engine.finish_session(s).unwrap()
@@ -85,13 +98,13 @@ fn serve_hibernating(
     let cfg = EngineConfig { mode, workers, ..Default::default() };
     let mut engine = Engine::new(net, cfg).unwrap();
     engine.enable_hibernation(SessionStore::in_memory(), None);
-    engine.open_session(s);
+    engine.open_session(s).unwrap();
     if let Some(p) = plan {
-        engine.set_fault_plan(s, p);
+        engine.set_fault_plan(s, p).unwrap();
     }
     let mut src = source_for(net, s);
     for _ in 0..frames {
-        engine.submit(s, src.next_frame());
+        engine.submit(s, src.next_frame()).unwrap();
         engine.drain().unwrap();
         engine.hibernate(s).unwrap();
     }
@@ -147,12 +160,12 @@ fn idle_eviction_hibernates_and_resumes_transparently() {
     let mut src1 = source_for(&net, 1);
 
     // round 0: both sessions serve
-    engine.submit(0, src0.next_frame());
-    engine.submit(1, src1.next_frame());
+    engine.submit(0, src0.next_frame()).unwrap();
+    engine.submit(1, src1.next_frame()).unwrap();
     engine.drain().unwrap();
     // rounds 1..=3: only session 0 — session 1 idles past the limit
     for _ in 0..3 {
-        engine.submit(0, src0.next_frame());
+        engine.submit(0, src0.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     assert!(engine.store().unwrap().contains(1), "idle session must be in the store");
@@ -165,7 +178,7 @@ fn idle_eviction_hibernates_and_resumes_transparently() {
     assert!(!engine.store().unwrap().contains(1));
 
     // second frame serves as if the eviction never happened
-    engine.submit(1, src1.next_frame());
+    engine.submit(1, src1.next_frame()).unwrap();
     engine.drain().unwrap();
     let mut rep = engine.finish_session(1).unwrap();
     assert_eq!(rep.hib.hibernates, 1);
@@ -193,7 +206,7 @@ fn resident_budget_evicts_lru_even_when_never_idle() {
     let frames = 3;
     for _ in 0..frames {
         for (s, src) in srcs.iter_mut().enumerate() {
-            engine.submit(s, src.next_frame());
+            engine.submit(s, src.next_frame()).unwrap();
         }
         engine.drain().unwrap();
         assert!(engine.session_ids().len() <= 2, "residency must respect the budget");
@@ -244,15 +257,15 @@ fn snapshot_surface_corruption_reinitializes_visibly() {
     let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
     let mut engine = Engine::new(&net, cfg).unwrap();
     engine.enable_hibernation(SessionStore::in_memory(), None);
-    engine.set_fault_plan(0, FaultPlan::with_ber(FaultSurface::Snapshot, 0.05, 9));
+    engine.set_fault_plan(0, FaultPlan::with_ber(FaultSurface::Snapshot, 0.05, 9)).unwrap();
     let mut src = source_for(&net, 0);
     for _ in 0..3 {
-        engine.submit(0, src.next_frame());
+        engine.submit(0, src.next_frame()).unwrap();
         engine.drain().unwrap();
     }
     engine.hibernate(0).unwrap();
     // transparent (corrupt) resume on the next frame
-    engine.submit(0, src.next_frame());
+    engine.submit(0, src.next_frame()).unwrap();
     engine.drain().unwrap();
     let rep = engine.finish_session(0).unwrap();
     assert_eq!(rep.faults.snapshot_corrupt, 1, "the refusal must be visible");
@@ -284,7 +297,7 @@ fn kill_and_reopen_resumes_from_disk() {
         let mut srcs: Vec<DvsSource> = (0..2).map(|s| source_for(&net, s)).collect();
         for _ in 0..4 {
             for (s, src) in srcs.iter_mut().enumerate() {
-                engine.submit(s, src.next_frame());
+                engine.submit(s, src.next_frame()).unwrap();
             }
             engine.drain().unwrap();
         }
@@ -311,7 +324,7 @@ fn kill_and_reopen_resumes_from_disk() {
         .collect();
     for _ in 0..4 {
         for (s, src) in srcs.iter_mut().enumerate() {
-            engine.submit(s, src.next_frame());
+            engine.submit(s, src.next_frame()).unwrap();
         }
         engine.drain().unwrap();
     }
@@ -347,7 +360,7 @@ fn truncated_store_files_never_panic() {
     let _ = fs::remove_file(&path);
     let mut store = SessionStore::open(&path).unwrap();
     for id in [3u64, 7, 11] {
-        let sess = Session::new(id as usize, 0.5, 8, 16);
+        let sess = Session::new(id as usize, 0.5, dvs_geometry(8, 16));
         store.insert(id, SessionSnapshot::capture(&sess).encode());
     }
     store.sync().unwrap();
@@ -384,7 +397,7 @@ fn store_bit_rot_is_always_detected() {
     // per-record CRC (a 1-bit error never aliases CRC-32), and flipping
     // the same bit back must restore a cleanly decodable record.
     let mut store = SessionStore::in_memory();
-    let mut sess = Session::new(1, 0.5, 8, 16);
+    let mut sess = Session::new(1, 0.5, dvs_geometry(8, 16));
     sess.metrics.record_frame(12.5, 3.0, 1.5e-6);
     sess.labels.push(4);
     let payload = SessionSnapshot::capture(&sess).encode();
@@ -409,7 +422,7 @@ fn forged_records_are_refused() {
     // refused by decode validation, not trusted because the checksum
     // happens to match the forged bytes.
     let mut store = SessionStore::in_memory();
-    let valid = SessionSnapshot::capture(&Session::new(1, 0.5, 8, 16)).encode();
+    let valid = SessionSnapshot::capture(&Session::new(1, 0.5, dvs_geometry(8, 16))).encode();
 
     // (a) filed under the wrong id
     store.insert(2, valid.clone());
@@ -439,7 +452,7 @@ fn hibernate_api_contracts() {
 
     // without the idle tier, both verbs are typed errors
     let mut engine = Engine::new(&net, cfg.clone()).unwrap();
-    engine.open_session(0);
+    engine.open_session(0).unwrap();
     assert!(engine.hibernate(0).is_err(), "hibernation is not enabled");
     assert!(engine.resume(0).is_err(), "hibernation is not enabled");
 
@@ -450,7 +463,7 @@ fn hibernate_api_contracts() {
 
     // pending frames block hibernation (their state is still in flight)
     let mut src = source_for(&net, 0);
-    engine.submit(0, src.next_frame());
+    engine.submit(0, src.next_frame()).unwrap();
     assert!(engine.hibernate(0).is_err(), "must drain first");
     engine.drain().unwrap();
     engine.hibernate(0).unwrap();
@@ -464,7 +477,7 @@ fn kraken_snapshot_size_vs_sram_anchor() {
     // snapshot costs a small constant factor over the raw window: 4
     // u64 plane words per step (768 B) plus the fixed SoC/metrics
     // sections, bounded well under 2 KiB.
-    let mut sess = Session::new(0, 0.5, 24, 96);
+    let mut sess = Session::new(0, 0.5, dvs_geometry(24, 96));
     let feat: Vec<i8> = (0..96).map(|c| [1i8, -1, 0][c % 3]).collect();
     for _ in 0..24 {
         sess.tcn.push(&feat);

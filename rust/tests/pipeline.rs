@@ -74,7 +74,7 @@ fn engine_reference_and_multi_stream_on_real_net() {
             let mut e = Engine::new(&net, ecfg).unwrap();
             let mut src = DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s));
             for _ in 0..3 {
-                e.submit(s, src.next_frame());
+                e.submit(s, src.next_frame()).unwrap();
                 e.drain().unwrap();
             }
             e.finish_session(s).unwrap()
@@ -86,7 +86,7 @@ fn engine_reference_and_multi_stream_on_real_net() {
         (0..2).map(|s| DvsSource::new(net.input_hw, 20 + s as u64, GestureClass(s))).collect();
     for _ in 0..3 {
         for (s, src) in srcs.iter_mut().enumerate() {
-            e.submit(s, src.next_frame());
+            e.submit(s, src.next_frame()).unwrap();
         }
         e.drain().unwrap();
     }

@@ -1,0 +1,344 @@
+//! Multi-workload serving (ISSUE 9): sessions of *different* networks —
+//! the recurrent DVS gesture net and the feed-forward cifar9 classifier
+//! — interleaved through one engine (and sharded across a fleet, with
+//! live migration) must close byte-identical to serving each stream on
+//! its own single-net engine; a shared hibernation store carries records
+//! of both nets and re-binds each by its snapshot fingerprint; a record
+//! bound to a net the registry does not hold is a typed refusal that
+//! leaves the record in the store; and a frame that disagrees with its
+//! session's binding is refused before anything moves.
+
+use std::fs;
+use std::sync::Arc;
+
+use tcn_cutie::coordinator::{
+    BindingError, DvsSource, Engine, EngineConfig, Fleet, FleetConfig, GestureClass, NetRegistry,
+    ServingReport, SessionStore, SyntheticSource,
+};
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::network::{cifar9_random, dvs_hybrid_random, Network};
+use tcn_cutie::tensor::PackedMap;
+
+fn dvs_net() -> Network {
+    dvs_hybrid_random(16, 5, 0.5)
+}
+
+fn cifar_net() -> Network {
+    cifar9_random(16, 7, 0.4)
+}
+
+/// Both headline workloads behind one shared registry:
+/// (registry, dvs fingerprint, cifar fingerprint).
+fn mixed_registry() -> (Arc<NetRegistry>, u64, u64) {
+    let mut reg = NetRegistry::single(dvs_net()).unwrap();
+    let fp_dvs = reg.default_fingerprint();
+    let fp_cif = reg.add(cifar_net()).unwrap();
+    (Arc::new(reg), fp_dvs, fp_cif)
+}
+
+/// A per-net deterministic camera: event frames for the recurrent net,
+/// dense ternary frames for the feed-forward one. The stream is a pure
+/// function of (net, session), so the same session replays identically
+/// on any engine.
+enum Src {
+    Dvs(DvsSource),
+    Syn(SyntheticSource),
+}
+
+impl Src {
+    fn next(&mut self) -> PackedMap {
+        match self {
+            Src::Dvs(s) => s.next_frame(),
+            Src::Syn(s) => s.next_frame(),
+        }
+    }
+}
+
+fn source_for(net: &Network, s: usize) -> Src {
+    if net.has_tcn() {
+        Src::Dvs(DvsSource::new(net.input_hw, 100 + s as u64, GestureClass(s % 12)))
+    } else {
+        let ch = net.layers.first().map_or(0, |l| l.in_ch);
+        Src::Syn(SyntheticSource::new(net.input_hw, ch, 100 + s as u64))
+    }
+}
+
+fn assert_identical(a: &ServingReport, b: &ServingReport, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits(), "{ctx}: soc energy");
+    assert_eq!(a.soc_avg_power_w.to_bits(), b.soc_avg_power_w.to_bits(), "{ctx}: soc power");
+    assert_eq!(
+        a.metrics.core_energy_j.to_bits(),
+        b.metrics.core_energy_j.to_bits(),
+        "{ctx}: core energy"
+    );
+    assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}: sim time");
+    assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}: frames");
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(
+            a.metrics.sim_latency_us.quantile(q).to_bits(),
+            b.metrics.sim_latency_us.quantile(q).to_bits(),
+            "{ctx}: sim latency q{q}"
+        );
+    }
+    assert_eq!(a.faults, b.faults, "{ctx}: fault summary");
+}
+
+/// The single-net oracle: session `sid` of `net` alone on its own
+/// engine, one drain per frame.
+fn serve_isolated(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    sid: usize,
+    frames: usize,
+) -> ServingReport {
+    let cfg = EngineConfig { mode, workers, ..Default::default() };
+    let mut engine = Engine::new(net, cfg).unwrap();
+    engine.open_session(sid).unwrap();
+    let mut src = source_for(net, sid);
+    for _ in 0..frames {
+        engine.submit(sid, src.next()).unwrap();
+        engine.drain().unwrap();
+    }
+    engine.finish_session(sid).unwrap()
+}
+
+#[test]
+fn interleaved_mixed_sessions_match_isolated() {
+    // The tentpole acceptance gate: DVS and cifar sessions interleaved
+    // frame by frame through ONE engine — the tail parks/restores each
+    // net's weight-bank residency at every image switch — must close
+    // byte-identical to serving each stream alone, in both sim modes,
+    // serial and pooled.
+    let (dvs, cif) = (dvs_net(), cifar_net());
+    let frames = 3;
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1, 2] {
+            let (reg, fp_dvs, fp_cif) = mixed_registry();
+            let cfg = EngineConfig { mode, workers, ..Default::default() };
+            let mut engine = Engine::with_registry(Arc::clone(&reg), cfg).unwrap();
+            let bind = [fp_dvs, fp_cif, fp_dvs, fp_cif];
+            for (sid, fp) in bind.iter().enumerate() {
+                engine.open_session_on(sid, *fp).unwrap();
+            }
+            let nets = [&dvs, &cif, &dvs, &cif];
+            let mut srcs: Vec<Src> =
+                nets.iter().enumerate().map(|(s, n)| source_for(n, s)).collect();
+            for _ in 0..frames {
+                for (sid, src) in srcs.iter_mut().enumerate() {
+                    engine.submit(sid, src.next()).unwrap();
+                }
+                engine.drain().unwrap();
+            }
+
+            // per-net aggregate rows: one per registered net that served
+            let agg = engine.aggregate_report();
+            assert_eq!(agg.nets.len(), 2, "one usage row per net");
+            for (fp, net) in [(fp_dvs, &dvs), (fp_cif, &cif)] {
+                let row = agg.nets.iter().find(|r| r.fingerprint == fp).unwrap();
+                assert_eq!(row.name, net.name);
+                assert_eq!((row.sessions, row.frames), (2, 2 * frames as u64));
+            }
+
+            for (sid, rep) in engine.finish_all() {
+                let solo = serve_isolated(nets[sid], mode, workers, sid, frames);
+                let ctx = format!("{mode:?} workers {workers} session {sid}");
+                assert_identical(&rep, &solo, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn fleet_mixed_workloads_with_migration_match_isolated() {
+    // K=2 fleet over the shared registry, sessions of both nets, every
+    // session live-migrating to the other engine mid-run: byte-identical
+    // to isolation (the migrated snapshot re-binds by fingerprint on the
+    // importing engine).
+    let (dvs, cif) = (dvs_net(), cifar_net());
+    let frames = 4;
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1, 2] {
+            let (reg, fp_dvs, fp_cif) = mixed_registry();
+            let fcfg = FleetConfig {
+                engines: 2,
+                engine: EngineConfig { mode, workers, ..Default::default() },
+                ..Default::default()
+            };
+            let mut fleet = Fleet::with_registry(Arc::clone(&reg), fcfg).unwrap();
+            let bind = [fp_dvs, fp_cif, fp_dvs, fp_cif];
+            for (sid, fp) in bind.iter().enumerate() {
+                fleet.open_session_on(sid, *fp).unwrap();
+            }
+            let nets = [&dvs, &cif, &dvs, &cif];
+            let mut srcs: Vec<Src> =
+                nets.iter().enumerate().map(|(s, n)| source_for(n, s)).collect();
+            for round in 0..frames {
+                for (sid, src) in srcs.iter_mut().enumerate() {
+                    fleet.submit(sid, src.next()).unwrap();
+                }
+                fleet.drain().unwrap();
+                if round == 1 {
+                    for sid in 0..4 {
+                        let from = fleet.route(sid).unwrap();
+                        fleet.migrate(sid, (from + 1) % 2).unwrap();
+                    }
+                }
+            }
+            assert_eq!(fleet.report().migrations, 4);
+
+            let agg = fleet.aggregate_report();
+            assert_eq!(agg.nets.len(), 2, "fleet aggregate carries per-net rows");
+            for fp in [fp_dvs, fp_cif] {
+                let row = agg.nets.iter().find(|r| r.fingerprint == fp).unwrap();
+                assert_eq!((row.sessions, row.frames), (2, 2 * frames as u64));
+            }
+
+            for (sid, rep) in fleet.finish_all() {
+                let solo = serve_isolated(nets[sid], mode, workers, sid, frames);
+                let ctx = format!("fleet {mode:?} workers {workers} session {sid}");
+                assert_identical(&rep, &solo, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn hibernated_sessions_share_one_store_across_nets() {
+    // One snapshot store holds records of BOTH nets; each resumes onto
+    // its own weights (re-bound by the fingerprint inside the record),
+    // and the detour through the idle tier perturbs no serving ledger.
+    let (dvs, cif) = (dvs_net(), cifar_net());
+    let nets = [&dvs, &cif];
+    let serve = |hibernate: bool| -> Vec<(usize, ServingReport)> {
+        let (reg, fp_dvs, fp_cif) = mixed_registry();
+        let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+        let mut engine = Engine::with_registry(reg, cfg).unwrap();
+        if hibernate {
+            engine.enable_hibernation(SessionStore::in_memory(), None);
+        }
+        engine.open_session_on(0, fp_dvs).unwrap();
+        engine.open_session_on(1, fp_cif).unwrap();
+        let mut srcs: Vec<Src> = nets.iter().enumerate().map(|(s, n)| source_for(n, s)).collect();
+        for round in 0..4 {
+            for (sid, src) in srcs.iter_mut().enumerate() {
+                engine.submit(sid, src.next()).unwrap();
+            }
+            engine.drain().unwrap();
+            if hibernate && round == 1 {
+                engine.hibernate(0).unwrap();
+                engine.hibernate(1).unwrap();
+                let store = engine.store().unwrap();
+                assert_eq!(store.len(), 2, "both nets' records share the store");
+            }
+        }
+        engine.finish_all()
+    };
+    let resident = serve(false);
+    let toured = serve(true);
+    for ((sid, rep), (_, oracle)) in toured.iter().zip(&resident) {
+        assert_identical(rep, oracle, &format!("idle-tier detour, session {sid}"));
+        assert_eq!((rep.hib.hibernates, rep.hib.resumes), (1, 1), "session {sid}");
+    }
+}
+
+#[test]
+fn wrong_fingerprint_resume_is_refused_and_record_survives() {
+    // A valid record bound to a net the registry does not hold must be a
+    // typed refusal that leaves the record in the store — never a silent
+    // resume onto the wrong weights — and a registry that does hold the
+    // net can still consume the same record bit-exactly afterwards.
+    let (dvs, cif) = (dvs_net(), cifar_net());
+    let path = std::env::temp_dir().join("tcn_cutie_workloads_shared.store");
+    let _ = fs::remove_file(&path);
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let solo = serve_isolated(&cif, SimMode::Fast, 1, 7, 4);
+
+    // Engine A holds both nets: serve a cifar session, hibernate it.
+    let (reg, _, fp_cif) = mixed_registry();
+    let mut src = source_for(&cif, 7);
+    {
+        let mut a = Engine::with_registry(reg, cfg.clone()).unwrap();
+        a.enable_hibernation(SessionStore::open(&path).unwrap(), None);
+        a.open_session_on(7, fp_cif).unwrap();
+        for _ in 0..2 {
+            a.submit(7, src.next()).unwrap();
+            a.drain().unwrap();
+        }
+        a.hibernate(7).unwrap();
+    }
+
+    // Engine B holds only the DVS net but opens the same store: the
+    // cifar record is refused with a typed error and NOT consumed.
+    {
+        let mut b = Engine::new(&dvs, cfg.clone()).unwrap();
+        b.enable_hibernation(SessionStore::open(&path).unwrap(), None);
+        let err = b.resume(7).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<BindingError>(),
+            Some(&BindingError::SnapshotNet { session: 7, fingerprint: fp_cif }),
+            "got {err}"
+        );
+        assert!(b.store().unwrap().contains(7), "the refused record stays in the store");
+        // The serve path refuses the same way, before any state moves.
+        let shape = (cif.input_hw, cif.input_hw, 3);
+        let err = b.submit(7, PackedMap::zeros(shape.0, shape.1, shape.2)).unwrap_err();
+        assert!(matches!(err, BindingError::SnapshotNet { session: 7, .. }), "got {err}");
+        assert_eq!(b.pending_frames(), 0);
+    }
+
+    // Engine C holds both nets again (fingerprints are content-derived,
+    // so a rebuilt registry re-binds the same record): resume and finish
+    // the stream, byte-identical to never hibernating or moving engines.
+    let (reg_c, _, fp_cif_c) = mixed_registry();
+    assert_eq!(fp_cif_c, fp_cif);
+    let mut c = Engine::with_registry(reg_c, cfg).unwrap();
+    c.enable_hibernation(SessionStore::open(&path).unwrap(), None);
+    assert!(c.resume(7).unwrap(), "the full registry consumes the record");
+    for _ in 0..2 {
+        c.submit(7, src.next()).unwrap();
+        c.drain().unwrap();
+    }
+    let rep = c.finish_session(7).unwrap();
+    assert_identical(&rep, &solo, "store handoff across engines");
+    let _ = fs::remove_file(&path);
+}
+
+#[test]
+fn frame_shape_mismatch_is_typed_and_enqueues_nothing() {
+    // A frame that disagrees with its session's bound net is refused at
+    // submit with a typed error — no RNG advanced, nothing enqueued —
+    // and a session can never be re-bound to a different net.
+    let (dvs, cif) = (dvs_net(), cifar_net());
+    let (reg, fp_dvs, fp_cif) = mixed_registry();
+    let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, ..Default::default() };
+    let mut engine = Engine::with_registry(reg, cfg).unwrap();
+    engine.open_session_on(0, fp_dvs).unwrap();
+    engine.open_session_on(1, fp_cif).unwrap();
+
+    let cif_ch = cif.layers.first().map_or(0, |l| l.in_ch);
+    let err = engine.submit(0, PackedMap::zeros(cif.input_hw, cif.input_hw, cif_ch)).unwrap_err();
+    assert_eq!(
+        err,
+        BindingError::FrameShape {
+            session: 0,
+            got: (cif.input_hw, cif.input_hw, cif_ch),
+            want: (dvs.input_hw, dvs.input_hw, 2),
+        }
+    );
+    let err = engine.submit(1, PackedMap::zeros(dvs.input_hw, dvs.input_hw, 2)).unwrap_err();
+    assert_eq!(
+        err,
+        BindingError::FrameShape {
+            session: 1,
+            got: (dvs.input_hw, dvs.input_hw, 2),
+            want: (cif.input_hw, cif.input_hw, cif_ch),
+        }
+    );
+    assert_eq!(engine.pending_frames(), 0, "refused frames are never enqueued");
+
+    let err = engine.open_session_on(0, fp_cif).unwrap_err();
+    assert_eq!(err, BindingError::Rebind { session: 0, bound: fp_dvs, requested: fp_cif });
+}
