@@ -6,9 +6,12 @@ Usage: check_bench_regression.py PREVIOUS.json CURRENT.json [--threshold 0.10]
 Benches are matched by name; a bench whose current median_s exceeds the
 previous median_s by more than the threshold fraction is flagged and the
 script exits non-zero. Benches present in only one ledger (renamed/new
-cases) are reported but never flagged. A missing or unparsable previous
-ledger is treated as "no baseline" and passes, so the first CI run after
-the ledger format lands stays green.
+cases) are reported but never flagged. Entries whose "backend" tag
+differs between the two ledgers (e.g. a scalar baseline vs an AVX2
+current run, or a pre-tag ledger vs a tagged one) are skipped with a
+printed reason — a kernel-backend switch is not a regression. A missing
+or unparsable previous ledger is treated as "no baseline" and passes, so
+the first CI run after the ledger format lands stays green.
 """
 
 import argparse
@@ -50,6 +53,13 @@ def main():
         if name not in cur:
             print(f"  DROPPED   {name}")
             dropped.append(name)
+            continue
+        old_backend = prev[name].get("backend")
+        new_backend = cur[name].get("backend")
+        if old_backend != new_backend:
+            print(f"  SKIPPED   {name}: backend changed "
+                  f"({old_backend or 'untagged'} -> {new_backend or 'untagged'}); "
+                  f"not comparable like-for-like")
             continue
         old = prev[name]["median_s"]
         new = cur[name]["median_s"]

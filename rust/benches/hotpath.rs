@@ -413,6 +413,126 @@ fn main() {
     );
     suite.push(&r_switch);
 
+    // --- SIMD backend A/B: scalar vs AVX2 packed kernels ---
+    // Pin the backend, run the same fused-column dot / ternarize /
+    // maxpool / DVS-front-end cases under each, and record both sets
+    // (entries carry the backend tag so the CI regression checker only
+    // compares like-for-like). Words and counters are bit-identical
+    // across backends — the kernel sweep tests prove it; this measures
+    // the wall-clock gap only.
+    {
+        use tcn_cutie::trit::simd::{self, SimdBackend};
+        use tcn_cutie::trit::{ternarize_packed, TritCol};
+
+        let mut srng = Rng::new(77);
+        let rows: Vec<Vec<i8>> =
+            (0..3).map(|_| (0..96).map(|_| srng.trit(0.4)).collect()).collect();
+        let packed_rows = [
+            PackedVec::pack(&rows[0]),
+            PackedVec::pack(&rows[1]),
+            PackedVec::pack(&rows[2]),
+        ];
+        let xcol = TritCol::pack_rows(&packed_rows, 96);
+        let wrow: Vec<i8> = (0..96).map(|_| srng.trit(0.4)).collect();
+        let wcol = TritCol::pack_rows(
+            &[PackedVec::pack(&wrow), packed_rows[0], packed_rows[2]],
+            96,
+        );
+        let nwords = TritCol::words(96);
+        let accs: Vec<i32> = (0..96).map(|i| (i % 7) - 3).collect();
+        let lo: Vec<i32> = vec![-1; 96];
+        let hi: Vec<i32> = vec![1; 96];
+        let run_cases = |tag: &str| -> Vec<BenchResult> {
+            let r_dot = bench(&format!("simd fused col dot 3x3x96 ({tag})"), 3, 30, || {
+                let mut acc = 0i64;
+                for _ in 0..10_000 {
+                    let (d, t) = black_box(&wcol).dot(black_box(&xcol), nwords);
+                    acc += d as i64 + t as i64;
+                }
+                acc
+            });
+            let r_tern = bench(&format!("simd ternarize 96ch ({tag})"), 3, 30, || {
+                let mut acc = 0u64;
+                for _ in 0..10_000 {
+                    let v = ternarize_packed(black_box(&accs), &lo, &hi);
+                    acc = acc.wrapping_add(v.pos[0] ^ v.mask[1]);
+                }
+                acc
+            });
+            let r_max = bench(&format!("simd maxpool word max ({tag})"), 3, 30, || {
+                let mut acc = 0u64;
+                for _ in 0..10_000 {
+                    let v = black_box(&pa).max(black_box(&pb));
+                    acc = acc.wrapping_add(v.pos[0] ^ v.mask[0]);
+                }
+                acc
+            });
+            let r_front = bench(&format!("simd DVS CNN 64x64 front-end ({tag})"), 2, 10, || {
+                let mut x = frame.clone();
+                for p in &preps {
+                    x = run_prepared(p, &x, &cfg, SimMode::Accurate).unwrap().output;
+                }
+                x
+            });
+            vec![r_dot, r_tern, r_max, r_front]
+        };
+        simd::set_backend(SimdBackend::Scalar).unwrap();
+        let scalar_runs = run_cases("scalar");
+        for r in &scalar_runs {
+            suite.push(r);
+        }
+        if simd::avx2_available() {
+            simd::set_backend(SimdBackend::Avx2).unwrap();
+            let avx_runs = run_cases("avx2");
+            for (r, base) in avx_runs.iter().zip(&scalar_runs) {
+                suite.push_speedup(r, base);
+            }
+            println!(
+                "  simd speedup avx2 vs scalar: dot {:.2}x, ternarize {:.2}x, max {:.2}x, front-end {:.2}x\n",
+                scalar_runs[0].median_s / avx_runs[0].median_s,
+                scalar_runs[1].median_s / avx_runs[1].median_s,
+                scalar_runs[2].median_s / avx_runs[2].median_s,
+                scalar_runs[3].median_s / avx_runs[3].median_s
+            );
+        } else {
+            println!("  (host lacks AVX2 — scalar SIMD entries only)\n");
+        }
+        simd::set_backend(SimdBackend::Auto).unwrap();
+    }
+
+    // --- cross-session lane batching: K same-net CNN front-ends ---
+    // The lane-batching ledger entry (EXPERIMENTS.md §Perf iteration
+    // 10): 8 same-geometry DVS frames through the shared-weight
+    // front-end, one serial run_cnn per frame vs one lane-batched
+    // invocation. Per-lane words and counters are bit-identical (the
+    // scheduler's lane test proves it); this measures the weight-reuse
+    // wall-clock win.
+    let mut lane_serial = Scheduler::new(cfg.clone(), SimMode::Fast);
+    lane_serial.preload_weights(&dnet);
+    let mut lane_batched = Scheduler::new(cfg.clone(), SimMode::Fast);
+    lane_batched.preload_weights(&dnet);
+    let lane_frames: Vec<PackedMap> = (0..8)
+        .map(|s| DvsSource::new(64, 71 + s as u64, GestureClass(s % 12)).next_frame())
+        .collect();
+    let lane_refs: Vec<&PackedMap> = lane_frames.iter().collect();
+    let r_lane_serial = bench("lanes: 8-session front-end serial (baseline)", 2, 10, || {
+        let mut acc = 0u64;
+        for f in &lane_frames {
+            let (feat, _) = lane_serial.run_cnn(&dnet, f).unwrap();
+            acc = acc.wrapping_add(feat.pixels[0].mask[0]);
+        }
+        acc
+    });
+    let r_lane_batched = bench("lanes: 8-session front-end lane-batched", 2, 10, || {
+        lane_batched.run_cnn_lanes(&dnet, &lane_refs).unwrap()
+    });
+    println!(
+        "  lane batching speedup (8 lanes): {:.2}x\n",
+        r_lane_serial.median_s / r_lane_batched.median_s
+    );
+    suite.push(&r_lane_serial);
+    suite.push_speedup(&r_lane_batched, &r_lane_serial);
+
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
     match suite.write_json(&path) {
         Ok(_) => println!("wrote perf ledger: {path}"),

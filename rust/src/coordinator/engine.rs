@@ -70,13 +70,25 @@ pub struct EngineConfig {
     /// CNN front-end pool width: 1 → serial (fully inline), 0 → one
     /// worker per available core.
     pub workers: usize,
+    /// Cross-session lane-batching width for the drain's CNN phase:
+    /// pending frames bound to the same net fingerprint and input
+    /// geometry batch into SoA lane groups of up to this many frames
+    /// (clamped to the 8-lane ceiling) and run the front-end in one
+    /// kernel invocation. ≤ 1 disables batching (every frame serves
+    /// serially). Lane-batched output is byte-identical to serial
+    /// serving — this knob trades wall-clock only.
+    pub lanes: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { voltage: 0.5, freq_hz: None, mode: SimMode::Accurate, workers: 1 }
+        EngineConfig { voltage: 0.5, freq_hz: None, mode: SimMode::Accurate, workers: 1, lanes: 8 }
     }
 }
+
+/// SoA lane ceiling for the batched CNN front-end (the paper-facing
+/// "2–8 sessions per lane group" rule).
+const MAX_LANES: usize = 8;
 
 pub struct Engine {
     /// The fingerprint → (net, image) map every frame routes through —
@@ -719,17 +731,23 @@ impl Engine {
         // other resident session ages toward idle eviction.
         let active: BTreeSet<usize> = pending.iter().map(|pf| pf.session).collect();
 
-        // Phase 1: CNN front-end. Each scheduler checks the frame's
-        // bound image in (`swap_image` — a no-op while consecutive
-        // frames share a net) before running it. A frame whose CNN
-        // errors leaves its slot None (noted as a failure in phase 2).
+        // Phase 1: CNN front-end. Pending frames are first grouped into
+        // lane units — chunks of ≤ cfg.lanes frames sharing a net
+        // fingerprint and input geometry (the LaneBlock grouping rule) —
+        // so the batched kernel serves 2–8 sessions per invocation;
+        // singletons, mixed-net leftovers and `--lanes 1` take the
+        // serial per-frame path. Each scheduler checks the unit's bound
+        // image in (`swap_image` — a no-op while consecutive units share
+        // a net) before running it. A frame whose CNN errors leaves its
+        // slot None (noted as a failure in phase 2).
+        let units = lane_units(&pending, self.cfg.lanes);
         let mut cnn: Vec<Option<(PackedMap, RunStats)>> = vec![None; pending.len()];
         let registry = &self.registry;
         if self.workers.is_empty() {
-            for (i, pf) in pending.iter().enumerate() {
-                let Ok(entry) = registry.entry(pf.fingerprint) else { continue };
-                self.tail.swap_image(Arc::clone(entry.image()));
-                cnn[i] = self.tail.run_cnn(entry.net(), &pf.frame).ok();
+            for unit in &units {
+                for (i, r) in run_unit(registry, &mut self.tail, &pending, unit) {
+                    cnn[i] = r.ok();
+                }
             }
         } else {
             let nw = self.workers.len();
@@ -737,20 +755,13 @@ impl Engine {
                 let mut handles = Vec::new();
                 for (wi, sched) in self.workers.iter_mut().enumerate() {
                     let pending = &pending;
+                    let units = &units;
                     handles.push(scope.spawn(move || {
                         let mut out = Vec::new();
-                        let mut i = wi;
-                        while i < pending.len() {
-                            let pf = &pending[i];
-                            let r = match registry.entry(pf.fingerprint) {
-                                Ok(entry) => {
-                                    sched.swap_image(Arc::clone(entry.image()));
-                                    sched.run_cnn(entry.net(), &pf.frame)
-                                }
-                                Err(e) => Err(e.into()),
-                            };
-                            out.push((i, r));
-                            i += nw;
+                        let mut u = wi;
+                        while u < units.len() {
+                            out.extend(run_unit(registry, sched, pending, &units[u]));
+                            u += nw;
                         }
                         out
                     }));
@@ -770,17 +781,15 @@ impl Engine {
             for (i, r) in results.into_iter().flatten() {
                 cnn[i] = r.ok();
             }
-            // Recompute a poisoned worker's shard serially on the tail —
+            // Recompute a poisoned worker's units serially on the tail —
             // the frames, not the worker, are what sessions are owed.
             for wi in poisoned {
-                let mut i = wi;
-                while i < pending.len() {
-                    let pf = &pending[i];
-                    if let Ok(entry) = registry.entry(pf.fingerprint) {
-                        self.tail.swap_image(Arc::clone(entry.image()));
-                        cnn[i] = self.tail.run_cnn(entry.net(), &pf.frame).ok();
+                let mut u = wi;
+                while u < units.len() {
+                    for (i, r) in run_unit(registry, &mut self.tail, &pending, &units[u]) {
+                        cnn[i] = r.ok();
                     }
-                    i += nw;
+                    u += nw;
                 }
             }
         }
@@ -992,6 +1001,66 @@ impl Engine {
         }
         acc.finish()
     }
+}
+
+/// Group a drain's pending frames into lane units for the batched CNN
+/// front-end — the engine's `LaneBlock` construction: frames sharing a
+/// (net fingerprint, input geometry) key batch together in submission
+/// order and split into chunks of at most `lanes` frames (clamped to
+/// the [`MAX_LANES`] SoA ceiling), so the last chunk of a group may be
+/// ragged and frames of other nets are never pulled into a block.
+/// `lanes <= 1` disables batching — every frame is its own unit.
+/// Grouping only reorders the *stateless* phase-1 front-end; phase 2
+/// consumes result slots in submission order, so serving output is
+/// byte-identical whichever way the units are cut.
+fn lane_units(pending: &[PendingFrame], lanes: usize) -> Vec<Vec<usize>> {
+    let cap = lanes.min(MAX_LANES);
+    if cap <= 1 {
+        return (0..pending.len()).map(|i| vec![i]).collect();
+    }
+    let mut groups: Vec<((u64, usize, usize, usize), Vec<usize>)> = Vec::new();
+    for (i, pf) in pending.iter().enumerate() {
+        let key = (pf.fingerprint, pf.frame.h, pf.frame.w, pf.frame.c);
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, idxs)) => idxs.push(i),
+            None => groups.push((key, vec![i])),
+        }
+    }
+    let mut units = Vec::new();
+    for (_, idxs) in groups {
+        for chunk in idxs.chunks(cap) {
+            units.push(chunk.to_vec());
+        }
+    }
+    units
+}
+
+/// Serve one lane unit (same-net, same-geometry pending frames) on one
+/// scheduler, returning each frame's CNN result keyed by its pending
+/// index. Multi-lane units run the batched front-end once
+/// ([`Scheduler::run_cnn_lanes`]); a unit whose batched run errors is
+/// re-served frame by frame, so *which* frames fail matches serial
+/// serving exactly. A free function so the pool workers and the tail
+/// share it without borrowing the engine whole.
+fn run_unit(
+    registry: &NetRegistry,
+    sched: &mut Scheduler,
+    pending: &[PendingFrame],
+    unit: &[usize],
+) -> Vec<(usize, Result<(PackedMap, RunStats)>)> {
+    let entry = match registry.entry(pending[unit[0]].fingerprint) {
+        Ok(e) => e,
+        // every lane of a unit shares the fingerprint, so all share the error
+        Err(e) => return unit.iter().map(|&i| (i, Err(e.into()))).collect(),
+    };
+    sched.swap_image(Arc::clone(entry.image()));
+    if unit.len() > 1 {
+        let frames: Vec<&PackedMap> = unit.iter().map(|&i| &pending[i].frame).collect();
+        if let Ok(results) = sched.run_cnn_lanes(entry.net(), &frames) {
+            return unit.iter().copied().zip(results.into_iter().map(Ok)).collect();
+        }
+    }
+    unit.iter().map(|&i| (i, sched.run_cnn(entry.net(), &pending[i].frame))).collect()
 }
 
 /// One frame's exposure of an armed state-surface plan (TCN ring or

@@ -117,6 +117,10 @@ pub struct ServingReport {
     /// reports folded through [`ReportAccumulator::add_for_net`] carry
     /// one row per net that served at least one session.
     pub nets: Vec<NetUsage>,
+    /// The packed-kernel backend that was active when the report was
+    /// assembled (`"scalar"` or `"avx2"`) — attribution only; both
+    /// backends produce bit-identical ledgers.
+    pub backend: &'static str,
 }
 
 impl ServingReport {
@@ -140,6 +144,7 @@ impl ServingReport {
             faults,
             hib,
             nets: Vec::new(),
+            backend: crate::trit::simd::active_name(),
         }
     }
 }
@@ -242,6 +247,7 @@ impl ReportAccumulator {
             faults: self.faults,
             hib: self.hib,
             nets: self.nets.into_values().collect(),
+            backend: crate::trit::simd::active_name(),
         }
     }
 }

@@ -105,6 +105,7 @@ impl Pipeline {
                 freq_hz: self.cfg.freq_hz,
                 mode: self.cfg.mode,
                 workers,
+                ..EngineConfig::default()
             },
             Arc::clone(&self.image),
         )

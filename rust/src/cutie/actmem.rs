@@ -37,17 +37,23 @@ impl ActivationMemory {
         h <= self.max_hw && w <= self.max_hw && c <= self.channels
     }
 
-    /// DMA or front-end write of a whole input map into the front buffer.
-    pub fn load_input(&mut self, map: PackedMap) -> Result<()> {
+    /// Typed form of [`fits`](Self::fits) — shared by the loads below
+    /// and by the lane-batched CNN path, whose per-lane maps ping-pong
+    /// outside these buffers (the K lanes time-multiplex one physical
+    /// SRAM) but must still respect the modeled geometry.
+    pub fn ensure_fits(&self, h: usize, w: usize, c: usize) -> Result<()> {
         ensure!(
-            self.fits(map.h, map.w, map.c),
-            "feature map {}×{}×{} exceeds {}² × {}",
-            map.h,
-            map.w,
-            map.c,
+            self.fits(h, w, c),
+            "feature map {h}×{w}×{c} exceeds {}² × {}",
             self.max_hw,
             self.channels
         );
+        Ok(())
+    }
+
+    /// DMA or front-end write of a whole input map into the front buffer.
+    pub fn load_input(&mut self, map: PackedMap) -> Result<()> {
+        self.ensure_fits(map.h, map.w, map.c)?;
         self.writes += (map.h * map.w) as u64;
         self.buf[self.front] = Some(map);
         Ok(())

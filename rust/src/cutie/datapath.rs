@@ -23,7 +23,7 @@
 use anyhow::{ensure, Result};
 
 use super::config::CutieConfig;
-use super::linebuffer::{LineBuffer, PackedLineBuffer};
+use super::linebuffer::{LaneBuffers, LineBuffer, PackedLineBuffer};
 use super::ocu::{build_ocus, Ocu};
 use super::stats::LayerStats;
 use super::SimMode;
@@ -424,6 +424,145 @@ pub fn run_prepared(
     });
 
     Ok(finalize_conv(prep, cfg, out, toggle_counts.iter().sum(), stats))
+}
+
+/// Run one prepared layer over K co-resident session lanes in a single
+/// invocation — the compute core of the engine's cross-session lane
+/// batching (SoA `LaneBlock` drain path). Every lane shares the layer's
+/// weight columns: each (y, cx) step packs all K lanes' input columns
+/// once (the structure-of-arrays transpose), then streams each weight
+/// column over the K lane columns before loading the next — the software
+/// analogue of weight-stationary reuse across the paper's OCU array.
+/// Lanes keep independent accumulator rows and toggle counters and the
+/// per-lane zero-column skip is applied lane-by-lane, so every lane's
+/// output words and [`LayerStats`] are **bit-identical** to a serial
+/// [`run_prepared`] call on that lane alone (integer accumulation only —
+/// no ordering-sensitive arithmetic anywhere in the loop).
+pub fn run_prepared_lanes(
+    prep: &PreparedLayer,
+    inputs: &[&PackedMap],
+    cfg: &CutieConfig,
+    mode: SimMode,
+) -> Result<Vec<LayerResult>> {
+    let Some(first) = inputs.first() else {
+        return Ok(Vec::new());
+    };
+    let (h, w, cin) = (first.h, first.w, first.c);
+    for input in inputs.iter().skip(1) {
+        ensure!(
+            input.h == h && input.w == w && input.c == cin,
+            "{}: lane geometry mismatch ({h}×{w}×{cin} vs {}×{}×{})",
+            prep.name,
+            input.h,
+            input.w,
+            input.c
+        );
+    }
+    if prep.k != 3 || inputs.len() == 1 {
+        // singleton groups and non-3×3 configs gain nothing from lane
+        // interleaving; serve them through the serial loop
+        return inputs.iter().map(|m| run_prepared(prep, m, cfg, mode)).collect();
+    }
+    check_geometry(prep, h, w, cin, cfg)?;
+    let k = prep.k;
+    let active = prep.out_ch;
+    let col_words = prep.col_words;
+    let wcols = &prep.wcols;
+    let lo_flat = &prep.lo_flat;
+    let hi_flat = &prep.hi_flat;
+    let lanes = inputs.len();
+    let stats: Vec<LayerStats> =
+        inputs.iter().map(|_| base_stats(prep, cfg, h, w, cin)).collect();
+    let _ = mode; // both modes share the loop: toggle counting is free now
+
+    let mut outs: Vec<PackedMap> = (0..lanes).map(|_| PackedMap::zeros(h, w, active)).collect();
+    let threads = shard_threads(cfg, h, w, active, cin);
+    let rows_per = h.div_ceil(threads);
+    // per-thread bundles of one mutable output row-chunk per lane (the
+    // row sharding from `run_prepared`, replicated across lanes)
+    let mut bundles: Vec<Vec<&mut [PackedVec]>> = Vec::new();
+    for out in outs.iter_mut() {
+        for (t, chunk) in out.pixels.chunks_mut(rows_per * w).enumerate() {
+            if t == bundles.len() {
+                bundles.push(Vec::with_capacity(lanes));
+            }
+            bundles[t].push(chunk);
+        }
+    }
+    let toggle_counts: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (t, mut lane_chunks) in bundles.drain(..).enumerate() {
+            let handle = scope.spawn(move || {
+                let y0 = t * rows_per;
+                let y1 = (y0 + rows_per).min(h);
+                let mut lbs = LaneBuffers::new(k, inputs);
+                // SoA state: lane l's accumulator row starts at
+                // l·w·active, its packed input column sits in xcols[l]
+                let mut acc = vec![0i32; lanes * w * active];
+                let mut xcols = vec![TritCol::ZERO; lanes];
+                let mut lane_zero = vec![false; lanes];
+                let mut toggles = vec![0u64; lanes];
+                for y in y0..y1 {
+                    lbs.advance_to(y);
+                    acc.fill(0);
+                    for cx in 0..w {
+                        // transpose: pack every lane's input column once;
+                        // the weight-column loads below are then
+                        // amortized over all K lanes
+                        if lbs.pack_cols(y, cx, cin, col_words, &mut xcols, &mut lane_zero) {
+                            continue;
+                        }
+                        for kc in 0..3 {
+                            let ox = cx as isize + 1 - kc as isize;
+                            if ox < 0 || ox >= w as isize {
+                                continue;
+                            }
+                            let obase = ox as usize * active;
+                            let wrow = &wcols[kc * active..(kc + 1) * active];
+                            for (co, wv) in wrow.iter().enumerate() {
+                                for l in 0..lanes {
+                                    // per-lane zero skip — bit-exact
+                                    // with the serial loop's skip
+                                    if lane_zero[l] {
+                                        continue;
+                                    }
+                                    let (d, tog) = wv.dot(&xcols[l], col_words);
+                                    acc[l * w * active + obase + co] += d;
+                                    toggles[l] += tog as u64;
+                                }
+                            }
+                        }
+                    }
+                    // de-interleave: each lane's accumulator row
+                    // ternarizes into that lane's own output chunk
+                    let rbase = (y - y0) * w;
+                    for (l, chunk) in lane_chunks.iter_mut().enumerate() {
+                        let lrow = &acc[l * w * active..(l + 1) * w * active];
+                        for x in 0..w {
+                            chunk[rbase + x] = ternarize_packed(
+                                &lrow[x * active..(x + 1) * active],
+                                lo_flat,
+                                hi_flat,
+                            );
+                        }
+                    }
+                }
+                toggles
+            });
+            handles.push(handle);
+        }
+        handles.into_iter().map(|h| h.join().expect("lane datapath shard")).collect()
+    });
+
+    Ok(outs
+        .into_iter()
+        .zip(stats)
+        .enumerate()
+        .map(|(l, (out, stat))| {
+            let tog: u64 = toggle_counts.iter().map(|per_lane| per_lane[l]).sum();
+            finalize_conv(prep, cfg, out, tog, stat)
+        })
+        .collect())
 }
 
 /// The retained **i8 window-stationary** baseline: i8 map in, i8 map

@@ -24,7 +24,7 @@
 use std::collections::VecDeque;
 
 use crate::tensor::{PackedMap, TritTensor};
-use crate::trit::PackedVec;
+use crate::trit::{PackedVec, TritCol};
 
 pub struct LineBuffer {
     k: usize,
@@ -183,6 +183,59 @@ impl<'a> PackedLineBuffer<'a> {
     /// Same fill-cost model as [`LineBuffer::fill_cycles`].
     pub fn fill_cycles(&self, input_w: usize) -> u64 {
         ((self.k - 1) * input_w + (self.k - 1)) as u64
+    }
+}
+
+/// Per-lane fan-out of [`PackedLineBuffer`] for the cross-session lane
+/// batching path: one zero-copy buffer per lane over that lane's input
+/// map, all advanced in lock-step. Each lane keeps its own `pushes`
+/// counter, so per-lane shift-register accounting stays bit-identical
+/// to a serial run over that lane alone.
+pub struct LaneBuffers<'a> {
+    lanes: Vec<PackedLineBuffer<'a>>,
+}
+
+impl<'a> LaneBuffers<'a> {
+    /// One buffer per lane map. All maps must share (h, w, c) — the
+    /// lane-grouping rule the engine enforces before batching.
+    pub fn new(k: usize, maps: &[&'a PackedMap]) -> Self {
+        LaneBuffers { lanes: maps.iter().map(|m| PackedLineBuffer::new(k, m)).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Advance every lane's residency window to output row `y`.
+    pub fn advance_to(&mut self, y: usize) {
+        for lb in &mut self.lanes {
+            lb.advance_to(y);
+        }
+    }
+
+    /// The SoA transpose step: pack every lane's 3-row input column at
+    /// (y, x) into a dense [`TritCol`] (`xcols[l]`, `zero[l]` describe
+    /// lane l). Returns true when every lane's column is zero, i.e. the
+    /// whole (y, x) step can be skipped for all lanes at once.
+    pub fn pack_cols(
+        &self,
+        y: usize,
+        x: usize,
+        cin: usize,
+        col_words: usize,
+        xcols: &mut [TritCol],
+        zero: &mut [bool],
+    ) -> bool {
+        let mut col = [PackedVec::ZERO; 3];
+        let mut all_zero = true;
+        for (l, lb) in self.lanes.iter().enumerate() {
+            debug_assert_eq!(lb.k, 3, "lane batching is 3×3-only");
+            lb.col(y, x, &mut col);
+            xcols[l] = TritCol::pack_rows(&col, cin);
+            zero[l] = xcols[l].is_zero(col_words);
+            all_zero &= zero[l];
+        }
+        all_zero
     }
 }
 

@@ -22,7 +22,7 @@ use anyhow::{ensure, Result};
 
 use super::actmem::ActivationMemory;
 use super::datapath::{
-    run_dense_packed, run_dense_prepared, run_prepared, PreparedLayer,
+    run_dense_packed, run_dense_prepared, run_prepared, run_prepared_lanes, PreparedLayer,
 };
 use super::prepared::PreparedNet;
 use super::stats::{LayerStats, RunStats};
@@ -275,6 +275,83 @@ impl Scheduler {
             None => self.actmem.front().expect("at least the input frame").clone(),
         };
         Ok((feat, run))
+    }
+
+    /// Run the CNN front-end over K co-resident session frames in one
+    /// lane-batched invocation — the scheduler half of the engine's
+    /// `LaneBlock` drain path. All frames must be bound to the same net
+    /// and share geometry (the engine's grouping rule); each lane's
+    /// returned feature map and [`RunStats`] are **bit-identical** to a
+    /// serial [`Self::run_cnn`] call on that frame alone. The K per-lane
+    /// activation maps ping-pong outside the modeled SRAM buffers (the
+    /// lanes time-multiplex one physical activation memory), but every
+    /// map is still validated against the modeled geometry
+    /// ([`ActivationMemory::ensure_fits`]), and weight cycles are
+    /// charged in serial frame-major order so the bank-residency model
+    /// evolves exactly as if the frames had been served one by one.
+    pub fn run_cnn_lanes(
+        &mut self,
+        net: &Network,
+        frames: &[&PackedMap],
+    ) -> Result<Vec<(PackedMap, RunStats)>> {
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
+        let image = self.image_for(net);
+        let lanes = frames.len();
+        let mut runs: Vec<RunStats> = frames
+            .iter()
+            .map(|f| {
+                let mut run = RunStats::default();
+                let (dc, db) = self.dma_in(f.numel());
+                run.dma_cycles = dc;
+                run.dma_bytes = db;
+                run
+            })
+            .collect();
+        for f in frames {
+            self.actmem.ensure_fits(f.h, f.w, f.c)?;
+        }
+
+        // Per-lane ping-pong state: `carried` for globally pooled maps
+        // (which bypass the SRAM in the serial path too), `resident`
+        // standing in for the lane's turn in the ping-pong buffer.
+        let mut carried: Vec<Option<PackedMap>> = vec![None; lanes];
+        let mut resident: Vec<PackedMap> = frames.iter().map(|f| (*f).clone()).collect();
+        let conv_layers: Vec<&Layer> =
+            net.layers.iter().filter(|l| l.kind == LayerKind::Conv2d).collect();
+        for layer in &conv_layers {
+            let prep = image.conv_layer(&layer.name)?;
+            let inputs: Vec<&PackedMap> =
+                (0..lanes).map(|l| carried[l].as_ref().unwrap_or(&resident[l])).collect();
+            let results = run_prepared_lanes(prep, &inputs, &self.cfg, self.mode)?;
+            for (l, result) in results.into_iter().enumerate() {
+                runs[l].layers.push(result.stats);
+                if layer.global_pool {
+                    carried[l] = Some(result.output);
+                } else {
+                    let out = result.output;
+                    self.actmem.ensure_fits(out.h, out.w, out.c)?;
+                    resident[l] = out;
+                    carried[l] = None;
+                }
+            }
+        }
+        // Weight cycles in serial frame-major order (frame 0's layers,
+        // then frame 1's, ...) so the bank model's access sequence — and
+        // with it every per-lane Switch/Load split — matches K serial
+        // `run_cnn` calls exactly, even from a cold bank state.
+        for run in runs.iter_mut() {
+            for (layer, stats) in conv_layers.iter().copied().zip(run.layers.iter_mut()) {
+                self.charge_weights(layer, stats);
+            }
+        }
+        Ok(carried
+            .into_iter()
+            .zip(resident)
+            .zip(runs)
+            .map(|((c, r), run)| (c.unwrap_or(r), run))
+            .collect())
     }
 
     /// Push a CNN feature vector (a 1×1 packed map) into the TCN memory
@@ -906,6 +983,40 @@ mod tests {
             let (lb, rb) = shared.run_full(&cifar, &fc).unwrap();
             assert_eq!(la, lb, "round {round}: cifar labels");
             assert_eq!(ra, rb, "round {round}: cifar counters");
+        }
+    }
+
+    #[test]
+    fn lane_batched_cnn_matches_serial() {
+        // The scheduler-level contract behind the engine's LaneBlock
+        // drain: K lanes through one run_cnn_lanes call produce the same
+        // feature words and counters as K serial run_cnn calls — from a
+        // preloaded bank state (the engine's steady state) AND from a
+        // cold one (frame-major weight charging).
+        let net = dvs_hybrid_random(16, 108, 0.5);
+        let mut rng = Rng::new(109);
+        for preload in [true, false] {
+            for k in [1usize, 2, 3, 5, 8] {
+                let frames: Vec<PackedMap> = (0..k)
+                    .map(|_| {
+                        PackedMap::from_trit(&TritTensor::random(&[64, 64, 2], &mut rng, 0.85))
+                    })
+                    .collect();
+                let mut serial = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+                let mut lanes = Scheduler::new(CutieConfig::kraken(), SimMode::Accurate);
+                if preload {
+                    serial.preload_weights(&net);
+                    lanes.preload_weights(&net);
+                }
+                let refs: Vec<&PackedMap> = frames.iter().collect();
+                let got = lanes.run_cnn_lanes(&net, &refs).unwrap();
+                assert_eq!(got.len(), k);
+                for (f, (feat, run)) in frames.iter().zip(got) {
+                    let (wf, wr) = serial.run_cnn(&net, f).unwrap();
+                    assert_eq!(feat, wf, "K {k} preload {preload}: feature map");
+                    assert_eq!(run, wr, "K {k} preload {preload}: counters");
+                }
+            }
         }
     }
 

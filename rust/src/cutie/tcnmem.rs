@@ -20,7 +20,7 @@
 use std::collections::VecDeque;
 
 use crate::tensor::{PackedMap, TritTensor};
-use crate::trit::PackedVec;
+use crate::trit::{simd, PackedVec};
 
 pub struct TcnMemory {
     pub depth: usize,
@@ -110,9 +110,12 @@ impl TcnMemory {
         self.reads += self.steps.len() as u64;
         let mut out = PackedMap::zeros(self.depth, 1, feat_ch);
         let pad = self.depth - self.steps.len();
-        for (i, s) in self.steps.iter().enumerate() {
-            out.pixels[pad + i] = s.masked(feat_ch);
-        }
+        // resident step i lands at pixel pad + i: one contiguous run,
+        // masked-copied through the SIMD backend (ring words carry
+        // hardware-width plane bits; the read port clamps to feat_ch)
+        let (a, b) = self.steps.as_slices();
+        simd::copy_words_masked(&mut out.pixels[pad..pad + a.len()], a, feat_ch);
+        simd::copy_words_masked(&mut out.pixels[pad + a.len()..self.depth], b, feat_ch);
         out
     }
 
@@ -128,11 +131,13 @@ impl TcnMemory {
         let rows = self.depth.div_ceil(d);
         let mut z = PackedMap::zeros(rows + 1, d, feat_ch);
         let pad = self.depth - self.steps.len();
-        for (i, s) in self.steps.iter().enumerate() {
-            let n = pad + i;
-            let (q, m) = (n / d, n % d);
-            z.pixels[(q + 1) * d + m] = s.masked(feat_ch);
-        }
+        // step n = pad + i lands at (q+1, m) = pixel (n/d + 1)·d + n%d
+        // = n + d: the whole wrap is ONE contiguous run starting after
+        // the causal row, masked-copied through the SIMD backend
+        let (a, b) = self.steps.as_slices();
+        let base = d + pad;
+        simd::copy_words_masked(&mut z.pixels[base..base + a.len()], a, feat_ch);
+        simd::copy_words_masked(&mut z.pixels[base + a.len()..d + self.depth], b, feat_ch);
         z
     }
 

@@ -37,8 +37,10 @@ fn main() {
 
 const USAGE: &str = "usage: tcn-cutie <info|run|serve|pack-weights|golden|report> [options]
   run    --net artifacts/cifar9_96.json --voltage 0.5 [--freq MHZ] [--seed N]
+         [--simd auto|scalar|avx2]
   serve  --frames 32 --voltage 0.5 [--threaded|--batch N] [--gesture 0..11]
          [--streams K] [--replay FILE|--record FILE] [--net synthetic]
+         [--simd auto|scalar|avx2] [--lanes K]
          [--fault-surface actmem|tcnmem|weightmem|dma|snapshot]
          [--fault-ber P | --fault-voltage V] [--fault-seed N]
          [--hibernate-after N] [--session-store FILE]
@@ -66,6 +68,16 @@ Recurrent (TCN) workloads stream gesture frames; feed-forward ones get
 dense synthetic frames matching their input geometry. The report gains
 per-net rows when more than one net actually serves. --replay and
 --record stay single-net.
+
+--simd picks the packed-kernel backend: auto (the default) dispatches
+to the AVX2 kernels when the host CPU has them and to the portable
+scalar kernels otherwise; scalar forces the portable path (the
+TCN_SIMD env var is the lower-precedence equivalent). Both backends
+produce bit-identical words, counters and reports — the choice trades
+wall-clock only, and every report/bench entry records which backend
+ran. --lanes K batches up to K same-net, same-geometry sessions
+through one CNN front-end invocation per drain (default 8, clamped to
+8; 1 disables); reports stay byte-identical to serial serving.
 
 --fault-ber P (explicit bit-error rate) or --fault-voltage V (rate the
 SRAM model predicts at supply V, zero at/above 0.5 V) arms a
@@ -153,7 +165,17 @@ fn load_net_and_image(manifest: &str) -> Result<(Network, Option<Arc<PreparedNet
     Ok((net, image))
 }
 
+/// Resolve `--simd auto|scalar|avx2` and pin the packed-kernel backend
+/// before anything touches a kernel. Returns the resolved backend name
+/// (what actually dispatches, never "auto").
+fn apply_simd(args: &Args) -> Result<&'static str> {
+    use tcn_cutie::trit::simd;
+    let req = args.opt_parsed::<simd::SimdBackend>("simd")?.unwrap_or(simd::SimdBackend::Auto);
+    simd::set_backend(req).map_err(|e| anyhow!(e))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
+    apply_simd(args)?;
     let manifest = args.opt_or("net", &default_net_path("cifar9_96.json")?);
     let v = args.opt_f64("voltage", 0.5)?;
     let freq = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
@@ -328,6 +350,7 @@ fn print_report(tag: &str, r: &mut ServingReport) {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let backend = apply_simd(args)?;
     let voltage = args.opt_f64("voltage", 0.5)?;
     let freq_hz = args.opt_parsed::<f64>("freq")?.map(|mhz| mhz * 1e6);
     if freq_hz.is_none() {
@@ -381,6 +404,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(k) = migrate_every {
         ensure!(k >= 1, "--migrate-every must be at least 1");
     }
+    // --lanes K: cross-session lane batching width for the CNN
+    // front-end (clamped to the engine's 8-lane ceiling; 1 disables).
+    let lanes = args.opt_usize("lanes", EngineConfig::default().lanes)?;
+    ensure!(lanes >= 1, "--lanes must be at least 1");
     let fleet_mode = engines > 1 || migrate_every.is_some();
     if threaded && batch.is_some() {
         bail!("--threaded and --batch are mutually exclusive");
@@ -459,7 +486,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         } else {
             ("inline".to_string(), pipe.run_inline()?)
         };
-        print_report(&format!("serving ({label})"), &mut r);
+        print_report(&format!("serving ({label}, simd {backend})"), &mut r);
         return Ok(());
     }
 
@@ -535,7 +562,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             policy: shard_policy,
             order: drain_order,
             queue_cap,
-            engine: EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) },
+            engine: EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1), lanes },
         };
         let mut fleet = Fleet::with_registry(Arc::clone(&registry), fcfg)?;
         if hibernate {
@@ -584,7 +611,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let rep = fleet.report();
         println!(
             "serving (fleet: {engines} engines, {shard_policy} routing, {drain_order} drain, \
-             {streams} streams, {served} frames, {} migrations)",
+             {streams} streams, {served} frames, {} migrations, simd {backend})",
             rep.migrations
         );
         for l in &rep.engines {
@@ -613,7 +640,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1) };
+    let ecfg = EngineConfig { voltage, freq_hz, mode, workers: batch.unwrap_or(1), lanes };
     let pool = ecfg.workers;
     let mut engine = Engine::with_registry(Arc::clone(&registry), ecfg)?;
     if hibernate {
@@ -657,7 +684,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         served += engine.drain()?;
     }
     println!(
-        "serving (engine: {streams} streams, {} workers, {served} frames{})",
+        "serving (engine: {streams} streams, {} workers, {served} frames{}, simd {backend})",
         if pool == 0 { "auto".to_string() } else { pool.to_string() },
         if replay_stream.is_some() { ", replayed" } else { "" }
     );

@@ -21,9 +21,27 @@
 //!
 //! — two popcounts per word instead of the four the (pos, neg) encoding
 //! needs, and the toggle count comes for free.
+//!
+//! The kernels below are the portable scalar backend; [`simd`] holds the
+//! runtime-dispatched AVX2 twins (bit-identical words and counters) and
+//! the process-wide backend selection.
+
+pub mod simd;
 
 pub const MAX_CHANNELS: usize = 128;
 const WORDS: usize = MAX_CHANNELS / 64;
+
+/// One (pos, mask) word pair's contribution to a fused dot — the shared
+/// `nz`/`diff` two-popcount idiom from the module doc, in exactly one
+/// place. Returns `(popcount(nz) − 2·popcount(diff), popcount(nz))`;
+/// every dot variant and both SIMD backends reduce to this kernel.
+#[inline]
+pub(crate) fn word_dot(a_pos: u64, a_mask: u64, b_pos: u64, b_mask: u64) -> (i32, u32) {
+    let nz = a_mask & b_mask;
+    let diff = nz & (a_pos ^ b_pos);
+    let n = nz.count_ones();
+    (n as i32 - 2 * diff.count_ones() as i32, n)
+}
 
 /// A packed vector of up to 128 trits (CUTIE's channel dimension).
 /// Invariant: `pos & !mask == 0`.
@@ -108,10 +126,8 @@ impl PackedVec {
         let mut acc = 0i32;
         let mut toggles = 0u32;
         for w in 0..WORDS {
-            let nz = self.mask[w] & other.mask[w];
-            let diff = nz & (self.pos[w] ^ other.pos[w]);
-            let n = nz.count_ones();
-            acc += n as i32 - 2 * diff.count_ones() as i32;
+            let (d, n) = word_dot(self.pos[w], self.mask[w], other.pos[w], other.mask[w]);
+            acc += d;
             toggles += n;
         }
         (acc, toggles)
@@ -123,10 +139,7 @@ impl PackedVec {
     #[inline]
     pub fn dot_narrow(&self, other: &PackedVec) -> (i32, u32) {
         debug_assert!(self.mask[1] == 0 || other.mask[1] == 0);
-        let nz = self.mask[0] & other.mask[0];
-        let diff = nz & (self.pos[0] ^ other.pos[0]);
-        let n = nz.count_ones();
-        (n as i32 - 2 * diff.count_ones() as i32, n)
+        word_dot(self.pos[0], self.mask[0], other.pos[0], other.mask[0])
     }
 
     /// Plain dot product (no activity reporting — same cost with this
@@ -135,9 +148,7 @@ impl PackedVec {
     pub fn dot_fast(&self, other: &PackedVec) -> i32 {
         let mut acc = 0i32;
         for w in 0..WORDS {
-            let nz = self.mask[w] & other.mask[w];
-            let diff = nz & (self.pos[w] ^ other.pos[w]);
-            acc += nz.count_ones() as i32 - 2 * diff.count_ones() as i32;
+            acc += word_dot(self.pos[w], self.mask[w], other.pos[w], other.mask[w]).0;
         }
         acc
     }
@@ -222,16 +233,11 @@ impl PackedVec {
     /// ops per word: the result is +1 iff either operand is +1
     /// (`pos = a.pos | b.pos`) and non-zero unless one operand is 0 and
     /// neither is +1 (`mask = pos | (a.mask & b.mask)` — both-(−1) keeps
-    /// the mask bit, anything touching a 0 clears it).
+    /// the mask bit, anything touching a 0 clears it). Dispatches to the
+    /// active [`simd`] backend (both produce identical words).
     #[inline]
     pub fn max(&self, other: &PackedVec) -> PackedVec {
-        let mut out = PackedVec::ZERO;
-        for w in 0..WORDS {
-            let pos = self.pos[w] | other.pos[w];
-            out.pos[w] = pos;
-            out.mask[w] = pos | (self.mask[w] & other.mask[w]);
-        }
-        out
+        simd::vec_max(self, other)
     }
 }
 
@@ -311,18 +317,11 @@ impl TritCol {
     /// `nwords` dense words. Bit-exact equal to the sum of the three
     /// per-row [`PackedVec::dot`]s: the dense layout only concatenates
     /// disjoint bit ranges, and both acc and popcount are additive.
+    /// Dispatches to the active [`simd`] backend; integer accumulation
+    /// keeps both backends' results identical, counters included.
     #[inline]
     pub fn dot(&self, other: &TritCol, nwords: usize) -> (i32, u32) {
-        let mut acc = 0i32;
-        let mut toggles = 0u32;
-        for w in 0..nwords {
-            let nz = self.mask[w] & other.mask[w];
-            let diff = nz & (self.pos[w] ^ other.pos[w]);
-            let n = nz.count_ones();
-            acc += n as i32 - 2 * diff.count_ones() as i32;
-            toggles += n;
-        }
-        (acc, toggles)
+        simd::col_dot(self, other, nwords)
     }
 
     /// True if every trit in the first `nwords` words is zero (whole-column
@@ -383,21 +382,18 @@ pub fn ternarize(acc: i32, lo: i32, hi: i32) -> i8 {
 /// `acc[i] < lo[i]` — exactly the scalar two-threshold contract, but the
 /// output trits are written as packed words with no per-trit branch or
 /// i8 store. With the contract `lo <= hi + 1` the two comparisons are
-/// mutually exclusive, so `pos ⊆ mask` holds by construction.
+/// mutually exclusive, so `pos ⊆ mask` holds by construction. Dispatches
+/// to the active [`simd`] backend (identical output words).
 #[inline]
 pub fn ternarize_packed(acc: &[i32], lo: &[i32], hi: &[i32]) -> PackedVec {
     debug_assert!(acc.len() <= MAX_CHANNELS, "at most {MAX_CHANNELS} channels");
     debug_assert_eq!(acc.len(), lo.len());
     debug_assert_eq!(acc.len(), hi.len());
-    let mut v = PackedVec::ZERO;
-    for (i, &a) in acc.iter().enumerate() {
-        debug_assert!(lo[i] <= hi[i] + 1, "threshold contract violated: lo {} hi {}", lo[i], hi[i]);
-        let p = (a > hi[i]) as u64;
-        let nz = p | ((a < lo[i]) as u64);
-        v.pos[i / 64] |= p << (i % 64);
-        v.mask[i / 64] |= nz << (i % 64);
-    }
-    v
+    debug_assert!(
+        lo.iter().zip(hi).all(|(&l, &h)| l <= h + 1),
+        "threshold contract violated"
+    );
+    simd::ternarize(acc, lo, hi)
 }
 
 #[cfg(test)]

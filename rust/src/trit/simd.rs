@@ -1,0 +1,552 @@
+//! Runtime-dispatched SIMD backend for the packed kernels.
+//!
+//! The (pos, mask) bitplane layouts were chosen in the packed-activation
+//! pass so vectorization would be a drop-in change: every hot kernel is
+//! word-parallel AND/XOR/popcount with integer accumulators, so a vector
+//! backend produces **bit-identical words and counters** to the scalar
+//! loops — not merely numerically-close results. The AVX2 paths here are
+//! the software analogue of CUTIE's completely-unrolled OCU adder trees:
+//! four 64-bit plane words per 256-bit `vpand`/`vpxor`, popcounts via the
+//! classic `vpshufb` nibble-table + `vpsadbw` horizontal byte sum.
+//!
+//! Dispatch is resolved once per process, in precedence order: an
+//! explicit [`set_backend`] call (the `--simd` CLI flag), the `TCN_SIMD`
+//! environment variable (how CI forces a whole test-suite run scalar),
+//! then `is_x86_feature_detected!("avx2")` auto-detection. Non-x86
+//! targets compile the scalar backend only. The resolved choice is
+//! stamped into every `ServingReport` and bench-ledger entry
+//! ([`active_name`]) so recorded runs are attributable to the backend
+//! that produced them.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::{word_dot, PackedVec, TritCol};
+
+/// Backend selection for the packed kernels (`--simd auto|scalar|avx2`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Probe the host once and take the widest available backend.
+    Auto,
+    /// Portable u64 scalar loops (the reference implementation).
+    Scalar,
+    /// 256-bit AVX2 kernels. Requesting this on a host without AVX2 is a
+    /// typed error, never a silent fallback.
+    Avx2,
+}
+
+impl std::str::FromStr for SimdBackend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(SimdBackend::Auto),
+            "scalar" => Ok(SimdBackend::Scalar),
+            "avx2" => Ok(SimdBackend::Avx2),
+            other => Err(format!("unknown SIMD backend {other:?} (expected auto|scalar|avx2)")),
+        }
+    }
+}
+
+const UNRESOLVED: u8 = 0;
+const SCALAR: u8 = 1;
+const AVX2: u8 = 2;
+
+/// The process-wide resolved backend (0 = not yet resolved). Relaxed
+/// ordering is enough: both backends are bit-identical, so a racing
+/// reader at worst takes the scalar path for one call — a perf nuance,
+/// never a correctness one.
+static ACTIVE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+#[inline]
+fn active() -> u8 {
+    match ACTIVE.load(Ordering::Relaxed) {
+        UNRESOLVED => resolve(),
+        b => b,
+    }
+}
+
+#[cold]
+fn resolve() -> u8 {
+    let b = match std::env::var("TCN_SIMD").ok().as_deref() {
+        Some("scalar") => SCALAR,
+        Some("avx2") if avx2_available() => AVX2,
+        // "auto", unset, unrecognized, or an unsatisfiable request all
+        // fall through to detection — the CLI path (`set_backend`) is
+        // the one with typed errors.
+        _ => {
+            if avx2_available() {
+                AVX2
+            } else {
+                SCALAR
+            }
+        }
+    };
+    ACTIVE.store(b, Ordering::Relaxed);
+    b
+}
+
+/// True when the host can execute the AVX2 backend.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Pin the backend for this process (the `--simd` flag). Requesting AVX2
+/// on a host without it is an error — a measurement run must never
+/// silently execute a different backend than the one it will be
+/// attributed to. Returns the resolved backend name.
+pub fn set_backend(req: SimdBackend) -> Result<&'static str, String> {
+    let b = match req {
+        SimdBackend::Scalar => SCALAR,
+        SimdBackend::Avx2 => {
+            if !avx2_available() {
+                return Err("--simd avx2 requested but the host CPU lacks AVX2".to_string());
+            }
+            AVX2
+        }
+        SimdBackend::Auto => {
+            if avx2_available() {
+                AVX2
+            } else {
+                SCALAR
+            }
+        }
+    };
+    ACTIVE.store(b, Ordering::Relaxed);
+    Ok(backend_name(b))
+}
+
+/// Name of the backend kernels are currently dispatching to — stamped
+/// into `ServingReport`s and bench-ledger entries for attribution.
+pub fn active_name() -> &'static str {
+    backend_name(active())
+}
+
+fn backend_name(b: u8) -> &'static str {
+    if b == AVX2 {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// Fused ternary column dot + toggle count over the first `nwords` dense
+/// words — the dispatch point behind [`TritCol::dot`].
+#[inline]
+pub fn col_dot(a: &TritCol, b: &TritCol, nwords: usize) -> (i32, u32) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == AVX2 {
+        // SAFETY: AVX2 is only ever selected after `avx2_available()`
+        // confirmed the host feature.
+        return unsafe { avx2::col_dot(a, b, nwords) };
+    }
+    col_dot_scalar(a, b, nwords)
+}
+
+/// Portable reference column dot (the pre-SIMD loop, verbatim).
+#[inline]
+pub fn col_dot_scalar(a: &TritCol, b: &TritCol, nwords: usize) -> (i32, u32) {
+    let mut acc = 0i32;
+    let mut toggles = 0u32;
+    for w in 0..nwords {
+        let (d, n) = word_dot(a.pos[w], a.mask[w], b.pos[w], b.mask[w]);
+        acc += d;
+        toggles += n;
+    }
+    (acc, toggles)
+}
+
+/// AVX2 column dot behind an availability check — `None` on hosts
+/// without AVX2 (or non-x86 builds). The direct-call form the
+/// equivalence tests and the bench A/B entries use, so neither has to
+/// mutate the process-wide backend.
+pub fn col_dot_avx2(a: &TritCol, b: &TritCol, nwords: usize) -> Option<(i32, u32)> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return Some(unsafe { avx2::col_dot(a, b, nwords) });
+    }
+    let _ = (a, b, nwords);
+    None
+}
+
+/// Threshold one accumulator row into (pos, mask) planes — the dispatch
+/// point behind [`super::ternarize_packed`].
+#[inline]
+pub fn ternarize(acc: &[i32], lo: &[i32], hi: &[i32]) -> PackedVec {
+    #[cfg(target_arch = "x86_64")]
+    if active() == AVX2 {
+        // SAFETY: see `col_dot`.
+        return unsafe { avx2::ternarize(acc, lo, hi) };
+    }
+    ternarize_scalar(acc, lo, hi)
+}
+
+/// Portable reference ternarization (the pre-SIMD loop, verbatim).
+#[inline]
+pub fn ternarize_scalar(acc: &[i32], lo: &[i32], hi: &[i32]) -> PackedVec {
+    let mut v = PackedVec::ZERO;
+    for (i, &a) in acc.iter().enumerate() {
+        let p = (a > hi[i]) as u64;
+        let nz = p | ((a < lo[i]) as u64);
+        v.pos[i / 64] |= p << (i % 64);
+        v.mask[i / 64] |= nz << (i % 64);
+    }
+    v
+}
+
+/// AVX2 ternarization behind an availability check (see [`col_dot_avx2`]).
+pub fn ternarize_avx2(acc: &[i32], lo: &[i32], hi: &[i32]) -> Option<PackedVec> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return Some(unsafe { avx2::ternarize(acc, lo, hi) });
+    }
+    let _ = (acc, lo, hi);
+    None
+}
+
+/// Channel-wise ternary max — the dispatch point behind
+/// [`PackedVec::max`] (and with it the word maxpool).
+#[inline]
+pub fn vec_max(a: &PackedVec, b: &PackedVec) -> PackedVec {
+    #[cfg(target_arch = "x86_64")]
+    if active() == AVX2 {
+        // SAFETY: see `col_dot`.
+        return unsafe { avx2::vec_max(a, b) };
+    }
+    vec_max_scalar(a, b)
+}
+
+/// Portable reference ternary max (the pre-SIMD loop, verbatim).
+#[inline]
+pub fn vec_max_scalar(a: &PackedVec, b: &PackedVec) -> PackedVec {
+    let mut out = PackedVec::ZERO;
+    for w in 0..super::WORDS {
+        let pos = a.pos[w] | b.pos[w];
+        out.pos[w] = pos;
+        out.mask[w] = pos | (a.mask[w] & b.mask[w]);
+    }
+    out
+}
+
+/// AVX2 ternary max behind an availability check (see [`col_dot_avx2`]).
+pub fn vec_max_avx2(a: &PackedVec, b: &PackedVec) -> Option<PackedVec> {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return Some(unsafe { avx2::vec_max(a, b) });
+    }
+    let _ = (a, b);
+    None
+}
+
+/// Bulk (pos, mask) word copy — the `wrap_image` read-port primitive.
+/// Panics when the slices differ in length (same contract as
+/// `copy_from_slice`).
+#[inline]
+pub fn copy_words(dst: &mut [PackedVec], src: &[PackedVec]) {
+    assert_eq!(dst.len(), src.len(), "copy_words length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if active() == AVX2 {
+        // SAFETY: see `col_dot`.
+        unsafe { avx2::copy_words(dst, src) };
+        return;
+    }
+    dst.copy_from_slice(src);
+}
+
+/// Bulk (pos, mask) word copy with the channel clamp fused in: each
+/// copied word is `src[i].masked(n)` — the TCN memory's wrap-image /
+/// packed-window read port, which presents hardware-width ring words as
+/// `feat_ch`-wide ones while copying them out. Panics when the slices
+/// differ in length.
+#[inline]
+pub fn copy_words_masked(dst: &mut [PackedVec], src: &[PackedVec], n: usize) {
+    assert_eq!(dst.len(), src.len(), "copy_words_masked length mismatch");
+    let keep = keep_planes(n);
+    #[cfg(target_arch = "x86_64")]
+    if active() == AVX2 {
+        // SAFETY: see `col_dot`.
+        unsafe { avx2::copy_words_masked(dst, src, &keep) };
+        return;
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = PackedVec {
+            pos: [s.pos[0] & keep[0], s.pos[1] & keep[1]],
+            mask: [s.mask[0] & keep[0], s.mask[1] & keep[1]],
+        };
+    }
+}
+
+/// Per-word keep masks equivalent to `PackedVec::masked(n)`: bits at
+/// channel indices ≥ `n` clear, everything below survives.
+#[inline]
+fn keep_planes(n: usize) -> [u64; 2] {
+    debug_assert!(n <= super::MAX_CHANNELS, "at most {} channels", super::MAX_CHANNELS);
+    match n {
+        0..=63 => [(1u64 << n) - 1, 0],
+        64 => [u64::MAX, 0],
+        65..=127 => [u64::MAX, (1u64 << (n - 64)) - 1],
+        _ => [u64::MAX, u64::MAX],
+    }
+}
+
+/// The AVX2 backend. Every function is `#[target_feature(enable =
+/// "avx2")]` and must only be reached through the dispatchers above (or
+/// the `_avx2` availability-checked wrappers).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    use super::super::{word_dot, PackedVec, TritCol};
+
+    /// Σ popcount over the four u64 lanes of `v`: `vpshufb` nibble-table
+    /// lookups summed with `vpsadbw` — the vector path never touches the
+    /// scalar `popcnt` unit.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn popcount256(v: __m256i) -> u32 {
+        #[rustfmt::skip]
+        let table = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_shuffle_epi8(table, _mm256_and_si256(v, low));
+        let hi = _mm256_shuffle_epi8(table, _mm256_and_si256(_mm256_srli_epi16(v, 4), low));
+        let sums = _mm256_sad_epu8(_mm256_add_epi8(lo, hi), _mm256_setzero_si256());
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, sums);
+        (lanes[0] + lanes[1] + lanes[2] + lanes[3]) as u32
+    }
+
+    /// Four dense words per iteration (`vpand` + `vpxor` + table
+    /// popcount), scalar `word_dot` tail for the ≤ 3 leftover words.
+    /// Popcount sums are order-independent integers, so the result is
+    /// bit-identical to the scalar loop.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn col_dot(a: &TritCol, b: &TritCol, nwords: usize) -> (i32, u32) {
+        let mut acc = 0i32;
+        let mut toggles = 0u32;
+        let mut w = 0;
+        while w + 4 <= nwords {
+            let ap = _mm256_loadu_si256(a.pos.as_ptr().add(w) as *const __m256i);
+            let am = _mm256_loadu_si256(a.mask.as_ptr().add(w) as *const __m256i);
+            let bp = _mm256_loadu_si256(b.pos.as_ptr().add(w) as *const __m256i);
+            let bm = _mm256_loadu_si256(b.mask.as_ptr().add(w) as *const __m256i);
+            let nz = _mm256_and_si256(am, bm);
+            let diff = _mm256_and_si256(nz, _mm256_xor_si256(ap, bp));
+            let n = popcount256(nz);
+            acc += n as i32 - 2 * popcount256(diff) as i32;
+            toggles += n;
+            w += 4;
+        }
+        while w < nwords {
+            let (d, n) = word_dot(a.pos[w], a.mask[w], b.pos[w], b.mask[w]);
+            acc += d;
+            toggles += n;
+            w += 1;
+        }
+        (acc, toggles)
+    }
+
+    /// Eight channels per iteration: two `vpcmpgtd` compares produce the
+    /// +1 and non-zero lane masks, `vmovmskps` collapses each to 8 plane
+    /// bits. Chunks are 8-aligned so a chunk never straddles a u64 word.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn ternarize(acc: &[i32], lo: &[i32], hi: &[i32]) -> PackedVec {
+        let n = acc.len();
+        let mut v = PackedVec::ZERO;
+        let mut i = 0;
+        while i + 8 <= n {
+            let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+            let l = _mm256_loadu_si256(lo.as_ptr().add(i) as *const __m256i);
+            let h = _mm256_loadu_si256(hi.as_ptr().add(i) as *const __m256i);
+            let p = _mm256_cmpgt_epi32(a, h);
+            let nz = _mm256_or_si256(p, _mm256_cmpgt_epi32(l, a));
+            let pb = _mm256_movemask_ps(_mm256_castsi256_ps(p)) as u32 as u64;
+            let nzb = _mm256_movemask_ps(_mm256_castsi256_ps(nz)) as u32 as u64;
+            v.pos[i / 64] |= pb << (i % 64);
+            v.mask[i / 64] |= nzb << (i % 64);
+            i += 8;
+        }
+        for j in i..n {
+            let p = (acc[j] > hi[j]) as u64;
+            let nz = p | ((acc[j] < lo[j]) as u64);
+            v.pos[j / 64] |= p << (j % 64);
+            v.mask[j / 64] |= nz << (j % 64);
+        }
+        v
+    }
+
+    /// One 256-bit op pair over the word layout `[pos0, pos1, mask0,
+    /// mask1]`: `or` yields the pos planes, `vpermq` replays them over
+    /// the mask lanes so `mask = pos | (a.mask & b.mask)` lands in a
+    /// single blend.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn vec_max(a: &PackedVec, b: &PackedVec) -> PackedVec {
+        let aw = [a.pos[0], a.pos[1], a.mask[0], a.mask[1]];
+        let bw = [b.pos[0], b.pos[1], b.mask[0], b.mask[1]];
+        let av = _mm256_loadu_si256(aw.as_ptr() as *const __m256i);
+        let bv = _mm256_loadu_si256(bw.as_ptr() as *const __m256i);
+        let or = _mm256_or_si256(av, bv);
+        let and = _mm256_and_si256(av, bv);
+        // lanes [pos0, pos1, pos0, pos1]: pos replayed over the mask half
+        let pos2 = _mm256_permute4x64_epi64::<0b01_00_01_00>(or);
+        let res = _mm256_blend_epi32::<0b1111_0000>(or, _mm256_or_si256(and, pos2));
+        let mut out = [0u64; 4];
+        _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, res);
+        PackedVec { pos: [out[0], out[1]], mask: [out[2], out[3]] }
+    }
+
+    /// Plane words moved through 128-bit vector loads/stores (`vmovdqu`
+    /// under VEX) — the wrap-image word-copy primitive.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn copy_words(dst: &mut [PackedVec], src: &[PackedVec]) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            let p = _mm_loadu_si128(s.pos.as_ptr() as *const __m128i);
+            let m = _mm_loadu_si128(s.mask.as_ptr() as *const __m128i);
+            _mm_storeu_si128(d.pos.as_mut_ptr() as *mut __m128i, p);
+            _mm_storeu_si128(d.mask.as_mut_ptr() as *mut __m128i, m);
+        }
+    }
+
+    /// `copy_words` with a broadcast channel clamp `vpand`-ed into every
+    /// copied word pair — the wrap-image masked-copy primitive.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn copy_words_masked(dst: &mut [PackedVec], src: &[PackedVec], keep: &[u64; 2]) {
+        let kv = _mm_loadu_si128(keep.as_ptr() as *const __m128i);
+        for (d, s) in dst.iter_mut().zip(src) {
+            let p = _mm_and_si128(_mm_loadu_si128(s.pos.as_ptr() as *const __m128i), kv);
+            let m = _mm_and_si128(_mm_loadu_si128(s.mask.as_ptr() as *const __m128i), kv);
+            _mm_storeu_si128(d.pos.as_mut_ptr() as *mut __m128i, p);
+            _mm_storeu_si128(d.mask.as_mut_ptr() as *mut __m128i, m);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trit::{ternarize, MAX_CHANNELS};
+    use crate::util::rng::Rng;
+
+    /// The width sweep from the satellite spec: word-boundary straddles
+    /// on both the 2-word vectors and the up-to-6-word dense columns.
+    const WIDTHS: [usize; 7] = [1, 21, 63, 64, 65, 96, 128];
+
+    fn trits(rng: &mut Rng, n: usize, zf: f64) -> Vec<i8> {
+        (0..n).map(|_| rng.trit(zf)).collect()
+    }
+
+    #[test]
+    fn backend_parse_round_trip() {
+        assert_eq!("auto".parse(), Ok(SimdBackend::Auto));
+        assert_eq!("scalar".parse(), Ok(SimdBackend::Scalar));
+        assert_eq!("avx2".parse(), Ok(SimdBackend::Avx2));
+        let err = "sse9".parse::<SimdBackend>().unwrap_err();
+        assert!(err.contains("sse9") && err.contains("auto|scalar|avx2"), "{err}");
+    }
+
+    #[test]
+    fn avx2_col_dot_matches_scalar_across_widths_and_sparsities() {
+        // Direct kernel-vs-kernel sweep (no global-backend mutation, so
+        // it cannot race the rest of the multi-threaded test binary).
+        let mut rng = Rng::new(41);
+        for &cin in &WIDTHS {
+            for case in 0..200 {
+                let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+                let xp = [
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                ];
+                let wp = [
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                    PackedVec::pack(&trits(&mut rng, cin, zf)),
+                ];
+                let xc = TritCol::pack_rows(&xp, cin);
+                let wc = TritCol::pack_rows(&wp, cin);
+                let nw = TritCol::words(cin);
+                let want = col_dot_scalar(&wc, &xc, nw);
+                assert_eq!(col_dot(&wc, &xc, nw), want, "dispatcher, cin {cin} case {case}");
+                if let Some(got) = col_dot_avx2(&wc, &xc, nw) {
+                    assert_eq!(got, want, "avx2, cin {cin} case {case}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_ternarize_matches_scalar_across_widths() {
+        let mut rng = Rng::new(42);
+        for &n in &WIDTHS {
+            for case in 0..100 {
+                let acc: Vec<i32> = (0..n).map(|_| rng.below(41) as i32 - 20).collect();
+                let (lo, hi): (Vec<i32>, Vec<i32>) = (0..n)
+                    .map(|_| {
+                        let hi = rng.below(9) as i32 - 4;
+                        let lo = hi + 1 - rng.below(8) as i32;
+                        (lo, hi)
+                    })
+                    .unzip();
+                let want = ternarize_scalar(&acc, &lo, &hi);
+                let scalar_ref: Vec<i8> =
+                    (0..n).map(|i| ternarize(acc[i], lo[i], hi[i])).collect();
+                assert_eq!(want.unpack(n), scalar_ref, "n {n} case {case}");
+                if let Some(got) = ternarize_avx2(&acc, &lo, &hi) {
+                    assert_eq!(got, want, "avx2, n {n} case {case}");
+                    assert_eq!(got.pos[0] & !got.mask[0], 0);
+                    assert_eq!(got.pos[1] & !got.mask[1], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn avx2_max_and_copy_match_scalar() {
+        let mut rng = Rng::new(43);
+        for &n in &WIDTHS {
+            for case in 0..100 {
+                let zf = [0.0, 0.3, 0.6, 0.95][case % 4];
+                let a = PackedVec::pack(&trits(&mut rng, n, zf));
+                let b = PackedVec::pack(&trits(&mut rng, n, zf));
+                let want = vec_max_scalar(&a, &b);
+                assert_eq!(vec_max(&a, &b), want, "dispatcher, n {n} case {case}");
+                if let Some(got) = vec_max_avx2(&a, &b) {
+                    assert_eq!(got, want, "avx2, n {n} case {case}");
+                }
+            }
+        }
+        let src: Vec<PackedVec> =
+            (0..37).map(|_| PackedVec::pack(&trits(&mut rng, MAX_CHANNELS, 0.4))).collect();
+        let mut dst = vec![PackedVec::ZERO; src.len()];
+        copy_words(&mut dst, &src);
+        assert_eq!(dst, src);
+        for &n in WIDTHS.iter().chain(&[0]) {
+            let want: Vec<PackedVec> = src.iter().map(|v| v.masked(n)).collect();
+            copy_words_masked(&mut dst, &src, n);
+            assert_eq!(dst, want, "masked copy, n {n}");
+        }
+    }
+
+    #[test]
+    fn backend_pinning_round_trip() {
+        // The one test that touches the process-wide backend. Safe to
+        // run alongside the rest of the suite: both backends produce
+        // identical words, so concurrent readers only vary in speed.
+        assert_eq!(set_backend(SimdBackend::Scalar).unwrap(), "scalar");
+        assert_eq!(active_name(), "scalar");
+        let auto = set_backend(SimdBackend::Auto).unwrap();
+        assert_eq!(auto, if avx2_available() { "avx2" } else { "scalar" });
+        assert_eq!(active_name(), auto);
+        if !avx2_available() {
+            assert!(set_backend(SimdBackend::Avx2).is_err());
+        }
+    }
+}

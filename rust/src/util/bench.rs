@@ -71,6 +71,10 @@ struct SuiteEntry {
     iters: usize,
     /// Speedup over the recorded baseline (baseline.median / this.median).
     speedup: Option<f64>,
+    /// The packed-kernel backend active when the entry was pushed
+    /// ("scalar" or "avx2") — lets the CI regression checker compare
+    /// ledger entries like-for-like across hosts.
+    backend: &'static str,
 }
 
 /// Machine-readable bench ledger: collects [`BenchResult`]s (optionally
@@ -87,7 +91,7 @@ impl BenchSuite {
         Self::default()
     }
 
-    /// Record a result.
+    /// Record a result, stamped with the backend active right now.
     pub fn push(&mut self, r: &BenchResult) {
         self.entries.push(SuiteEntry {
             name: r.name.clone(),
@@ -95,6 +99,7 @@ impl BenchSuite {
             mad_s: r.mad_s,
             iters: r.iters,
             speedup: None,
+            backend: crate::trit::simd::active_name(),
         });
     }
 
@@ -106,6 +111,7 @@ impl BenchSuite {
             mad_s: r.mad_s,
             iters: r.iters,
             speedup: Some(baseline.median_s / r.median_s),
+            backend: crate::trit::simd::active_name(),
         });
     }
 
@@ -127,6 +133,7 @@ impl BenchSuite {
                 m.insert("median_s".to_string(), Json::Float(e.median_s));
                 m.insert("mad_s".to_string(), Json::Float(e.mad_s));
                 m.insert("iters".to_string(), Json::Int(e.iters as i64));
+                m.insert("backend".to_string(), Json::Str(e.backend.to_string()));
                 if let Some(s) = e.speedup {
                     m.insert("speedup".to_string(), Json::Float(s));
                 }
@@ -228,6 +235,11 @@ mod tests {
         let benches = j.get("benches").unwrap().as_array().unwrap();
         assert_eq!(benches.len(), 2);
         assert!(benches[0].get("speedup").is_none());
+        // every entry is stamped with the resolved kernel backend
+        for b in benches {
+            let tag = b.get("backend").unwrap().as_str().unwrap();
+            assert!(tag == "scalar" || tag == "avx2", "backend tag {tag:?}");
+        }
         let s = benches[1].get("speedup").unwrap().as_f64().unwrap();
         assert!((s - 4.0).abs() < 1e-12);
     }

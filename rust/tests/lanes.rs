@@ -1,0 +1,171 @@
+//! Lane-batching byte-identity: serving through the cross-session
+//! lane-batched CNN front-end (`EngineConfig::lanes > 1`) must be
+//! byte-identical, per session, to serial serving (`lanes = 1`) —
+//! across batch widths (including ragged last groups), both sim modes,
+//! serial and pooled engines, mixed-net registries (same-geometry
+//! sessions bound to different nets must never share a lane unit) and
+//! with a fault plan armed mid-fleet.
+
+use std::sync::Arc;
+
+use tcn_cutie::coordinator::{
+    DvsSource, Engine, EngineConfig, GestureClass, NetRegistry, ServingReport,
+};
+use tcn_cutie::cutie::SimMode;
+use tcn_cutie::fault::{FaultPlan, FaultSurface};
+use tcn_cutie::network::{dvs_hybrid_random, Network};
+
+fn source_for(net: &Network, s: usize) -> DvsSource {
+    DvsSource::new(net.input_hw, 300 + s as u64, GestureClass(s % 12))
+}
+
+fn assert_identical(a: &mut ServingReport, b: &mut ServingReport, ctx: &str) {
+    assert_eq!(a.labels, b.labels, "{ctx}: labels");
+    assert_eq!(a.fc_wakeups, b.fc_wakeups, "{ctx}: fc_wakeups");
+    assert_eq!(a.soc_energy_j.to_bits(), b.soc_energy_j.to_bits(), "{ctx}: soc energy");
+    assert_eq!(a.soc_avg_power_w.to_bits(), b.soc_avg_power_w.to_bits(), "{ctx}: soc power");
+    assert_eq!(
+        a.metrics.core_energy_j.to_bits(),
+        b.metrics.core_energy_j.to_bits(),
+        "{ctx}: core energy"
+    );
+    assert_eq!(a.metrics.sim_time_s.to_bits(), b.metrics.sim_time_s.to_bits(), "{ctx}: sim time");
+    assert_eq!(a.metrics.frames, b.metrics.frames, "{ctx}: frames");
+    assert_eq!(a.faults, b.faults, "{ctx}: fault ledger");
+    for q in [0.0, 0.5, 1.0] {
+        assert_eq!(
+            a.metrics.sim_latency_us.quantile(q).to_bits(),
+            b.metrics.sim_latency_us.quantile(q).to_bits(),
+            "{ctx}: sim latency q{q}"
+        );
+    }
+}
+
+/// Serve `k` round-robin sessions × `frames` frames through one engine
+/// configured with `lanes`, draining once per round (so every drain's
+/// pending set holds one frame per session — the lane grouper's
+/// steady-state shape). Optionally arms `fault` on session 0.
+fn serve(
+    net: &Network,
+    mode: SimMode,
+    workers: usize,
+    lanes: usize,
+    k: usize,
+    frames: usize,
+    fault: Option<FaultPlan>,
+) -> Vec<(usize, ServingReport)> {
+    let cfg = EngineConfig { mode, workers, lanes, ..Default::default() };
+    let mut engine = Engine::new(net, cfg).unwrap();
+    if let Some(plan) = fault {
+        engine.open_session(0).unwrap();
+        engine.set_fault_plan(0, plan).unwrap();
+    }
+    let mut srcs: Vec<DvsSource> = (0..k).map(|s| source_for(net, s)).collect();
+    for _ in 0..frames {
+        for (s, src) in srcs.iter_mut().enumerate() {
+            engine.submit(s, src.next_frame()).unwrap();
+        }
+        engine.drain().unwrap();
+    }
+    engine.finish_all()
+}
+
+#[test]
+fn lane_batched_serving_matches_serial() {
+    // The tentpole byte-identity gate: K ∈ {1, 2, 3, 5, 8} sessions
+    // through the 8-lane front-end vs lanes = 1, both sim modes, serial
+    // and pooled engines — every per-session ledger bit must agree.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    for mode in [SimMode::Fast, SimMode::Accurate] {
+        for workers in [1usize, 3] {
+            for k in [1usize, 2, 3, 5, 8] {
+                let serial = serve(&net, mode, workers, 1, k, 3, None);
+                let batched = serve(&net, mode, workers, 8, k, 3, None);
+                assert_eq!(serial.len(), batched.len());
+                for ((s, mut rs), (_, mut rb)) in serial.into_iter().zip(batched) {
+                    assert_identical(
+                        &mut rb,
+                        &mut rs,
+                        &format!("{mode:?} workers={workers} K={k} session {s}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_lane_groups_match_serial() {
+    // lanes = 3 with K ∈ {5, 8} same-net sessions chunks the drain into
+    // full units plus a ragged last group (3+2, 3+3+2); raggedness must
+    // not perturb a single bit, serial or pooled.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    for workers in [1usize, 3] {
+        for k in [5usize, 8] {
+            let serial = serve(&net, SimMode::Fast, workers, 1, k, 3, None);
+            let ragged = serve(&net, SimMode::Fast, workers, 3, k, 3, None);
+            for ((s, mut rs), (_, mut rb)) in serial.into_iter().zip(ragged) {
+                assert_identical(
+                    &mut rb,
+                    &mut rs,
+                    &format!("ragged lanes=3 workers={workers} K={k} session {s}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_net_sessions_never_share_a_lane() {
+    // Two registered nets with identical geometry but different
+    // fingerprints: the lane grouper must key on the fingerprint, so
+    // alternately-bound sessions lane-batch only within their own net
+    // and the reports stay byte-identical to serial serving.
+    let net_a = dvs_hybrid_random(16, 5, 0.5);
+    let net_b = dvs_hybrid_random(16, 6, 0.5);
+    let mut reg = NetRegistry::new();
+    let fp_a = reg.add(net_a.clone()).unwrap();
+    let fp_b = reg.add(net_b).unwrap();
+    assert_ne!(fp_a, fp_b, "different weights must fingerprint differently");
+    let registry = Arc::new(reg);
+
+    let serve_mixed = |lanes: usize| -> Vec<(usize, ServingReport)> {
+        let cfg = EngineConfig { mode: SimMode::Fast, workers: 1, lanes, ..Default::default() };
+        let mut engine = Engine::with_registry(Arc::clone(&registry), cfg).unwrap();
+        for s in 0..6 {
+            engine.open_session_on(s, if s % 2 == 0 { fp_a } else { fp_b }).unwrap();
+        }
+        let mut srcs: Vec<DvsSource> = (0..6).map(|s| source_for(&net_a, s)).collect();
+        for _ in 0..3 {
+            for (s, src) in srcs.iter_mut().enumerate() {
+                engine.submit(s, src.next_frame()).unwrap();
+            }
+            engine.drain().unwrap();
+        }
+        engine.finish_all()
+    };
+    let serial = serve_mixed(1);
+    let batched = serve_mixed(8);
+    for ((s, mut rs), (_, mut rb)) in serial.into_iter().zip(batched) {
+        assert_identical(&mut rb, &mut rs, &format!("mixed-net session {s}"));
+    }
+}
+
+#[test]
+fn armed_fault_plan_serves_identically_lane_batched() {
+    // A fault plan armed on one session of a lane-batched fleet: the
+    // injection path (phase 2, per-session state surfaces) must see the
+    // same pre-fault words whether the CNN ran lane-batched or serial,
+    // so the whole fault ledger agrees bit for bit — and actually fires.
+    let net = dvs_hybrid_random(16, 5, 0.5);
+    let plan = FaultPlan::with_ber(FaultSurface::ActMem, 2e-3, 99);
+    let serial = serve(&net, SimMode::Fast, 1, 1, 5, 4, Some(plan));
+    let batched = serve(&net, SimMode::Fast, 1, 8, 5, 4, Some(plan));
+    assert!(
+        batched.iter().any(|(_, r)| r.faults.injected_flips > 0),
+        "the armed plan must actually inject at this BER"
+    );
+    for ((s, mut rs), (_, mut rb)) in serial.into_iter().zip(batched) {
+        assert_identical(&mut rb, &mut rs, &format!("faulted lane fleet session {s}"));
+    }
+}
